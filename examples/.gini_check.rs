@@ -1,0 +1,21 @@
+fn main() {
+    for (name, ue, ie) in [("yahoo-1.1/1.4", 1.1, 1.4), ("yahoo-1.2/1.8", 1.2, 1.8), ("yahoo-1.3/2.2", 1.3, 2.2)] {
+        let spec = strads::data::mf_powerlaw::MfSynthSpec {
+            user_exponent: ue, item_exponent: ie,
+            ..strads::data::mf_powerlaw::MfSynthSpec::yahoo_like()
+        };
+        let d = strads::data::mf_powerlaw::generate(&spec, 42);
+        let cg = strads::data::mf_powerlaw::gini(&d.a.col_nnz());
+        let rw: Vec<u64> = (0..d.a.nrows()).map(|i| d.a.row_nnz(i) as u64).collect();
+        let cw: Vec<u64> = d.a.col_nnz().iter().map(|&c| c as u64).collect();
+        for p in [4usize, 16] {
+            let bu = strads::coordinator::balance::partition_uniform(&cw, p);
+            let bb = strads::coordinator::balance::partition_balanced(&cw, p);
+            let _ = &rw;
+            println!("{name} nnz={} col-gini={cg:.2} P={p}: uniform imb {:.2}, balanced imb {:.2}",
+                d.a.nnz(),
+                strads::coordinator::balance::imbalance(&bu),
+                strads::coordinator::balance::imbalance(&bb));
+        }
+    }
+}

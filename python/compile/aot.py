@@ -1,0 +1,144 @@
+"""AOT driver: lower every (graph, shape-bucket) in shapes.py to HLO text.
+
+Interchange format is HLO *text*, never a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` rust crate) rejects with
+`proto.id() <= INT_MAX`; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Python runs exactly once, at build time (`make artifacts`); the rust
+coordinator is self-contained afterwards. Alongside the .hlo.txt files we
+emit `manifest.json`, which the rust `ArtifactStore` uses to discover
+artifacts, their kinds, and their shape parameters (bucket capacities).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--only RE]
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _s(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def example_args(kind, p):
+    """Abstract input signature for one artifact (shapes.py params)."""
+    if kind == "lasso_update":
+        n, j, cap = p["n"], p["j"], p["p"]
+        return (
+            _s((n, j)),          # x
+            _s((n, 1)),          # r
+            _s((1, cap)),        # beta_sel
+            _s((cap,), jnp.int32),  # idx
+            _s((1, cap)),        # mask
+            _s((1, 1)),          # lam
+        )
+    if kind == "lasso_gram":
+        n, j, c = p["n"], p["j"], p["c"]
+        return (_s((n, j)), _s((c,), jnp.int32))
+    if kind == "lasso_obj":
+        n, j = p["n"], p["j"]
+        return (_s((n, j)), _s((n, 1)), _s((j, 1)), _s((1, 1)))
+    if kind in ("mf_update_w", "mf_update_h"):
+        n, m, k, b = p["n"], p["m"], p["k"], p["b"]
+        return (
+            _s((n, m)),          # a
+            _s((n, m)),          # mask
+            _s((n, k)),          # w
+            _s((k, m)),          # h
+            _s((b,), jnp.int32),  # idx
+            _s((b, 1)),          # rmask/cmask
+            _s((k, 1)),          # t1h
+            _s((1, 1)),          # lam
+        )
+    if kind == "mf_obj":
+        n, m, k = p["n"], p["m"], p["k"]
+        return (_s((n, m)), _s((n, m)), _s((n, k)), _s((k, m)), _s((1, 1)))
+    raise ValueError(f"unknown artifact kind: {kind}")
+
+
+GRAPHS = {
+    "lasso_update": model.lasso_update,
+    "lasso_gram": model.lasso_gram,
+    "lasso_obj": model.lasso_obj,
+    "mf_update_w": model.mf_update_w,
+    "mf_update_h": model.mf_update_h,
+    "mf_obj": model.mf_obj,
+}
+
+
+def build(out_dir: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    t_total = time.time()
+    for name, kind, params in shapes.manifest_entries():
+        if only and not re.search(only, name):
+            continue
+        t0 = time.time()
+        args = example_args(kind, params)
+        lowered = jax.jit(GRAPHS[kind]).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        inputs = [dict(shape=list(a.shape), dtype=a.dtype.name) for a in args]
+        entries.append(
+            dict(name=name, kind=kind, file=fname, params=params, inputs=inputs)
+        )
+        print(
+            f"  {name}: {len(text) // 1024} KiB HLO in {time.time() - t0:.1f}s",
+            file=sys.stderr,
+        )
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if only and os.path.exists(manifest_path):
+        # Partial rebuild: merge into the existing manifest so artifacts
+        # outside the filter stay registered.
+        with open(manifest_path) as f:
+            old_entries = {e["name"]: e for e in json.load(f)["artifacts"]}
+        for e in entries:
+            old_entries[e["name"]] = e
+        entries = list(old_entries.values())
+    manifest = dict(
+        version=1,
+        row_tile=shapes.ROW_TILE,
+        artifacts=entries,
+    )
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"wrote {len(entries)} artifacts + manifest.json to {out_dir} "
+        f"in {time.time() - t_total:.1f}s",
+        file=sys.stderr,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    args = ap.parse_args()
+    build(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

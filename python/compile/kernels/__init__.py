@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (lasso_cd, mf_ccd, gram) + pure-jnp oracles (ref)."""

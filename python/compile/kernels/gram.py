@@ -1,0 +1,39 @@
+"""L1 Pallas kernel for the dependency-check Gram matrix.
+
+SAP step 2 needs pairwise coupling d(x_l, x_m) = |x_l^T x_m| over the P'
+sampled candidate columns. We compute the full candidate Gram
+G = X_cand^T X_cand in one kernel: the sample dimension is tiled into
+ROW_TILE chunks and [P', P'] partial products accumulate in a VMEM block
+revisited across the grid (same reduction pattern as lasso_cd).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 128
+
+
+def _gram_kernel(xc_ref, g_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x = xc_ref[...]  # [T, C]
+    g_ref[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+
+def gram(x_cand):
+    """G = X_cand^T X_cand for a gathered candidate panel [N, C]."""
+    n, c = x_cand.shape
+    assert n % ROW_TILE == 0, f"N={n} must be a multiple of {ROW_TILE}"
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(n // ROW_TILE,),
+        in_specs=[pl.BlockSpec((ROW_TILE, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((c, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, c), jnp.float32),
+        interpret=True,
+    )(x_cand)

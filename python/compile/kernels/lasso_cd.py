@@ -1,0 +1,109 @@
+"""L1 Pallas kernels for the batched Lasso coordinate-descent update.
+
+The STRADS hot-spot for Lasso is, per dispatched block of P coordinates:
+
+    g_j      = x_j^T r + beta_j                (unit-norm standardized x_j)
+    beta_j'  = S(g_j, lambda)                  (soft threshold)
+    r'       = r - X_sel (beta' - beta)        (residual rank-P update)
+
+Both phases are written as TPU-shaped Pallas kernels: the sample dimension
+N is tiled into ROW_TILE chunks streamed HBM->VMEM by BlockSpec; the
+`X_sel^T r` contraction accumulates into a VMEM-resident [1, P] block
+revisited at every grid step (the canonical Pallas reduction pattern) and
+the soft-threshold epilogue runs fused on the final step. `interpret=True`
+is mandatory on the CPU PJRT plugin -- real TPU lowering emits a Mosaic
+custom-call the CPU client cannot execute; the interpret path lowers to
+plain HLO so the rust runtime can run it anywhere.
+
+Padded coordinate slots (shape-bucket capacity > live coordinates) carry
+mask = 0 and are forced to keep their old beta, so padding is exact.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 128
+
+
+def _gth_kernel(xsel_ref, r_ref, beta_ref, mask_ref, lam_ref, bnew_ref):
+    """Accumulate g += r_tile^T @ X_tile; soft-threshold on the last step.
+
+    bnew_ref doubles as the [1, P] VMEM accumulator (holds the running g)
+    and, after the epilogue, the new coefficient vector.
+    """
+    i = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        bnew_ref[...] = jnp.zeros_like(bnew_ref)
+
+    # [1, T] @ [T, P] -> [1, P]: an MXU-shaped contraction per row tile.
+    bnew_ref[...] += jnp.dot(
+        r_ref[...].T, xsel_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(i == nsteps - 1)
+    def _epilogue():
+        lam = lam_ref[0, 0]
+        g = bnew_ref[...] + beta_ref[...]
+        thresh = jnp.sign(g) * jnp.maximum(jnp.abs(g) - lam, 0.0)
+        bnew_ref[...] = jnp.where(mask_ref[...] > 0.0, thresh, beta_ref[...])
+
+
+def _resid_kernel(xsel_ref, r_ref, delta_ref, out_ref):
+    """r_tile' = r_tile - X_tile @ delta  (rank-P residual downdate)."""
+    out_ref[...] = r_ref[...] - jnp.dot(
+        xsel_ref[...], delta_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def cd_update(x_sel, r, beta_sel, mask, lam):
+    """Batched soft-threshold CD update on a gathered coordinate panel.
+
+    Args:
+      x_sel:    [N, P] gathered covariate columns (standardized, unit norm).
+      r:        [N, 1] current residual  y - X beta.
+      beta_sel: [1, P] current coefficients of the selected coordinates.
+      mask:     [1, P] 1.0 for live slots, 0.0 for bucket padding.
+      lam:      [1, 1] l1 penalty.
+
+    Returns:
+      (beta_new [1, P], delta [1, P], r_new [N, 1]).
+    """
+    n, p = x_sel.shape
+    assert n % ROW_TILE == 0, f"N={n} must be a multiple of {ROW_TILE}"
+    grid = (n // ROW_TILE,)
+
+    beta_new = pl.pallas_call(
+        _gth_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, p), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, p), jnp.float32),
+        interpret=True,
+    )(x_sel, r, beta_sel, mask, lam)
+
+    delta = beta_new - beta_sel
+
+    r_new = pl.pallas_call(
+        _resid_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, p), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((p, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(x_sel, r, delta.T)
+
+    return beta_new, delta, r_new

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel for the masked rank-1 CCD update (matrix factorization).
+
+Paper eqs. (4)/(5): for rank t and each row i of a dispatched block,
+
+    num_i = sum_j  mask_ij * rt_ij * v_j
+    den_i = sum_j  mask_ij * v_j^2
+    out_i = num_i / (lambda + den_i)
+
+where rt = (A - WH) + w_t v^T is the residual with rank-t's own
+contribution added back, and v is h_t (W update) or w_t (H update; the L2
+graph transposes so the same kernel serves both sweeps).
+
+The reduced dimension (M for W updates, N for H updates) is tiled into
+COL_TILE chunks; num/den accumulate in VMEM blocks revisited across the
+grid, and the division epilogue runs fused on the final step. Rows with no
+observed entries get den = 0 -> out = 0/lambda = 0, matching the CCD
+convention. Padded rows are masked by the caller (mask rows of zeros).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COL_TILE = 256
+
+
+def _rank1_kernel(rt_ref, mask_ref, v_ref, lam_ref, num_ref, den_ref, out_ref):
+    i = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    rt = rt_ref[...]  # [B, T]
+    mk = mask_ref[...]  # [B, T]
+    v = v_ref[...]  # [1, T]
+    num_ref[...] += jnp.sum(mk * rt * v, axis=1, keepdims=True)
+    den_ref[...] += jnp.sum(mk * (v * v), axis=1, keepdims=True)
+
+    @pl.when(i == nsteps - 1)
+    def _epilogue():
+        out_ref[...] = num_ref[...] / (lam_ref[0, 0] + den_ref[...])
+
+
+def rank1_update(rt, mask, v, lam):
+    """Masked rank-1 CCD coefficient update.
+
+    Args:
+      rt:   [B, L] rank-t residual block (residual + own contribution).
+      mask: [B, L] 0/1 observation mask (0 rows for bucket padding).
+      v:    [1, L] the fixed factor vector (h_t or w_t).
+      lam:  [1, 1] l2 penalty.
+
+    Returns:
+      out [B, 1]: the new w_t (or h_t) entries for the block's rows.
+    """
+    b, l = rt.shape
+    # Largest standard tile that divides the reduced dim (the tiny test
+    # shapes use 128-wide matrices).
+    tile = COL_TILE if l % COL_TILE == 0 else 128
+    assert l % tile == 0, f"L={l} must be a multiple of 128"
+    grid = (l // tile,)
+    _, _, out = pl.pallas_call(
+        _rank1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, tile), lambda i: (0, i)),
+            pl.BlockSpec((b, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(rt, mask, v, lam)
+    return out

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every L1 kernel -- the correctness ground truth.
+
+pytest (python/tests/) asserts the Pallas kernels against these with
+hypothesis-driven shape/value sweeps; the rust integration tests assert
+the whole AOT artifact against rust-native reimplementations, so the
+chain  pallas == ref == rust-native  pins all three layers together.
+"""
+
+import jax.numpy as jnp
+
+
+def soft_threshold(g, lam):
+    return jnp.sign(g) * jnp.maximum(jnp.abs(g) - lam, 0.0)
+
+
+def cd_update_ref(x_sel, r, beta_sel, mask, lam):
+    """Oracle for lasso_cd.cd_update (same shapes/returns)."""
+    g = r.T @ x_sel + beta_sel  # [1, P]
+    beta_new = jnp.where(mask > 0.0, soft_threshold(g, lam[0, 0]), beta_sel)
+    delta = beta_new - beta_sel
+    r_new = r - x_sel @ delta.T
+    return beta_new, delta, r_new
+
+
+def gram_ref(x_cand):
+    """Oracle for gram.gram."""
+    return x_cand.T @ x_cand
+
+
+def rank1_update_ref(rt, mask, v, lam):
+    """Oracle for mf_ccd.rank1_update (same shapes/returns)."""
+    num = jnp.sum(mask * rt * v, axis=1, keepdims=True)
+    den = jnp.sum(mask * (v * v), axis=1, keepdims=True)
+    return num / (lam[0, 0] + den)
+
+
+def lasso_objective_ref(x, y, beta, lam):
+    """0.5 ||y - X beta||^2 + lam |beta|_1  (paper eq. 1, squared loss)."""
+    r = y - x @ beta
+    return 0.5 * jnp.sum(r * r) + lam * jnp.sum(jnp.abs(beta)), r
+
+
+def mf_objective_ref(a, mask, w, h, lam):
+    """sum_obs (a - wh)^2 + lam (||W||_F^2 + ||H||_F^2)  (paper eq. 3)."""
+    r = (a - w @ h) * mask
+    return jnp.sum(r * r) + lam * (jnp.sum(w * w) + jnp.sum(h * h))

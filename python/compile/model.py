@@ -1,0 +1,96 @@
+"""L2 JAX graphs: the compute-side of STRADS, lowered once to HLO text.
+
+Each function here is one AOT artifact family. The graphs compose a
+gather (coordinate/row/column selection chosen at runtime by the rust
+scheduler and passed as an i32 index vector) with the L1 Pallas kernels
+and the small residual/scatter algebra around them. Shape buckets larger
+than the live selection are padded by the caller and neutralized by the
+0/1 mask inputs, so every graph is exact for any live size <= capacity.
+
+Conventions (all f32 unless noted):
+  lasso_update(x[N,J], r[N,1], beta_sel[1,P], idx i32[P], mask[1,P],
+               lam[1,1]) -> (beta_new[1,P], delta[1,P], r_new[N,1])
+  lasso_gram(x[N,J], idx i32[C]) -> (g[C,C],)
+  lasso_obj(x[N,J], y[N,1], beta[J,1], lam[1,1]) -> (obj[1,1], r[N,1])
+  mf_update_w(a[N,M], mask[N,M], w[N,K], h[K,M], idx i32[B], rmask[B,1],
+              t1h[K,1], lam[1,1]) -> (w_new[B,1], dw[B,1], w_next[N,K])
+  mf_update_h(a[N,M], mask[N,M], w[N,K], h[K,M], idx i32[B], cmask[B,1],
+              t1h[K,1], lam[1,1]) -> (h_new[B,1], dh[B,1], h_next[K,M])
+  mf_obj(a[N,M], mask[N,M], w[N,K], h[K,M], lam[1,1]) -> (obj[1,1],)
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import gram as gram_kernel
+from compile.kernels import lasso_cd, mf_ccd
+
+# ---------------------------------------------------------------- lasso --
+
+
+def lasso_update(x, r, beta_sel, idx, mask, lam):
+    """Batched CD update on the scheduler-selected coordinate set."""
+    x_sel = jnp.take(x, idx, axis=1)  # [N, P]
+    beta_new, delta, r_new = lasso_cd.cd_update(x_sel, r, beta_sel, mask, lam)
+    return beta_new, delta, r_new
+
+
+def lasso_gram(x, idx):
+    """Candidate Gram matrix for SAP step-2 dependency checking."""
+    x_cand = jnp.take(x, idx, axis=1)  # [N, C]
+    return (gram_kernel.gram(x_cand),)
+
+
+def lasso_obj(x, y, beta, lam):
+    """Full objective + fresh residual (drift-correction / metrics path)."""
+    r = y - x @ beta  # [N, 1]
+    obj = 0.5 * jnp.sum(r * r) + lam[0, 0] * jnp.sum(jnp.abs(beta))
+    return obj.reshape(1, 1), r
+
+
+# ------------------------------------------------------------------- mf --
+
+
+def mf_update_w(a, mask, w, h, idx, rmask, t1h, lam):
+    """Rank-t CCD sweep over a load-balanced row block (paper eq. 4).
+
+    Returns the new w_t entries for the block, their deltas, and the full
+    updated W (scatter-add on device, so W round-trips as one buffer).
+    Padding uses idx = 0 with rmask = 0: the masked delta is exactly zero,
+    so the duplicate scatter-adds at row 0 are no-ops.
+    """
+    a_b = jnp.take(a, idx, axis=0)  # [B, M]
+    mk_b = jnp.take(mask, idx, axis=0)  # [B, M]
+    w_b = jnp.take(w, idx, axis=0)  # [B, K]
+    pred = jnp.dot(w_b, h, preferred_element_type=jnp.float32)  # [B, M]
+    w_t = w_b @ t1h  # [B, 1]
+    h_t = t1h.T @ h  # [1, M]
+    rt = a_b - pred + w_t @ h_t  # [B, M]
+    w_new = mf_ccd.rank1_update(rt, mk_b, h_t, lam) * rmask
+    dw = (w_new - w_t) * rmask  # [B, 1]
+    w_next = w.at[idx].add(dw * t1h.T)  # adds only into column t
+    return w_new, dw, w_next
+
+
+def mf_update_h(a, mask, w, h, idx, cmask, t1h, lam):
+    """Rank-t CCD sweep over a load-balanced column block (paper eq. 5).
+
+    Same kernel as the W sweep, applied to the transposed block.
+    """
+    a_c = jnp.take(a, idx, axis=1).T  # [B, N]
+    mk_c = jnp.take(mask, idx, axis=1).T  # [B, N]
+    h_c = jnp.take(h, idx, axis=1)  # [K, B]
+    pred = jnp.dot(w, h_c, preferred_element_type=jnp.float32).T  # [B, N]
+    h_t = (t1h.T @ h_c).T  # [B, 1]
+    w_t = (w @ t1h).T  # [1, N]
+    rt = a_c - pred + h_t @ w_t  # [B, N]
+    h_new = mf_ccd.rank1_update(rt, mk_c, w_t, lam) * cmask
+    dh = (h_new - h_t) * cmask  # [B, 1]
+    h_next = h.at[:, idx].add(t1h @ dh.T)  # adds only into row t
+    return h_new, dh, h_next
+
+
+def mf_obj(a, mask, w, h, lam):
+    """Regularized squared error over observed entries (paper eq. 3)."""
+    r = (a - jnp.dot(w, h, preferred_element_type=jnp.float32)) * mask
+    obj = jnp.sum(r * r) + lam[0, 0] * (jnp.sum(w * w) + jnp.sum(h * h))
+    return (obj.reshape(1, 1),)

@@ -1,0 +1,92 @@
+"""Canonical artifact shape manifest, shared by aot.py and the tests.
+
+Every entry below becomes one AOT-compiled HLO artifact. Shapes are static
+in XLA, so dynamic block sizes produced by the STRADS load balancer are
+reconciled through *shape buckets*: each update graph is compiled at a
+small set of capacity buckets and the rust runtime picks the smallest
+bucket that fits, padding the remainder with masked slots (numerically
+exact -- the kernels multiply padded lanes by a 0/1 mask).
+
+Row counts (``n``) must be multiples of ``ROW_TILE`` (the Pallas row-tile)
+because the L1 kernels tile the sample dimension; the data generators pad
+with zero rows, which is exact for standardized regression (zero rows
+contribute nothing to inner products or residuals).
+"""
+
+ROW_TILE = 128  # Pallas row-tile for the lasso kernels (sample dim)
+COL_TILE = 256  # Pallas column-tile for the MF rank-1 kernel (reduced dim)
+
+# ---------------------------------------------------------------- lasso --
+# Dataset-shaped graph families. "adlike" mirrors the Alzheimer's-disease
+# regime (few samples, many correlated covariates); "wide" mirrors the
+# paper's wide synthetic set; "tiny" keeps tests and the quickstart fast.
+LASSO_DATASETS = {
+    "tiny": dict(n=128, j=256),
+    "adlike": dict(n=512, j=4096),
+    "wide": dict(n=384, j=8192),
+}
+
+# Coordinate-batch capacity buckets for the CD update graph (P slots).
+LASSO_P_BUCKETS = {
+    "tiny": (16,),
+    "adlike": (16, 64, 256),
+    "wide": (16, 64, 256),
+}
+
+# Candidate-set capacity buckets for the Gram (dependency-check) graph.
+LASSO_GRAM_BUCKETS = {
+    "tiny": (64,),
+    "adlike": (128, 512),
+    "wide": (128, 512),
+}
+
+# ------------------------------------------------------------------- mf --
+MF_DATASETS = {
+    "tiny": dict(n=256, m=128, k=4),
+    "rec": dict(n=2048, m=1024, k=8),
+}
+
+# Row-block (W update) and column-block (H update) capacity buckets.
+MF_WB_BUCKETS = {
+    "tiny": (64, 256),
+    "rec": (256, 1024, 2048),
+}
+MF_HB_BUCKETS = {
+    "tiny": (64, 128),
+    "rec": (256, 1024),
+}
+
+
+def manifest_entries():
+    """Yield (name, kind, params) for every artifact to build."""
+    for ds, dims in LASSO_DATASETS.items():
+        n, j = dims["n"], dims["j"]
+        for p in LASSO_P_BUCKETS[ds]:
+            yield (
+                f"lasso_update_{ds}_p{p}",
+                "lasso_update",
+                dict(dataset=ds, n=n, j=j, p=p),
+            )
+        for c in LASSO_GRAM_BUCKETS[ds]:
+            yield (
+                f"lasso_gram_{ds}_c{c}",
+                "lasso_gram",
+                dict(dataset=ds, n=n, j=j, c=c),
+            )
+        yield (f"lasso_obj_{ds}", "lasso_obj", dict(dataset=ds, n=n, j=j))
+
+    for ds, dims in MF_DATASETS.items():
+        n, m, k = dims["n"], dims["m"], dims["k"]
+        for b in MF_WB_BUCKETS[ds]:
+            yield (
+                f"mf_update_w_{ds}_b{b}",
+                "mf_update_w",
+                dict(dataset=ds, n=n, m=m, k=k, b=b),
+            )
+        for b in MF_HB_BUCKETS[ds]:
+            yield (
+                f"mf_update_h_{ds}_b{b}",
+                "mf_update_h",
+                dict(dataset=ds, n=n, m=m, k=k, b=b),
+            )
+        yield (f"mf_obj_{ds}", "mf_obj", dict(dataset=ds, n=n, m=m, k=k))

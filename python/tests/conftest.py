@@ -1,0 +1,13 @@
+"""Shared pytest fixtures/utilities for the kernel + model tests."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(20130123)
+
+
+def assert_close(a, b, rtol=1e-4, atol=1e-4, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol, err_msg=msg)

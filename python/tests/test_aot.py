@@ -1,0 +1,65 @@
+"""AOT pipeline: every manifest entry lowers, the HLO text parses
+structurally, and the manifest stays consistent with shapes.py."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, shapes
+
+
+def test_manifest_entries_cover_all_kinds():
+    kinds = {kind for _, kind, _ in shapes.manifest_entries()}
+    assert kinds == {
+        "lasso_update",
+        "lasso_gram",
+        "lasso_obj",
+        "mf_update_w",
+        "mf_update_h",
+        "mf_obj",
+    }
+
+
+def test_example_args_shapes_are_consistent():
+    for name, kind, params in shapes.manifest_entries():
+        args = aot.example_args(kind, params)
+        assert all(hasattr(a, "shape") for a in args), name
+        if kind == "lasso_update":
+            n, j, p = params["n"], params["j"], params["p"]
+            assert args[0].shape == (n, j)
+            assert args[3].shape == (p,)
+
+
+def test_row_dims_are_tile_aligned():
+    for ds, dims in shapes.LASSO_DATASETS.items():
+        assert dims["n"] % shapes.ROW_TILE == 0, ds
+
+
+def test_mf_reduced_dims_are_tile_aligned():
+    for ds, dims in shapes.MF_DATASETS.items():
+        assert dims["m"] % 128 == 0, ds
+        assert dims["n"] % 128 == 0, ds
+
+
+@pytest.mark.slow
+def test_tiny_family_lowers_and_manifest_is_valid(tmp_path):
+    aot.build(str(tmp_path), only="tiny")
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    names = {e["name"] for e in manifest["artifacts"]}
+    assert "lasso_update_tiny_p16" in names
+    for e in manifest["artifacts"]:
+        path = tmp_path / e["file"]
+        assert path.exists()
+        head = path.read_text()[:200]
+        assert head.startswith("HloModule"), e["name"]
+
+
+@pytest.mark.slow
+def test_partial_rebuild_merges_manifest(tmp_path):
+    aot.build(str(tmp_path), only="lasso_obj_tiny")
+    aot.build(str(tmp_path), only="mf_obj_tiny")
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    names = {e["name"] for e in manifest["artifacts"]}
+    assert {"lasso_obj_tiny", "mf_obj_tiny"} <= names

@@ -1,0 +1,35 @@
+"""L1 correctness: gram Pallas kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, ref
+from .conftest import assert_close
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    c=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gram_matches_ref(tiles, c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(tiles * 128, c)), jnp.float32)
+    assert_close(gram.gram(x), ref.gram_ref(x), rtol=2e-4, atol=2e-4)
+
+
+def test_gram_is_symmetric_psd(rng):
+    x = jnp.asarray(rng.normal(size=(256, 32)), jnp.float32)
+    g = np.asarray(gram.gram(x))
+    assert_close(g, g.T)
+    eig = np.linalg.eigvalsh(g.astype(np.float64))
+    assert eig.min() > -1e-3
+
+
+def test_unit_columns_give_unit_diagonal(rng):
+    x = rng.normal(size=(128, 16)).astype(np.float32)
+    x = x / np.linalg.norm(x, axis=0, keepdims=True)
+    g = np.asarray(gram.gram(jnp.asarray(x)))
+    assert_close(np.diag(g), np.ones(16), rtol=1e-4, atol=1e-4)

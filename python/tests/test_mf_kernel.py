@@ -1,0 +1,60 @@
+"""L1 correctness: mf_ccd rank-1 Pallas kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mf_ccd, ref
+from .conftest import assert_close
+
+
+def make_case(rng, b, l, density=0.15, lam=0.05):
+    rt = jnp.asarray(rng.normal(size=(b, l)), jnp.float32)
+    mask = jnp.asarray((rng.random((b, l)) < density).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, l)), jnp.float32)
+    lam = jnp.asarray([[lam]], jnp.float32)
+    return rt, mask, v, lam
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=96),
+    tiles=st.integers(min_value=1, max_value=4),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_rank1_update_matches_ref(b, tiles, density, seed):
+    rng = np.random.default_rng(seed)
+    args = make_case(rng, b, tiles * 128, density=density)
+    assert_close(mf_ccd.rank1_update(*args), ref.rank1_update_ref(*args))
+
+
+def test_256_tile_path(rng):
+    # l divisible by 256 exercises the wide-tile branch
+    args = make_case(rng, 32, 512)
+    assert_close(mf_ccd.rank1_update(*args), ref.rank1_update_ref(*args))
+
+
+def test_empty_rows_give_zero(rng):
+    rt, _, v, lam = make_case(rng, 8, 128)
+    mask = jnp.zeros((8, 128), jnp.float32)
+    out = mf_ccd.rank1_update(rt, mask, v, lam)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_fully_observed_is_least_squares(rng):
+    # with full mask and lam=0, out_i = <rt_i, v> / ||v||^2 (the exact
+    # rank-1 LS solution per row)
+    rt, _, v, _ = make_case(rng, 16, 128)
+    mask = jnp.ones((16, 128), jnp.float32)
+    lam = jnp.asarray([[0.0]], jnp.float32)
+    out = mf_ccd.rank1_update(rt, mask, v, lam)
+    want = (np.asarray(rt) @ np.asarray(v).T) / (np.asarray(v) @ np.asarray(v).T)
+    assert_close(out, want)
+
+
+def test_lambda_shrinks_towards_zero(rng):
+    rt, mask, v, _ = make_case(rng, 16, 128, density=0.5)
+    small = mf_ccd.rank1_update(rt, mask, v, jnp.asarray([[1e-4]], jnp.float32))
+    big = mf_ccd.rank1_update(rt, mask, v, jnp.asarray([[1e4]], jnp.float32))
+    assert np.abs(np.asarray(big)).sum() < np.abs(np.asarray(small)).sum()

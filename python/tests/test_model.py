@@ -1,0 +1,140 @@
+"""L2 correctness: the full AOT graphs (gather + kernels + scatter) vs
+numpy reference implementations of the paper's update rules."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from .conftest import assert_close
+
+N, J, P = 128, 64, 8
+
+
+@pytest.fixture()
+def lasso_inputs(rng):
+    x = rng.normal(size=(N, J)).astype(np.float32)
+    x = x / np.linalg.norm(x, axis=0, keepdims=True)
+    beta_full = np.zeros(J, np.float32)
+    beta_full[::5] = rng.normal(size=len(beta_full[::5])).astype(np.float32) * 0.1
+    y = (x @ beta_full + 0.05 * rng.normal(size=N)).astype(np.float32)
+    r = y - x @ beta_full
+    return x, y, beta_full, r
+
+
+def test_lasso_update_graph(rng, lasso_inputs):
+    x, y, beta_full, r = lasso_inputs
+    idx = np.array([3, 17, 42, 5, 63, 0, 20, 31], np.int32)
+    mask = np.ones((1, P), np.float32)
+    mask[0, -2:] = 0.0  # two padded lanes
+    beta_sel = beta_full[idx].reshape(1, P)
+    lam = np.array([[0.01]], np.float32)
+    beta_new, delta, r_new = model.lasso_update(
+        jnp.asarray(x), jnp.asarray(r.reshape(N, 1)), jnp.asarray(beta_sel),
+        jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(lam),
+    )
+    # numpy reference
+    g = r @ x[:, idx] + beta_sel[0]
+    want = np.sign(g) * np.maximum(np.abs(g) - 0.01, 0.0)
+    want = np.where(mask[0] > 0, want, beta_sel[0])
+    assert_close(beta_new[0], want)
+    want_r = r - x[:, idx] @ (want - beta_sel[0])
+    assert_close(r_new[:, 0], want_r)
+
+
+def test_lasso_gram_graph(rng, lasso_inputs):
+    x, *_ = lasso_inputs
+    idx = np.array([0, 9, 33, 47], np.int32)
+    (g,) = model.lasso_gram(jnp.asarray(x), jnp.asarray(idx))
+    want = x[:, idx].T @ x[:, idx]
+    assert_close(g, want)
+
+
+def test_lasso_obj_graph(rng, lasso_inputs):
+    x, y, beta_full, _ = lasso_inputs
+    lam = np.array([[0.02]], np.float32)
+    obj, r = model.lasso_obj(
+        jnp.asarray(x), jnp.asarray(y.reshape(N, 1)),
+        jnp.asarray(beta_full.reshape(J, 1)), jnp.asarray(lam),
+    )
+    want_obj, want_r = ref.lasso_objective_ref(
+        jnp.asarray(x), jnp.asarray(y.reshape(N, 1)),
+        jnp.asarray(beta_full.reshape(J, 1)), 0.02,
+    )
+    assert_close(obj[0, 0], want_obj)
+    assert_close(r, want_r)
+
+
+class TestMfGraphs:
+    NN, MM, K, B = 256, 128, 4, 32
+
+    @pytest.fixture()
+    def mf_inputs(self, rng):
+        a = rng.normal(size=(self.NN, self.MM)).astype(np.float32)
+        mask = (rng.random((self.NN, self.MM)) < 0.2).astype(np.float32)
+        w = rng.normal(size=(self.NN, self.K)).astype(np.float32) * 0.5
+        h = rng.normal(size=(self.K, self.MM)).astype(np.float32) * 0.5
+        return a, mask, w, h
+
+    def test_update_w_matches_eq4(self, rng, mf_inputs):
+        a, mask, w, h = mf_inputs
+        t = 2
+        idx = rng.choice(self.NN, size=self.B, replace=False).astype(np.int32)
+        rmask = np.ones((self.B, 1), np.float32)
+        rmask[-3:] = 0.0
+        t1h = np.zeros((self.K, 1), np.float32)
+        t1h[t] = 1.0
+        lam = np.array([[0.05]], np.float32)
+        w_new, dw, w_next = model.mf_update_w(
+            *(jnp.asarray(v) for v in (a, mask, w, h, idx, rmask, t1h, lam))
+        )
+        # numpy eq. (4): w_ti = sum_j mask (r + w_t h_t) h_t / (lam + sum mask h_t^2)
+        r = (a - w @ h)[idx]  # [B, M]
+        mk = mask[idx]
+        rt = r + np.outer(w[idx, t], h[t])
+        num = (mk * rt * h[t]).sum(axis=1)
+        den = 0.05 + (mk * h[t] ** 2).sum(axis=1)
+        want = (num / den) * rmask[:, 0]
+        assert_close(w_new[:, 0], want, rtol=2e-3, atol=2e-3)
+        # scatter: w_next differs from w only in column t at idx rows
+        w_next = np.asarray(w_next)
+        untouched = np.ones(self.NN, bool)
+        untouched[idx] = False
+        assert_close(w_next[untouched], w[untouched])
+        other_cols = [c for c in range(self.K) if c != t]
+        assert_close(w_next[:, other_cols], w[:, other_cols])
+        live = rmask[:, 0] > 0
+        assert_close(w_next[idx[live], t], want[live], rtol=2e-3, atol=2e-3)
+        # padded rows keep old w_t
+        assert_close(w_next[idx[~live], t], w[idx[~live], t])
+
+    def test_update_h_matches_eq5(self, rng, mf_inputs):
+        a, mask, w, h = mf_inputs
+        t = 1
+        idx = rng.choice(self.MM, size=self.B, replace=False).astype(np.int32)
+        cmask = np.ones((self.B, 1), np.float32)
+        t1h = np.zeros((self.K, 1), np.float32)
+        t1h[t] = 1.0
+        lam = np.array([[0.05]], np.float32)
+        h_new, dh, h_next = model.mf_update_h(
+            *(jnp.asarray(v) for v in (a, mask, w, h, idx, cmask, t1h, lam))
+        )
+        r = (a - w @ h)[:, idx]  # [N, B]
+        mk = mask[:, idx]
+        rt = r + np.outer(w[:, t], h[t, idx])
+        num = (mk * rt * w[:, [t]]).sum(axis=0)
+        den = 0.05 + (mk * w[:, [t]] ** 2).sum(axis=0)
+        want = num / den
+        assert_close(h_new[:, 0], want, rtol=2e-3, atol=2e-3)
+        h_next = np.asarray(h_next)
+        assert_close(h_next[t, idx], want, rtol=2e-3, atol=2e-3)
+
+    def test_obj_matches_eq3(self, rng, mf_inputs):
+        a, mask, w, h = mf_inputs
+        lam = np.array([[0.05]], np.float32)
+        (obj,) = model.mf_obj(*(jnp.asarray(v) for v in (a, mask, w, h, lam)))
+        want = ref.mf_objective_ref(
+            jnp.asarray(a), jnp.asarray(mask), jnp.asarray(w), jnp.asarray(h), 0.05
+        )
+        assert_close(obj[0, 0], want, rtol=1e-4)

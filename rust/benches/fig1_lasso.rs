@@ -1,0 +1,63 @@
+//! Fig 1 bench: STRADS vs Shotgun convergence on the AD-regime Lasso.
+//!
+//! Prints the paper's series (objective at matched virtual-time
+//! checkpoints) plus a time-to-quality summary. Set
+//! `STRADS_BENCH_ROUNDS` to lengthen (default 600 keeps `cargo bench`
+//! fast; the CLI `strads fig1` runs the full figure).
+
+use strads::config::{EngineConfig, RunConfig};
+use strads::experiments;
+
+fn main() {
+    let rounds: usize = std::env::var("STRADS_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(600);
+    let cfg = RunConfig {
+        workers: 32,
+        lambda: 5e-4,
+        engine: EngineConfig {
+            max_rounds: rounds,
+            record_every: 10,
+            objective_every: 100,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    println!("== Fig 1: parallel Lasso, AD-regime, lambda=5e-4, P=32 ==");
+    let wall = std::time::Instant::now();
+    let traces = experiments::fig1(&cfg, None);
+    let dynamic = &traces[0];
+    let random = &traces[1];
+
+    // objective at matched vtime checkpoints (paper plots these curves)
+    println!("\n  vtime(s)   STRADS(dynamic)   Shotgun(random)");
+    let t_end = dynamic.final_vtime().min(random.final_vtime());
+    for frac in [0.1, 0.25, 0.5, 0.75, 1.0] {
+        let t = t_end * frac;
+        let at = |tr: &strads::metrics::Trace| {
+            tr.points
+                .iter()
+                .take_while(|p| p.vtime <= t)
+                .last()
+                .map(|p| p.objective)
+                .unwrap_or(f64::NAN)
+        };
+        println!("  {:>8.2}   {:>15.6e}   {:>15.6e}", t, at(dynamic), at(random));
+    }
+    println!(
+        "\nfinal: dynamic {:.6e} vs random {:.6e}  ({} rounds, wall {:.1}s)",
+        dynamic.final_objective(),
+        random.final_objective(),
+        rounds,
+        wall.elapsed().as_secs_f64()
+    );
+    if let Some(t) = dynamic.time_to_reach(random.final_objective()) {
+        println!(
+            "time-to-quality: dynamic reached random's final at vtime {:.2}s / random {:.2}s  ({:.1}x)",
+            t,
+            random.final_vtime(),
+            random.final_vtime() / t.max(1e-12)
+        );
+    }
+}

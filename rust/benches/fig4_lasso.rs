@@ -1,0 +1,61 @@
+//! Fig 4 bench: the 18-panel distributed Lasso sweep —
+//! {dynamic, static, random} x {adlike, wide} x {60, 120, 240} cores.
+//!
+//! Prints one row per (dataset, P, scheduler) with final objective and
+//! time-to-quality, and checks the paper's orderings. The CLI
+//! (`strads fig4`) writes the full CSV curves; this bench uses a
+//! reduced round budget sized for `cargo bench`.
+
+use strads::config::{EngineConfig, RunConfig};
+use strads::data::lasso_synth::generate;
+use strads::experiments::{self, SchedKind};
+
+fn main() {
+    let rounds: usize = std::env::var("STRADS_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    println!("== Fig 4: distributed Lasso sweep ({rounds} rounds/panel) ==\n");
+    println!(
+        "{:<8} {:>5} {:<9} {:>14} {:>12} {:>10}",
+        "dataset", "P", "sched", "final obj", "vtime(s)", "wall(s)"
+    );
+    let mut orderings_ok = 0;
+    let mut orderings = 0;
+    for dataset in ["adlike", "wide"] {
+        let data = generate(&experiments::lasso_spec(dataset).unwrap(), 42);
+        for &workers in &[60usize, 120, 240] {
+            let mut finals = Vec::new();
+            for sched in [SchedKind::Dynamic, SchedKind::Static, SchedKind::Random] {
+                let cfg = RunConfig {
+                    workers,
+                    lambda: 5e-4,
+                    engine: EngineConfig {
+                        max_rounds: rounds,
+                        record_every: 20,
+                        objective_every: 100,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                };
+                let wall = std::time::Instant::now();
+                let t = experiments::run_lasso_native(&data, dataset, sched, &cfg);
+                println!(
+                    "{:<8} {:>5} {:<9} {:>14.6e} {:>12.2} {:>10.1}",
+                    dataset,
+                    workers,
+                    sched.name(),
+                    t.final_objective(),
+                    t.final_vtime(),
+                    wall.elapsed().as_secs_f64()
+                );
+                finals.push(t.final_objective());
+            }
+            orderings += 1;
+            if finals[0] <= finals[2] {
+                orderings_ok += 1; // dynamic beats random (the headline)
+            }
+        }
+    }
+    println!("\npaper ordering (dynamic <= random): {orderings_ok}/{orderings} panels");
+}

@@ -1,0 +1,59 @@
+//! Fig 5 bench: single-machine parallel MF —
+//! {balanced (STRADS), uniform (no LB)} x {netflix-like, yahoo-like}
+//! x {4, 8, 16} cores.
+//!
+//! The claim under test: load balancing shortens cluster time for the
+//! same updates; the gain grows with nnz skew and (for yahoo-like)
+//! with core count.
+
+use strads::config::{CostModelConfig, EngineConfig};
+use strads::data::mf_powerlaw::{self, gini};
+use strads::experiments;
+use strads::metrics::Trace;
+use strads::mf::{run_mf, MfPartition, NativeMf};
+
+fn main() {
+    let iters: usize = std::env::var("STRADS_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    println!("== Fig 5: parallel MF, LB vs no-LB ({iters} CCD iterations/panel) ==\n");
+    println!(
+        "{:<9} {:>5} {:<9} {:>14} {:>11} {:>10} {:>9}",
+        "dataset", "P", "blocks", "final obj", "vtime(s)", "straggler", "wall(s)"
+    );
+    let cost = CostModelConfig::default();
+    for dataset in ["netflix", "yahoo"] {
+        let spec = experiments::mf_spec(dataset).unwrap();
+        let data = mf_powerlaw::generate(&spec, 42);
+        let g = gini(&data.a.col_nnz());
+        let mut speedups = Vec::new();
+        for &workers in &[4usize, 8, 16] {
+            let mut vtimes = Vec::new();
+            for part in [MfPartition::Balanced, MfPartition::Uniform] {
+                let mut backend = NativeMf::new(&data.a, data.rank_true, 0.05, 43);
+                let ecfg =
+                    EngineConfig { max_rounds: iters, record_every: 1, ..Default::default() };
+                let mut t = Trace::new(part.name(), dataset, workers);
+                let wall = std::time::Instant::now();
+                run_mf(&mut backend, part, workers, &ecfg, &cost, &mut t);
+                println!(
+                    "{:<9} {:>5} {:<9} {:>14.6e} {:>11.3} {:>10.2} {:>9.1}",
+                    dataset,
+                    workers,
+                    part.name(),
+                    t.final_objective(),
+                    t.final_vtime(),
+                    t.points.last().map(|p| p.imbalance).unwrap_or(1.0),
+                    wall.elapsed().as_secs_f64()
+                );
+                vtimes.push(t.final_vtime());
+            }
+            speedups.push(vtimes[1] / vtimes[0]);
+        }
+        println!(
+            "  {dataset}: col-nnz gini {g:.2}; LB speedup by P: {:.2}x / {:.2}x / {:.2}x\n",
+            speedups[0], speedups[1], speedups[2]
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Scheduler micro-benchmarks (L3 hot path).
+//!
+//! The paper's §2 requirement: "the scheduler must be able to find
+//! block structures faster than workers consume them". This bench
+//! times every scheduler-side operation at fig4 scale (J = 4096,
+//! P = 240, P' = 480) and compares the total against the worker-side
+//! round cost from the calibrated cost model.
+
+use strads::benchutil::{report, time_fn};
+use strads::config::SapConfig;
+use strads::coordinator::priority::PriorityKind;
+use strads::coordinator::{merge_balanced, select_independent, ShardSet};
+use strads::data::lasso_synth::{generate, LassoSynthSpec};
+use strads::lasso::NativeLasso;
+use strads::problem::{Block, ModelProblem};
+use strads::schedulers::{DynamicScheduler, Scheduler};
+use strads::util::{Fenwick, Rng};
+
+fn main() {
+    println!("== scheduler micro-benchmarks (J=4096, P=240, P'=480) ==\n");
+    let j = 4096;
+    let p = 240;
+    let p_prime = 480;
+    let mut rng = Rng::new(1);
+
+    // --- Fenwick ops ------------------------------------------------
+    let weights: Vec<f64> = (0..j).map(|_| rng.f64() + 1e-6).collect();
+    let mut fen = Fenwick::from_weights(&weights);
+    let (med, min, max) = time_fn(3, 20, || {
+        let mut r = Rng::new(7);
+        for _ in 0..p_prime {
+            std::hint::black_box(fen.sample(&mut r));
+        }
+    });
+    report(&format!("fenwick: draw {p_prime} candidates"), med, min, max);
+
+    let (med, min, max) = time_fn(3, 20, || {
+        let mut r = Rng::new(8);
+        std::hint::black_box(fen.sample_distinct(p_prime, &mut r));
+    });
+    report(&format!("fenwick: draw {p_prime} distinct (w/ removal)"), med, min, max);
+
+    let (med, min, max) = time_fn(3, 20, || {
+        for i in 0..p {
+            fen.set(i * 17 % j, 0.5);
+        }
+    });
+    report(&format!("fenwick: {p} priority updates"), med, min, max);
+
+    // --- dependency check -------------------------------------------
+    let c = p_prime;
+    let mut dep = vec![0.0f64; c * c];
+    for i in 0..c {
+        for k in 0..c {
+            if i != k {
+                dep[i * c + k] = if (i + k) % 11 == 0 { 0.5 } else { 0.02 };
+            }
+        }
+    }
+    let cands: Vec<usize> = (0..c).collect();
+    let (med, min, max) = time_fn(3, 20, || {
+        std::hint::black_box(select_independent(&cands, &dep, 0.1, p));
+    });
+    report(&format!("depcheck: greedy select {p} of {c}"), med, min, max);
+
+    // --- load balance -----------------------------------------------
+    let blocks: Vec<Block> =
+        (0..p_prime).map(|i| Block::singleton(i, (i % 37) as u64 + 1)).collect();
+    let (med, min, max) = time_fn(3, 20, || {
+        std::hint::black_box(merge_balanced(blocks.clone(), p));
+    });
+    report(&format!("balance: LPT merge {p_prime} -> {p}"), med, min, max);
+
+    // --- shard routing ----------------------------------------------
+    let mut shards = ShardSet::new(j, 4, 1e-6, 1e3, PriorityKind::Linear, &mut rng);
+    let (med, min, max) = time_fn(3, 20, || {
+        let mut r = Rng::new(9);
+        let si = shards.next_turn();
+        std::hint::black_box(shards.sample_candidates(si, p_prime, &mut r));
+    });
+    report("shard: turn + candidate draw", med, min, max);
+
+    // --- whole plan() on the real problem ----------------------------
+    let data = generate(&LassoSynthSpec::adlike(), 3);
+    let mut problem = NativeLasso::new(&data, 5e-4);
+    let cfg = SapConfig::default();
+    let mut sched = DynamicScheduler::new(problem.num_vars(), &cfg, 5);
+    // warm the dep cache the way a real run does
+    for _ in 0..3 {
+        let b = sched.plan(&mut problem, p);
+        let r = problem.update_blocks(&b);
+        sched.observe(&r);
+    }
+    let (med, min, max) = time_fn(2, 10, || {
+        let b = sched.plan(&mut problem, p);
+        let r = problem.update_blocks(&b);
+        sched.observe(&r);
+        std::hint::black_box(&r);
+    });
+    report("full SAP round: plan+update+observe (adlike)", med, min, max);
+
+    // --- the §2 bar ---------------------------------------------------
+    let cost = strads::config::CostModelConfig::default();
+    let worker_round = cost.sec_per_work_unit + cost.round_overhead_sec;
+    println!(
+        "\nworker round budget (cost model): {:.3} ms -> scheduler {} the bar",
+        worker_round * 1e3,
+        if med < worker_round * 4.0 { "CLEARS" } else { "MISSES" }
+    );
+}

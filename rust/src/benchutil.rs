@@ -1,0 +1,62 @@
+//! Tiny benchmarking harness for the `cargo bench` targets (the
+//! offline vendor set has no criterion). Median-of-runs wall timing
+//! with warmup, plus a table printer, is all the figure benches need —
+//! the statistically careful numbers live in the experiment CSVs.
+
+use std::time::Instant;
+
+/// Time `f` with `warmup` throwaway calls and `runs` measured calls;
+/// returns (median, min, max) seconds per call.
+pub fn time_fn<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (samples[samples.len() / 2], samples[0], *samples.last().unwrap())
+}
+
+/// Human-friendly duration formatting for bench tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.2} ms", s * 1e3)
+    } else {
+        format!("{s:8.3} s ")
+    }
+}
+
+/// Print one bench row: name, median, min-max range.
+pub fn report(name: &str, med: f64, min: f64, max: f64) {
+    println!("{name:<44} {} (min {}, max {})", fmt_secs(med), fmt_secs(min), fmt_secs(max));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let (med, min, max) = time_fn(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(min <= med && med <= max);
+        assert!(min >= 0.0);
+    }
+
+    #[test]
+    fn fmt_picks_unit() {
+        assert!(fmt_secs(2e-9).contains("ns"));
+        assert!(fmt_secs(2e-6).contains("us"));
+        assert!(fmt_secs(2e-3).contains("ms"));
+        assert!(fmt_secs(2.0).contains("s "));
+    }
+}

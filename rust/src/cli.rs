@@ -1,0 +1,145 @@
+//! Minimal CLI argument parser (the vendored crate set has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and one
+//! positional subcommand; unknown flags are hard errors with a usage
+//! hint, and every flag is typed through [`Args::get`]-style accessors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags consumed so far (for unknown-flag detection).
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse `std::env::args()[1..]`. Boolean flags get value "true".
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(raw) = tok.strip_prefix("--") {
+                let (key, val) = match raw.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        // value is next token unless it's another flag
+                        let takes_value =
+                            it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                        if takes_value {
+                            (raw.to_string(), it.next().unwrap())
+                        } else {
+                            (raw.to_string(), "true".to_string())
+                        }
+                    }
+                };
+                anyhow::ensure!(
+                    !out.flags.contains_key(&key),
+                    "flag --{key} given more than once"
+                );
+                out.flags.insert(key, val);
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                anyhow::bail!("unexpected positional argument: {tok}");
+            }
+        }
+        Ok(out)
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.raw(key).map(|s| s.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.raw(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Call after all accessors: errors on any flag never queried.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            anyhow::ensure!(seen.contains(k), "unknown flag --{k}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("fig4 --rounds 500 --out=results --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("fig4"));
+        assert_eq!(a.usize_or("rounds", 0).unwrap(), 500);
+        assert_eq!(a.str_or("out", "x"), "results");
+        assert!(a.bool("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run-lasso");
+        assert_eq!(a.usize_or("workers", 16).unwrap(), 16);
+        assert_eq!(a.f64_or("lambda", 5e-4).unwrap(), 5e-4);
+        assert!(!a.bool("artifacts"));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("fig1 --bogus 3");
+        let _ = a.usize_or("rounds", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(
+            ["--x", "1", "--x", "2"].into_iter().map(String::from)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let a = parse("cmd --workers lots");
+        assert!(a.usize_or("workers", 1).is_err());
+    }
+}

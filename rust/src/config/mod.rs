@@ -1,0 +1,265 @@
+//! Typed configuration for every experiment: loadable from `configs/`
+//! presets (key=value format, see [`crate::util::KvConf`]), CLI-
+//! overridable, with defaults matching the paper's settings.
+
+use crate::util::KvConf;
+
+/// SAP scheduling parameters (paper §2, §4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SapConfig {
+    /// Candidate multiplier: P' = p_prime_factor * P (step 1).
+    pub p_prime_factor: usize,
+    /// Dependency threshold ρ: pairs with |x_j^T x_k| > ρ are never
+    /// co-scheduled (step 2). Paper uses 0.1 for Lasso.
+    pub rho: f64,
+    /// Smoothing η in p(j) ∝ δβ_j + η (keeps dormant coordinates alive).
+    pub eta: f64,
+    /// Initial priority weight (the paper's "β^(t-2) = C for large C"
+    /// trick: every coordinate looks maximally important until touched
+    /// once, forcing full coverage early).
+    pub init_priority: f64,
+    /// Number of scheduler shards S (paper §3); each owns J/S variables
+    /// and they dispatch round-robin.
+    pub shards: usize,
+    /// Coordinates dispatched per worker block (paper §6 future work:
+    /// "increasing the size of blocks to be dispatched while still
+    /// tightly controlling interference" — every selected coordinate
+    /// still passes the pairwise ρ check; blocks are then LPT-merged to
+    /// P). 1 = the paper's evaluated configuration.
+    pub coords_per_worker: usize,
+}
+
+impl Default for SapConfig {
+    fn default() -> Self {
+        SapConfig {
+            p_prime_factor: 2,
+            rho: 0.1,
+            eta: 1e-6,
+            init_priority: 1e3,
+            shards: 4,
+            coords_per_worker: 1,
+        }
+    }
+}
+
+/// Driver parameters shared by all experiments.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Record a trace point every `record_every` rounds.
+    pub record_every: usize,
+    /// Recompute the exact objective (artifact/native full pass) every
+    /// `objective_every` rounds; between those, incremental values are
+    /// used where the problem maintains them.
+    pub objective_every: usize,
+    /// Stop after this many rounds.
+    pub max_rounds: usize,
+    /// Stop early once the relative objective improvement over a
+    /// `record_every` window falls below this (0 disables) — the
+    /// "automatic stopping condition" the paper invokes in §5.1.
+    pub rel_tol: f64,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            record_every: 1,
+            objective_every: 50,
+            max_rounds: 1_000,
+            rel_tol: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Virtual-cluster cost model (see `sim::` for the formula and
+/// DESIGN.md §2 for why the time axis is simulated).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModelConfig {
+    /// Seconds per workload unit on a worker core (lasso: one
+    /// coordinate update's O(N) dot; MF: one rated entry).
+    pub sec_per_work_unit: f64,
+    /// Fixed per-round network/dispatch latency (seconds).
+    pub round_overhead_sec: f64,
+    /// Scheduler-side seconds per candidate scored (sampling + gram
+    /// row + greedy pass, amortized).
+    pub sched_sec_per_candidate: f64,
+}
+
+impl Default for CostModelConfig {
+    fn default() -> Self {
+        CostModelConfig {
+            // Calibrated against the native updater on this host (see
+            // EXPERIMENTS.md §Calibration and `strads calibrate`).
+            sec_per_work_unit: 4.5e-7,
+            round_overhead_sec: 1e-3,
+            sched_sec_per_candidate: 2e-6,
+        }
+    }
+}
+
+/// Top-level experiment config (what the `configs/` presets load into).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub sap: SapConfig,
+    pub engine: EngineConfig,
+    pub cost: CostModelConfig,
+    /// Worker (core) count P.
+    pub workers: usize,
+    /// Regularization λ.
+    pub lambda: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            sap: SapConfig::default(),
+            engine: EngineConfig::default(),
+            cost: CostModelConfig::default(),
+            workers: 16,
+            lambda: 5e-4,
+        }
+    }
+}
+
+macro_rules! load {
+    ($conf:expr, $target:expr, usize: $($key:literal => $field:expr),* $(,)?) => {
+        $(if let Some(v) = $conf.get_usize($key).map_err(anyhow::Error::msg)? { $field = v; })*
+    };
+    ($conf:expr, $target:expr, f64: $($key:literal => $field:expr),* $(,)?) => {
+        $(if let Some(v) = $conf.get_f64($key).map_err(anyhow::Error::msg)? { $field = v; })*
+    };
+}
+
+impl RunConfig {
+    /// Load a preset, starting from defaults; unknown keys are errors
+    /// (they are always typos).
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let conf = KvConf::from_file(path).map_err(anyhow::Error::msg)?;
+        Self::from_kvconf(&conf)
+    }
+
+    pub fn from_kvconf(conf: &KvConf) -> anyhow::Result<Self> {
+        const KNOWN: &[&str] = &[
+            "workers",
+            "lambda",
+            "sap.p_prime_factor",
+            "sap.rho",
+            "sap.eta",
+            "sap.init_priority",
+            "sap.shards",
+            "sap.coords_per_worker",
+            "engine.record_every",
+            "engine.objective_every",
+            "engine.max_rounds",
+            "engine.rel_tol",
+            "engine.seed",
+            "cost.sec_per_work_unit",
+            "cost.round_overhead_sec",
+            "cost.sched_sec_per_candidate",
+        ];
+        for k in conf.keys() {
+            anyhow::ensure!(KNOWN.contains(&k), "unknown config key: {k}");
+        }
+        let mut c = RunConfig::default();
+        load!(conf, c, usize:
+            "workers" => c.workers,
+            "sap.p_prime_factor" => c.sap.p_prime_factor,
+            "sap.shards" => c.sap.shards,
+            "sap.coords_per_worker" => c.sap.coords_per_worker,
+            "engine.record_every" => c.engine.record_every,
+            "engine.objective_every" => c.engine.objective_every,
+            "engine.max_rounds" => c.engine.max_rounds,
+        );
+        load!(conf, c, f64:
+            "lambda" => c.lambda,
+            "sap.rho" => c.sap.rho,
+            "sap.eta" => c.sap.eta,
+            "sap.init_priority" => c.sap.init_priority,
+            "engine.rel_tol" => c.engine.rel_tol,
+            "cost.sec_per_work_unit" => c.cost.sec_per_work_unit,
+            "cost.round_overhead_sec" => c.cost.round_overhead_sec,
+            "cost.sched_sec_per_candidate" => c.cost.sched_sec_per_candidate,
+        );
+        if let Some(v) = conf.get_u64("engine.seed").map_err(anyhow::Error::msg)? {
+            c.engine.seed = v;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Serialize back to the preset format.
+    pub fn to_conf_string(&self) -> String {
+        format!(
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n",
+            self.workers,
+            self.lambda,
+            self.sap.p_prime_factor,
+            self.sap.rho,
+            self.sap.eta,
+            self.sap.init_priority,
+            self.sap.shards,
+            self.sap.coords_per_worker,
+            self.engine.record_every,
+            self.engine.objective_every,
+            self.engine.max_rounds,
+            self.engine.rel_tol,
+            self.engine.seed,
+            self.cost.sec_per_work_unit,
+            self.cost.round_overhead_sec,
+            self.cost.sched_sec_per_candidate,
+        )
+    }
+
+    /// Validate invariants that would otherwise surface as confusing
+    /// runtime behaviour.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.sap.p_prime_factor >= 1, "p_prime_factor must be >= 1");
+        anyhow::ensure!(self.sap.shards >= 1, "shards must be >= 1");
+        anyhow::ensure!(self.sap.coords_per_worker >= 1, "coords_per_worker must be >= 1");
+        anyhow::ensure!((0.0..=1.0).contains(&self.sap.rho), "rho must be in [0, 1]");
+        anyhow::ensure!(self.sap.eta > 0.0, "eta must be > 0");
+        anyhow::ensure!(self.lambda >= 0.0, "lambda must be >= 0");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conf_roundtrip() {
+        let cfg = RunConfig { workers: 240, ..Default::default() };
+        let s = cfg.to_conf_string();
+        let back = RunConfig::from_kvconf(&KvConf::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn unknown_key_is_rejected() {
+        let conf = KvConf::parse("wrokers = 8\n").unwrap();
+        assert!(RunConfig::from_kvconf(&conf).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_rho() {
+        let conf = KvConf::parse("[sap]\nrho = 1.5\n").unwrap();
+        assert!(RunConfig::from_kvconf(&conf).is_err());
+    }
+
+    #[test]
+    fn validation_accepts_default() {
+        assert!(RunConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn partial_preset_overrides_defaults() {
+        let conf = KvConf::parse("workers = 60\n[sap]\nrho = 0.2\n").unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.workers, 60);
+        assert_eq!(c.sap.rho, 0.2);
+        assert_eq!(c.sap.shards, SapConfig::default().shards);
+    }
+}

@@ -1,0 +1,182 @@
+//! SAP step 3: workload-balanced block formation.
+//!
+//! Two entry points:
+//!
+//! * [`merge_balanced`] — SAP's online form: merge the per-round blocks
+//!   until every worker gets a similar total workload.
+//! * [`partition_balanced`] — the MF form (paper §2.2 step 3): partition
+//!   *all* rows/columns into exactly P blocks with near-equal nnz. The
+//!   baseline [`partition_uniform`] splits by count, oblivious to nnz —
+//!   the "no load balancing" scheduler of Fig 5.
+//!
+//! Balancing uses LPT (longest-processing-time-first greedy into the
+//! currently-lightest bin), the classic 4/3-approximation to makespan
+//! minimization — cheap enough to run every round.
+
+use crate::problem::Block;
+
+/// Merge blocks into at most `p` blocks with near-equal total work.
+/// Order within a block is preserved; blocks are LPT-packed into bins.
+pub fn merge_balanced(blocks: Vec<Block>, p: usize) -> Vec<Block> {
+    assert!(p >= 1);
+    if blocks.len() <= p {
+        return blocks;
+    }
+    let mut order: Vec<usize> = (0..blocks.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(blocks[i].work));
+    let mut bins: Vec<Block> = (0..p).map(|_| Block { vars: Vec::new(), work: 0 }).collect();
+    for i in order {
+        // lightest bin
+        let b = bins
+            .iter_mut()
+            .min_by_key(|b| b.work)
+            .expect("p >= 1 bins");
+        b.vars.extend_from_slice(&blocks[i].vars);
+        b.work += blocks[i].work;
+    }
+    bins.retain(|b| !b.vars.is_empty());
+    bins
+}
+
+/// Partition items 0..n (with per-item weights) into exactly `p` blocks
+/// of near-equal total weight (LPT greedy). Used by the MF scheduler
+/// where items are rows/columns and weights are nnz.
+pub fn partition_balanced(weights: &[u64], p: usize) -> Vec<Block> {
+    assert!(p >= 1);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(weights[i]));
+    let mut bins: Vec<Block> = (0..p.min(weights.len().max(1)))
+        .map(|_| Block { vars: Vec::new(), work: 0 })
+        .collect();
+    for i in order {
+        let b = bins.iter_mut().min_by_key(|b| b.work).expect("bins nonempty");
+        b.vars.push(i);
+        b.work += weights[i];
+    }
+    bins.retain(|b| !b.vars.is_empty());
+    bins
+}
+
+/// Baseline: partition items 0..n into `p` contiguous count-equal blocks,
+/// ignoring weights (the "no load balancing" scheduler).
+pub fn partition_uniform(weights: &[u64], p: usize) -> Vec<Block> {
+    assert!(p >= 1);
+    let n = weights.len();
+    let mut out = Vec::with_capacity(p);
+    let base = n / p;
+    let extra = n % p;
+    let mut start = 0;
+    for b in 0..p {
+        let len = base + usize::from(b < extra);
+        if len == 0 {
+            continue;
+        }
+        let vars: Vec<usize> = (start..start + len).collect();
+        let work = vars.iter().map(|&i| weights[i]).sum();
+        out.push(Block { vars, work });
+        start += len;
+    }
+    out
+}
+
+/// Straggler ratio of a block set: max work / mean work (1.0 = perfect).
+pub fn imbalance(blocks: &[Block]) -> f64 {
+    if blocks.is_empty() {
+        return 1.0;
+    }
+    let total: u64 = blocks.iter().map(|b| b.work).sum();
+    let max = blocks.iter().map(|b| b.work).max().unwrap_or(0);
+    let mean = total as f64 / blocks.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max as f64 / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn works(blocks: &[Block]) -> Vec<u64> {
+        blocks.iter().map(|b| b.work).collect()
+    }
+
+    #[test]
+    fn merge_noop_when_few_blocks() {
+        let blocks = vec![Block::singleton(0, 5), Block::singleton(1, 1)];
+        let out = merge_balanced(blocks.clone(), 4);
+        assert_eq!(out, blocks);
+    }
+
+    #[test]
+    fn merge_balances_workloads() {
+        let blocks: Vec<Block> = (0..16).map(|i| Block::singleton(i, (i % 4 + 1) as u64)).collect();
+        let out = merge_balanced(blocks, 4);
+        assert_eq!(out.len(), 4);
+        let w = works(&out);
+        let total: u64 = w.iter().sum();
+        assert_eq!(total, 40);
+        assert!(imbalance(&out) < 1.15, "imbalance {}", imbalance(&out));
+        // all 16 vars present exactly once
+        let mut vars: Vec<usize> = out.iter().flat_map(|b| b.vars.clone()).collect();
+        vars.sort();
+        assert_eq!(vars, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partition_balanced_beats_uniform_on_powerlaw() {
+        // Zipf-ish weights: first item huge, rest tiny.
+        let mut weights = vec![1u64; 100];
+        weights[0] = 200;
+        weights[1] = 100;
+        let bal = partition_balanced(&weights, 4);
+        let uni = partition_uniform(&weights, 4);
+        assert!(imbalance(&bal) < imbalance(&uni));
+        // uniform puts both heavy items in block 0 -> severe straggler
+        assert!(imbalance(&uni) > 2.0, "uniform imbalance {}", imbalance(&uni));
+    }
+
+    #[test]
+    fn partition_covers_all_items_once() {
+        let weights: Vec<u64> = (0..53).map(|i| (i * 7 % 13) as u64 + 1).collect();
+        for p in [1, 2, 5, 8] {
+            for blocks in [partition_balanced(&weights, p), partition_uniform(&weights, p)] {
+                let mut vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+                vars.sort();
+                assert_eq!(vars, (0..53).collect::<Vec<_>>(), "p={p}");
+                for b in &blocks {
+                    let w: u64 = b.vars.iter().map(|&i| weights[i]).sum();
+                    assert_eq!(w, b.work);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_more_bins_than_items() {
+        let weights = vec![3u64, 1];
+        let blocks = partition_balanced(&weights, 8);
+        assert_eq!(blocks.len(), 2);
+    }
+
+    #[test]
+    fn uniform_partition_is_contiguous() {
+        let weights = vec![1u64; 10];
+        let blocks = partition_uniform(&weights, 3);
+        assert_eq!(blocks[0].vars, vec![0, 1, 2, 3]);
+        assert_eq!(blocks[1].vars, vec![4, 5, 6]);
+        assert_eq!(blocks[2].vars, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn single_heavy_item_bounds_balance() {
+        // one item with most of the mass: imbalance is inherent, but
+        // balanced partition must still isolate it.
+        let mut weights = vec![1u64; 20];
+        weights[7] = 1000;
+        let blocks = partition_balanced(&weights, 4);
+        let heavy = blocks.iter().find(|b| b.vars.contains(&7)).unwrap();
+        assert_eq!(heavy.vars.len(), 1, "heavy item should be isolated");
+    }
+}

@@ -1,0 +1,44 @@
+//! The SAP scheduling machinery (paper §2–§3) — STRADS's contribution.
+//!
+//! The four SAP steps map to submodules:
+//!
+//! 1. **[`priority`]** — the importance distribution p(j) ∝ δβ_j + η,
+//!    Fenwick-backed so sampling and updating are O(log n).
+//! 2. **[`depcheck`]** — ρ-constrained greedy block selection over the
+//!    sampled candidate set (the argmin program of §4 step 2).
+//! 3. **[`balance`]** — workload-equalizing block merging (the
+//!    "curse of the last reducer" fix, used heavily by MF).
+//! 4. progress monitoring lives in `priority::PriorityDist::report`.
+//!
+//! **[`shard`]** implements the §3 distributed design: S scheduler
+//! shards, each owning a fixed J/S slice of the variables with its own
+//! local p_s(j), taking round-robin turns to produce dispatch plans.
+
+pub mod balance;
+pub mod depcheck;
+pub mod priority;
+pub mod shard;
+
+pub use balance::{merge_balanced, partition_balanced, partition_uniform};
+pub use depcheck::select_independent;
+pub use priority::PriorityDist;
+pub use shard::ShardSet;
+
+/// Cost accounting for one scheduling decision, consumed by the virtual
+/// cluster's cost model (the scheduler must never be the bottleneck —
+/// §2's closing requirement — and we *charge* for it rather than wishing
+/// it away).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedCost {
+    /// Candidates drawn from p(j).
+    pub candidates: usize,
+    /// Pairwise dependency evaluations performed.
+    pub dep_checks: usize,
+}
+
+impl SchedCost {
+    pub fn add(&mut self, other: SchedCost) {
+        self.candidates += other.candidates;
+        self.dep_checks += other.dep_checks;
+    }
+}

@@ -1,0 +1,153 @@
+//! SAP step 1 + 4: the importance distribution p(j) and its updates.
+//!
+//! Paper (§2.1, §4): p(j) ∝ δβ_j^(t-1) + η, with the initialization
+//! trick β^(t_j - 2) = C (a huge constant) so that *untouched*
+//! coordinates carry maximal weight — every variable is visited early,
+//! after which measured progress takes over. Theorem 1 shows the
+//! squared variant p(j) ∝ ½(δβ_j)² approximately maximizes the expected
+//! per-iteration objective decrease; both are provided.
+
+use crate::util::{Fenwick, Rng};
+
+/// Which transform of |δβ| feeds the sampling weight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PriorityKind {
+    /// w_j = |δβ_j| + η (the paper's practical choice).
+    Linear,
+    /// w_j = ½ δβ_j² + η (the Theorem-1 optimal form).
+    Squared,
+}
+
+/// Importance distribution over a set of variables (one per shard).
+#[derive(Clone, Debug)]
+pub struct PriorityDist {
+    fenwick: Fenwick,
+    eta: f64,
+    kind: PriorityKind,
+    /// Variables never yet updated keep `init` weight (the C trick).
+    touched: Vec<bool>,
+    untouched_left: usize,
+}
+
+impl PriorityDist {
+    pub fn new(n: usize, eta: f64, init: f64, kind: PriorityKind) -> Self {
+        let weights = vec![init.max(eta); n];
+        PriorityDist {
+            fenwick: Fenwick::from_weights(&weights),
+            eta,
+            kind,
+            touched: vec![false; n],
+            untouched_left: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fenwick.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fenwick.is_empty()
+    }
+
+    /// SAP step 4: record measured progress |δ| for local variable `i`.
+    pub fn report(&mut self, i: usize, delta_abs: f64) {
+        if !self.touched[i] {
+            self.touched[i] = true;
+            self.untouched_left -= 1;
+        }
+        let w = match self.kind {
+            PriorityKind::Linear => delta_abs + self.eta,
+            PriorityKind::Squared => 0.5 * delta_abs * delta_abs + self.eta,
+        };
+        self.fenwick.set(i, w);
+    }
+
+    /// SAP step 1: draw `k` distinct candidates ∝ current weights.
+    pub fn sample_candidates(&mut self, k: usize, rng: &mut Rng) -> Vec<usize> {
+        self.fenwick.sample_distinct(k.min(self.len()), rng)
+    }
+
+    /// Current weight of variable `i` (diagnostics / tests).
+    pub fn weight(&self, i: usize) -> f64 {
+        self.fenwick.get(i)
+    }
+
+    /// Fraction of variables updated at least once — the paper's "early
+    /// sharp drop" happens right after this reaches 1.0 (§5.1).
+    pub fn coverage(&self) -> f64 {
+        1.0 - self.untouched_left as f64 / self.touched.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untouched_variables_dominate_sampling() {
+        let mut p = PriorityDist::new(100, 1e-6, 1e3, PriorityKind::Linear);
+        // Touch 0..90 with tiny progress; 90..100 stay at init weight.
+        for i in 0..90 {
+            p.report(i, 1e-5);
+        }
+        let mut rng = Rng::new(1);
+        let mut hits = 0;
+        for _ in 0..200 {
+            let c = p.sample_candidates(5, &mut rng);
+            hits += c.iter().filter(|&&i| i >= 90).count();
+        }
+        // 10 untouched vars hold ~1e4x the weight of 90 touched ones.
+        assert!(hits as f64 > 0.95 * 200.0 * 5.0, "hits {hits}");
+    }
+
+    #[test]
+    fn progress_reweights_sampling() {
+        let mut p = PriorityDist::new(10, 1e-6, 1.0, PriorityKind::Linear);
+        for i in 0..10 {
+            p.report(i, if i == 3 { 10.0 } else { 0.001 });
+        }
+        let mut rng = Rng::new(2);
+        let mut count3 = 0;
+        for _ in 0..1000 {
+            if p.sample_candidates(1, &mut rng)[0] == 3 {
+                count3 += 1;
+            }
+        }
+        assert!(count3 > 900, "count3 {count3}");
+    }
+
+    #[test]
+    fn squared_kind_amplifies_large_deltas() {
+        let mut lin = PriorityDist::new(2, 1e-9, 1.0, PriorityKind::Linear);
+        let mut sq = PriorityDist::new(2, 1e-9, 1.0, PriorityKind::Squared);
+        for p in [&mut lin, &mut sq] {
+            p.report(0, 2.0);
+            p.report(1, 1.0);
+        }
+        let lin_ratio = lin.weight(0) / lin.weight(1);
+        let sq_ratio = sq.weight(0) / sq.weight(1);
+        assert!((lin_ratio - 2.0).abs() < 1e-6);
+        assert!((sq_ratio - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn coverage_tracks_touched() {
+        let mut p = PriorityDist::new(4, 1e-6, 1.0, PriorityKind::Linear);
+        assert_eq!(p.coverage(), 0.0);
+        p.report(0, 0.1);
+        p.report(0, 0.2); // re-touch is idempotent
+        p.report(1, 0.1);
+        assert!((p.coverage() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_delta_keeps_eta_floor() {
+        let mut p = PriorityDist::new(3, 1e-4, 1.0, PriorityKind::Linear);
+        p.report(0, 0.0);
+        assert!(p.weight(0) > 0.0);
+        let mut rng = Rng::new(3);
+        // still sampleable
+        let c = p.sample_candidates(3, &mut rng);
+        assert_eq!(c.len(), 3);
+    }
+}

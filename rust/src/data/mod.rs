@@ -1,0 +1,28 @@
+//! Synthetic dataset generators.
+//!
+//! The paper evaluates on four datasets we cannot ship (the Alzheimer's
+//! disease SNP panel is access-restricted; Netflix and Yahoo-Music are
+//! license-encumbered). Each generator below synthesizes the *property*
+//! the corresponding experiment exercises — see DESIGN.md §2 for the
+//! substitution rationale:
+//!
+//! * [`lasso_synth`] — correlated-block designs (LD-structure-like) for
+//!   the Lasso experiments: correlation blocks create the interference
+//!   that SAP's dependency checker must avoid, and sparse ground-truth
+//!   coefficients create the dynamic `beta_j = 0` structure that the
+//!   importance distribution exploits.
+//! * [`mf_powerlaw`] — Zipf-popularity bipartite ratings for the MF
+//!   experiments: the power-law nnz distribution across rows/columns is
+//!   exactly what makes naive uniform partitioning straggle (Fig 5).
+
+pub mod lasso_synth;
+pub mod mf_powerlaw;
+
+/// The Pallas row tile; sample counts are padded to a multiple of this
+/// (zero rows are exact for standardized regression).
+pub const ROW_TILE: usize = 128;
+
+/// Round `n` up to a multiple of [`ROW_TILE`].
+pub fn pad_rows(n: usize) -> usize {
+    n.div_ceil(ROW_TILE) * ROW_TILE
+}

@@ -1,0 +1,236 @@
+//! Experiment drivers: one function per paper figure, shared by the
+//! CLI (`strads fig1|fig4|fig5`), the examples, and the criterion
+//! benches so every entry point runs the identical protocol.
+
+use crate::config::{EngineConfig, RunConfig};
+use crate::data::lasso_synth::{self, LassoData, LassoSynthSpec};
+use crate::data::mf_powerlaw::{self, MfSynthSpec};
+use crate::engine::run_rounds;
+use crate::lasso::NativeLasso;
+use crate::metrics::Trace;
+use crate::mf::{run_mf, MfPartition, NativeMf};
+use crate::problem::ModelProblem;
+use crate::schedulers::{DynamicScheduler, RandomScheduler, Scheduler, StaticBlockScheduler};
+use crate::sim::{CostModel, VirtualCluster};
+
+/// Scheduler selector shared by CLI and drivers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    Dynamic,
+    Static,
+    Random,
+}
+
+impl SchedKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedKind::Dynamic => "dynamic",
+            SchedKind::Static => "static",
+            SchedKind::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "dynamic" | "strads" => Ok(SchedKind::Dynamic),
+            "static" => Ok(SchedKind::Static),
+            "random" | "shotgun" => Ok(SchedKind::Random),
+            other => anyhow::bail!("unknown scheduler {other}"),
+        }
+    }
+
+    pub fn build(self, num_vars: usize, cfg: &RunConfig) -> Box<dyn Scheduler> {
+        match self {
+            SchedKind::Dynamic => {
+                Box::new(DynamicScheduler::new(num_vars, &cfg.sap, cfg.engine.seed))
+            }
+            SchedKind::Static => Box::new(StaticBlockScheduler::new(&cfg.sap, cfg.engine.seed)),
+            SchedKind::Random => Box::new(RandomScheduler::new(cfg.engine.seed)),
+        }
+    }
+}
+
+/// Lasso dataset selector.
+pub fn lasso_spec(name: &str) -> anyhow::Result<LassoSynthSpec> {
+    match name {
+        "tiny" => Ok(LassoSynthSpec::tiny()),
+        "adlike" => Ok(LassoSynthSpec::adlike()),
+        "wide" => Ok(LassoSynthSpec::wide()),
+        other => anyhow::bail!("unknown lasso dataset {other} (tiny|adlike|wide)"),
+    }
+}
+
+/// MF dataset selector.
+pub fn mf_spec(name: &str) -> anyhow::Result<MfSynthSpec> {
+    match name {
+        "tiny" => Ok(MfSynthSpec::tiny()),
+        "netflix" => Ok(MfSynthSpec::netflix_like()),
+        "yahoo" => Ok(MfSynthSpec::yahoo_like()),
+        other => anyhow::bail!("unknown mf dataset {other} (tiny|netflix|yahoo)"),
+    }
+}
+
+/// One Lasso run on the native backend + virtual cluster.
+pub fn run_lasso_native(
+    data: &LassoData,
+    dataset: &str,
+    sched: SchedKind,
+    cfg: &RunConfig,
+) -> Trace {
+    let mut problem = NativeLasso::new(data, cfg.lambda);
+    let mut scheduler = sched.build(problem.num_vars(), cfg);
+    // Every scheduler gets the same S-shard latency hiding: it is an
+    // infrastructure property (rotating scheduler threads), not part of
+    // the policy under comparison.
+    let mut cluster =
+        VirtualCluster::new(cfg.workers, cfg.sap.shards, CostModel::new(&cfg.cost));
+    let mut trace = Trace::new(sched.name(), dataset, cfg.workers);
+    run_rounds(&mut problem, scheduler.as_mut(), &mut cluster, &cfg.engine, &mut trace);
+    trace
+}
+
+/// Fig 1: STRADS vs Shotgun on the AD-regime dataset, λ = 5e-4.
+pub fn fig1(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<Trace> {
+    let data = lasso_synth::generate(&LassoSynthSpec::adlike(), cfg_base.engine.seed);
+    let mut traces = Vec::new();
+    for sched in [SchedKind::Dynamic, SchedKind::Random] {
+        let cfg = cfg_base.clone();
+        let t = run_lasso_native(&data, "adlike", sched, &cfg);
+        if let Some(p) = out_csv {
+            t.append_csv(p).expect("csv write");
+        }
+        println!("{}", t.summary());
+        traces.push(t);
+    }
+    traces
+}
+
+/// Fig 4: {dynamic, static, random} x {adlike, wide} x {60, 120, 240}
+/// virtual cores — the paper's 6-panel distributed Lasso comparison.
+pub fn fig4(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<Trace> {
+    let mut traces = Vec::new();
+    for dataset in ["adlike", "wide"] {
+        let data = lasso_synth::generate(&lasso_spec(dataset).unwrap(), cfg_base.engine.seed);
+        for &workers in &[60usize, 120, 240] {
+            for sched in [SchedKind::Dynamic, SchedKind::Static, SchedKind::Random] {
+                let mut cfg = cfg_base.clone();
+                cfg.workers = workers;
+                let t = run_lasso_native(&data, dataset, sched, &cfg);
+                if let Some(p) = out_csv {
+                    t.append_csv(p).expect("csv write");
+                }
+                println!("{}", t.summary());
+                traces.push(t);
+            }
+        }
+    }
+    traces
+}
+
+/// Fig 5: {balanced (STRADS), uniform (no LB)} x {netflix-like,
+/// yahoo-like} x {4, 8, 16} cores — single-machine parallel MF.
+pub fn fig5(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<Trace> {
+    let mut traces = Vec::new();
+    for dataset in ["netflix", "yahoo"] {
+        let data = mf_powerlaw::generate(&mf_spec(dataset).unwrap(), cfg_base.engine.seed);
+        for &workers in &[4usize, 8, 16] {
+            for partition in [MfPartition::Balanced, MfPartition::Uniform] {
+                let mut backend =
+                    NativeMf::new(&data.a, data.rank_true, 0.05, cfg_base.engine.seed + 1);
+                let cfg = EngineConfig {
+                    max_rounds: cfg_base.engine.max_rounds.min(30),
+                    record_every: 1,
+                    ..cfg_base.engine.clone()
+                };
+                let mut t = Trace::new(partition.name(), dataset, workers);
+                run_mf(&mut backend, partition, workers, &cfg, &cfg_base.cost, &mut t);
+                if let Some(p) = out_csv {
+                    t.append_csv(p).expect("csv write");
+                }
+                println!("{}", t.summary());
+                traces.push(t);
+            }
+        }
+    }
+    traces
+}
+
+/// Ablation sweep over the two SAP design knobs DESIGN.md calls out:
+/// the dependency threshold ρ (correctness vs parallelism trade) and
+/// the scheduler shard count S (latency hiding). Prints one row per
+/// setting; returns (label, trace) pairs.
+pub fn ablation(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<(String, Trace)> {
+    let data = lasso_synth::generate(&LassoSynthSpec::adlike(), cfg_base.engine.seed);
+    let mut out = Vec::new();
+    println!("-- rho sweep (P={}, shards={}) --", cfg_base.workers, cfg_base.sap.shards);
+    for rho in [0.02, 0.05, 0.1, 0.2, 0.5, 1.0] {
+        let mut cfg = cfg_base.clone();
+        cfg.sap.rho = rho;
+        let mut t = run_lasso_native(&data, "adlike", SchedKind::Dynamic, &cfg);
+        t.scheduler = format!("rho={rho}");
+        println!("  {}", t.summary());
+        if let Some(p) = out_csv {
+            t.append_csv(p).expect("csv write");
+        }
+        out.push((format!("rho={rho}"), t));
+    }
+    println!("-- shard sweep (rho={}) --", cfg_base.sap.rho);
+    for shards in [1usize, 2, 4, 8] {
+        let mut cfg = cfg_base.clone();
+        cfg.sap.shards = shards;
+        let mut t = run_lasso_native(&data, "adlike", SchedKind::Dynamic, &cfg);
+        t.scheduler = format!("shards={shards}");
+        println!("  {}", t.summary());
+        if let Some(p) = out_csv {
+            t.append_csv(p).expect("csv write");
+        }
+        out.push((format!("shards={shards}"), t));
+    }
+    out
+}
+
+/// Calibrate the cost model's `sec_per_work_unit` by timing native
+/// coordinate updates on this host (see EXPERIMENTS.md §Calibration).
+pub fn calibrate_lasso(data: &LassoData, lambda: f64) -> f64 {
+    let problem = NativeLasso::new(data, lambda);
+    let n_updates = 20_000.min(data.j() * 4);
+    let start = std::time::Instant::now();
+    let mut acc = 0.0f64;
+    for i in 0..n_updates {
+        acc += problem.propose(i % data.j());
+    }
+    std::hint::black_box(acc);
+    start.elapsed().as_secs_f64() / n_updates as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sched_kind_parse() {
+        assert_eq!(SchedKind::parse("strads").unwrap(), SchedKind::Dynamic);
+        assert_eq!(SchedKind::parse("shotgun").unwrap(), SchedKind::Random);
+        assert!(SchedKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn tiny_lasso_run_decreases_objective() {
+        let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 5);
+        let cfg = RunConfig {
+            workers: 8,
+            lambda: 1e-3,
+            engine: EngineConfig { max_rounds: 200, ..Default::default() },
+            ..Default::default()
+        };
+        let t = run_lasso_native(&data, "tiny", SchedKind::Dynamic, &cfg);
+        assert!(t.final_objective() < t.points[0].objective * 0.9);
+    }
+
+    #[test]
+    fn calibration_returns_sane_value() {
+        let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 6);
+        let s = calibrate_lasso(&data, 1e-3);
+        assert!(s > 0.0 && s < 1e-2, "sec/update {s}");
+    }
+}

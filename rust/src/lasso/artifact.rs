@@ -1,0 +1,132 @@
+//! Artifact-backed Lasso: every numeric step (batched CD update,
+//! candidate Gram, exact objective) runs as an AOT-compiled XLA
+//! executable with the Pallas kernels inlined.
+
+use crate::problem::{Block, ModelProblem, RoundResult};
+use crate::runtime::LassoExes;
+
+/// Lasso problem state with PJRT execution.
+pub struct ArtifactLasso {
+    exes: LassoExes,
+    beta: Vec<f64>,
+    r: Vec<f32>,
+    lambda: f64,
+    l1: f64,
+    rounds_since_refresh: usize,
+    /// Recompute r exactly (on device) every this many rounds to cancel
+    /// f32 residual drift.
+    pub refresh_every: usize,
+}
+
+impl ArtifactLasso {
+    /// `y` is the (standardized, padded) response the exes were built
+    /// with; the initial residual equals y since β starts at 0.
+    pub fn new(exes: LassoExes, y: &[f32], lambda: f64) -> Self {
+        let j = exes.j;
+        ArtifactLasso {
+            exes,
+            beta: vec![0.0; j],
+            r: y.to_vec(),
+            lambda,
+            l1: 0.0,
+            rounds_since_refresh: 0,
+            refresh_every: 256,
+        }
+    }
+
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.r
+    }
+
+    fn beta_f32(&self) -> Vec<f32> {
+        self.beta.iter().map(|&b| b as f32).collect()
+    }
+
+    /// One batched update against the *current* residual snapshot. The
+    /// artifact computes all proposals from the same r, then applies the
+    /// combined rank-P downdate — exactly the parallel-round semantics.
+    fn apply_batch(&mut self, vars: &[usize]) -> Vec<(usize, f64)> {
+        // The largest bucket bounds one call; chunk if needed, but give
+        // every chunk the ORIGINAL snapshot and compose the (linear)
+        // residual downdates so semantics stay exact.
+        const MAX_CHUNK: usize = 256;
+        let r_snapshot = self.r.clone();
+        let mut deltas = Vec::with_capacity(vars.len());
+        let mut r_acc: Vec<f32> = r_snapshot.clone();
+        for chunk in vars.chunks(MAX_CHUNK) {
+            let beta_sel: Vec<f32> = chunk.iter().map(|&v| self.beta[v] as f32).collect();
+            let (beta_new, delta_abs, r_new) = self
+                .exes
+                .update(&r_snapshot, chunk, &beta_sel, self.lambda as f32)
+                .expect("lasso_update artifact call failed");
+            for (pos, &v) in chunk.iter().enumerate() {
+                let new = beta_new[pos] as f64;
+                self.l1 += new.abs() - self.beta[v].abs();
+                self.beta[v] = new;
+                deltas.push((v, delta_abs[pos].abs() as f64));
+            }
+            // r_acc += (r_new - r_snapshot)
+            for i in 0..r_acc.len() {
+                r_acc[i] += r_new[i] - r_snapshot[i];
+            }
+        }
+        self.r = r_acc;
+        deltas
+    }
+}
+
+impl ModelProblem for ArtifactLasso {
+    fn num_vars(&self) -> usize {
+        self.beta.len()
+    }
+
+    fn workload(&self, _j: usize) -> u64 {
+        1
+    }
+
+    fn dependencies(&mut self, cands: &[usize]) -> Vec<f64> {
+        self.exes.gram(cands).expect("lasso_gram artifact call failed")
+    }
+
+    fn update_blocks(&mut self, blocks: &[Block]) -> RoundResult {
+        let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.iter().copied()).collect();
+        let mut max_work = 0u64;
+        let mut total_work = 0u64;
+        for b in blocks {
+            max_work = max_work.max(b.work);
+            total_work += b.work;
+        }
+        let deltas = self.apply_batch(&vars);
+        self.rounds_since_refresh += 1;
+        if self.rounds_since_refresh >= self.refresh_every {
+            let (_, fresh_r) = self
+                .exes
+                .objective(&self.beta_f32(), self.lambda as f32)
+                .expect("lasso_obj artifact call failed");
+            self.r = fresh_r;
+            self.rounds_since_refresh = 0;
+        }
+        let objective =
+            Some(0.5 * crate::linalg::norm2_sq(&self.r) + self.lambda * self.l1);
+        RoundResult { deltas, objective, max_block_work: max_work, total_work }
+    }
+
+    fn objective(&mut self) -> f64 {
+        let (obj, fresh_r) = self
+            .exes
+            .objective(&self.beta_f32(), self.lambda as f32)
+            .expect("lasso_obj artifact call failed");
+        self.r = fresh_r;
+        self.rounds_since_refresh = 0;
+        self.l1 = self.beta.iter().map(|b| b.abs()).sum();
+        obj
+    }
+
+    fn active_vars(&self) -> usize {
+        self.beta.iter().filter(|b| b.abs() > 0.0).count()
+    }
+}

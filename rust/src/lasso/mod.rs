@@ -1,0 +1,22 @@
+//! Parallel Lasso via coordinate descent (paper §2.1) — both execution
+//! backends:
+//!
+//! * [`NativeLasso`] — pure-rust reference (f32 state, f64 accumulation)
+//!   used by the worker-pool path, the simulator sweeps, and as the
+//!   cross-check oracle for the artifact path.
+//! * [`ArtifactLasso`] — the production path: the batched CD update, the
+//!   candidate Gram, and the exact objective all execute as AOT-compiled
+//!   XLA artifacts (Pallas kernels inside) through PJRT.
+//!
+//! Both implement [`crate::problem::ModelProblem`] with identical
+//! *parallel-round semantics*: every coordinate scheduled in a round
+//! computes its update from the same residual snapshot (what distributed
+//! workers with stale state compute), then all deltas apply at once.
+//! Interference between correlated coordinates is therefore physical,
+//! not simulated — the scheduler's job is to avoid it.
+
+pub mod artifact;
+pub mod native;
+
+pub use artifact::ArtifactLasso;
+pub use native::NativeLasso;

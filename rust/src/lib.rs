@@ -1,0 +1,68 @@
+//! # STRADS — STRucture-Aware Dynamic Scheduler for parallel ML
+//!
+//! A production-quality reproduction of *"Structure-Aware Dynamic
+//! Scheduler for Parallel Machine Learning"* (Lee, Kim, Ho, Gibson,
+//! Xing; CMU, 2013) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the SAP scheduling
+//!   engine ([`coordinator`]), baseline schedulers ([`schedulers`]), the
+//!   sharded round-robin scheduler service, the worker pool
+//!   ([`workers`]), the virtual cluster simulator ([`sim`]), data
+//!   generators ([`data`]) and the experiment drivers.
+//! * **L2/L1 (python/, build-time only)** — JAX update graphs calling
+//!   Pallas kernels, AOT-lowered to HLO text by `make artifacts`.
+//! * **[`runtime`]** — loads the HLO artifacts through the PJRT C API
+//!   (`xla` crate) and executes them from the rust hot path. Python is
+//!   never on the request path.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries miss the libstdc++ rpath that the
+//! # // workspace build config injects for the PJRT shared library.
+//! use strads::prelude::*;
+//! use strads::sim::CostModel;
+//!
+//! let cfg = strads::config::RunConfig::default();
+//! let data = strads::data::lasso_synth::generate(&LassoSynthSpec::tiny(), 42);
+//! let mut problem = strads::lasso::NativeLasso::new(&data, 1e-3);
+//! let mut sched = DynamicScheduler::new(problem.num_vars(), &cfg.sap, 7);
+//! let mut cluster = VirtualCluster::new(16, cfg.sap.shards, CostModel::new(&cfg.cost));
+//! let mut trace = Trace::new("dynamic", "tiny", 16);
+//! let engine_cfg = EngineConfig { max_rounds: 50, ..Default::default() };
+//! run_rounds(&mut problem, &mut sched, &mut cluster, &engine_cfg, &mut trace);
+//! assert!(trace.final_objective().is_finite());
+//! ```
+
+pub mod benchutil;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod lasso;
+pub mod linalg;
+pub mod metrics;
+pub mod mf;
+pub mod problem;
+pub mod runtime;
+pub mod schedulers;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+pub mod workers;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::config::{EngineConfig, SapConfig};
+    pub use crate::data::lasso_synth::LassoSynthSpec;
+    pub use crate::data::mf_powerlaw::MfSynthSpec;
+    pub use crate::engine::run_rounds;
+    pub use crate::metrics::Trace;
+    pub use crate::problem::{Block, ModelProblem, RoundResult};
+    pub use crate::schedulers::{
+        DynamicScheduler, RandomScheduler, Scheduler, StaticBlockScheduler,
+    };
+    pub use crate::sim::VirtualCluster;
+}

@@ -1,0 +1,185 @@
+//! Column-major dense f32 matrix.
+
+use super::{axpy, dot};
+
+/// Column-major storage: element (i, j) lives at `data[j * nrows + i]`,
+/// so `col(j)` is a contiguous slice — the access pattern of coordinate
+/// descent, standardization, and the host->device upload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    nrows: usize,
+    ncols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        DenseMatrix { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Build from a closure f(i, j).
+    pub fn from_fn(nrows: usize, ncols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = DenseMatrix::zeros(nrows, ncols);
+        for j in 0..ncols {
+            for i in 0..nrows {
+                m.data[j * nrows + i] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Wrap an existing column-major buffer.
+    pub fn from_col_major(nrows: usize, ncols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), nrows * ncols);
+        DenseMatrix { nrows, ncols, data }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[j * self.nrows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[j * self.nrows + i] = v;
+    }
+
+    /// Contiguous column slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// Raw column-major buffer (device upload path).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Row-major copy (the JAX graphs take row-major [N, J] inputs).
+    pub fn to_row_major(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.data.len()];
+        for j in 0..self.ncols {
+            let c = self.col(j);
+            for i in 0..self.nrows {
+                out[i * self.ncols + j] = c[i];
+            }
+        }
+        out
+    }
+
+    /// y = A x  (column-major gemv as a sum of scaled columns).
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        y.fill(0.0);
+        for j in 0..self.ncols {
+            if x[j] != 0.0 {
+                axpy(x[j], self.col(j), y);
+            }
+        }
+    }
+
+    /// Correlation (inner product) of two columns: x_j^T x_k.
+    #[inline]
+    pub fn col_dot(&self, j: usize, k: usize) -> f32 {
+        dot(self.col(j), self.col(k))
+    }
+
+    /// Standardize every column to zero mean (over the first `live_rows`
+    /// rows) and unit L2 norm; rows >= live_rows are zero padding for the
+    /// Pallas row tile and are left untouched. Columns with ~zero
+    /// variance are zeroed. Returns per-column scale factors applied.
+    pub fn standardize_columns(&mut self, live_rows: usize) -> Vec<f32> {
+        assert!(live_rows <= self.nrows);
+        let mut scales = Vec::with_capacity(self.ncols);
+        let nrows = self.nrows;
+        for j in 0..self.ncols {
+            let col = &mut self.data[j * nrows..(j + 1) * nrows];
+            let mean = col[..live_rows].iter().sum::<f32>() / live_rows as f32;
+            for v in col[..live_rows].iter_mut() {
+                *v -= mean;
+            }
+            let norm = dot(&col[..live_rows], &col[..live_rows]).sqrt();
+            let scale = if norm > 1e-8 { 1.0 / norm } else { 0.0 };
+            for v in col[..live_rows].iter_mut() {
+                *v *= scale;
+            }
+            scales.push(scale);
+        }
+        scales
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn col_major_indexing() {
+        let m = DenseMatrix::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.get(2, 1), 21.0);
+        assert_eq!(m.col(1), &[1.0, 11.0, 21.0]);
+    }
+
+    #[test]
+    fn row_major_roundtrip() {
+        let m = DenseMatrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.to_row_major(), vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let m = DenseMatrix::from_fn(4, 3, |i, j| (i + j) as f32);
+        let x = [1.0f32, -1.0, 2.0];
+        let mut y = [0.0f32; 4];
+        m.gemv(&x, &mut y);
+        for i in 0..4 {
+            let want: f32 = (0..3).map(|j| m.get(i, j) * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn standardize_gives_unit_norm_zero_mean() {
+        let mut m = DenseMatrix::from_fn(8, 3, |i, j| ((i * 7 + j * 3) % 5) as f32);
+        m.standardize_columns(8);
+        for j in 0..3 {
+            let c = m.col(j);
+            let mean: f32 = c.iter().sum::<f32>() / 8.0;
+            let norm: f32 = dot(c, c);
+            assert!(mean.abs() < 1e-6, "mean {mean}");
+            assert!((norm - 1.0).abs() < 1e-5, "norm {norm}");
+        }
+    }
+
+    #[test]
+    fn standardize_preserves_zero_padding() {
+        let mut m = DenseMatrix::from_fn(8, 2, |i, _| if i < 6 { (i + 1) as f32 } else { 0.0 });
+        m.standardize_columns(6);
+        for j in 0..2 {
+            assert_eq!(m.get(6, j), 0.0);
+            assert_eq!(m.get(7, j), 0.0);
+        }
+    }
+
+    #[test]
+    fn constant_column_is_zeroed() {
+        let mut m = DenseMatrix::from_fn(4, 1, |_, _| 3.0);
+        let scales = m.standardize_columns(4);
+        assert_eq!(scales[0], 0.0);
+        assert!(m.col(0).iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal dense linear algebra: a column-major f32 matrix plus the hot
+//! dot/axpy/gemv primitives.
+//!
+//! This is the native (pure-rust) compute substrate. It serves three
+//! roles: (1) the reference backend that cross-checks the AOT artifacts
+//! end-to-end, (2) the worker-pool execution path (PJRT handles are not
+//! Send, so OS-thread workers run native updates), and (3) the data
+//! standardization pipeline. Column-major layout matches both the
+//! coordinate-descent access pattern (column slices are contiguous) and
+//! what we upload to the device.
+
+pub mod dense;
+
+pub use dense::DenseMatrix;
+
+/// Dot product of two equal-length slices (unrolled 4-wide; the
+/// autovectorizer turns this into SIMD on release builds).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for k in chunks * 4..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm2_sq(a: &[f32]) -> f64 {
+    a.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// L1 norm.
+#[inline]
+pub fn norm1(a: &[f32]) -> f64 {
+    a.iter().map(|&v| (v as f64).abs()).sum()
+}
+
+/// Soft-threshold operator S(g, lam) = sign(g) * max(|g| - lam, 0).
+#[inline]
+pub fn soft_threshold(g: f64, lam: f64) -> f64 {
+    if g > lam {
+        g - lam
+    } else if g < -lam {
+        g + lam
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..103).map(|i| (102 - i) as f32 * 0.2).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < naive.abs() * 1e-5);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 10.0, 10.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 11.0, 11.5]);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-9);
+        assert!((norm1(&[-3.0, 4.0]) - 7.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,205 @@
+//! `strads` — leader entrypoint / CLI.
+//!
+//! Subcommands map one-to-one onto the paper's experiments plus the
+//! operational utilities a user of the framework needs:
+//!
+//! ```text
+//! strads fig1|fig4|fig5          # regenerate each paper figure -> CSV
+//! strads run-lasso ...           # one configurable lasso run
+//! strads run-mf ...              # one configurable MF run
+//! strads distributed ...         # real worker-pool run (§3 architecture)
+//! strads calibrate               # fit the cost model to this host
+//! strads artifacts-info          # inspect the AOT artifact store
+//! ```
+//!
+//! Common flags: `--config <preset>` loads a `configs/*.conf` preset;
+//! `--out <dir>` selects the results directory (default `results/`).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use strads::cli::Args;
+use strads::config::RunConfig;
+use strads::data::{lasso_synth, mf_powerlaw};
+use strads::experiments::{self, SchedKind};
+use strads::metrics::Trace;
+use strads::mf::{run_mf, ArtifactMf, MfPartition, NativeMf};
+use strads::runtime::{default_artifacts_dir, ArtifactStore, LassoExes, MfExes};
+
+const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|distributed|calibrate|artifacts-info> [flags]
+  global: --config <preset.conf>  --out <dir>  --seed <u64>
+  fig1:        --workers N --rounds N
+  fig4:        --rounds N
+  fig5:        --iters N
+  run-lasso:   --dataset tiny|adlike|wide --scheduler dynamic|static|random
+               --workers N --rounds N --lambda F --artifacts
+  run-mf:      --dataset tiny|netflix|yahoo --partition balanced|uniform
+               --workers N --iters N --lambda F --artifacts
+  distributed: --dataset ... --workers N --rounds N --lambda F";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(&path))?,
+        None => RunConfig::default(),
+    };
+    cfg.engine.seed = args.u64_or("seed", cfg.engine.seed)?;
+    cfg.validate()?;
+
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "fig1" => {
+            cfg.workers = args.usize_or("workers", 32)?;
+            cfg.engine.max_rounds = args.usize_or("rounds", 3000)?;
+            cfg.lambda = args.f64_or("lambda", 5e-4)?;
+            args.finish()?;
+            let csv = out_dir.join("fig1_lasso.csv");
+            let _ = std::fs::remove_file(&csv);
+            experiments::fig1(&cfg, Some(&csv));
+            println!("wrote {}", csv.display());
+        }
+        "fig4" => {
+            cfg.engine.max_rounds = args.usize_or("rounds", 3000)?;
+            cfg.lambda = args.f64_or("lambda", 5e-4)?;
+            args.finish()?;
+            let csv = out_dir.join("fig4_lasso.csv");
+            let _ = std::fs::remove_file(&csv);
+            experiments::fig4(&cfg, Some(&csv));
+            println!("wrote {}", csv.display());
+        }
+        "fig5" => {
+            cfg.engine.max_rounds = args.usize_or("iters", 30)?;
+            args.finish()?;
+            let csv = out_dir.join("fig5_mf.csv");
+            let _ = std::fs::remove_file(&csv);
+            experiments::fig5(&cfg, Some(&csv));
+            println!("wrote {}", csv.display());
+        }
+        "run-lasso" => {
+            let dataset = args.str_or("dataset", "tiny");
+            let sched = SchedKind::parse(&args.str_or("scheduler", "dynamic"))?;
+            cfg.workers = args.usize_or("workers", 16)?;
+            cfg.engine.max_rounds = args.usize_or("rounds", 1000)?;
+            cfg.lambda = args.f64_or("lambda", 5e-4)?;
+            let use_artifacts = args.bool("artifacts");
+            args.finish()?;
+            let data = lasso_synth::generate(&experiments::lasso_spec(&dataset)?, cfg.engine.seed);
+            let trace = if use_artifacts {
+                run_lasso_artifacts(&data, &dataset, sched, &cfg)?
+            } else {
+                experiments::run_lasso_native(&data, &dataset, sched, &cfg)
+            };
+            println!("{}", trace.summary());
+            let csv = out_dir.join("run_lasso.csv");
+            trace.append_csv(&csv)?;
+            println!("appended {}", csv.display());
+        }
+        "run-mf" => {
+            let dataset = args.str_or("dataset", "tiny");
+            let part = match args.str_or("partition", "balanced").as_str() {
+                "balanced" | "strads" => MfPartition::Balanced,
+                "uniform" | "none" => MfPartition::Uniform,
+                other => anyhow::bail!("unknown partition {other}"),
+            };
+            let workers = args.usize_or("workers", 8)?;
+            cfg.engine.max_rounds = args.usize_or("iters", 10)?;
+            let lambda = args.f64_or("lambda", 0.05)?;
+            let use_artifacts = args.bool("artifacts");
+            args.finish()?;
+            let data = mf_powerlaw::generate(&experiments::mf_spec(&dataset)?, cfg.engine.seed);
+            let mut trace = Trace::new(part.name(), &dataset, workers);
+            if use_artifacts {
+                let store = Rc::new(ArtifactStore::open(&default_artifacts_dir())?);
+                let mf_ds = if dataset == "tiny" { "tiny" } else { "rec" };
+                let (a_dense, mask) = data.a.to_dense_row_major();
+                let exes = MfExes::new(store, mf_ds, &a_dense, &mask)?;
+                let mut backend =
+                    ArtifactMf::new(exes, &data.a, lambda as f32, cfg.engine.seed + 1);
+                run_mf(&mut backend, part, workers, &cfg.engine, &cfg.cost, &mut trace);
+            } else {
+                let mut backend =
+                    NativeMf::new(&data.a, data.rank_true, lambda as f32, cfg.engine.seed + 1);
+                run_mf(&mut backend, part, workers, &cfg.engine, &cfg.cost, &mut trace);
+            }
+            println!("{}", trace.summary());
+            let csv = out_dir.join("run_mf.csv");
+            trace.append_csv(&csv)?;
+            println!("appended {}", csv.display());
+        }
+        "distributed" => {
+            let dataset = args.str_or("dataset", "tiny");
+            cfg.workers = args.usize_or("workers", 4)?;
+            cfg.lambda = args.f64_or("lambda", 1e-3)?;
+            let rounds = args.usize_or("rounds", 500)?;
+            args.finish()?;
+            let data = lasso_synth::generate(&experiments::lasso_spec(&dataset)?, cfg.engine.seed);
+            let report = strads::workers::run_distributed(&data, &cfg, rounds)?;
+            println!("{}", report.trace.summary());
+            println!("rounds={} proposals={}", report.rounds, report.proposals_processed);
+        }
+        "ablation" => {
+            cfg.workers = args.usize_or("workers", 64)?;
+            cfg.engine.max_rounds = args.usize_or("rounds", 800)?;
+            cfg.lambda = args.f64_or("lambda", 5e-4)?;
+            args.finish()?;
+            let csv = out_dir.join("ablation_lasso.csv");
+            let _ = std::fs::remove_file(&csv);
+            experiments::ablation(&cfg, Some(&csv));
+            println!("wrote {}", csv.display());
+        }
+        "calibrate" => {
+            args.finish()?;
+            let data = lasso_synth::generate(&lasso_synth::LassoSynthSpec::adlike(), 1);
+            let sec = experiments::calibrate_lasso(&data, 5e-4);
+            println!("# measured on this host: one coordinate update (N={})", data.n());
+            println!("[cost]");
+            println!("sec_per_work_unit = {sec:.3e}");
+            println!("round_overhead_sec = 1e-3");
+            println!("sched_sec_per_candidate = 2e-6");
+        }
+        "artifacts-info" => {
+            args.finish()?;
+            let dir = default_artifacts_dir();
+            let store = ArtifactStore::open(&dir)?;
+            println!("artifact store: {} ({} artifacts)", dir.display(), store.artifacts().len());
+            for a in store.artifacts() {
+                println!("  {:<28} kind={:<14} file={}", a.name, a.kind, a.file);
+            }
+        }
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => anyhow::bail!("unknown subcommand {other}"),
+    }
+    Ok(())
+}
+
+/// Artifact-backed lasso run (PJRT hot path).
+fn run_lasso_artifacts(
+    data: &lasso_synth::LassoData,
+    dataset: &str,
+    sched: SchedKind,
+    cfg: &RunConfig,
+) -> anyhow::Result<Trace> {
+    use strads::engine::run_rounds;
+    use strads::lasso::ArtifactLasso;
+    use strads::problem::ModelProblem;
+    use strads::sim::{CostModel, VirtualCluster};
+
+    let store = Rc::new(ArtifactStore::open(&default_artifacts_dir())?);
+    let exes = LassoExes::new(store, dataset, &data.x.to_row_major(), &data.y)?;
+    let mut problem = ArtifactLasso::new(exes, &data.y, cfg.lambda);
+    let mut scheduler = sched.build(problem.num_vars(), cfg);
+    let mut cluster = VirtualCluster::new(cfg.workers, cfg.sap.shards, CostModel::new(&cfg.cost));
+    let mut trace = Trace::new(sched.name(), dataset, cfg.workers);
+    run_rounds(&mut problem, scheduler.as_mut(), &mut cluster, &cfg.engine, &mut trace);
+    Ok(trace)
+}

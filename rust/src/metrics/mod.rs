@@ -1,0 +1,143 @@
+//! Run traces: objective-vs-time series (the paper's figures are all of
+//! this form), CSV emission, and summary statistics.
+
+use std::io::Write;
+
+/// One recorded point of a run.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub round: usize,
+    /// Virtual cluster time (seconds) — the x-axis of Fig 1/4/5.
+    pub vtime: f64,
+    /// Real wall-clock of this process (seconds) — for perf bookkeeping.
+    pub wtime: f64,
+    pub objective: f64,
+    /// Number of active (nonzero) variables, where meaningful.
+    pub active_vars: usize,
+    /// Straggler diagnostic: max block work / mean block work this round.
+    pub imbalance: f64,
+}
+
+/// A full run trace plus identifying metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub scheduler: String,
+    pub dataset: String,
+    pub workers: usize,
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn new(scheduler: &str, dataset: &str, workers: usize) -> Self {
+        Trace {
+            scheduler: scheduler.to_string(),
+            dataset: dataset.to_string(),
+            workers,
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_objective(&self) -> f64 {
+        self.points.last().map(|p| p.objective).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_vtime(&self) -> f64 {
+        self.points.last().map(|p| p.vtime).unwrap_or(0.0)
+    }
+
+    /// First virtual time at which the objective reaches `threshold`
+    /// (the "time-to-quality" summary used in EXPERIMENTS.md tables).
+    pub fn time_to_reach(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.objective <= threshold).map(|p| p.vtime)
+    }
+
+    /// Append as CSV (with header if the file is new/empty).
+    pub fn append_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let new = !path.exists() || std::fs::metadata(path)?.len() == 0;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if new {
+            writeln!(
+                f,
+                "scheduler,dataset,workers,round,vtime,wtime,objective,active_vars,imbalance"
+            )?;
+        }
+        for p in &self.points {
+            writeln!(
+                f,
+                "{},{},{},{},{:.6},{:.6},{:.8e},{},{:.4}",
+                self.scheduler,
+                self.dataset,
+                self.workers,
+                p.round,
+                p.vtime,
+                p.wtime,
+                p.objective,
+                p.active_vars,
+                p.imbalance
+            )?;
+        }
+        Ok(())
+    }
+
+    /// One-line summary for terminal output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<10} {:<12} P={:<4} rounds={:<6} vtime={:>9.3}s obj={:.6e}",
+            self.scheduler,
+            self.dataset,
+            self.workers,
+            self.points.last().map(|p| p.round).unwrap_or(0),
+            self.final_vtime(),
+            self.final_objective()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(objs: &[f64]) -> Trace {
+        let mut t = Trace::new("dyn", "tiny", 4);
+        for (i, &o) in objs.iter().enumerate() {
+            t.push(TracePoint {
+                round: i,
+                vtime: i as f64 * 0.5,
+                wtime: 0.0,
+                objective: o,
+                active_vars: i,
+                imbalance: 1.0,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn time_to_reach_finds_first_crossing() {
+        let t = mk(&[10.0, 5.0, 2.0, 1.0]);
+        assert_eq!(t.time_to_reach(4.0), Some(1.0));
+        assert_eq!(t.time_to_reach(0.5), None);
+        assert_eq!(t.final_objective(), 1.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("strads_test_csv");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("t.csv");
+        mk(&[3.0, 2.0]).append_csv(&path).unwrap();
+        mk(&[1.0]).append_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 3 rows
+        assert!(lines[0].starts_with("scheduler,"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,89 @@
+//! Artifact-backed MF: the rank-t sweeps execute as AOT-compiled XLA
+//! graphs (masked rank-1 Pallas kernel inside) through PJRT. W and H
+//! round-trip host<->device per block call; the ratings + mask stay
+//! device-resident.
+//!
+//! Unlike the native backend, the artifact graphs recompute the
+//! residual from (A, W, H) on the fly (rt = A - WH + w_t h_t^T inside
+//! the graph), so there is no host residual bookkeeping at all —
+//! `begin_rank`/`end_rank` are no-ops and the factors are the only
+//! state. Rows within a sweep are independent, so chaining block calls
+//! (each receiving the previous call's W) is exactly the parallel
+//! semantics.
+
+use super::MfBackend;
+use crate::runtime::MfExes;
+use crate::sparse::CsrMatrix;
+use crate::util::Rng;
+
+pub struct ArtifactMf {
+    exes: MfExes,
+    pub w: Vec<f32>,
+    pub h: Vec<f32>,
+    lambda: f32,
+    row_nnz: Vec<u64>,
+    col_nnz: Vec<u64>,
+}
+
+impl ArtifactMf {
+    pub fn new(exes: MfExes, a: &CsrMatrix, lambda: f32, seed: u64) -> Self {
+        assert_eq!(a.nrows(), exes.n);
+        assert_eq!(a.ncols(), exes.m);
+        let k = exes.k;
+        let mut rng = Rng::new(seed);
+        let scale = 1.0 / (k as f64).sqrt();
+        let w: Vec<f32> = (0..exes.n * k).map(|_| (rng.normal() * scale) as f32).collect();
+        let h: Vec<f32> = (0..k * exes.m).map(|_| (rng.normal() * scale) as f32).collect();
+        let row_nnz = (0..a.nrows()).map(|i| a.row_nnz(i) as u64).collect();
+        let col_nnz = a.col_nnz().into_iter().map(|c| c as u64).collect();
+        ArtifactMf { exes, w, h, lambda, row_nnz, col_nnz }
+    }
+}
+
+impl MfBackend for ArtifactMf {
+    fn n(&self) -> usize {
+        self.exes.n
+    }
+
+    fn m(&self) -> usize {
+        self.exes.m
+    }
+
+    fn k(&self) -> usize {
+        self.exes.k
+    }
+
+    fn begin_rank(&mut self, _t: usize) {}
+
+    fn end_rank(&mut self, _t: usize) {}
+
+    fn sweep_w_block(&mut self, t: usize, rows: &[usize]) {
+        let (_w_new, _dw, w_next) = self
+            .exes
+            .update_w(&self.w, &self.h, rows, t, self.lambda)
+            .expect("mf_update_w artifact call failed");
+        self.w = w_next;
+    }
+
+    fn sweep_h_block(&mut self, t: usize, cols: &[usize]) {
+        let (_h_new, _dh, h_next) = self
+            .exes
+            .update_h(&self.w, &self.h, cols, t, self.lambda)
+            .expect("mf_update_h artifact call failed");
+        self.h = h_next;
+    }
+
+    fn objective(&mut self) -> f64 {
+        self.exes
+            .objective(&self.w, &self.h, self.lambda)
+            .expect("mf_obj artifact call failed")
+    }
+
+    fn row_weights(&self) -> Vec<u64> {
+        self.row_nnz.clone()
+    }
+
+    fn col_weights(&self) -> Vec<u64> {
+        self.col_nnz.clone()
+    }
+}

@@ -1,0 +1,301 @@
+//! Host CSR implementation of the CCD++ sweeps (reference backend).
+
+use super::MfBackend;
+use crate::sparse::CsrMatrix;
+use crate::util::Rng;
+
+/// Native MF state: W row-major [n, k], H row-major [k, m], plus the
+/// observed-entry residual kept aligned with the CSR (and its
+/// transpose, for the column sweeps).
+pub struct NativeMf {
+    a: CsrMatrix,
+    at: CsrMatrix,
+    pub w: Vec<f32>,
+    pub h: Vec<f32>,
+    k: usize,
+    lambda: f32,
+    /// rt_ij = r_ij + w_ti h_tj for the rank currently being swept,
+    /// stored per observed entry in CSR order...
+    rt: Vec<f32>,
+    /// ... and in CSC (transposed CSR) order for the H sweep.
+    rt_t: Vec<f32>,
+    /// Residual r_ij = a_ij - w_i . h_j in CSR order.
+    r: Vec<f32>,
+}
+
+impl NativeMf {
+    pub fn new(a: &CsrMatrix, k: usize, lambda: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let scale = 1.0 / (k as f64).sqrt();
+        let w: Vec<f32> = (0..a.nrows() * k).map(|_| (rng.normal() * scale) as f32).collect();
+        let h: Vec<f32> = (0..k * a.ncols()).map(|_| (rng.normal() * scale) as f32).collect();
+        let at = a.transpose();
+        let mut s = NativeMf {
+            a: a.clone(),
+            at,
+            w,
+            h,
+            k,
+            lambda,
+            rt: Vec::new(),
+            rt_t: Vec::new(),
+            r: Vec::new(),
+        };
+        s.recompute_residual();
+        s
+    }
+
+    /// r_ij = a_ij - w_i . h_j over observed entries (CSR order).
+    fn recompute_residual(&mut self) {
+        let k = self.k;
+        let m = self.a.ncols();
+        let mut r = Vec::with_capacity(self.a.nnz());
+        for i in 0..self.a.nrows() {
+            let wi = &self.w[i * k..(i + 1) * k];
+            for (j, aij) in self.a.row(i) {
+                let mut pred = 0.0f32;
+                for t in 0..k {
+                    pred += wi[t] * self.h[t * m + j];
+                }
+                r.push(aij - pred);
+            }
+        }
+        self.r = r;
+    }
+
+    /// Scatter the CSR-ordered `rt` into CSC (transposed) order.
+    fn rt_to_transposed(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rt.len()];
+        // cursor[j] = start offset of column j of A in CSC (= row j of
+        // A^T) order; advance as entries stream by in CSR order.
+        let mut cursor: Vec<usize> =
+            (0..self.at.nrows()).map(|j| self.at.row_start(j)).collect();
+        let mut pos = 0usize;
+        for i in 0..self.a.nrows() {
+            for (j, _) in self.a.row(i) {
+                out[cursor[j]] = self.rt[pos];
+                cursor[j] += 1;
+                pos += 1;
+            }
+        }
+        out
+    }
+
+    /// Gather CSC-ordered values back into CSR order.
+    fn transposed_to_rt(&self, rt_t: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; rt_t.len()];
+        let mut cursor: Vec<usize> =
+            (0..self.at.nrows()).map(|j| self.at.row_start(j)).collect();
+        let mut pos = 0usize;
+        for i in 0..self.a.nrows() {
+            for (j, _) in self.a.row(i) {
+                out[pos] = rt_t[cursor[j]];
+                cursor[j] += 1;
+                pos += 1;
+            }
+        }
+        out
+    }
+}
+
+impl MfBackend for NativeMf {
+    fn n(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn m(&self) -> usize {
+        self.a.ncols()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn begin_rank(&mut self, t: usize) {
+        // rt_ij = r_ij + w_ti h_tj  (CSR order), and its CSC mirror.
+        let k = self.k;
+        let m = self.a.ncols();
+        let mut rt = Vec::with_capacity(self.r.len());
+        let mut pos = 0usize;
+        for i in 0..self.a.nrows() {
+            let wti = self.w[i * k + t];
+            for (j, _) in self.a.row(i) {
+                rt.push(self.r[pos] + wti * self.h[t * m + j]);
+                pos += 1;
+            }
+        }
+        self.rt = rt;
+        self.rt_t = self.rt_to_transposed();
+    }
+
+    fn sweep_w_block(&mut self, t: usize, rows: &[usize]) {
+        // Eq. (4): w_ti <- sum_j rt_ij h_tj / (lambda + sum_j h_tj^2).
+        // Rows are independent; this block's updates read only rt and
+        // h_t, both frozen for the rank — snapshot semantics hold for
+        // any block interleaving.
+        let k = self.k;
+        let m = self.a.ncols();
+        for &i in rows {
+            let mut num = 0.0f32;
+            let mut den = self.lambda;
+            let lo: usize = self.a_row_start(i);
+            let mut pos = lo;
+            for (j, _) in self.a.row(i) {
+                let htj = self.h[t * m + j];
+                num += self.rt[pos] * htj;
+                den += htj * htj;
+                pos += 1;
+            }
+            self.w[i * k + t] = num / den;
+        }
+    }
+
+    fn sweep_h_block(&mut self, t: usize, cols: &[usize]) {
+        // Eq. (5) with the *updated* w_t (CCD++ ordering), over the
+        // transposed storage.
+        let k = self.k;
+        for &j in cols {
+            let mut num = 0.0f32;
+            let mut den = self.lambda;
+            let lo = self.at_row_start(j);
+            let mut pos = lo;
+            for (i, _) in self.at.row(j) {
+                let wti = self.w[i * k + t];
+                num += self.rt_t[pos] * wti;
+                den += wti * wti;
+                pos += 1;
+            }
+            self.h[t * self.a.ncols() + j] = num / den;
+        }
+    }
+
+    fn end_rank(&mut self, t: usize) {
+        // Pull the (possibly h-sweep-updated) rt_t back to CSR order,
+        // then r_ij = rt_ij - w_ti h_tj with the new factors.
+        self.rt = self.transposed_to_rt(&self.rt_t);
+        let k = self.k;
+        let m = self.a.ncols();
+        let mut pos = 0usize;
+        for i in 0..self.a.nrows() {
+            let wti = self.w[i * k + t];
+            for (j, _) in self.a.row(i) {
+                self.r[pos] = self.rt[pos] - wti * self.h[t * m + j];
+                pos += 1;
+            }
+        }
+    }
+
+    fn objective(&mut self) -> f64 {
+        // Exact recompute (drift-corrects the maintained residual).
+        self.recompute_residual();
+        let sse: f64 = self.r.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let reg: f64 = self.w.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            + self.h.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        sse + self.lambda as f64 * reg
+    }
+
+    fn row_weights(&self) -> Vec<u64> {
+        (0..self.a.nrows()).map(|i| self.a.row_nnz(i) as u64).collect()
+    }
+
+    fn col_weights(&self) -> Vec<u64> {
+        (0..self.at.nrows()).map(|j| self.at.row_nnz(j) as u64).collect()
+    }
+}
+
+impl NativeMf {
+    #[inline]
+    fn a_row_start(&self, i: usize) -> usize {
+        self.a.row_start(i)
+    }
+
+    #[inline]
+    fn at_row_start(&self, j: usize) -> usize {
+        self.at.row_start(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mf_powerlaw::{generate, MfSynthSpec};
+
+    fn tiny_backend(seed: u64) -> NativeMf {
+        let data = generate(&MfSynthSpec::tiny(), seed);
+        NativeMf::new(&data.a, 4, 0.05, seed + 1)
+    }
+
+    fn full_ccd_iteration(b: &mut NativeMf) {
+        let n = b.n();
+        let m = b.m();
+        let rows: Vec<usize> = (0..n).collect();
+        let cols: Vec<usize> = (0..m).collect();
+        for t in 0..b.k() {
+            b.begin_rank(t);
+            b.sweep_w_block(t, &rows);
+            b.sweep_h_block(t, &cols);
+            b.end_rank(t);
+        }
+    }
+
+    #[test]
+    fn objective_decreases_over_iterations() {
+        let mut b = tiny_backend(1);
+        let mut prev = b.objective();
+        for it in 0..5 {
+            full_ccd_iteration(&mut b);
+            let obj = b.objective();
+            assert!(obj < prev + 1e-6, "iter {it}: {obj} vs {prev}");
+            prev = obj;
+        }
+    }
+
+    #[test]
+    fn block_interleaving_does_not_change_result() {
+        // rows are independent: any block split gives identical factors
+        let mut whole = tiny_backend(2);
+        let mut split = tiny_backend(2);
+        let n = whole.n();
+        let m = whole.m();
+        let all_rows: Vec<usize> = (0..n).collect();
+        let all_cols: Vec<usize> = (0..m).collect();
+        for t in 0..whole.k() {
+            whole.begin_rank(t);
+            whole.sweep_w_block(t, &all_rows);
+            whole.sweep_h_block(t, &all_cols);
+            whole.end_rank(t);
+
+            split.begin_rank(t);
+            split.sweep_w_block(t, &all_rows[..n / 3]);
+            split.sweep_w_block(t, &all_rows[n / 3..2 * n / 3]);
+            split.sweep_w_block(t, &all_rows[2 * n / 3..]);
+            split.sweep_h_block(t, &all_cols[m / 2..]);
+            split.sweep_h_block(t, &all_cols[..m / 2]);
+            split.end_rank(t);
+        }
+        assert_eq!(whole.w, split.w);
+        assert_eq!(whole.h, split.h);
+    }
+
+    #[test]
+    fn recovers_planted_structure() {
+        let mut b = tiny_backend(3);
+        let start = b.objective();
+        for _ in 0..10 {
+            full_ccd_iteration(&mut b);
+        }
+        let end = b.objective();
+        assert!(end < 0.3 * start, "start {start} end {end}");
+    }
+
+    #[test]
+    fn weights_match_csr() {
+        let data = generate(&MfSynthSpec::tiny(), 4);
+        let b = NativeMf::new(&data.a, 4, 0.05, 5);
+        let rw = b.row_weights();
+        assert_eq!(rw.len(), data.a.nrows());
+        assert_eq!(rw.iter().sum::<u64>() as usize, data.a.nnz());
+        let cw = b.col_weights();
+        assert_eq!(cw.iter().sum::<u64>() as usize, data.a.nnz());
+    }
+}

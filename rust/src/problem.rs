@@ -1,0 +1,78 @@
+//! The `ModelProblem` abstraction: what an ML program must expose for
+//! SAP to schedule it (paper §2's `p(j)` / `d(x_j, x_k)` programming
+//! interface, plus a parallel-round executor).
+//!
+//! A *round* is one SAP iteration: the scheduler hands the problem a set
+//! of variable blocks; the problem applies all updates with parallel
+//! semantics — every block reads the same state snapshot, exactly what P
+//! distributed workers holding a stale copy would compute — and reports
+//! per-variable progress δ for step 4.
+
+/// A block of variables dispatched to one worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    /// Variable ids (coordinates for Lasso; rows/columns for MF).
+    pub vars: Vec<usize>,
+    /// Total workload units (cost-model input; nnz for MF, |vars| * 1
+    /// for Lasso).
+    pub work: u64,
+}
+
+impl Block {
+    pub fn singleton(var: usize, work: u64) -> Self {
+        Block { vars: vec![var], work }
+    }
+}
+
+/// What one parallel round produced.
+#[derive(Clone, Debug, Default)]
+pub struct RoundResult {
+    /// (variable, |δ|) progress magnitudes — feeds p(j) (SAP step 4).
+    pub deltas: Vec<(usize, f64)>,
+    /// Cheap objective value if the problem maintains one incrementally
+    /// (None forces the engine to call `objective()` on record rounds).
+    pub objective: Option<f64>,
+    /// Workload of the largest block (straggler) and the total.
+    pub max_block_work: u64,
+    pub total_work: u64,
+}
+
+/// A schedulable ML program.
+pub trait ModelProblem {
+    /// Number of schedulable variables J.
+    fn num_vars(&self) -> usize;
+
+    /// Workload units of variable `j` (drives load balancing, step 3).
+    fn workload(&self, j: usize) -> u64;
+
+    /// Pairwise dependency strengths |d(x_j, x_k)| over a candidate set;
+    /// row-major `c x c` with 0 diagonal (step 2's input). Problems with
+    /// independent variables (MF) return all zeros.
+    fn dependencies(&mut self, cands: &[usize]) -> Vec<f64>;
+
+    /// Whether [`Self::dependency_pair`] is cheap. When true the greedy
+    /// selection queries pairs on demand (O(c·P) with early exit,
+    /// typically far less) instead of materializing the dense c x c
+    /// matrix — the native backend's host dots want this; the artifact
+    /// backend prefers one bulk Gram call on the device.
+    fn supports_pair_dependency(&self) -> bool {
+        false
+    }
+
+    /// Single-pair dependency |d(x_a, x_b)| (only called when
+    /// [`Self::supports_pair_dependency`] is true).
+    fn dependency_pair(&mut self, _a: usize, _b: usize) -> f64 {
+        unimplemented!("problem does not support pair dependency queries")
+    }
+
+    /// Apply one parallel round over the given blocks.
+    fn update_blocks(&mut self, blocks: &[Block]) -> RoundResult;
+
+    /// Exact objective value (may be expensive; engine calls sparingly).
+    fn objective(&mut self) -> f64;
+
+    /// Number of currently-active (nonzero) variables, for the trace.
+    fn active_vars(&self) -> usize {
+        0
+    }
+}

@@ -1,0 +1,290 @@
+//! Typed call wrappers over the AOT artifacts: shape-bucket selection,
+//! padding/masking, device-resident caching of the large immutable
+//! inputs, and output unpacking.
+
+use super::store::{execute_tuple, ArtifactStore};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(super::store::anyhow_xla)
+}
+
+/// The Lasso artifact family for one dataset config: `lasso_update`
+/// bucketed by coordinate capacity, `lasso_gram` bucketed by candidate
+/// capacity, and `lasso_obj`. The design matrix X ([N, J] row-major) is
+/// uploaded once and stays on device.
+pub struct LassoExes {
+    store: Rc<ArtifactStore>,
+    dataset: String,
+    pub n: usize,
+    pub j: usize,
+    /// capacity -> artifact name
+    update_buckets: BTreeMap<usize, String>,
+    gram_buckets: BTreeMap<usize, String>,
+    obj_name: String,
+    x_dev: xla::PjRtBuffer,
+    y_dev: xla::PjRtBuffer,
+}
+
+impl LassoExes {
+    /// `x` row-major [n, j]; `y` length n.
+    pub fn new(store: Rc<ArtifactStore>, dataset: &str, x: &[f32], y: &[f32]) -> Result<Self> {
+        let mut update_buckets = BTreeMap::new();
+        let mut gram_buckets = BTreeMap::new();
+        let mut dims: Option<(usize, usize)> = None;
+        for a in store.family("lasso_update", dataset) {
+            update_buckets.insert(a.param("p").unwrap(), a.name.clone());
+            dims = Some((a.param("n").unwrap(), a.param("j").unwrap()));
+        }
+        for a in store.family("lasso_gram", dataset) {
+            gram_buckets.insert(a.param("c").unwrap(), a.name.clone());
+        }
+        let obj = store
+            .family("lasso_obj", dataset)
+            .first()
+            .map(|a| a.name.clone())
+            .ok_or_else(|| anyhow::anyhow!("no lasso_obj artifact for {dataset}"))?;
+        let (n, j) = dims.ok_or_else(|| anyhow::anyhow!("no lasso_update artifacts for {dataset}"))?;
+        anyhow::ensure!(x.len() == n * j, "x must be [{n}, {j}] row-major, got {}", x.len());
+        anyhow::ensure!(y.len() == n, "y must have n={n} entries");
+        let x_dev = store.upload_f32(x, &[n, j])?;
+        let y_dev = store.upload_f32(y, &[n, 1])?;
+        Ok(LassoExes {
+            store,
+            dataset: dataset.to_string(),
+            n,
+            j,
+            update_buckets,
+            gram_buckets,
+            obj_name: obj,
+        x_dev,
+            y_dev,
+        })
+    }
+
+    pub fn dataset(&self) -> &str {
+        &self.dataset
+    }
+
+    /// Smallest bucket with capacity >= need.
+    fn pick(buckets: &BTreeMap<usize, String>, need: usize) -> Result<(usize, &str)> {
+        buckets
+            .range(need..)
+            .next()
+            .map(|(cap, name)| (*cap, name.as_str()))
+            .ok_or_else(|| {
+                anyhow::anyhow!("no bucket fits {need} (max {:?})", buckets.keys().last())
+            })
+    }
+
+    /// Batched CD update over the selected coordinates, against residual
+    /// `r`. Returns (beta_new, |delta|, r_new) with only the live lanes.
+    pub fn update(
+        &self,
+        r: &[f32],
+        idx: &[usize],
+        beta_sel: &[f32],
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(idx.len() == beta_sel.len());
+        let live = idx.len();
+        let (cap, name) = Self::pick(&self.update_buckets, live)?;
+        let exe = self.store.executable(name)?;
+
+        // Pad to capacity: idx 0 with mask 0 is exact (masked lanes keep
+        // their old beta, delta = 0).
+        let mut idx_p = vec![0i32; cap];
+        let mut beta_p = vec![0.0f32; cap];
+        let mut mask_p = vec![0.0f32; cap];
+        for i in 0..live {
+            idx_p[i] = idx[i] as i32;
+            beta_p[i] = beta_sel[i];
+            mask_p[i] = 1.0;
+        }
+        let r_dev = self.store.upload_f32(r, &[self.n, 1])?;
+        let beta_dev = self.store.upload_f32(&beta_p, &[1, cap])?;
+        let idx_dev = self.store.upload_i32(&idx_p, &[cap])?;
+        let mask_dev = self.store.upload_f32(&mask_p, &[1, cap])?;
+        let lam_dev = self.store.upload_f32(&[lambda], &[1, 1])?;
+
+        let outs = execute_tuple(
+            &exe,
+            &[&self.x_dev, &r_dev, &beta_dev, &idx_dev, &mask_dev, &lam_dev],
+        )?;
+        anyhow::ensure!(outs.len() == 3, "lasso_update returns 3 outputs");
+        let mut beta_new = literal_f32(&outs[0])?;
+        let mut delta = literal_f32(&outs[1])?;
+        let r_new = literal_f32(&outs[2])?;
+        beta_new.truncate(live);
+        delta.truncate(live);
+        Ok((beta_new, delta, r_new))
+    }
+
+    /// Candidate Gram: |x_j^T x_k| for the candidate set (live c x c,
+    /// row-major, absolute values, zero diagonal).
+    pub fn gram(&self, idx: &[usize]) -> Result<Vec<f64>> {
+        let live = idx.len();
+        let (cap, name) = Self::pick(&self.gram_buckets, live)?;
+        let exe = self.store.executable(name)?;
+        let mut idx_p = vec![0i32; cap];
+        for i in 0..live {
+            idx_p[i] = idx[i] as i32;
+        }
+        let idx_dev = self.store.upload_i32(&idx_p, &[cap])?;
+        let outs = execute_tuple(&exe, &[&self.x_dev, &idx_dev])?;
+        let g = literal_f32(&outs[0])?;
+        let mut out = vec![0.0f64; live * live];
+        for i in 0..live {
+            for k in 0..live {
+                if i != k {
+                    out[i * live + k] = g[i * cap + k].abs() as f64;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Exact objective + fresh residual from the full coefficient
+    /// vector (the drift-correction path).
+    pub fn objective(&self, beta: &[f32], lambda: f32) -> Result<(f64, Vec<f32>)> {
+        anyhow::ensure!(beta.len() == self.j);
+        let exe = self.store.executable(&self.obj_name)?;
+        let beta_dev = self.store.upload_f32(beta, &[self.j, 1])?;
+        let lam_dev = self.store.upload_f32(&[lambda], &[1, 1])?;
+        let outs = execute_tuple(&exe, &[&self.x_dev, &self.y_dev, &beta_dev, &lam_dev])?;
+        anyhow::ensure!(outs.len() == 2);
+        let obj = literal_f32(&outs[0])?[0] as f64;
+        let r = literal_f32(&outs[1])?;
+        Ok((obj, r))
+    }
+}
+
+/// The MF artifact family: `mf_update_w` / `mf_update_h` bucketed by
+/// block capacity, plus `mf_obj`. The ratings (values + mask, dense
+/// row-major) are uploaded once; W and H round-trip per call.
+pub struct MfExes {
+    store: Rc<ArtifactStore>,
+    pub n: usize,
+    pub m: usize,
+    pub k: usize,
+    w_buckets: BTreeMap<usize, String>,
+    h_buckets: BTreeMap<usize, String>,
+    obj_name: String,
+    a_dev: xla::PjRtBuffer,
+    mask_dev: xla::PjRtBuffer,
+}
+
+impl MfExes {
+    /// `a`, `mask` row-major [n, m].
+    pub fn new(store: Rc<ArtifactStore>, dataset: &str, a: &[f32], mask: &[f32]) -> Result<Self> {
+        let mut w_buckets = BTreeMap::new();
+        let mut h_buckets = BTreeMap::new();
+        let mut dims = None;
+        for art in store.family("mf_update_w", dataset) {
+            w_buckets.insert(art.param("b").unwrap(), art.name.clone());
+            dims = Some((
+                art.param("n").unwrap(),
+                art.param("m").unwrap(),
+                art.param("k").unwrap(),
+            ));
+        }
+        for art in store.family("mf_update_h", dataset) {
+            h_buckets.insert(art.param("b").unwrap(), art.name.clone());
+        }
+        let obj = store
+            .family("mf_obj", dataset)
+            .first()
+            .map(|a| a.name.clone())
+            .ok_or_else(|| anyhow::anyhow!("no mf_obj artifact for {dataset}"))?;
+        let (n, m, k) = dims.ok_or_else(|| anyhow::anyhow!("no mf_update_w artifacts"))?;
+        anyhow::ensure!(a.len() == n * m && mask.len() == n * m);
+        let a_dev = store.upload_f32(a, &[n, m])?;
+        let mask_dev = store.upload_f32(mask, &[n, m])?;
+        Ok(MfExes { store, n, m, k, w_buckets, h_buckets, obj_name: obj, a_dev, mask_dev })
+    }
+
+    fn onehot(&self, t: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.k];
+        v[t] = 1.0;
+        v
+    }
+
+    /// Rank-t CCD update of W over a row block. `w` row-major [n, k],
+    /// `h` row-major [k, m]. Returns (w_t_new per block row, |dw|, full
+    /// updated W).
+    pub fn update_w(
+        &self,
+        w: &[f32],
+        h: &[f32],
+        rows: &[usize],
+        t: usize,
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.update_inner(true, w, h, rows, t, lambda)
+    }
+
+    /// Rank-t CCD update of H over a column block. Returns
+    /// (h_t_new per block col, |dh|, full updated H).
+    pub fn update_h(
+        &self,
+        w: &[f32],
+        h: &[f32],
+        cols: &[usize],
+        t: usize,
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.update_inner(false, w, h, cols, t, lambda)
+    }
+
+    fn update_inner(
+        &self,
+        is_w: bool,
+        w: &[f32],
+        h: &[f32],
+        block: &[usize],
+        t: usize,
+        lambda: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(w.len() == self.n * self.k && h.len() == self.k * self.m);
+        anyhow::ensure!(t < self.k);
+        let live = block.len();
+        let buckets = if is_w { &self.w_buckets } else { &self.h_buckets };
+        let (cap, name) = LassoExes::pick(buckets, live)?;
+        let exe = self.store.executable(name)?;
+        let mut idx_p = vec![0i32; cap];
+        let mut mask_p = vec![0.0f32; cap];
+        for i in 0..live {
+            idx_p[i] = block[i] as i32;
+            mask_p[i] = 1.0;
+        }
+        let w_dev = self.store.upload_f32(w, &[self.n, self.k])?;
+        let h_dev = self.store.upload_f32(h, &[self.k, self.m])?;
+        let idx_dev = self.store.upload_i32(&idx_p, &[cap])?;
+        let bmask_dev = self.store.upload_f32(&mask_p, &[cap, 1])?;
+        let t1h_dev = self.store.upload_f32(&self.onehot(t), &[self.k, 1])?;
+        let lam_dev = self.store.upload_f32(&[lambda], &[1, 1])?;
+        let outs = execute_tuple(
+            &exe,
+            &[&self.a_dev, &self.mask_dev, &w_dev, &h_dev, &idx_dev, &bmask_dev, &t1h_dev, &lam_dev],
+        )?;
+        anyhow::ensure!(outs.len() == 3);
+        let mut new = literal_f32(&outs[0])?;
+        let mut delta = literal_f32(&outs[1])?;
+        let next = literal_f32(&outs[2])?;
+        new.truncate(live);
+        delta.truncate(live);
+        Ok((new, delta, next))
+    }
+
+    /// Exact regularized objective (paper eq. 3).
+    pub fn objective(&self, w: &[f32], h: &[f32], lambda: f32) -> Result<f64> {
+        let exe = self.store.executable(&self.obj_name)?;
+        let w_dev = self.store.upload_f32(w, &[self.n, self.k])?;
+        let h_dev = self.store.upload_f32(h, &[self.k, self.m])?;
+        let lam_dev = self.store.upload_f32(&[lambda], &[1, 1])?;
+        let outs = execute_tuple(&exe, &[&self.a_dev, &self.mask_dev, &w_dev, &h_dev, &lam_dev])?;
+        Ok(literal_f32(&outs[0])?[0] as f64)
+    }
+}

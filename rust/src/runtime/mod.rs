@@ -1,0 +1,37 @@
+//! The PJRT runtime: loads the AOT artifacts produced by
+//! `make artifacts` and executes them from the rust hot path.
+//!
+//! Flow (see /opt/xla-example and DESIGN.md §6):
+//! `python/compile/aot.py` lowers each L2 graph (with L1 Pallas kernels
+//! inlined under `interpret=True`) to **HLO text**; here we parse with
+//! [`xla::HloModuleProto::from_text_file`], compile once per
+//! (graph, shape-bucket) on the CPU PJRT client, and call
+//! `execute_b` with device-resident buffers for the large, immutable
+//! inputs (the design matrix / ratings). Python never runs at serve
+//! time; the binary is self-contained given `artifacts/`.
+
+pub mod calls;
+pub mod store;
+
+pub use calls::{LassoExes, MfExes};
+pub use store::{Artifact, ArtifactStore};
+
+/// Locate the artifacts directory: explicit arg, `STRADS_ARTIFACTS`
+/// env var, or `./artifacts` relative to the workspace root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("STRADS_ARTIFACTS") {
+        return dir.into();
+    }
+    // Walk up from cwd looking for artifacts/manifest.json (tests run
+    // from target subdirs).
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Artifact discovery + compilation cache.
+//!
+//! `manifest.json` (emitted by aot.py) describes every artifact: name,
+//! kind, HLO file, and shape parameters. The store compiles lazily and
+//! memoizes `PjRtLoadedExecutable`s, so each (graph, bucket) pays its
+//! XLA compile exactly once per process.
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    /// Shape parameters (n, j, p, c, m, k, b — kind-specific).
+    params: HashMap<String, usize>,
+    dataset: Option<String>,
+}
+
+impl Artifact {
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("artifact missing name")?
+            .to_string();
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .context("artifact missing kind")?
+            .to_string();
+        let file = j
+            .get("file")
+            .and_then(Json::as_str)
+            .context("artifact missing file")?
+            .to_string();
+        let mut params = HashMap::new();
+        let mut dataset = None;
+        if let Some(Json::Obj(m)) = j.get("params") {
+            for (k, v) in m {
+                match v {
+                    Json::Num(n) => {
+                        params.insert(k.clone(), *n as usize);
+                    }
+                    Json::Str(s) if k == "dataset" => dataset = Some(s.clone()),
+                    _ => {}
+                }
+            }
+        }
+        Ok(Artifact { name, kind, file, params, dataset })
+    }
+
+    /// Integer shape parameter accessor (n, j, p, ...).
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+
+    pub fn dataset(&self) -> Option<&str> {
+        self.dataset.as_deref()
+    }
+}
+
+/// Lazy-compiling artifact store bound to one PJRT client.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: Vec<Artifact>,
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Open `dir` (must contain manifest.json) on the CPU PJRT client.
+    pub fn open(dir: &std::path::Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        let artifacts = json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts[]")?
+            .iter()
+            .map(Artifact::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactStore {
+            client,
+            dir: dir.to_path_buf(),
+            artifacts,
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn artifacts(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    /// All artifacts of `kind` for `dataset`, e.g. the bucket family of
+    /// `lasso_update` for "adlike".
+    pub fn family(&self, kind: &str, dataset: &str) -> Vec<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.dataset() == Some(dataset))
+            .collect()
+    }
+
+    /// Compile (or fetch memoized) executable for artifact `name`.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name} not in manifest"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(anyhow_xla)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).map_err(anyhow_xla)?);
+        self.compiled.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.borrow().len()
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(anyhow_xla)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(anyhow_xla)
+    }
+}
+
+/// The xla crate has its own error enum; fold it into anyhow.
+pub fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// Execute with buffer args and return the flattened output tuple as
+/// host literals (the graphs are lowered with return_tuple=True, so the
+/// single output buffer is a tuple).
+pub fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<Vec<xla::Literal>> {
+    let outs = exe.execute_b(args).map_err(anyhow_xla)?;
+    let lit = outs[0][0].to_literal_sync().map_err(anyhow_xla)?;
+    lit.to_tuple().map_err(anyhow_xla)
+}

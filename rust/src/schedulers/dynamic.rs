@@ -1,0 +1,234 @@
+//! The STRADS dynamic scheduler: the full SAP loop over sharded
+//! importance distributions (paper §2 + §3).
+
+use crate::config::SapConfig;
+use crate::coordinator::priority::PriorityKind;
+use crate::coordinator::depcheck::select_independent_lazy;
+use crate::coordinator::{merge_balanced, select_independent, SchedCost, ShardSet};
+use crate::problem::{Block, ModelProblem, RoundResult};
+use crate::schedulers::Scheduler;
+use crate::util::Rng;
+
+pub struct DynamicScheduler {
+    shards: ShardSet,
+    cfg: SapConfig,
+    rng: Rng,
+    last_cost: SchedCost,
+}
+
+impl DynamicScheduler {
+    pub fn new(num_vars: usize, cfg: &SapConfig, seed: u64) -> Self {
+        Self::with_kind(num_vars, cfg, seed, PriorityKind::Linear)
+    }
+
+    /// Theorem-1 variant: p(j) ∝ ½ δβ² + η.
+    pub fn new_squared(num_vars: usize, cfg: &SapConfig, seed: u64) -> Self {
+        Self::with_kind(num_vars, cfg, seed, PriorityKind::Squared)
+    }
+
+    fn with_kind(num_vars: usize, cfg: &SapConfig, seed: u64, kind: PriorityKind) -> Self {
+        let mut rng = Rng::new(seed);
+        let shards =
+            ShardSet::new(num_vars, cfg.shards, cfg.eta, cfg.init_priority, kind, &mut rng);
+        DynamicScheduler { shards, cfg: cfg.clone(), rng, last_cost: SchedCost::default() }
+    }
+
+    /// Fraction of variables updated at least once (drives the paper's
+    /// "early sharp drop" diagnostic).
+    pub fn coverage(&self) -> f64 {
+        self.shards.coverage()
+    }
+}
+
+impl Scheduler for DynamicScheduler {
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+
+    fn plan(&mut self, problem: &mut dyn ModelProblem, p: usize) -> Vec<Block> {
+        // Step 1: the shard whose turn it is draws P' = factor*P
+        // candidates from its local p_s(j). Fenwick sampling-without-
+        // replacement returns high-weight candidates earlier on average,
+        // which is the priority order the greedy step-2 pass wants.
+        let si = self.shards.next_turn();
+        // Future-work extension (paper §6): dispatch up to
+        // coords_per_worker coordinates per worker — the selection limit
+        // grows, the pairwise rho constraint still covers every pair,
+        // and the LPT merge packs the result into <= p blocks.
+        let limit = p * self.cfg.coords_per_worker;
+        let p_prime = limit * self.cfg.p_prime_factor;
+        let cands = self.shards.sample_candidates(si, p_prime, &mut self.rng);
+
+        // Step 2: dependency check over the candidate set. Problems
+        // with cheap pair queries (native host dots) get the lazy
+        // greedy; bulk-Gram problems (device artifacts) get one call.
+        let picked = if problem.supports_pair_dependency() {
+            let mut checks = 0usize;
+            let picked = select_independent_lazy(
+                &cands,
+                |a, b| {
+                    checks += 1;
+                    problem.dependency_pair(a, b)
+                },
+                self.cfg.rho,
+                limit,
+            );
+            self.last_cost = SchedCost { candidates: cands.len(), dep_checks: checks };
+            picked
+        } else {
+            let dep = problem.dependencies(&cands);
+            let picked = select_independent(&cands, &dep, self.cfg.rho, limit);
+            self.last_cost = SchedCost {
+                candidates: cands.len(),
+                dep_checks: cands.len() * picked.len().max(1),
+            };
+            picked
+        };
+
+        // Step 3: load-balanced merge down to <= p worker blocks.
+        let blocks: Vec<Block> = picked
+            .iter()
+            .map(|&ci| {
+                let v = cands[ci];
+                Block::singleton(v, problem.workload(v))
+            })
+            .collect();
+        merge_balanced(blocks, p)
+    }
+
+    fn observe(&mut self, result: &RoundResult) {
+        // Step 4: fold measured |δ| into the owning shard's p_s(j).
+        for &(var, delta) in &result.deltas {
+            self.shards.report(var, delta);
+        }
+    }
+
+    fn last_cost(&self) -> SchedCost {
+        self.last_cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SapConfig;
+    use crate::coordinator::depcheck::is_rho_independent;
+
+    /// A toy problem: 2d chain where adjacent variables conflict.
+    struct Chain {
+        n: usize,
+    }
+
+    impl ModelProblem for Chain {
+        fn num_vars(&self) -> usize {
+            self.n
+        }
+        fn workload(&self, _j: usize) -> u64 {
+            1
+        }
+        fn dependencies(&mut self, cands: &[usize]) -> Vec<f64> {
+            let c = cands.len();
+            let mut d = vec![0.0; c * c];
+            for i in 0..c {
+                for j in 0..c {
+                    if i != j && cands[i].abs_diff(cands[j]) == 1 {
+                        d[i * c + j] = 1.0;
+                    }
+                }
+            }
+            d
+        }
+        fn update_blocks(&mut self, blocks: &[Block]) -> RoundResult {
+            let deltas =
+                blocks.iter().flat_map(|b| b.vars.iter().map(|&v| (v, 0.1))).collect();
+            RoundResult { deltas, objective: None, max_block_work: 1, total_work: 1 }
+        }
+        fn objective(&mut self) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn plan_never_coschedules_adjacent_vars() {
+        let mut problem = Chain { n: 200 };
+        let cfg = SapConfig { shards: 1, ..SapConfig::default() };
+        let mut s = DynamicScheduler::new(200, &cfg, 3);
+        for _ in 0..20 {
+            let blocks = s.plan(&mut problem, 8);
+            assert!(blocks.len() <= 8);
+            let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+            // no two scheduled vars adjacent
+            for (i, &a) in vars.iter().enumerate() {
+                for &b in &vars[i + 1..] {
+                    assert!(a.abs_diff(b) != 1, "adjacent {a},{b} co-scheduled");
+                }
+            }
+            let result = problem.update_blocks(&blocks);
+            s.observe(&result);
+        }
+    }
+
+    #[test]
+    fn respects_worker_limit_and_distinctness() {
+        let mut problem = Chain { n: 1000 };
+        let mut s = DynamicScheduler::new(1000, &SapConfig::default(), 1);
+        let blocks = s.plan(&mut problem, 16);
+        let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+        assert!(vars.len() <= 16);
+        let set: std::collections::HashSet<_> = vars.iter().collect();
+        assert_eq!(set.len(), vars.len());
+    }
+
+    #[test]
+    fn observe_reprioritizes() {
+        let mut problem = Chain { n: 64 };
+        let cfg = SapConfig { shards: 1, init_priority: 1e-6, ..SapConfig::default() };
+        let mut s = DynamicScheduler::new(64, &cfg, 5);
+        // report huge progress on var 10 only
+        s.observe(&RoundResult {
+            deltas: (0..64).map(|v| (v, if v == 10 { 100.0 } else { 1e-9 })).collect(),
+            ..Default::default()
+        });
+        let mut hits = 0;
+        for _ in 0..50 {
+            let blocks = s.plan(&mut problem, 1);
+            if blocks.iter().any(|b| b.vars.contains(&10)) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 45, "hits {hits}");
+    }
+
+    #[test]
+    fn coords_per_worker_extension_schedules_larger_rounds() {
+        // paper §6 future work: bigger dispatched blocks, same rho control
+        let mut problem = Chain { n: 2000 };
+        let cfg = SapConfig { shards: 1, coords_per_worker: 4, ..SapConfig::default() };
+        let mut s = DynamicScheduler::new(2000, &cfg, 13);
+        let blocks = s.plan(&mut problem, 8);
+        assert!(blocks.len() <= 8);
+        let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+        assert!(vars.len() > 8, "should schedule more than one coord per worker: {}", vars.len());
+        assert!(vars.len() <= 32);
+        // every scheduled pair still rho-independent (no adjacent vars)
+        for (i, &a) in vars.iter().enumerate() {
+            for &b in &vars[i + 1..] {
+                assert!(a.abs_diff(b) != 1, "adjacent {a},{b} co-scheduled");
+            }
+        }
+    }
+
+    #[test]
+    fn selection_invariant_via_validator() {
+        let mut problem = Chain { n: 100 };
+        let cfg = SapConfig { shards: 2, ..SapConfig::default() };
+        let mut s = DynamicScheduler::new(100, &cfg, 7);
+        for _ in 0..10 {
+            let blocks = s.plan(&mut problem, 6);
+            let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+            let dep = problem.dependencies(&vars);
+            let idx: Vec<usize> = (0..vars.len()).collect();
+            assert!(is_rho_independent(&idx, &dep, vars.len(), 0.1));
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The three scheduling models compared in the paper's evaluation:
+//!
+//! * [`DynamicScheduler`] — STRADS / SAP: importance-sampled candidates,
+//!   ρ-constrained dependency checking, load-balanced dispatch, sharded
+//!   round-robin (the paper's contribution).
+//! * [`StaticBlockScheduler`] — "static block structures": candidates
+//!   drawn uniformly at random, the same a-priori ρ dependency check,
+//!   but no importance distribution (block structure never adapts to
+//!   runtime values).
+//! * [`RandomScheduler`] — Shotgun (Bradley et al. 2011): uniformly
+//!   random selection, no structure at all.
+
+mod dynamic;
+mod random;
+mod static_block;
+
+pub use dynamic::DynamicScheduler;
+pub use random::RandomScheduler;
+pub use static_block::StaticBlockScheduler;
+
+use crate::coordinator::SchedCost;
+use crate::problem::{Block, ModelProblem, RoundResult};
+
+/// A round-based variable scheduler.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Plan the next round: at most `p` blocks for `p` workers.
+    fn plan(&mut self, problem: &mut dyn ModelProblem, p: usize) -> Vec<Block>;
+
+    /// SAP step 4: observe the round's measured progress.
+    fn observe(&mut self, result: &RoundResult);
+
+    /// Scheduling work performed by the last `plan` call (cost model).
+    fn last_cost(&self) -> SchedCost;
+}

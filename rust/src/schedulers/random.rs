@@ -1,0 +1,92 @@
+//! The unstructured baseline: Shotgun (Bradley et al., 2011). Variables
+//! are selected uniformly at random with no dependency checking — the
+//! paper's "no structures" scheduler, which suffers interference when
+//! correlated variables collide in a round.
+
+use crate::coordinator::SchedCost;
+use crate::problem::{Block, ModelProblem, RoundResult};
+use crate::schedulers::Scheduler;
+use crate::util::Rng;
+
+pub struct RandomScheduler {
+    rng: Rng,
+    last_cost: SchedCost,
+}
+
+impl RandomScheduler {
+    pub fn new(seed: u64) -> Self {
+        RandomScheduler { rng: Rng::new(seed), last_cost: SchedCost::default() }
+    }
+}
+
+impl Scheduler for RandomScheduler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn plan(&mut self, problem: &mut dyn ModelProblem, p: usize) -> Vec<Block> {
+        let n = problem.num_vars();
+        let picked = self.rng.sample_distinct(n, p.min(n));
+        self.last_cost = SchedCost { candidates: picked.len(), dep_checks: 0 };
+        picked.into_iter().map(|v| Block::singleton(v, problem.workload(v))).collect()
+    }
+
+    fn observe(&mut self, _result: &RoundResult) {}
+
+    fn last_cost(&self) -> SchedCost {
+        self.last_cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Nop {
+        n: usize,
+    }
+    impl ModelProblem for Nop {
+        fn num_vars(&self) -> usize {
+            self.n
+        }
+        fn workload(&self, _j: usize) -> u64 {
+            1
+        }
+        fn dependencies(&mut self, cands: &[usize]) -> Vec<f64> {
+            vec![0.0; cands.len() * cands.len()]
+        }
+        fn update_blocks(&mut self, _blocks: &[Block]) -> RoundResult {
+            RoundResult::default()
+        }
+        fn objective(&mut self) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn exactly_p_distinct_singletons() {
+        let mut problem = Nop { n: 100 };
+        let mut s = RandomScheduler::new(4);
+        let blocks = s.plan(&mut problem, 16);
+        assert_eq!(blocks.len(), 16);
+        let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+        let set: std::collections::HashSet<_> = vars.iter().collect();
+        assert_eq!(set.len(), 16);
+    }
+
+    #[test]
+    fn never_performs_dep_checks() {
+        let mut problem = Nop { n: 100 };
+        let mut s = RandomScheduler::new(4);
+        s.plan(&mut problem, 8);
+        assert_eq!(s.last_cost().dep_checks, 0);
+    }
+
+    #[test]
+    fn p_larger_than_n_clamps() {
+        let mut problem = Nop { n: 5 };
+        let mut s = RandomScheduler::new(4);
+        let blocks = s.plan(&mut problem, 16);
+        assert_eq!(blocks.len(), 5);
+    }
+}

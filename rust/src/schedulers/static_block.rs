@@ -1,0 +1,145 @@
+//! The "static block structures" baseline (paper §5.1): candidates are
+//! drawn uniformly at random and filtered by the same a-priori ρ
+//! dependency check, but there is no importance distribution — the
+//! block structure reflects only the (static) data correlations, never
+//! the runtime values of β. Load balancing is kept (it too is static:
+//! workloads don't change).
+
+use crate::config::SapConfig;
+use crate::coordinator::depcheck::select_independent_lazy;
+use crate::coordinator::{merge_balanced, select_independent, SchedCost};
+use crate::problem::{Block, ModelProblem, RoundResult};
+use crate::schedulers::Scheduler;
+use crate::util::Rng;
+
+pub struct StaticBlockScheduler {
+    cfg: SapConfig,
+    rng: Rng,
+    last_cost: SchedCost,
+}
+
+impl StaticBlockScheduler {
+    pub fn new(cfg: &SapConfig, seed: u64) -> Self {
+        StaticBlockScheduler { cfg: cfg.clone(), rng: Rng::new(seed), last_cost: SchedCost::default() }
+    }
+}
+
+impl Scheduler for StaticBlockScheduler {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn plan(&mut self, problem: &mut dyn ModelProblem, p: usize) -> Vec<Block> {
+        let n = problem.num_vars();
+        let p_prime = (p * self.cfg.p_prime_factor).min(n);
+        // Uniform candidates: the static scheduler has no notion of
+        // which variables currently matter.
+        let cands = self.rng.sample_distinct(n, p_prime);
+        let picked = if problem.supports_pair_dependency() {
+            let mut checks = 0usize;
+            let picked = select_independent_lazy(
+                &cands,
+                |a, b| {
+                    checks += 1;
+                    problem.dependency_pair(a, b)
+                },
+                self.cfg.rho,
+                p,
+            );
+            self.last_cost = SchedCost { candidates: cands.len(), dep_checks: checks };
+            picked
+        } else {
+            let dep = problem.dependencies(&cands);
+            let picked = select_independent(&cands, &dep, self.cfg.rho, p);
+            self.last_cost = SchedCost {
+                candidates: cands.len(),
+                dep_checks: cands.len() * picked.len().max(1),
+            };
+            picked
+        };
+        let blocks: Vec<Block> = picked
+            .iter()
+            .map(|&ci| {
+                let v = cands[ci];
+                Block::singleton(v, problem.workload(v))
+            })
+            .collect();
+        merge_balanced(blocks, p)
+    }
+
+    fn observe(&mut self, _result: &RoundResult) {
+        // Static: runtime progress never feeds back into selection.
+    }
+
+    fn last_cost(&self) -> SchedCost {
+        self.last_cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dense {
+        n: usize,
+        rho_pairs: f64,
+    }
+
+    impl ModelProblem for Dense {
+        fn num_vars(&self) -> usize {
+            self.n
+        }
+        fn workload(&self, _j: usize) -> u64 {
+            1
+        }
+        fn dependencies(&mut self, cands: &[usize]) -> Vec<f64> {
+            let c = cands.len();
+            let mut d = vec![self.rho_pairs; c * c];
+            for i in 0..c {
+                d[i * c + i] = 0.0;
+            }
+            d
+        }
+        fn update_blocks(&mut self, _blocks: &[Block]) -> RoundResult {
+            RoundResult::default()
+        }
+        fn objective(&mut self) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn fully_coupled_problem_yields_one_var_per_round() {
+        // every pair conflicts above rho -> only one variable passes
+        let mut problem = Dense { n: 100, rho_pairs: 0.9 };
+        let mut s = StaticBlockScheduler::new(&SapConfig::default(), 1);
+        let blocks = s.plan(&mut problem, 8);
+        let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+        assert_eq!(vars.len(), 1);
+    }
+
+    #[test]
+    fn uncoupled_problem_fills_all_workers() {
+        let mut problem = Dense { n: 100, rho_pairs: 0.0 };
+        let mut s = StaticBlockScheduler::new(&SapConfig::default(), 2);
+        let blocks = s.plan(&mut problem, 8);
+        let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+        assert_eq!(vars.len(), 8);
+    }
+
+    #[test]
+    fn observe_is_a_noop_for_selection_statistics() {
+        let mut problem = Dense { n: 50, rho_pairs: 0.0 };
+        let mk = || StaticBlockScheduler::new(&SapConfig::default(), 77);
+        let mut a = mk();
+        let mut b = mk();
+        // b observes huge progress on var 5; a observes nothing
+        b.observe(&RoundResult { deltas: vec![(5, 1e9)], ..Default::default() });
+        // identical RNG stream -> identical plans regardless of observe
+        for _ in 0..5 {
+            let pa = a.plan(&mut problem, 4);
+            let pb = b.plan(&mut problem, 4);
+            assert_eq!(pa, pb);
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Cost model translating workload units into virtual seconds.
+//!
+//! Calibration: `sec_per_work_unit` is measured on this host by timing
+//! the native updater (see `strads calibrate` and EXPERIMENTS.md
+//! §Calibration), so one *virtual* core ≈ one core of this machine.
+//! Absolute times therefore differ from the paper's AMD Opteron
+//! cluster, but relative comparisons across schedulers and core counts
+//! — which is what the figures claim — are preserved.
+
+use crate::config::CostModelConfig;
+use crate::coordinator::SchedCost;
+
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    sec_per_work_unit: f64,
+    round_overhead_sec: f64,
+    sched_sec_per_candidate: f64,
+}
+
+impl CostModel {
+    pub fn new(cfg: &CostModelConfig) -> Self {
+        CostModel {
+            sec_per_work_unit: cfg.sec_per_work_unit,
+            round_overhead_sec: cfg.round_overhead_sec,
+            sched_sec_per_candidate: cfg.sched_sec_per_candidate,
+        }
+    }
+
+    /// Worker time for a block of `work` units.
+    #[inline]
+    pub fn block_secs(&self, work: u64) -> f64 {
+        work as f64 * self.sec_per_work_unit
+    }
+
+    /// Scheduler time for one plan (sampling + dependency checking).
+    /// Dep checks are charged at the same per-candidate rate scaled by
+    /// the check fan-out.
+    #[inline]
+    pub fn sched_secs(&self, cost: SchedCost) -> f64 {
+        (cost.candidates as f64 + 0.1 * cost.dep_checks as f64) * self.sched_sec_per_candidate
+    }
+
+    #[inline]
+    pub fn round_overhead(&self) -> f64 {
+        self.round_overhead_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_in_work() {
+        let m = CostModel::new(&CostModelConfig {
+            sec_per_work_unit: 2.0,
+            round_overhead_sec: 0.0,
+            sched_sec_per_candidate: 0.0,
+        });
+        assert_eq!(m.block_secs(5), 10.0);
+        assert_eq!(m.block_secs(0), 0.0);
+    }
+
+    #[test]
+    fn sched_cost_includes_dep_checks() {
+        let m = CostModel::new(&CostModelConfig {
+            sec_per_work_unit: 0.0,
+            round_overhead_sec: 0.0,
+            sched_sec_per_candidate: 1.0,
+        });
+        let base = m.sched_secs(SchedCost { candidates: 10, dep_checks: 0 });
+        let with = m.sched_secs(SchedCost { candidates: 10, dep_checks: 100 });
+        assert!(with > base);
+    }
+}

@@ -1,0 +1,238 @@
+//! Compressed sparse row matrix with O(1) per-row nnz — the quantity the
+//! STRADS load balancer (paper §2 step 3) equalizes across blocks.
+
+use super::Coo;
+
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// Row pointer array, len nrows + 1.
+    indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    indices: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from COO triplets; duplicates are summed.
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut counts = vec![0usize; coo.nrows + 1];
+        for &r in &coo.rows {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; coo.nnz()];
+        let mut vals = vec![0.0f32; coo.nnz()];
+        for k in 0..coo.nnz() {
+            let r = coo.rows[k] as usize;
+            let pos = cursor[r];
+            indices[pos] = coo.cols[k];
+            vals[pos] = coo.vals[k];
+            cursor[r] += 1;
+        }
+        let mut m =
+            CsrMatrix { nrows: coo.nrows, ncols: coo.ncols, indptr, indices, vals };
+        m.sort_and_dedup_rows();
+        m
+    }
+
+    fn sort_and_dedup_rows(&mut self) {
+        let mut new_indices = Vec::with_capacity(self.indices.len());
+        let mut new_vals = Vec::with_capacity(self.vals.len());
+        let mut new_indptr = Vec::with_capacity(self.indptr.len());
+        new_indptr.push(0);
+        let mut row_buf: Vec<(u32, f32)> = Vec::new();
+        for r in 0..self.nrows {
+            row_buf.clear();
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                row_buf.push((self.indices[k], self.vals[k]));
+            }
+            row_buf.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row_buf.len() {
+                let (c, mut v) = row_buf[i];
+                let mut j = i + 1;
+                while j < row_buf.len() && row_buf[j].0 == c {
+                    v += row_buf[j].1;
+                    j += 1;
+                }
+                new_indices.push(c);
+                new_vals.push(v);
+                i = j;
+            }
+            new_indptr.push(new_indices.len());
+        }
+        self.indices = new_indices;
+        self.vals = new_vals;
+        self.indptr = new_indptr;
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// nnz of one row — O(1).
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Offset of row `i`'s first entry in the flat value order — O(1).
+    /// (The MF backends keep per-entry residuals aligned with this.)
+    #[inline]
+    pub fn row_start(&self, i: usize) -> usize {
+        self.indptr[i]
+    }
+
+    /// (column index, value) pairs of one row.
+    #[inline]
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        self.indices[lo..hi].iter().map(|&c| c as usize).zip(self.vals[lo..hi].iter().copied())
+    }
+
+    /// Per-column nnz histogram (O(nnz)).
+    pub fn col_nnz(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.ncols];
+        for &c in &self.indices {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Transposed copy (CSR of A^T = CSC of A) — used to drive the MF
+    /// column (H) sweeps with the same row-block machinery.
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut coo = Coo::new(self.ncols, self.nrows);
+        for i in 0..self.nrows {
+            for (j, v) in self.row(i) {
+                coo.push(j, i, v);
+            }
+        }
+        CsrMatrix::from_coo(&coo)
+    }
+
+    /// Materialize the dense row-major value matrix and the 0/1 mask —
+    /// the device-upload form consumed by the MF AOT graphs.
+    pub fn to_dense_row_major(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut dense = vec![0.0f32; self.nrows * self.ncols];
+        let mut mask = vec![0.0f32; self.nrows * self.ncols];
+        for i in 0..self.nrows {
+            for (j, v) in self.row(i) {
+                dense[i * self.ncols + j] = v;
+                mask[i * self.ncols + j] = 1.0;
+            }
+        }
+        (dense, mask)
+    }
+
+    /// Frobenius-squared error over observed entries against a low-rank
+    /// factorization: sum_{(i,j) in Omega} (a_ij - w_i . h_j)^2, with W
+    /// row-major [nrows, k] and H row-major [k, ncols].
+    pub fn sq_error(&self, w: &[f32], h: &[f32], k: usize) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..self.nrows {
+            let wi = &w[i * k..(i + 1) * k];
+            for (j, a) in self.row(i) {
+                let mut pred = 0.0f32;
+                for t in 0..k {
+                    pred += wi[t] * h[t * self.ncols + j];
+                }
+                let d = (a - pred) as f64;
+                acc += d * d;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        let mut coo = Coo::new(3, 4);
+        coo.push(0, 1, 2.0);
+        coo.push(0, 3, 1.0);
+        coo.push(2, 0, 5.0);
+        coo.push(2, 0, 1.0); // duplicate -> summed
+        coo.push(1, 2, -1.0);
+        CsrMatrix::from_coo(&coo)
+    }
+
+    #[test]
+    fn build_and_query() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 1);
+        assert_eq!(m.row_nnz(2), 1);
+        let row0: Vec<_> = m.row(0).collect();
+        assert_eq!(row0, vec![(1, 2.0), (3, 1.0)]);
+        let row2: Vec<_> = m.row(2).collect();
+        assert_eq!(row2, vec![(0, 6.0)]); // duplicates summed
+    }
+
+    #[test]
+    fn col_nnz_histogram() {
+        let m = sample();
+        assert_eq!(m.col_nnz(), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.nrows(), 4);
+        assert_eq!(t.ncols(), 3);
+        assert_eq!(t.nnz(), m.nnz());
+        let tt = t.transpose();
+        for i in 0..3 {
+            let a: Vec<_> = m.row(i).collect();
+            let b: Vec<_> = tt.row(i).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn dense_and_mask() {
+        let m = sample();
+        let (dense, mask) = m.to_dense_row_major();
+        assert_eq!(dense[0 * 4 + 1], 2.0);
+        assert_eq!(mask[0 * 4 + 1], 1.0);
+        assert_eq!(mask[0 * 4 + 0], 0.0);
+        assert_eq!(mask.iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn sq_error_zero_for_exact_factors() {
+        // rank-1 exact: a_ij = u_i v_j on observed entries
+        let u = [1.0f32, 2.0, 3.0];
+        let v = [0.5f32, 1.0, 1.5, 2.0];
+        let mut coo = Coo::new(3, 4);
+        for i in 0..3 {
+            for j in 0..4 {
+                if (i + j) % 2 == 0 {
+                    coo.push(i, j, u[i] * v[j]);
+                }
+            }
+        }
+        let m = CsrMatrix::from_coo(&coo);
+        let err = m.sq_error(&u, &v, 1);
+        assert!(err < 1e-10, "err {err}");
+    }
+}

@@ -1,0 +1,35 @@
+//! Sparse matrix substrate for the MF application (ratings matrices are
+//! stored sparsely on the host; the dense+mask form is only materialized
+//! at device-upload time).
+
+pub mod csr;
+
+pub use csr::CsrMatrix;
+
+/// A COO triplet batch — the interchange form produced by the data
+/// generators and consumed by [`CsrMatrix::from_coo`].
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.rows.push(i as u32);
+        self.cols.push(j as u32);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}

@@ -1,0 +1,79 @@
+//! Multiplicative (Fibonacci) hasher for small integer keys — the
+//! scheduler's dependency memo does ~60k lookups per round, where
+//! std's SipHash costs more than the hash-map probe itself. Not DoS
+//! resistant; use only for internal integer keys.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// 64-bit multiplicative hasher (fxhash-style fold).
+#[derive(Default)]
+pub struct FastHasher {
+    state: u64,
+}
+
+const K: u64 = 0x517cc1b727220a95; // 2^64 / golden ratio, odd
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // generic path: fold 8 bytes at a time
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.write_u64(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.state = (self.state.rotate_left(5) ^ v).wrapping_mul(K);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.write_u64(v as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+}
+
+/// Drop-in HashMap with the fast hasher.
+pub type FastHashMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<FastHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_keys_distinct_buckets_mostly() {
+        let mut m: FastHashMap<(u32, u32), u32> = FastHashMap::default();
+        for a in 0..100u32 {
+            for b in 0..100u32 {
+                m.insert((a, b), a * 1000 + b);
+            }
+        }
+        assert_eq!(m.len(), 10_000);
+        assert_eq!(m[&(7, 93)], 7_093);
+    }
+
+    #[test]
+    fn hash_spreads_sequential_keys() {
+        use std::hash::{BuildHasher, BuildHasherDefault};
+        let bh: BuildHasherDefault<FastHasher> = Default::default();
+        let mut low_bits = std::collections::HashSet::new();
+        for i in 0..1024u64 {
+            let h = bh.hash_one(i);
+            low_bits.insert(h & 0xff);
+        }
+        // sequential keys should cover most of the 256 low-bit buckets
+        assert!(low_bits.len() > 200, "only {} buckets", low_bits.len());
+    }
+}

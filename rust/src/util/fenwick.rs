@@ -1,0 +1,216 @@
+//! Fenwick (binary indexed) tree over non-negative weights with
+//! O(log n) point update and O(log n) weighted sampling.
+//!
+//! This is the engine behind the SAP importance distribution
+//! `p(j) ∝ δβ_j + η` (paper §2 step 1 / §4): the scheduler keeps one
+//! weight per owned variable, bumps it on every progress report, and
+//! draws candidate sets by inverse-CDF descent down the tree — so both
+//! the priority update (step 4) and the candidate draw (step 1) stay
+//! logarithmic, which is what lets the scheduler outpace the workers.
+
+#[derive(Clone, Debug)]
+pub struct Fenwick {
+    /// 1-based partial sums; tree[i] covers a range ending at i.
+    tree: Vec<f64>,
+    /// Mirror of the raw weights for O(1) reads and exact overwrites.
+    weights: Vec<f64>,
+}
+
+impl Fenwick {
+    /// All-zero tree over `n` items.
+    pub fn new(n: usize) -> Self {
+        Fenwick { tree: vec![0.0; n + 1], weights: vec![0.0; n] }
+    }
+
+    /// Build from initial weights in O(n).
+    pub fn from_weights(ws: &[f64]) -> Self {
+        let mut f = Fenwick::new(ws.len());
+        for (i, &w) in ws.iter().enumerate() {
+            f.set(i, w);
+        }
+        f
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Current weight of item `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// Total weight.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.prefix_sum(self.weights.len())
+    }
+
+    /// Overwrite the weight of item `i` (must be >= 0 and finite).
+    pub fn set(&mut self, i: usize, w: f64) {
+        debug_assert!(w.is_finite() && w >= 0.0, "weight must be finite >= 0, got {w}");
+        let delta = w - self.weights[i];
+        self.weights[i] = w;
+        let mut k = i + 1;
+        while k < self.tree.len() {
+            self.tree[k] += delta;
+            k += k & k.wrapping_neg();
+        }
+    }
+
+    /// Sum of weights for items [0, n).
+    pub fn prefix_sum(&self, n: usize) -> f64 {
+        let mut k = n.min(self.weights.len());
+        let mut s = 0.0;
+        while k > 0 {
+            s += self.tree[k];
+            k -= k & k.wrapping_neg();
+        }
+        s
+    }
+
+    /// Largest index i such that prefix_sum(i) <= target, i.e. the item
+    /// whose CDF bucket contains `target`. O(log n) bit-descent.
+    pub fn search(&self, mut target: f64) -> usize {
+        let n = self.weights.len();
+        let mut pos = 0usize;
+        let mut mask = n.next_power_of_two();
+        while mask > 0 {
+            let next = pos + mask;
+            if next < self.tree.len() && self.tree[next] < target {
+                pos = next;
+                target -= self.tree[next];
+            }
+            mask >>= 1;
+        }
+        pos.min(n - 1)
+    }
+
+    /// Draw one index with probability proportional to its weight.
+    /// Returns None if all weights are zero.
+    pub fn sample(&self, rng: &mut super::Rng) -> Option<usize> {
+        let total = self.total();
+        if total <= 0.0 {
+            return None;
+        }
+        // Nudge away from exact 0, where `search` semantics are ambiguous.
+        let target = rng.f64() * total + f64::MIN_POSITIVE;
+        Some(self.search(target))
+    }
+
+    /// Draw up to `k` *distinct* indices by sampling-with-removal: each
+    /// drawn index has its weight temporarily zeroed, and all weights are
+    /// restored before returning. This is exactly "sample k items without
+    /// replacement ∝ weight" and costs O(k log n).
+    pub fn sample_distinct(&mut self, k: usize, rng: &mut super::Rng) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k);
+        let mut saved: Vec<(usize, f64)> = Vec::with_capacity(k);
+        for _ in 0..k {
+            match self.sample(rng) {
+                Some(i) => {
+                    saved.push((i, self.weights[i]));
+                    self.set(i, 0.0);
+                    out.push(i);
+                }
+                None => break,
+            }
+        }
+        for (i, w) in saved {
+            self.set(i, w);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn prefix_sums_match_naive() {
+        let ws: Vec<f64> = (0..37).map(|i| (i % 5) as f64 * 0.5).collect();
+        let f = Fenwick::from_weights(&ws);
+        let mut acc = 0.0;
+        for i in 0..=ws.len() {
+            assert!((f.prefix_sum(i) - acc).abs() < 1e-12, "prefix {i}");
+            if i < ws.len() {
+                acc += ws[i];
+            }
+        }
+    }
+
+    #[test]
+    fn set_then_get_roundtrip() {
+        let mut f = Fenwick::new(10);
+        f.set(3, 2.5);
+        f.set(9, 1.0);
+        f.set(3, 0.25);
+        assert_eq!(f.get(3), 0.25);
+        assert!((f.total() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn search_finds_owning_bucket() {
+        let f = Fenwick::from_weights(&[1.0, 0.0, 2.0, 1.0]);
+        assert_eq!(f.search(0.5), 0);
+        assert_eq!(f.search(1.5), 2); // item 1 has zero weight
+        assert_eq!(f.search(2.999), 2);
+        assert_eq!(f.search(3.5), 3);
+    }
+
+    #[test]
+    fn sampling_frequencies_track_weights() {
+        let ws = [1.0, 3.0, 0.0, 6.0];
+        let f = Fenwick::from_weights(&ws);
+        let mut rng = Rng::new(42);
+        let mut counts = [0usize; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[f.sample(&mut rng).unwrap()] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        let total: f64 = ws.iter().sum();
+        for (i, &w) in ws.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let expect = w / total * n as f64;
+            let got = counts[i] as f64;
+            assert!((got - expect).abs() < 0.05 * n as f64, "item {i}: {got} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_restores_weights() {
+        let ws: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        let mut f = Fenwick::from_weights(&ws);
+        let before = f.total();
+        let mut rng = Rng::new(1);
+        let picks = f.sample_distinct(8, &mut rng);
+        assert_eq!(picks.len(), 8);
+        let set: std::collections::HashSet<_> = picks.iter().collect();
+        assert_eq!(set.len(), 8);
+        assert!((f.total() - before).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_distinct_exhausts_gracefully() {
+        let mut f = Fenwick::from_weights(&[0.0, 1.0, 0.0]);
+        let mut rng = Rng::new(1);
+        let picks = f.sample_distinct(5, &mut rng);
+        assert_eq!(picks, vec![1]);
+    }
+
+    #[test]
+    fn zero_total_yields_none() {
+        let f = Fenwick::new(4);
+        let mut rng = Rng::new(1);
+        assert!(f.sample(&mut rng).is_none());
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal sectioned key=value config format (a TOML subset), used for
+//! experiment presets in `configs/`. Offline-vendored builds have no
+//! toml crate, and the configs only need scalars:
+//!
+//! ```text
+//! # comment
+//! workers = 240
+//! lambda = 5e-4
+//!
+//! [sap]
+//! rho = 0.1
+//! shards = 4
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed config: `section.key -> raw value string` (top-level keys use
+/// an empty section, addressed simply as `key`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvConf {
+    entries: BTreeMap<String, String>,
+}
+
+impl KvConf {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            entries.insert(key, val);
+        }
+        Ok(KvConf { entries })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().map_err(|e| format!("{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().map_err(|e| format!("{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().map_err(|e| format!("{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let c = KvConf::parse(
+            "# preset\nworkers = 240\nlambda = 5e-4\n\n[sap]\nrho = 0.1\nshards = 4\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_usize("workers").unwrap(), Some(240));
+        assert_eq!(c.get_f64("lambda").unwrap(), Some(5e-4));
+        assert_eq!(c.get_f64("sap.rho").unwrap(), Some(0.1));
+        assert_eq!(c.get_usize("sap.shards").unwrap(), Some(4));
+        assert_eq!(c.get("nope"), None);
+    }
+
+    #[test]
+    fn strips_comments_and_quotes() {
+        let c = KvConf::parse("name = \"adlike\"  # dataset\n").unwrap();
+        assert_eq!(c.get("name"), Some("adlike"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(KvConf::parse("just a line\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let c = KvConf::parse("workers = many\n").unwrap();
+        assert!(c.get_usize("workers").is_err());
+    }
+}

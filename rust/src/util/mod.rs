@@ -1,0 +1,18 @@
+//! Small self-contained substrates: deterministic RNG, Fenwick-tree
+//! weighted sampling (the p(j) engine), streaming statistics, and —
+//! because this build is fully offline-vendored — a minimal JSON parser
+//! (artifact manifest) and a key=value config format (presets).
+
+pub mod fasthash;
+pub mod fenwick;
+pub mod json;
+pub mod kvconf;
+pub mod rng;
+pub mod stats;
+
+pub use fasthash::FastHashMap;
+pub use fenwick::Fenwick;
+pub use json::Json;
+pub use kvconf::KvConf;
+pub use rng::Rng;
+pub use stats::OnlineStats;

@@ -1,0 +1,16 @@
+//! The distributed runtime: an in-process, message-passing realization
+//! of the STRADS architecture (paper Fig. 3 / §3) on tokio.
+//!
+//! One coordinator task owns the canonical model state and the sharded
+//! SAP scheduler; P worker tasks own nothing but the (shared, immutable)
+//! design matrix. Per round the coordinator plans blocks, ships each
+//! worker its block plus a *residual snapshot* (what a remote worker's
+//! stale replica would hold), the workers compute CD proposals and send
+//! them back, and the coordinator applies all proposals at once — the
+//! same parallel semantics the simulator models, here executed by real
+//! concurrent tasks over channels. The paper's 0MQ sockets become tokio
+//! mpsc channels; everything else is structurally identical.
+
+pub mod service;
+
+pub use service::{run_distributed, DistributedReport};

@@ -1,0 +1,221 @@
+//! End-to-end runtime correctness: the AOT artifacts (JAX + Pallas,
+//! compiled through PJRT) must agree with the native rust
+//! implementations on identical inputs. This pins all three layers
+//! together: Pallas == jnp oracle is checked in pytest; here we check
+//! artifact == rust-native.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use std::rc::Rc;
+use strads::data::lasso_synth::{self, LassoSynthSpec};
+use strads::data::mf_powerlaw::{self, MfSynthSpec};
+use strads::lasso::{ArtifactLasso, NativeLasso};
+use strads::mf::{ArtifactMf, MfBackend, NativeMf};
+use strads::problem::{Block, ModelProblem};
+use strads::runtime::{default_artifacts_dir, ArtifactStore, LassoExes, MfExes};
+
+fn store() -> Option<Rc<ArtifactStore>> {
+    let dir = default_artifacts_dir();
+    match ArtifactStore::open(&dir) {
+        Ok(s) => Some(Rc::new(s)),
+        Err(e) => {
+            eprintln!("SKIP: no artifact store ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn lasso_pair(seed: u64, lambda: f64) -> Option<(NativeLasso<'static>, ArtifactLasso)> {
+    let store = store()?;
+    let data = Box::leak(Box::new(lasso_synth::generate(&LassoSynthSpec::tiny(), seed)));
+    let exes =
+        LassoExes::new(store, "tiny", &data.x.to_row_major(), &data.y).expect("LassoExes::new");
+    let native = NativeLasso::new(data, lambda);
+    let artifact = ArtifactLasso::new(exes, &data.y, lambda);
+    Some((native, artifact))
+}
+
+#[test]
+fn lasso_update_artifact_matches_native() {
+    let Some((mut native, mut artifact)) = lasso_pair(31, 1e-3) else { return };
+    // Several rounds over assorted coordinate batches, including
+    // single-coordinate and full-bucket (16) rounds.
+    let batches: Vec<Vec<usize>> = vec![
+        vec![0],
+        vec![5, 9, 200, 31],
+        (16..32).collect(),
+        vec![255, 3, 77],
+        (100..110).collect(),
+    ];
+    for (i, batch) in batches.iter().enumerate() {
+        let blocks: Vec<Block> = batch.iter().map(|&v| Block::singleton(v, 1)).collect();
+        let rn = native.update_blocks(&blocks);
+        let ra = artifact.update_blocks(&blocks);
+        // per-variable |delta| agree
+        assert_eq!(rn.deltas.len(), ra.deltas.len());
+        for ((vn, dn), (va, da)) in rn.deltas.iter().zip(ra.deltas.iter()) {
+            assert_eq!(vn, va);
+            assert!((dn - da).abs() < 1e-4, "round {i} var {vn}: native {dn} artifact {da}");
+        }
+        // betas agree
+        for &v in batch {
+            let bn = native.beta()[v];
+            let ba = artifact.beta()[v];
+            assert!((bn - ba).abs() < 1e-4, "round {i} beta[{v}]: {bn} vs {ba}");
+        }
+    }
+    // objectives agree after everything
+    let on = native.objective();
+    let oa = artifact.objective();
+    assert!((on - oa).abs() < 1e-3 * on.abs().max(1.0), "native {on} artifact {oa}");
+}
+
+#[test]
+fn lasso_gram_artifact_matches_native() {
+    let Some((mut native, mut artifact)) = lasso_pair(32, 1e-3) else { return };
+    let cands: Vec<usize> = vec![0, 1, 2, 9, 17, 33, 128, 255];
+    let dn = native.dependencies(&cands);
+    let da = artifact.dependencies(&cands);
+    assert_eq!(dn.len(), da.len());
+    for (i, (a, b)) in dn.iter().zip(da.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-4, "dep[{i}]: native {a} artifact {b}");
+    }
+}
+
+#[test]
+fn lasso_objective_artifact_matches_native() {
+    let Some((mut native, mut artifact)) = lasso_pair(33, 5e-4) else { return };
+    // beta = 0 objective: 0.5 ||y||^2
+    let on = native.objective();
+    let oa = artifact.objective();
+    assert!((on - oa).abs() < 1e-5, "zero-beta objective: {on} vs {oa}");
+    // after some updates
+    let blocks: Vec<Block> = (0..16).map(|v| Block::singleton(v * 3, 1)).collect();
+    native.update_blocks(&blocks);
+    artifact.update_blocks(&blocks);
+    let on = native.objective();
+    let oa = artifact.objective();
+    assert!((on - oa).abs() < 1e-3 * on.max(1.0), "post-update objective: {on} vs {oa}");
+}
+
+#[test]
+fn mf_sweeps_artifact_matches_native() {
+    let Some(store) = store() else { return };
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 41);
+    let (a_dense, mask) = data.a.to_dense_row_major();
+    let exes = MfExes::new(store, "tiny", &a_dense, &mask).expect("MfExes::new");
+
+    let mut art = ArtifactMf::new(exes, &data.a, 0.05, 7);
+    let mut nat = NativeMf::new(&data.a, 4, 0.05, 7);
+    // identical init (same seed/scale path)
+    assert_eq!(art.w, nat.w);
+    assert_eq!(art.h, nat.h);
+
+    let n = nat.n();
+    let m = nat.m();
+    let rows: Vec<usize> = (0..n).collect();
+    let cols: Vec<usize> = (0..m).collect();
+    for t in 0..nat.k() {
+        nat.begin_rank(t);
+        nat.sweep_w_block(t, &rows[..n / 2]);
+        nat.sweep_w_block(t, &rows[n / 2..]);
+        nat.sweep_h_block(t, &cols);
+        nat.end_rank(t);
+
+        art.begin_rank(t);
+        art.sweep_w_block(t, &rows[..n / 2]);
+        art.sweep_w_block(t, &rows[n / 2..]);
+        art.sweep_h_block(t, &cols);
+        art.end_rank(t);
+    }
+    for (i, (a, b)) in nat.w.iter().zip(art.w.iter()).enumerate() {
+        assert!((a - b).abs() < 2e-3, "w[{i}]: native {a} artifact {b}");
+    }
+    for (i, (a, b)) in nat.h.iter().zip(art.h.iter()).enumerate() {
+        assert!((a - b).abs() < 2e-3, "h[{i}]: native {a} artifact {b}");
+    }
+    let on = nat.objective();
+    let oa = art.objective();
+    assert!((on - oa).abs() < 1e-2 * on.max(1.0), "objective: native {on} artifact {oa}");
+}
+
+#[test]
+fn mf_objective_artifact_matches_native() {
+    let Some(store) = store() else { return };
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 42);
+    let (a_dense, mask) = data.a.to_dense_row_major();
+    let exes = MfExes::new(store, "tiny", &a_dense, &mask).expect("MfExes::new");
+    let mut art = ArtifactMf::new(exes, &data.a, 0.05, 9);
+    let mut nat = NativeMf::new(&data.a, 4, 0.05, 9);
+    let oa = art.objective();
+    let on = nat.objective();
+    assert!((on - oa).abs() < 1e-3 * on.max(1.0), "objective: native {on} artifact {oa}");
+}
+
+#[test]
+fn mf_driver_over_artifacts_converges_and_balances() {
+    // the full fig5 driver running on the PJRT backend end-to-end
+    use strads::config::{CostModelConfig, EngineConfig};
+    use strads::metrics::Trace;
+    use strads::mf::{run_mf, MfPartition};
+
+    let Some(store) = store() else { return };
+    let data = mf_powerlaw::generate(
+        &MfSynthSpec { item_exponent: 1.6, ..MfSynthSpec::tiny() },
+        43,
+    );
+    let (a_dense, mask) = data.a.to_dense_row_major();
+    let ecfg = EngineConfig { max_rounds: 2, record_every: 1, ..Default::default() };
+    let cost = CostModelConfig::default();
+    let mut finals = Vec::new();
+    let mut vtimes = Vec::new();
+    for part in [MfPartition::Balanced, MfPartition::Uniform] {
+        let exes = MfExes::new(Rc::clone(&store), "tiny", &a_dense, &mask).unwrap();
+        let mut backend = ArtifactMf::new(exes, &data.a, 0.05, 11);
+        let mut t = Trace::new(part.name(), "tiny", 8);
+        run_mf(&mut backend, part, 8, &ecfg, &cost, &mut t);
+        assert!(t.final_objective() < t.points[0].objective * 1.01);
+        finals.push(t.final_objective());
+        vtimes.push(t.final_vtime());
+    }
+    // identical math, balanced finishes sooner
+    assert!((finals[0] - finals[1]).abs() < 1e-5 * finals[0].abs().max(1.0));
+    assert!(vtimes[0] < vtimes[1]);
+}
+
+#[test]
+fn bucket_padding_is_exact() {
+    // Padding slots (idx 0, mask 0) must not perturb live lanes or any
+    // untouched coordinate — verified against the native implementation
+    // on the same batch.
+    let Some((mut native, mut artifact)) = lasso_pair(34, 1e-3) else { return };
+    let batch = vec![10usize, 40, 90];
+    let blocks: Vec<Block> = batch.iter().map(|&v| Block::singleton(v, 1)).collect();
+    native.update_blocks(&blocks);
+    artifact.update_blocks(&blocks);
+    for &v in &batch {
+        assert!((native.beta()[v] - artifact.beta()[v]).abs() < 1e-4);
+    }
+    // untouched coordinates stay exactly zero (no padding leakage)
+    for v in [0usize, 11, 41, 91, 200] {
+        assert_eq!(artifact.beta()[v], 0.0, "beta[{v}] perturbed by padding");
+    }
+}
+
+#[test]
+fn artifact_store_inventory_is_complete() {
+    let Some(store) = store() else { return };
+    // every kind present for the tiny dataset
+    for kind in ["lasso_update", "lasso_gram", "lasso_obj"] {
+        assert!(!store.family(kind, "tiny").is_empty(), "missing {kind} for tiny");
+    }
+    for kind in ["mf_update_w", "mf_update_h", "mf_obj"] {
+        assert!(!store.family(kind, "tiny").is_empty(), "missing {kind} for tiny");
+    }
+    // executables compile lazily and memoize
+    let before = store.compiled_count();
+    let name = &store.family("lasso_obj", "tiny")[0].name.clone();
+    store.executable(name).unwrap();
+    store.executable(name).unwrap();
+    assert_eq!(store.compiled_count(), before + 1);
+}

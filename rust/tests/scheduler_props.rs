@@ -1,0 +1,228 @@
+//! Property-based tests on the coordinator invariants (routing, block
+//! formation, load balancing, sampling). The offline vendor set has no
+//! proptest, so cases are driven by the crate's own deterministic RNG —
+//! several hundred random instances per property, seeds printed on
+//! failure.
+
+use strads::coordinator::balance::{imbalance, merge_balanced, partition_balanced, partition_uniform};
+use strads::coordinator::depcheck::{is_rho_independent, select_independent};
+use strads::coordinator::priority::{PriorityDist, PriorityKind};
+use strads::coordinator::ShardSet;
+use strads::problem::Block;
+use strads::util::{Fenwick, Rng};
+
+fn rand_weights(rng: &mut Rng, n: usize, heavy_tail: bool) -> Vec<u64> {
+    (0..n)
+        .map(|_| {
+            if heavy_tail && rng.f64() < 0.05 {
+                rng.below(1000) as u64 + 100
+            } else {
+                rng.below(10) as u64 + 1
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_partition_covers_every_item_exactly_once() {
+    let mut rng = Rng::new(1001);
+    for case in 0..200 {
+        let n = rng.below(200) + 1;
+        let p = rng.below(16) + 1;
+        let weights = rand_weights(&mut rng, n, case % 2 == 0);
+        for blocks in [partition_balanced(&weights, p), partition_uniform(&weights, p)] {
+            let mut seen: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+            seen.sort();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>(), "case {case} n={n} p={p}");
+            for b in &blocks {
+                let w: u64 = b.vars.iter().map(|&i| weights[i]).sum();
+                assert_eq!(w, b.work, "case {case}: work field inconsistent");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lpt_respects_makespan_bound() {
+    // LPT greedy guarantees makespan <= (4/3 - 1/3p) * OPT, and
+    // OPT >= max(total/p, w_max). Check the (looser) 4/3 bound.
+    let mut rng = Rng::new(1002);
+    for case in 0..300 {
+        let n = rng.below(150) + 1;
+        let p = rng.below(12) + 1;
+        let weights = rand_weights(&mut rng, n, true);
+        let blocks = partition_balanced(&weights, p);
+        let makespan = blocks.iter().map(|b| b.work).max().unwrap() as f64;
+        let total: u64 = weights.iter().sum();
+        let wmax = *weights.iter().max().unwrap() as f64;
+        let lb = (total as f64 / p as f64).max(wmax);
+        assert!(
+            makespan <= 4.0 / 3.0 * lb + 1e-9,
+            "case {case}: makespan {makespan} > 4/3 * {lb}"
+        );
+    }
+}
+
+#[test]
+fn prop_balanced_never_worse_than_uniform_on_makespan() {
+    let mut rng = Rng::new(1003);
+    for case in 0..200 {
+        let n = rng.below(300) + 2;
+        let p = rng.below(16) + 1;
+        let weights = rand_weights(&mut rng, n, true);
+        let bal = partition_balanced(&weights, p);
+        let uni = partition_uniform(&weights, p);
+        let ms = |bs: &[Block]| bs.iter().map(|b| b.work).max().unwrap_or(0);
+        assert!(
+            ms(&bal) <= ms(&uni),
+            "case {case}: balanced {} > uniform {}",
+            ms(&bal),
+            ms(&uni)
+        );
+    }
+}
+
+#[test]
+fn prop_merge_balanced_preserves_vars_and_bounds_count() {
+    let mut rng = Rng::new(1004);
+    for case in 0..200 {
+        let nblocks = rng.below(50) + 1;
+        let p = rng.below(8) + 1;
+        let blocks: Vec<Block> = (0..nblocks)
+            .map(|i| Block::singleton(i, rng.below(100) as u64 + 1))
+            .collect();
+        let before: u64 = blocks.iter().map(|b| b.work).sum();
+        let merged = merge_balanced(blocks, p);
+        assert!(merged.len() <= p.max(1), "case {case}");
+        let after: u64 = merged.iter().map(|b| b.work).sum();
+        assert_eq!(before, after);
+        let mut vars: Vec<usize> = merged.iter().flat_map(|b| b.vars.clone()).collect();
+        vars.sort();
+        assert_eq!(vars, (0..nblocks).collect::<Vec<_>>());
+        if nblocks >= p * 4 {
+            assert!(imbalance(&merged) < 2.0, "case {case}: imbalance {}", imbalance(&merged));
+        }
+    }
+}
+
+#[test]
+fn prop_greedy_selection_is_rho_independent_and_maximal() {
+    let mut rng = Rng::new(1005);
+    for case in 0..200 {
+        let c = rng.below(40) + 1;
+        let rho = rng.f64() * 0.5;
+        // random symmetric dep matrix
+        let mut dep = vec![0.0f64; c * c];
+        for i in 0..c {
+            for k in (i + 1)..c {
+                let v = rng.f64();
+                dep[i * c + k] = v;
+                dep[k * c + i] = v;
+            }
+        }
+        let cands: Vec<usize> = (0..c).collect();
+        let limit = rng.below(c) + 1;
+        let sel = select_independent(&cands, &dep, rho, limit);
+        assert!(is_rho_independent(&sel, &dep, c, rho), "case {case}: constraint violated");
+        assert!(sel.len() <= limit);
+        // maximality: if under limit, every unselected candidate must
+        // conflict with something selected
+        if sel.len() < limit {
+            let in_sel: std::collections::HashSet<_> = sel.iter().copied().collect();
+            for i in 0..c {
+                if !in_sel.contains(&i) {
+                    let conflicts = sel.iter().any(|&a| dep[i * c + a] > rho);
+                    assert!(conflicts, "case {case}: candidate {i} wrongly rejected");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fenwick_matches_naive_prefix_sums() {
+    let mut rng = Rng::new(1006);
+    for _case in 0..100 {
+        let n = rng.below(100) + 1;
+        let mut naive = vec![0.0f64; n];
+        let mut fen = Fenwick::new(n);
+        for _op in 0..50 {
+            let i = rng.below(n);
+            let w = rng.f64() * 10.0;
+            naive[i] = w;
+            fen.set(i, w);
+        }
+        for i in 0..=n {
+            let want: f64 = naive[..i].iter().sum();
+            assert!((fen.prefix_sum(i) - want).abs() < 1e-9);
+        }
+        // search: every item with positive weight is reachable
+        let total = fen.total();
+        if total > 0.0 {
+            for _ in 0..20 {
+                let t = rng.f64() * total;
+                let idx = fen.search(t + f64::MIN_POSITIVE);
+                assert!(idx < n);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_priority_sampling_respects_weight_ordering() {
+    // heavier variables must not be sampled less often (statistically)
+    let mut rng = Rng::new(1007);
+    for case in 0..10 {
+        let n = 50;
+        let mut p = PriorityDist::new(n, 1e-9, 1.0, PriorityKind::Linear);
+        for i in 0..n {
+            p.report(i, if i < 5 { 10.0 } else { 0.01 });
+        }
+        let mut heavy_hits = 0usize;
+        let trials = 500;
+        for _ in 0..trials {
+            let c = p.sample_candidates(1, &mut rng);
+            if c[0] < 5 {
+                heavy_hits += 1;
+            }
+        }
+        // heavy mass fraction = 50 / (50 + 0.45) ~ 99%
+        assert!(heavy_hits > trials * 9 / 10, "case {case}: {heavy_hits}/{trials}");
+    }
+}
+
+#[test]
+fn prop_shardset_routing_is_consistent() {
+    let mut rng = Rng::new(1008);
+    for case in 0..50 {
+        let num_vars = rng.below(500) + 10;
+        let s = rng.below(8) + 1;
+        let mut set =
+            ShardSet::new(num_vars, s, 1e-6, 1.0, PriorityKind::Linear, &mut rng);
+        // every global var must be owned by exactly one shard
+        let mut owned_count = vec![0usize; num_vars];
+        for si in 0..set.num_shards() {
+            for &g in &set.shard(si).owned {
+                owned_count[g] += 1;
+            }
+        }
+        assert!(owned_count.iter().all(|&c| c == 1), "case {case}");
+        // reports route without panicking and coverage reaches 1.0
+        for g in 0..num_vars {
+            set.report(g, 0.5);
+        }
+        assert!((set.coverage() - 1.0).abs() < 1e-9, "case {case}");
+    }
+}
+
+#[test]
+fn prop_rng_streams_are_stable_across_forks() {
+    // forking must not disturb the parent stream's determinism
+    let mut a = Rng::new(99);
+    let mut b = Rng::new(99);
+    let _fork = a.fork(7);
+    let _ = b.fork(7);
+    for _ in 0..100 {
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,207 @@
+//! Empirical validation of Theorem 1 and the paper's scalability claims.
+//!
+//! Theorem 1: the sampling distribution p(j) ∝ ½(δβ_j)² approximately
+//! maximizes a lower bound on the expected objective decrease per
+//! round. We cannot check the bound symbolically, but we can check its
+//! operational content on random Lasso instances: given identical
+//! state, one round scheduled by δβ-priority decreases the objective
+//! more (in expectation over seeds) than one round scheduled uniformly
+//! at random — and whole runs dominate accordingly.
+
+use strads::config::{RunConfig, SapConfig};
+use strads::data::lasso_synth::{generate, LassoData, LassoSynthSpec};
+use strads::engine::run_rounds;
+use strads::lasso::NativeLasso;
+use strads::metrics::Trace;
+use strads::problem::{Block, ModelProblem};
+use strads::schedulers::{DynamicScheduler, RandomScheduler, Scheduler};
+use strads::sim::{CostModel, VirtualCluster};
+
+/// Replay a recorded block sequence to clone a problem state.
+fn replay<'d>(data: &'d LassoData, lambda: f64, history: &[Vec<Block>]) -> NativeLasso<'d> {
+    let mut p = NativeLasso::new(data, lambda);
+    for blocks in history {
+        p.update_blocks(blocks);
+    }
+    p
+}
+
+#[test]
+fn thm1_priority_round_beats_uniform_round_in_expectation() {
+    let spec = LassoSynthSpec::tiny();
+    let data = generate(&spec, 71);
+    let lambda = 1e-3;
+    let p_workers = 8;
+
+    // Warm up with the squared-priority scheduler so δβ estimates are
+    // populated, recording the block history to clone the state later.
+    let cfg = SapConfig { shards: 1, ..SapConfig::default() };
+    let mut warm = NativeLasso::new(&data, lambda);
+    let mut sched = DynamicScheduler::new_squared(warm.num_vars(), &cfg, 5);
+    // Warm until coverage is complete (the init-priority phase visits
+    // every coordinate once; Theorem 1 is about the *measured-progress*
+    // regime after that).
+    let mut history: Vec<Vec<Block>> = Vec::new();
+    let mut rounds = 0;
+    while sched.coverage() < 1.0 && rounds < 2_000 {
+        let blocks = sched.plan(&mut warm, p_workers);
+        let res = warm.update_blocks(&blocks);
+        sched.observe(&res);
+        history.push(blocks);
+        rounds += 1;
+    }
+    for _ in 0..20 {
+        let blocks = sched.plan(&mut warm, p_workers);
+        let res = warm.update_blocks(&blocks);
+        sched.observe(&res);
+        history.push(blocks);
+    }
+    let base_obj = warm.objective();
+
+    // From the identical state, compare expected one-round decrease:
+    // (a) the scheduler's priority plan, (b) uniform random plans.
+    let mut prio_dec = 0.0f64;
+    let mut unif_dec = 0.0f64;
+    let trials = 20;
+    for t in 0..trials {
+        // (a) priority plan — scheduler clone is deterministic given
+        // identical observe history, so re-plan from the warm scheduler
+        // (each trial advances its RNG -> different draw from p(j)).
+        let mut prob_a = replay(&data, lambda, &history);
+        let blocks_a = sched.plan(&mut prob_a, p_workers);
+        prob_a.update_blocks(&blocks_a);
+        prio_dec += base_obj - prob_a.objective();
+
+        // (b) uniform plan
+        let mut prob_b = replay(&data, lambda, &history);
+        let mut rand_sched = RandomScheduler::new(1000 + t as u64);
+        let blocks_b = rand_sched.plan(&mut prob_b, p_workers);
+        prob_b.update_blocks(&blocks_b);
+        unif_dec += base_obj - prob_b.objective();
+    }
+    prio_dec /= trials as f64;
+    unif_dec /= trials as f64;
+    assert!(
+        prio_dec > unif_dec,
+        "priority round decrease {prio_dec:.3e} should beat uniform {unif_dec:.3e}"
+    );
+}
+
+#[test]
+fn whole_run_dynamic_dominates_random_at_equal_rounds() {
+    let data = generate(&LassoSynthSpec::tiny(), 72);
+    let lambda = 5e-4;
+    let rounds = 400;
+    let mut finals = Vec::new();
+    for dynamic in [true, false] {
+        let cfg = RunConfig {
+            workers: 8,
+            lambda,
+            ..Default::default()
+        };
+        let mut problem = NativeLasso::new(&data, lambda);
+        let mut sched: Box<dyn Scheduler> = if dynamic {
+            Box::new(DynamicScheduler::new(problem.num_vars(), &cfg.sap, 3))
+        } else {
+            Box::new(RandomScheduler::new(3))
+        };
+        let mut cluster = VirtualCluster::new(8, 1, CostModel::new(&cfg.cost));
+        let mut trace = Trace::new("x", "tiny", 8);
+        let mut ecfg = cfg.engine.clone();
+        ecfg.max_rounds = rounds;
+        run_rounds(&mut problem, sched.as_mut(), &mut cluster, &ecfg, &mut trace);
+        finals.push(trace.final_objective());
+    }
+    assert!(
+        finals[0] < finals[1],
+        "dynamic {:.6e} should beat random {:.6e} at equal rounds",
+        finals[0],
+        finals[1]
+    );
+}
+
+#[test]
+fn rho_constraint_prevents_interference_divergence() {
+    // On a highly correlated design, unchecked parallel updates make
+    // much slower per-update progress than rho-checked updates (the §2
+    // correctness story). With enough correlated coordinates updated
+    // simultaneously, Shotgun-style scheduling can even increase the
+    // objective on some rounds; SAP must never do so here (lasso CD
+    // rounds with rho small are near-sequential quality).
+    let spec = LassoSynthSpec {
+        block_size: 32,
+        corr: 0.95,
+        j: 256,
+        k_nonzero: 32,
+        ..LassoSynthSpec::tiny()
+    };
+    let data = generate(&spec, 73);
+    let lambda = 1e-4;
+    let cfg = SapConfig { rho: 0.1, shards: 1, p_prime_factor: 4, ..SapConfig::default() };
+
+    let mut dyn_prob = NativeLasso::new(&data, lambda);
+    let mut dyn_sched = DynamicScheduler::new(dyn_prob.num_vars(), &cfg, 11);
+    let mut dyn_increases = 0usize;
+    let mut prev = dyn_prob.objective();
+    for _ in 0..150 {
+        let blocks = dyn_sched.plan(&mut dyn_prob, 16);
+        let res = dyn_prob.update_blocks(&blocks);
+        dyn_sched.observe(&res);
+        let obj = res.objective.unwrap();
+        if obj > prev + 1e-9 {
+            dyn_increases += 1;
+        }
+        prev = obj;
+    }
+
+    let mut rnd_prob = NativeLasso::new(&data, lambda);
+    let mut rnd_sched = RandomScheduler::new(11);
+    let mut rnd_increases = 0usize;
+    let mut prev = rnd_prob.objective();
+    for _ in 0..150 {
+        let blocks = rnd_sched.plan(&mut rnd_prob, 16);
+        let res = rnd_prob.update_blocks(&blocks);
+        let obj = res.objective.unwrap();
+        if obj > prev + 1e-9 {
+            rnd_increases += 1;
+        }
+        prev = obj;
+    }
+    assert!(
+        dyn_increases <= rnd_increases,
+        "rho-checked rounds should regress no more often: dyn {dyn_increases} rnd {rnd_increases}"
+    );
+    // final objective also better under the structure-aware scheduler
+    assert!(dyn_prob.objective() < rnd_prob.objective());
+}
+
+#[test]
+fn squared_and_linear_priority_both_converge() {
+    // Theorem 1 derives the squared form; the paper implements the
+    // linear form. Both must converge to comparable objectives.
+    let data = generate(&LassoSynthSpec::tiny(), 74);
+    let lambda = 1e-3;
+    let cfg = SapConfig { shards: 2, ..SapConfig::default() };
+    let mut finals = Vec::new();
+    for squared in [false, true] {
+        let mut problem = NativeLasso::new(&data, lambda);
+        let mut sched = if squared {
+            DynamicScheduler::new_squared(problem.num_vars(), &cfg, 9)
+        } else {
+            DynamicScheduler::new(problem.num_vars(), &cfg, 9)
+        };
+        for _ in 0..300 {
+            let blocks = sched.plan(&mut problem, 8);
+            let res = problem.update_blocks(&blocks);
+            sched.observe(&res);
+        }
+        finals.push(problem.objective());
+    }
+    let ratio = finals[0] / finals[1];
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "linear {:.4e} vs squared {:.4e} diverged",
+        finals[0],
+        finals[1]
+    );
+}
