@@ -3,6 +3,16 @@
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and one
 //! positional subcommand; unknown flags are hard errors with a usage
 //! hint, and every flag is typed through [`Args::get`]-style accessors.
+//!
+//! Distributed-run knobs (the `distributed` / `staleness-sweep`
+//! subcommands; see the USAGE string in `main.rs`):
+//!
+//! * `--staleness N|async` — the SSP bound `s`: a worker's pull may
+//!   read parameter-server state at most `s` rounds behind its own
+//!   round (`0` = BSP barrier, exactly the engine semantics; `async`
+//!   removes the gate entirely).
+//! * `--ps-shards N` — number of hash-partitioned server shards the
+//!   parameter store is split across (lock granularity).
 
 use std::collections::BTreeMap;
 

@@ -72,6 +72,48 @@ impl Default for EngineConfig {
     }
 }
 
+/// Parameter-server parameters (the distributed path, `ps::`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PsConfig {
+    /// SSP staleness bound s: a worker's pull may read state at most s
+    /// rounds behind its own round (0 = BSP barrier semantics).
+    pub staleness: usize,
+    /// Fully asynchronous mode: the gate never blocks and the
+    /// coordinator pipelines rounds freely (`staleness` is ignored).
+    pub asynchronous: bool,
+    /// Number of hash-partitioned server shards.
+    pub shards: usize,
+}
+
+impl Default for PsConfig {
+    fn default() -> Self {
+        PsConfig { staleness: 0, asynchronous: false, shards: 8 }
+    }
+}
+
+impl PsConfig {
+    /// The clock policy this config selects.
+    pub fn policy(&self) -> crate::ps::StalenessPolicy {
+        if self.asynchronous {
+            crate::ps::StalenessPolicy::Async
+        } else {
+            crate::ps::StalenessPolicy::Bounded(self.staleness as u64)
+        }
+    }
+
+    /// Apply a `--staleness` CLI setting: an integer bound or `async`.
+    pub fn set_staleness_arg(&mut self, arg: &str) -> anyhow::Result<()> {
+        match crate::ps::StalenessPolicy::parse(arg)? {
+            crate::ps::StalenessPolicy::Bounded(s) => {
+                self.staleness = s as usize;
+                self.asynchronous = false;
+            }
+            crate::ps::StalenessPolicy::Async => self.asynchronous = true,
+        }
+        Ok(())
+    }
+}
+
 /// Virtual-cluster cost model (see `sim::` for the formula and
 /// DESIGN.md §2 for why the time axis is simulated).
 #[derive(Clone, Debug, PartialEq)]
@@ -104,6 +146,7 @@ pub struct RunConfig {
     pub sap: SapConfig,
     pub engine: EngineConfig,
     pub cost: CostModelConfig,
+    pub ps: PsConfig,
     /// Worker (core) count P.
     pub workers: usize,
     /// Regularization λ.
@@ -116,6 +159,7 @@ impl Default for RunConfig {
             sap: SapConfig::default(),
             engine: EngineConfig::default(),
             cost: CostModelConfig::default(),
+            ps: PsConfig::default(),
             workers: 16,
             lambda: 5e-4,
         }
@@ -157,6 +201,9 @@ impl RunConfig {
             "cost.sec_per_work_unit",
             "cost.round_overhead_sec",
             "cost.sched_sec_per_candidate",
+            "ps.staleness",
+            "ps.async",
+            "ps.shards",
         ];
         for k in conf.keys() {
             anyhow::ensure!(KNOWN.contains(&k), "unknown config key: {k}");
@@ -170,7 +217,12 @@ impl RunConfig {
             "engine.record_every" => c.engine.record_every,
             "engine.objective_every" => c.engine.objective_every,
             "engine.max_rounds" => c.engine.max_rounds,
+            "ps.staleness" => c.ps.staleness,
+            "ps.shards" => c.ps.shards,
         );
+        if let Some(v) = conf.get_usize("ps.async").map_err(anyhow::Error::msg)? {
+            c.ps.asynchronous = v != 0;
+        }
         load!(conf, c, f64:
             "lambda" => c.lambda,
             "sap.rho" => c.sap.rho,
@@ -191,7 +243,7 @@ impl RunConfig {
     /// Serialize back to the preset format.
     pub fn to_conf_string(&self) -> String {
         format!(
-            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n",
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\n",
             self.workers,
             self.lambda,
             self.sap.p_prime_factor,
@@ -208,6 +260,9 @@ impl RunConfig {
             self.cost.sec_per_work_unit,
             self.cost.round_overhead_sec,
             self.cost.sched_sec_per_candidate,
+            self.ps.staleness,
+            usize::from(self.ps.asynchronous),
+            self.ps.shards,
         )
     }
 
@@ -221,6 +276,7 @@ impl RunConfig {
         anyhow::ensure!((0.0..=1.0).contains(&self.sap.rho), "rho must be in [0, 1]");
         anyhow::ensure!(self.sap.eta > 0.0, "eta must be > 0");
         anyhow::ensure!(self.lambda >= 0.0, "lambda must be >= 0");
+        anyhow::ensure!(self.ps.shards >= 1, "ps.shards must be >= 1");
         Ok(())
     }
 }
@@ -261,5 +317,30 @@ mod tests {
         assert_eq!(c.workers, 60);
         assert_eq!(c.sap.rho, 0.2);
         assert_eq!(c.sap.shards, SapConfig::default().shards);
+    }
+
+    #[test]
+    fn ps_section_roundtrips_and_validates() {
+        let conf = KvConf::parse("[ps]\nstaleness = 4\nasync = 0\nshards = 16\n").unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.ps, PsConfig { staleness: 4, asynchronous: false, shards: 16 });
+        assert_eq!(c.ps.policy(), crate::ps::StalenessPolicy::Bounded(4));
+
+        let conf = KvConf::parse("[ps]\nasync = 1\n").unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.ps.policy(), crate::ps::StalenessPolicy::Async);
+
+        let bad = KvConf::parse("[ps]\nshards = 0\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+    }
+
+    #[test]
+    fn staleness_cli_arg_parses() {
+        let mut ps = PsConfig::default();
+        ps.set_staleness_arg("8").unwrap();
+        assert_eq!((ps.staleness, ps.asynchronous), (8, false));
+        ps.set_staleness_arg("async").unwrap();
+        assert!(ps.asynchronous);
+        assert!(ps.set_staleness_arg("soon").is_err());
     }
 }

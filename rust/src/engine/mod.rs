@@ -22,6 +22,7 @@ pub fn run_rounds(
     let wall_start = Instant::now();
     let p = cluster.workers();
     let mut last_recorded_obj = f64::INFINITY;
+    let mut last_imbalance = 1.0;
 
     for round in 0..cfg.max_rounds {
         let plan_start = Instant::now();
@@ -31,6 +32,7 @@ pub fn run_rounds(
             // Nothing schedulable (e.g. all weights zero) — converged.
             break;
         }
+        last_imbalance = imbalance(&blocks);
         let result = problem.update_blocks(&blocks);
         scheduler.observe(&result);
         cluster.advance_round(&blocks, sched_secs);
@@ -46,7 +48,9 @@ pub fn run_rounds(
                     wtime: wall_start.elapsed().as_secs_f64(),
                     objective: f64::INFINITY,
                     active_vars: problem.active_vars(),
-                    imbalance: 1.0,
+                    imbalance: last_imbalance,
+                    staleness: 0.0,
+                    net_bytes: 0,
                 });
                 return;
             }
@@ -65,7 +69,9 @@ pub fn run_rounds(
                 wtime: wall_start.elapsed().as_secs_f64(),
                 objective: obj,
                 active_vars: problem.active_vars(),
-                imbalance: imbalance(&blocks),
+                imbalance: last_imbalance,
+                staleness: 0.0,
+                net_bytes: 0,
             });
 
             // Automatic stopping condition (paper §5.1: "a minimum
@@ -89,7 +95,9 @@ pub fn run_rounds(
             wtime: wall_start.elapsed().as_secs_f64(),
             objective: obj,
             active_vars: problem.active_vars(),
-            imbalance: 1.0,
+            imbalance: last_imbalance,
+            staleness: 0.0,
+            net_bytes: 0,
         });
     }
 }
@@ -97,7 +105,7 @@ pub fn run_rounds(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CostModelConfig, SapConfig};
+    use crate::config::CostModelConfig;
     use crate::problem::{Block, RoundResult};
     use crate::schedulers::RandomScheduler;
     use crate::sim::CostModel;
@@ -209,6 +217,58 @@ mod tests {
         let mut trace = Trace::new("random", "quad", 4);
         run_rounds(&mut problem, &mut sched, &mut cluster, &cfg, &mut trace);
         assert!(trace.points.last().unwrap().round < 100);
-        let _ = SapConfig::default(); // silence unused import lint paths
+    }
+
+    #[test]
+    fn final_trace_point_carries_last_round_imbalance() {
+        // Uneven workloads give imbalance > 1; the trailing exact-
+        // objective point must carry the measured value, not a 1.0
+        // placeholder.
+        struct Skewed {
+            obj_calls: usize,
+        }
+        impl ModelProblem for Skewed {
+            fn num_vars(&self) -> usize {
+                8
+            }
+            fn workload(&self, j: usize) -> u64 {
+                if j == 0 {
+                    100
+                } else {
+                    1
+                }
+            }
+            fn dependencies(&mut self, cands: &[usize]) -> Vec<f64> {
+                vec![0.0; cands.len() * cands.len()]
+            }
+            fn update_blocks(&mut self, blocks: &[Block]) -> RoundResult {
+                let deltas =
+                    blocks.iter().flat_map(|b| b.vars.iter().map(|&v| (v, 1.0))).collect();
+                RoundResult { deltas, objective: Some(1.0), ..Default::default() }
+            }
+            fn objective(&mut self) -> f64 {
+                // strictly decreasing across exact calls, so the final
+                // exact value always differs from the last recorded one
+                // and the trailing trace point is always pushed
+                self.obj_calls += 1;
+                1.0 / self.obj_calls as f64
+            }
+        }
+        let mut problem = Skewed { obj_calls: 0 };
+        let mut sched = RandomScheduler::new(9);
+        // p > num_vars: the random scheduler schedules every variable
+        // each round, so every round deterministically contains the
+        // 100x-work straggler.
+        let mut cluster =
+            VirtualCluster::new(16, 1, CostModel::new(&CostModelConfig::default()));
+        let cfg = EngineConfig { max_rounds: 3, record_every: 10, ..Default::default() };
+        let mut trace = Trace::new("random", "skewed", 16);
+        run_rounds(&mut problem, &mut sched, &mut cluster, &cfg, &mut trace);
+        // The exact final objective differs from every earlier value,
+        // so a trailing point was pushed — it must carry the measured
+        // straggler ratio (100 / mean ~ 7.5), not a 1.0 placeholder.
+        let last = trace.points.last().unwrap();
+        assert_eq!(last.round, cfg.max_rounds);
+        assert!(last.imbalance > 1.5, "placeholder imbalance: {}", last.imbalance);
     }
 }

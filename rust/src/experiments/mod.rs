@@ -189,6 +189,38 @@ pub fn ablation(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<
     out
 }
 
+/// Staleness sweep (the Petuum-style "fresh vs stale" curve): run the
+/// same distributed Lasso through the parameter server at staleness
+/// bounds 0, 2, 8 and fully-async, recording objective-vs-round traces
+/// with per-round staleness and flushed-bytes columns.
+pub fn staleness_sweep(
+    cfg_base: &RunConfig,
+    dataset: &str,
+    rounds: usize,
+    out_csv: Option<&std::path::Path>,
+) -> anyhow::Result<Vec<Trace>> {
+    let data = lasso_synth::generate(&lasso_spec(dataset)?, cfg_base.engine.seed);
+    let mut traces = Vec::new();
+    for setting in ["0", "2", "8", "async"] {
+        let mut cfg = cfg_base.clone();
+        cfg.ps.set_staleness_arg(setting)?;
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report = crate::workers::run_distributed(&mut problem, &cfg, rounds, dataset)?;
+        println!(
+            "{}  (bytes={} gate_waits={} mean_staleness={:.2})",
+            report.trace.summary(),
+            report.bytes_flushed,
+            report.gate_waits,
+            report.mean_staleness
+        );
+        if let Some(p) = out_csv {
+            report.trace.append_csv(p).expect("csv write");
+        }
+        traces.push(report.trace);
+    }
+    Ok(traces)
+}
+
 /// Calibrate the cost model's `sec_per_work_unit` by timing native
 /// coordinate updates on this host (see EXPERIMENTS.md §Calibration).
 pub fn calibrate_lasso(data: &LassoData, lambda: f64) -> f64 {

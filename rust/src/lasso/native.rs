@@ -3,6 +3,8 @@
 use crate::data::lasso_synth::LassoData;
 use crate::linalg::{axpy, dot, norm2_sq, soft_threshold, DenseMatrix};
 use crate::problem::{Block, ModelProblem, RoundResult};
+use crate::ps::{PsKernel, PsSnapshot};
+use std::sync::Arc;
 
 /// Lasso problem state with native (host) execution.
 pub struct NativeLasso<'a> {
@@ -103,6 +105,42 @@ impl<'a> NativeLasso<'a> {
     }
 }
 
+/// The Lasso worker compute for the parameter-server path. PS key
+/// space: keys `0..n` hold the residual r (republished exactly by the
+/// coordinator each round), keys `n..n+J` hold β. Workers pull the full
+/// residual plus their coordinates' β, propose CD updates against that
+/// (possibly stale) snapshot, and push β-deltas only.
+pub struct LassoPsKernel {
+    x: DenseMatrix,
+    n: usize,
+    lambda: f64,
+}
+
+impl PsKernel for LassoPsKernel {
+    fn pull_keys(&self, vars: &[usize], _round: u64) -> Vec<usize> {
+        let mut keys: Vec<usize> = (0..self.n).collect();
+        keys.extend(vars.iter().map(|&j| self.n + j));
+        keys
+    }
+
+    fn propose(&self, snap: &PsSnapshot, vars: &[usize], _round: u64) -> Vec<(usize, f64)> {
+        // The residual occupies pull positions 0..n and the vars' betas
+        // positions n.. in vars order (see pull_keys) — everything is
+        // addressed positionally, so the snapshot's keyed index is never
+        // built. The f64 cells are exact images of the coordinator's f32
+        // residual, so the cast reconstructs it bit-for-bit.
+        let r = snap.values_f32(0, self.n);
+        vars.iter()
+            .enumerate()
+            .map(|(idx, &j)| {
+                let beta_j = snap.value_at(self.n + idx);
+                let new = NativeLasso::propose_from(&self.x, &r, j, beta_j, self.lambda);
+                (self.n + j, new - beta_j)
+            })
+            .collect()
+    }
+}
+
 impl ModelProblem for NativeLasso<'_> {
     fn num_vars(&self) -> usize {
         self.beta.len()
@@ -186,6 +224,51 @@ impl ModelProblem for NativeLasso<'_> {
 
     fn active_vars(&self) -> usize {
         self.beta.iter().filter(|b| b.abs() > 0.0).count()
+    }
+
+    fn ps_state(&self) -> Vec<f64> {
+        let mut state: Vec<f64> = self.r.iter().map(|&v| v as f64).collect();
+        state.extend(self.beta.iter().copied());
+        state
+    }
+
+    fn ps_kernel(&self) -> Option<Arc<dyn PsKernel>> {
+        Some(Arc::new(LassoPsKernel {
+            x: self.x.clone(),
+            n: self.r.len(),
+            lambda: self.lambda,
+        }))
+    }
+
+    fn apply_deltas(&mut self, deltas: &[(usize, f64)]) -> RoundResult {
+        // Same arithmetic, in the same order, as `update_blocks` phase 2
+        // — a staleness-0 distributed round is bit-identical to an
+        // engine round (see workers::service).
+        let n = self.r.len();
+        let mut out = Vec::with_capacity(deltas.len());
+        for &(key, delta) in deltas {
+            if key < n {
+                // Residual keys are coordinator-republished, not worker-
+                // pushed; accept deltas anyway for API completeness.
+                self.r[key] += delta as f32;
+                continue;
+            }
+            let j = key - n;
+            let new = self.beta[j] + delta;
+            out.push((j, delta.abs()));
+            if delta != 0.0 {
+                self.l1 += new.abs() - self.beta[j].abs();
+                self.beta[j] = new;
+                axpy(-(delta as f32), self.x.col(j), &mut self.r);
+            }
+        }
+        let total = out.len() as u64;
+        let objective = Some(0.5 * norm2_sq(&self.r) + self.lambda * self.l1);
+        RoundResult { deltas: out, objective, max_block_work: 1, total_work: total }
+    }
+
+    fn ps_republish(&self) -> Vec<(usize, f64)> {
+        self.r.iter().enumerate().map(|(i, &v)| (i, v as f64)).collect()
     }
 }
 

@@ -6,9 +6,11 @@
 //!
 //! * **L3 (this crate)** — the paper's contribution: the SAP scheduling
 //!   engine ([`coordinator`]), baseline schedulers ([`schedulers`]), the
-//!   sharded round-robin scheduler service, the worker pool
-//!   ([`workers`]), the virtual cluster simulator ([`sim`]), data
-//!   generators ([`data`]) and the experiment drivers.
+//!   sharded round-robin scheduler service, the sharded parameter
+//!   server with bounded-staleness clocks ([`ps`]), the worker pool
+//!   that runs any [`problem::ModelProblem`] over it ([`workers`]), the
+//!   virtual cluster simulator ([`sim`]), data generators ([`data`])
+//!   and the experiment drivers.
 //! * **L2/L1 (python/, build-time only)** — JAX update graphs calling
 //!   Pallas kernels, AOT-lowered to HLO text by `make artifacts`.
 //! * **[`runtime`]** — loads the HLO artifacts through the PJRT C API
@@ -46,6 +48,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod mf;
 pub mod problem;
+pub mod ps;
 pub mod runtime;
 pub mod schedulers;
 pub mod sim;
@@ -61,8 +64,10 @@ pub mod prelude {
     pub use crate::engine::run_rounds;
     pub use crate::metrics::Trace;
     pub use crate::problem::{Block, ModelProblem, RoundResult};
+    pub use crate::ps::StalenessPolicy;
     pub use crate::schedulers::{
         DynamicScheduler, RandomScheduler, Scheduler, StaticBlockScheduler,
     };
     pub use crate::sim::VirtualCluster;
+    pub use crate::workers::run_distributed;
 }

@@ -7,7 +7,10 @@
 //! strads fig1|fig4|fig5          # regenerate each paper figure -> CSV
 //! strads run-lasso ...           # one configurable lasso run
 //! strads run-mf ...              # one configurable MF run
-//! strads distributed ...         # real worker-pool run (§3 architecture)
+//! strads distributed ...         # real worker threads over the sharded
+//!                                #   parameter server (ps::), lasso or mf,
+//!                                #   with --staleness N|async --ps-shards N
+//! strads staleness-sweep ...     # fresh-vs-stale convergence curves
 //! strads calibrate               # fit the cost model to this host
 //! strads artifacts-info          # inspect the AOT artifact store
 //! ```
@@ -21,11 +24,13 @@ use strads::cli::Args;
 use strads::config::RunConfig;
 use strads::data::{lasso_synth, mf_powerlaw};
 use strads::experiments::{self, SchedKind};
+use strads::lasso::NativeLasso;
 use strads::metrics::Trace;
-use strads::mf::{run_mf, ArtifactMf, MfPartition, NativeMf};
+use strads::mf::{run_mf, ArtifactMf, DistMf, MfPartition, NativeMf};
 use strads::runtime::{default_artifacts_dir, ArtifactStore, LassoExes, MfExes};
+use strads::workers::run_distributed;
 
-const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|distributed|calibrate|artifacts-info> [flags]
+const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|distributed|staleness-sweep|calibrate|artifacts-info> [flags]
   global: --config <preset.conf>  --out <dir>  --seed <u64>
   fig1:        --workers N --rounds N
   fig4:        --rounds N
@@ -34,7 +39,11 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --workers N --rounds N --lambda F --artifacts
   run-mf:      --dataset tiny|netflix|yahoo --partition balanced|uniform
                --workers N --iters N --lambda F --artifacts
-  distributed: --dataset ... --workers N --rounds N --lambda F";
+  distributed: --problem lasso|mf --dataset ... --workers N --rounds N --lambda F
+               --staleness N|async (SSP bound: pulls at most N rounds stale;
+                                    'async' = no gate)  --ps-shards N
+  staleness-sweep: --dataset tiny|adlike|wide --workers N --rounds N --lambda F
+               (runs staleness 0, 2, 8, async through the parameter server)";
 
 fn main() {
     if let Err(e) = run() {
@@ -137,15 +146,56 @@ fn run() -> anyhow::Result<()> {
             println!("appended {}", csv.display());
         }
         "distributed" => {
+            let problem_kind = args.str_or("problem", "lasso");
+            let dataset = args.str_or("dataset", "tiny");
+            cfg.workers = args.usize_or("workers", 4)?;
+            // per-problem default regularization (lasso: engine tests'
+            // 1e-3; mf: the CCD runs' 0.05)
+            let lambda_default = if problem_kind == "mf" { 0.05 } else { 1e-3 };
+            cfg.lambda = args.f64_or("lambda", lambda_default)?;
+            let rounds = args.usize_or("rounds", 500)?;
+            cfg.ps.set_staleness_arg(&args.str_or("staleness", "0"))?;
+            cfg.ps.shards = args.usize_or("ps-shards", cfg.ps.shards)?;
+            args.finish()?;
+            cfg.validate()?;
+            let report = match problem_kind.as_str() {
+                "lasso" => {
+                    let data = lasso_synth::generate(
+                        &experiments::lasso_spec(&dataset)?,
+                        cfg.engine.seed,
+                    );
+                    let mut problem = NativeLasso::new(&data, cfg.lambda);
+                    run_distributed(&mut problem, &cfg, rounds, &dataset)?
+                }
+                "mf" => {
+                    let data =
+                        mf_powerlaw::generate(&experiments::mf_spec(&dataset)?, cfg.engine.seed);
+                    let mut problem =
+                        DistMf::new(&data.a, data.rank_true, cfg.lambda, cfg.engine.seed + 1);
+                    run_distributed(&mut problem, &cfg, rounds, &dataset)?
+                }
+                other => anyhow::bail!("unknown problem {other} (lasso|mf)"),
+            };
+            println!("{}", report.trace.summary());
+            println!(
+                "rounds={} deltas={} bytes_flushed={} gate_waits={} mean_staleness={:.2}",
+                report.rounds,
+                report.deltas_applied,
+                report.bytes_flushed,
+                report.gate_waits,
+                report.mean_staleness
+            );
+        }
+        "staleness-sweep" => {
             let dataset = args.str_or("dataset", "tiny");
             cfg.workers = args.usize_or("workers", 4)?;
             cfg.lambda = args.f64_or("lambda", 1e-3)?;
-            let rounds = args.usize_or("rounds", 500)?;
+            let rounds = args.usize_or("rounds", 300)?;
             args.finish()?;
-            let data = lasso_synth::generate(&experiments::lasso_spec(&dataset)?, cfg.engine.seed);
-            let report = strads::workers::run_distributed(&data, &cfg, rounds)?;
-            println!("{}", report.trace.summary());
-            println!("rounds={} proposals={}", report.rounds, report.proposals_processed);
+            let csv = out_dir.join("staleness_sweep.csv");
+            let _ = std::fs::remove_file(&csv);
+            experiments::staleness_sweep(&cfg, &dataset, rounds, Some(&csv))?;
+            println!("wrote {}", csv.display());
         }
         "ablation" => {
             cfg.workers = args.usize_or("workers", 64)?;

@@ -16,6 +16,12 @@ pub struct TracePoint {
     pub active_vars: usize,
     /// Straggler diagnostic: max block work / mean block work this round.
     pub imbalance: f64,
+    /// Mean observed pull staleness (rounds behind) this round — the
+    /// parameter-server path; 0 on the simulator paths.
+    pub staleness: f64,
+    /// Cumulative coalesced delta bytes flushed through the parameter
+    /// server when this point was recorded; 0 on the simulator paths.
+    pub net_bytes: u64,
 }
 
 /// A full run trace plus identifying metadata.
@@ -65,13 +71,13 @@ impl Trace {
         if new {
             writeln!(
                 f,
-                "scheduler,dataset,workers,round,vtime,wtime,objective,active_vars,imbalance"
+                "scheduler,dataset,workers,round,vtime,wtime,objective,active_vars,imbalance,staleness,net_bytes"
             )?;
         }
         for p in &self.points {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{:.8e},{},{:.4}",
+                "{},{},{},{},{:.6},{:.6},{:.8e},{},{:.4},{:.4},{}",
                 self.scheduler,
                 self.dataset,
                 self.workers,
@@ -80,7 +86,9 @@ impl Trace {
                 p.wtime,
                 p.objective,
                 p.active_vars,
-                p.imbalance
+                p.imbalance,
+                p.staleness,
+                p.net_bytes
             )?;
         }
         Ok(())
@@ -114,6 +122,8 @@ mod tests {
                 objective: o,
                 active_vars: i,
                 imbalance: 1.0,
+                staleness: 0.0,
+                net_bytes: 0,
             });
         }
         t

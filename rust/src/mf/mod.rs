@@ -7,13 +7,17 @@
 //!
 //! * [`NativeMf`] — host CSR implementation (reference + sweeps).
 //! * [`ArtifactMf`] — the PJRT path over the mf_update_w/h artifacts.
+//! * [`DistMf`] — MF as a `ModelProblem` over the parameter server
+//!   (`ps::`), for real-thread distributed runs.
 //! * [`run_mf`] — the Fig-5 driver: runs CCD with either balanced or
 //!   uniform blocks on a virtual cluster and records the trace.
 
 pub mod artifact;
+pub mod dist;
 pub mod native;
 
 pub use artifact::ArtifactMf;
+pub use dist::{DistMf, MfPsKernel};
 pub use native::NativeMf;
 
 use crate::config::{CostModelConfig, EngineConfig};
@@ -108,6 +112,8 @@ pub fn run_mf(
                 objective: backend.objective(),
                 active_vars: backend.n() + backend.m(),
                 imbalance: imb,
+                staleness: 0.0,
+                net_bytes: 0,
             });
         }
     }

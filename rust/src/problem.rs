@@ -7,6 +7,15 @@
 //! semantics — every block reads the same state snapshot, exactly what P
 //! distributed workers holding a stale copy would compute — and reports
 //! per-variable progress δ for step 4.
+//!
+//! The `ps_*` family of hooks is the distributed counterpart: a problem
+//! that also exposes its shared state as a flat key space plus a
+//! thread-shareable [`PsKernel`] can run on real worker threads through
+//! the sharded parameter server (`ps::`), with the coordinator applying
+//! the flushed deltas to the canonical state via [`ModelProblem::apply_deltas`].
+
+use crate::ps::PsKernel;
+use std::sync::Arc;
 
 /// A block of variables dispatched to one worker.
 #[derive(Clone, Debug, PartialEq)]
@@ -74,5 +83,43 @@ pub trait ModelProblem {
     /// Number of currently-active (nonzero) variables, for the trace.
     fn active_vars(&self) -> usize {
         0
+    }
+
+    // --- Parameter-server hooks (the distributed path, `ps::`) ------
+
+    /// Full shared state as a dense vector: key `i` of the PS key space
+    /// holds `state[i]`. The coordinator publishes this once at round 0.
+    /// Problems without a distributed path return an empty vector.
+    fn ps_state(&self) -> Vec<f64> {
+        Vec::new()
+    }
+
+    /// The thread-shareable worker compute over PS snapshots. `None`
+    /// (the default) means the problem cannot run distributed.
+    fn ps_kernel(&self) -> Option<Arc<dyn PsKernel>> {
+        None
+    }
+
+    /// Apply one round of worker-flushed, state-space deltas to the
+    /// canonical model. The returned [`RoundResult`] carries progress in
+    /// *variable* space (same contract as [`Self::update_blocks`]) so the
+    /// scheduler's step 4 works unchanged.
+    fn apply_deltas(&mut self, _deltas: &[(usize, f64)]) -> RoundResult {
+        unimplemented!("problem does not support the parameter-server path")
+    }
+
+    /// Derived state to overwrite-republish after [`Self::apply_deltas`]
+    /// (exact canonical values, version = the applied round + 1). Lasso
+    /// republishes its residual this way; problems whose PS cells stay
+    /// exact under additive worker pushes return nothing.
+    fn ps_republish(&self) -> Vec<(usize, f64)> {
+        Vec::new()
+    }
+
+    /// Problems with intrinsic round structure (e.g. MF rank sweeps)
+    /// plan their own blocks for `round`; `None` (the default) lets the
+    /// coordinator's scheduler plan instead.
+    fn plan_round(&mut self, _round: usize, _p: usize) -> Option<Vec<Block>> {
+        None
     }
 }

@@ -1,0 +1,106 @@
+//! Delta batching/coalescing: workers accumulate `(key, δ)` pairs
+//! locally and flush one coalesced batch per round, so a key touched by
+//! many updates in a round crosses the (simulated) wire once. The flush
+//! also meters wire traffic for the `metrics` trace.
+
+use crate::util::FastHashMap;
+
+/// Wire cost of one coalesced entry: 8-byte key + 8-byte f64 delta.
+pub const BYTES_PER_ENTRY: u64 = 16;
+
+/// A worker-local accumulation of parameter deltas.
+///
+/// Coalescing sums deltas for duplicate keys; drain order is first-
+/// insertion order, which keeps the flushed batch deterministic (the
+/// coordinator's canonical apply relies on this for reproducibility).
+#[derive(Debug, Default)]
+pub struct DeltaBatch {
+    acc: FastHashMap<usize, f64>,
+    order: Vec<usize>,
+}
+
+impl DeltaBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of distinct keys currently batched.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Accumulate one delta (coalesces with any batched delta for `key`).
+    pub fn add(&mut self, key: usize, delta: f64) {
+        use std::collections::hash_map::Entry;
+        match self.acc.entry(key) {
+            Entry::Occupied(mut e) => *e.get_mut() += delta,
+            Entry::Vacant(e) => {
+                e.insert(delta);
+                self.order.push(key);
+            }
+        }
+    }
+
+    pub fn extend(&mut self, deltas: &[(usize, f64)]) {
+        for &(key, delta) in deltas {
+            self.add(key, delta);
+        }
+    }
+
+    /// Drain into a coalesced `(key, δ)` list in first-insertion order,
+    /// leaving the batch empty for the next round.
+    pub fn drain(&mut self) -> Vec<(usize, f64)> {
+        let out = self
+            .order
+            .drain(..)
+            .map(|key| (key, self.acc.remove(&key).expect("order/acc in sync")))
+            .collect();
+        debug_assert!(self.acc.is_empty());
+        out
+    }
+
+    /// Wire bytes the current batch would cost to flush.
+    pub fn wire_bytes(&self) -> u64 {
+        self.order.len() as u64 * BYTES_PER_ENTRY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesces_duplicate_keys() {
+        let mut b = DeltaBatch::new();
+        b.extend(&[(3, 1.0), (7, 2.0), (3, 0.5), (7, -2.0), (3, 0.25)]);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.wire_bytes(), 2 * BYTES_PER_ENTRY);
+        let flushed = b.drain();
+        assert_eq!(flushed, vec![(3, 1.75), (7, 0.0)]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn drain_preserves_first_insertion_order() {
+        let mut b = DeltaBatch::new();
+        for &k in &[9, 1, 5, 1, 9, 2] {
+            b.add(k, 1.0);
+        }
+        let keys: Vec<usize> = b.drain().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec![9, 1, 5, 2]);
+    }
+
+    #[test]
+    fn reusable_after_drain() {
+        let mut b = DeltaBatch::new();
+        b.add(0, 1.0);
+        assert_eq!(b.drain(), vec![(0, 1.0)]);
+        b.add(0, 2.0);
+        b.add(4, 3.0);
+        assert_eq!(b.drain(), vec![(0, 2.0), (4, 3.0)]);
+    }
+}

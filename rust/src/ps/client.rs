@@ -1,0 +1,205 @@
+//! The worker-side handle: `pull(keys) -> snapshot` / `push(deltas)` /
+//! `clock()`, the schedule/push/pull split of "Primitives for Dynamic
+//! Big Model Parallelism". A [`PsClient`] owns a worker's delta batch
+//! and talks to the shared [`ParameterServer`]; the compute itself is
+//! supplied by the problem as a [`PsKernel`].
+
+use super::batch::DeltaBatch;
+use super::clock::ClockShutdown;
+use super::shard::Cell;
+use super::ParameterServer;
+use crate::util::FastHashMap;
+use std::cell::OnceCell;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// A consistent-enough view of the pulled keys: values + the versions
+/// they were published/updated at. Preserves pull-request key order for
+/// positional access; the key -> position index is built lazily, so
+/// kernels that address the snapshot purely positionally (Lasso's dense
+/// residual prefix) never pay for it.
+#[derive(Clone, Debug)]
+pub struct PsSnapshot {
+    keys: Vec<usize>,
+    cells: Vec<Cell>,
+    index: OnceCell<FastHashMap<usize, usize>>,
+}
+
+impl PsSnapshot {
+    pub fn new(keys: Vec<usize>, cells: Vec<Cell>) -> Self {
+        assert_eq!(keys.len(), cells.len());
+        PsSnapshot { keys, cells, index: OnceCell::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    fn index(&self) -> &FastHashMap<usize, usize> {
+        self.index
+            .get_or_init(|| self.keys.iter().enumerate().map(|(pos, &k)| (k, pos)).collect())
+    }
+
+    /// Value by key (None if the key was not pulled).
+    #[inline]
+    pub fn get(&self, key: usize) -> Option<f64> {
+        self.index().get(&key).map(|&pos| self.cells[pos].value)
+    }
+
+    /// Version by key (None if the key was not pulled).
+    #[inline]
+    pub fn version(&self, key: usize) -> Option<u64> {
+        self.index().get(&key).map(|&pos| self.cells[pos].version)
+    }
+
+    /// Value by pull position (the order `pull` was called with).
+    #[inline]
+    pub fn value_at(&self, pos: usize) -> f64 {
+        self.cells[pos].value
+    }
+
+    /// Values of positions `start..start + len` as f32 (e.g. a dense
+    /// residual range pulled as a contiguous prefix).
+    pub fn values_f32(&self, start: usize, len: usize) -> Vec<f32> {
+        self.cells[start..start + len].iter().map(|c| c.value as f32).collect()
+    }
+
+    /// Oldest version among the pulled cells (staleness diagnostics).
+    pub fn min_version(&self) -> u64 {
+        self.cells.iter().map(|c| c.version).min().unwrap_or(0)
+    }
+}
+
+/// Problem-supplied worker compute: pure, shareable across threads.
+/// `round` lets problems with intrinsic round structure (e.g. MF rank
+/// sweeps) decode what the round means; flat problems ignore it.
+pub trait PsKernel: Send + Sync {
+    /// The keys a worker must pull to process `vars` in `round`.
+    fn pull_keys(&self, vars: &[usize], round: u64) -> Vec<usize>;
+
+    /// Compute state-space deltas for `vars` against the snapshot.
+    fn propose(&self, snap: &PsSnapshot, vars: &[usize], round: u64) -> Vec<(usize, f64)>;
+}
+
+/// One worker's handle onto the parameter server.
+pub struct PsClient {
+    server: Arc<ParameterServer>,
+    worker: usize,
+    batch: DeltaBatch,
+}
+
+impl PsClient {
+    pub fn new(server: Arc<ParameterServer>, worker: usize) -> Self {
+        PsClient { server, worker, batch: DeltaBatch::new() }
+    }
+
+    /// SSP-gated pull: blocks until the applied state is within the
+    /// server's staleness bound of `round`, then reads the keys.
+    /// Returns the snapshot plus `(staleness_gap, had_to_wait)`.
+    pub fn pull(
+        &self,
+        keys: &[usize],
+        round: u64,
+    ) -> Result<(PsSnapshot, u64, bool), ClockShutdown> {
+        let (gap, waited) = self.server.clock().wait_admit(round, self.server.policy())?;
+        let stats = self.server.stats();
+        stats.pulls.fetch_add(1, Ordering::Relaxed);
+        stats.stale_gap_sum.fetch_add(gap, Ordering::Relaxed);
+        if waited {
+            stats.gate_waits.fetch_add(1, Ordering::Relaxed);
+        }
+        let cells = self.server.store().read(keys);
+        Ok((PsSnapshot::new(keys.to_vec(), cells), gap, waited))
+    }
+
+    /// Accumulate deltas into the local batch (coalescing duplicates).
+    pub fn push(&mut self, deltas: &[(usize, f64)]) {
+        self.batch.extend(deltas);
+    }
+
+    /// End-of-round clock: flush the coalesced batch to the shards
+    /// (versioned at `round + 1`), tick this worker's clock, and return
+    /// the flushed batch (the coordinator applies the same deltas to
+    /// the canonical model).
+    pub fn flush_clock(&mut self, round: u64) -> Vec<(usize, f64)> {
+        let stats = self.server.stats();
+        stats.bytes_flushed.fetch_add(self.batch.wire_bytes(), Ordering::Relaxed);
+        stats.flushes.fetch_add(1, Ordering::Relaxed);
+        let deltas = self.batch.drain();
+        self.server.store().add_deltas(&deltas, round + 1);
+        self.server.clock().record_flush(self.worker, round);
+        deltas
+    }
+
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::StalenessPolicy;
+
+    #[test]
+    fn snapshot_positional_and_keyed_access_agree() {
+        let cells = vec![
+            Cell { version: 1, value: 10.0 },
+            Cell { version: 2, value: 20.0 },
+            Cell { version: 3, value: 30.0 },
+        ];
+        let snap = PsSnapshot::new(vec![5, 0, 9], cells);
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap.get(0), Some(20.0));
+        assert_eq!(snap.get(9), Some(30.0));
+        assert_eq!(snap.get(7), None);
+        assert_eq!(snap.value_at(0), 10.0);
+        assert_eq!(snap.version(5), Some(1));
+        assert_eq!(snap.min_version(), 1);
+    }
+
+    #[test]
+    fn pull_push_flush_roundtrip() {
+        let server =
+            Arc::new(ParameterServer::new(4, 1, StalenessPolicy::Bounded(0)));
+        server.store().publish_dense(&[1.0, 2.0, 3.0], 0);
+        let mut client = PsClient::new(Arc::clone(&server), 0);
+
+        let (snap, gap, waited) = client.pull(&[0, 1, 2], 0).unwrap();
+        assert_eq!((gap, waited), (0, false));
+        assert_eq!(snap.values_f32(0, 3), vec![1.0, 2.0, 3.0]);
+
+        client.push(&[(1, 0.5), (1, 0.5), (2, -1.0)]);
+        let flushed = client.flush_clock(0);
+        assert_eq!(flushed, vec![(1, 1.0), (2, -1.0)]);
+        assert_eq!(server.store().read(&[1])[0].value, 3.0);
+        assert_eq!(server.store().read(&[1])[0].version, 1);
+        assert_eq!(server.stats().bytes_flushed.load(Ordering::Relaxed), 32);
+        assert_eq!(server.clock().min_worker_clock(), 1);
+    }
+
+    #[test]
+    fn gated_pull_respects_bound() {
+        let server =
+            Arc::new(ParameterServer::new(2, 1, StalenessPolicy::Bounded(2)));
+        let client = PsClient::new(Arc::clone(&server), 0);
+        // applied = 0: rounds 0..=2 admitted without waiting
+        let (_, gap, waited) = client.pull(&[0], 2).unwrap();
+        assert_eq!((gap, waited), (2, false));
+        // round 3 would be 3 stale -> blocks until the server advances
+        let t = {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let client = PsClient::new(server, 0);
+                client.pull(&[0], 3).map(|(_, gap, _waited)| gap)
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        server.clock().advance_applied(1);
+        assert_eq!(t.join().unwrap().unwrap(), 2);
+    }
+}

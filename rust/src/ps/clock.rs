@@ -1,0 +1,218 @@
+//! SSP (stale synchronous parallel) clocks, per Petuum: every worker
+//! carries a clock it ticks once per round of pushed updates, the
+//! server carries an applied-rounds clock, and a pull for worker-round
+//! `r` is admitted only while the applied state is at most `s` rounds
+//! behind (`r - applied <= s`). `s = 0` degenerates to BSP barriers;
+//! [`StalenessPolicy::Async`] removes the gate entirely (Hogwild-style
+//! total asynchrony).
+
+use std::sync::{Condvar, Mutex};
+
+/// How stale a pulled snapshot may be, in rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StalenessPolicy {
+    /// SSP with bound `s`: block pulls more than `s` rounds behind.
+    Bounded(u64),
+    /// Fully asynchronous: never block a pull.
+    Async,
+}
+
+impl StalenessPolicy {
+    /// Parse a CLI/config setting: an integer bound or `async`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "async" | "inf" => Ok(StalenessPolicy::Async),
+            n => n
+                .parse::<u64>()
+                .map(StalenessPolicy::Bounded)
+                .map_err(|e| anyhow::anyhow!("--staleness expects an integer or 'async': {e}")),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            StalenessPolicy::Bounded(s) => format!("stale={s}"),
+            StalenessPolicy::Async => "stale=async".to_string(),
+        }
+    }
+
+    pub fn bound(&self) -> Option<u64> {
+        match self {
+            StalenessPolicy::Bounded(s) => Some(*s),
+            StalenessPolicy::Async => None,
+        }
+    }
+}
+
+/// Raised when the run is torn down while a worker waits at the gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClockShutdown;
+
+#[derive(Debug)]
+struct ClockState {
+    /// Per-worker clocks: rounds flushed by each worker so far.
+    worker_clocks: Vec<u64>,
+    /// Rounds fully applied (and republished) by the server.
+    applied: u64,
+    /// Set at teardown so gate waiters wake up and exit.
+    shutdown: bool,
+}
+
+/// The shared clock table: per-worker clocks + the server's applied
+/// clock, with a condvar so gate waiters park instead of spinning.
+#[derive(Debug)]
+pub struct ClockTable {
+    state: Mutex<ClockState>,
+    advanced: Condvar,
+}
+
+impl ClockTable {
+    pub fn new(workers: usize) -> Self {
+        ClockTable {
+            state: Mutex::new(ClockState {
+                worker_clocks: vec![0; workers],
+                applied: 0,
+                shutdown: false,
+            }),
+            advanced: Condvar::new(),
+        }
+    }
+
+    /// The pure admission rule (unit-testable core of the gate): a pull
+    /// for worker-round `round` against state at `applied` rounds is
+    /// admitted iff it is at most `s` rounds stale.
+    pub fn admitted(round: u64, applied: u64, policy: StalenessPolicy) -> bool {
+        match policy {
+            StalenessPolicy::Bounded(s) => round.saturating_sub(applied) <= s,
+            StalenessPolicy::Async => true,
+        }
+    }
+
+    /// Block until a pull for worker-round `round` is admitted under
+    /// `policy`. Returns `(staleness_gap, had_to_wait)` where the gap is
+    /// `round - applied` observed at admission.
+    pub fn wait_admit(
+        &self,
+        round: u64,
+        policy: StalenessPolicy,
+    ) -> Result<(u64, bool), ClockShutdown> {
+        let mut state = self.state.lock().expect("clock lock poisoned");
+        let mut waited = false;
+        while !Self::admitted(round, state.applied, policy) {
+            if state.shutdown {
+                return Err(ClockShutdown);
+            }
+            waited = true;
+            state = self.advanced.wait(state).expect("clock lock poisoned");
+        }
+        if state.shutdown {
+            return Err(ClockShutdown);
+        }
+        Ok((round.saturating_sub(state.applied), waited))
+    }
+
+    /// Record that `worker` flushed its round-`round` updates (the
+    /// worker's clock tick).
+    pub fn record_flush(&self, worker: usize, round: u64) {
+        let mut state = self.state.lock().expect("clock lock poisoned");
+        let clock = &mut state.worker_clocks[worker];
+        *clock = (*clock).max(round + 1);
+    }
+
+    /// Server side: rounds `0..applied` are now applied and republished.
+    pub fn advance_applied(&self, applied: u64) {
+        let mut state = self.state.lock().expect("clock lock poisoned");
+        state.applied = state.applied.max(applied);
+        drop(state);
+        self.advanced.notify_all();
+    }
+
+    pub fn applied(&self) -> u64 {
+        self.state.lock().expect("clock lock poisoned").applied
+    }
+
+    /// Slowest worker clock (diagnostics; the laggard that SSP protects).
+    pub fn min_worker_clock(&self) -> u64 {
+        let state = self.state.lock().expect("clock lock poisoned");
+        state.worker_clocks.iter().copied().min().unwrap_or(0)
+    }
+
+    /// Wake every gate waiter for teardown.
+    pub fn shutdown(&self) {
+        let mut state = self.state.lock().expect("clock lock poisoned");
+        state.shutdown = true;
+        drop(state);
+        self.advanced.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn gate_admits_at_exactly_s_and_blocks_past_it() {
+        let s = 3u64;
+        let policy = StalenessPolicy::Bounded(s);
+        // applied = 10: rounds up to 13 are exactly within the bound
+        assert!(ClockTable::admitted(10, 10, policy), "fresh pull admitted");
+        assert!(ClockTable::admitted(13, 10, policy), "gap == s admitted");
+        assert!(!ClockTable::admitted(14, 10, policy), "gap == s+1 must block");
+        // s = 0 is a barrier
+        let bsp = StalenessPolicy::Bounded(0);
+        assert!(ClockTable::admitted(5, 5, bsp));
+        assert!(!ClockTable::admitted(6, 5, bsp));
+        // async never blocks
+        assert!(ClockTable::admitted(1_000_000, 0, StalenessPolicy::Async));
+    }
+
+    #[test]
+    fn wait_admit_unblocks_when_server_advances() {
+        let table = Arc::new(ClockTable::new(1));
+        let waiter = {
+            let table = Arc::clone(&table);
+            std::thread::spawn(move || table.wait_admit(2, StalenessPolicy::Bounded(0)))
+        };
+        // Round 2 with bound 0 needs applied >= 2.
+        table.advance_applied(1);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        table.advance_applied(2);
+        // (whether the waiter parked depends on thread scheduling; the
+        // contract under test is that it returns, with a zero gap)
+        let (gap, _waited) = waiter.join().unwrap().expect("no shutdown");
+        assert_eq!(gap, 0);
+    }
+
+    #[test]
+    fn shutdown_releases_waiters() {
+        let table = Arc::new(ClockTable::new(1));
+        let waiter = {
+            let table = Arc::clone(&table);
+            std::thread::spawn(move || table.wait_admit(100, StalenessPolicy::Bounded(1)))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        table.shutdown();
+        assert_eq!(waiter.join().unwrap(), Err(ClockShutdown));
+    }
+
+    #[test]
+    fn worker_clocks_track_flushes() {
+        let table = ClockTable::new(3);
+        table.record_flush(0, 4);
+        table.record_flush(1, 2);
+        assert_eq!(table.min_worker_clock(), 0, "worker 2 has not flushed");
+        table.record_flush(2, 0);
+        assert_eq!(table.min_worker_clock(), 1);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(StalenessPolicy::parse("0").unwrap(), StalenessPolicy::Bounded(0));
+        assert_eq!(StalenessPolicy::parse("8").unwrap(), StalenessPolicy::Bounded(8));
+        assert_eq!(StalenessPolicy::parse("async").unwrap(), StalenessPolicy::Async);
+        assert!(StalenessPolicy::parse("fast").is_err());
+        assert_eq!(StalenessPolicy::Bounded(2).label(), "stale=2");
+        assert_eq!(StalenessPolicy::Async.bound(), None);
+    }
+}

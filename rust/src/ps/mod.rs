@@ -1,0 +1,113 @@
+//! The sharded parameter server with bounded-staleness (SSP) clocks —
+//! the distributed execution substrate (after Petuum; the client API
+//! follows the STRADS "Primitives" schedule/push/pull split).
+//!
+//! * [`shard`] — hash-partitioned, versioned key-value shards, each
+//!   behind its own lock.
+//! * [`clock`] — per-worker SSP clocks and the `StalenessBound(s)` /
+//!   fully-async admission gate.
+//! * [`batch`] — worker-local delta batching/coalescing with wire-byte
+//!   metering.
+//! * [`client`] — the worker handle (`pull` / `push` / `flush_clock`)
+//!   and the [`PsKernel`] trait problems implement to run on it.
+//!
+//! The execution loop that wires a [`ParameterServer`] to a
+//! `ModelProblem` and real worker threads lives in `workers::service`.
+
+pub mod batch;
+pub mod client;
+pub mod clock;
+pub mod shard;
+
+pub use batch::{BYTES_PER_ENTRY, DeltaBatch};
+pub use client::{PsClient, PsKernel, PsSnapshot};
+pub use clock::{ClockShutdown, ClockTable, StalenessPolicy};
+pub use shard::{Cell, ShardedStore};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cross-thread run counters (all monotonic).
+#[derive(Debug, Default)]
+pub struct PsStats {
+    /// Coalesced delta bytes flushed through the server.
+    pub bytes_flushed: AtomicU64,
+    /// Number of flush batches.
+    pub flushes: AtomicU64,
+    /// Number of pulls served.
+    pub pulls: AtomicU64,
+    /// Sum over pulls of the observed staleness gap (rounds behind).
+    pub stale_gap_sum: AtomicU64,
+    /// Pulls that had to block at the SSP gate.
+    pub gate_waits: AtomicU64,
+}
+
+impl PsStats {
+    /// Mean staleness gap over all pulls so far.
+    pub fn mean_staleness(&self) -> f64 {
+        let pulls = self.pulls.load(Ordering::Relaxed);
+        if pulls == 0 {
+            0.0
+        } else {
+            self.stale_gap_sum.load(Ordering::Relaxed) as f64 / pulls as f64
+        }
+    }
+}
+
+/// The server: sharded store + clock table + policy + stats. Shared
+/// across worker threads behind an `Arc`.
+pub struct ParameterServer {
+    store: ShardedStore,
+    clock: ClockTable,
+    policy: StalenessPolicy,
+    stats: PsStats,
+}
+
+impl ParameterServer {
+    pub fn new(shards: usize, workers: usize, policy: StalenessPolicy) -> Self {
+        ParameterServer {
+            store: ShardedStore::new(shards),
+            clock: ClockTable::new(workers),
+            policy,
+            stats: PsStats::default(),
+        }
+    }
+
+    pub fn store(&self) -> &ShardedStore {
+        &self.store
+    }
+
+    pub fn clock(&self) -> &ClockTable {
+        &self.clock
+    }
+
+    pub fn policy(&self) -> StalenessPolicy {
+        self.policy
+    }
+
+    pub fn stats(&self) -> &PsStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mean_staleness() {
+        let stats = PsStats::default();
+        assert_eq!(stats.mean_staleness(), 0.0);
+        stats.pulls.store(4, Ordering::Relaxed);
+        stats.stale_gap_sum.store(6, Ordering::Relaxed);
+        assert_eq!(stats.mean_staleness(), 1.5);
+    }
+
+    #[test]
+    fn server_wires_components() {
+        let server = ParameterServer::new(4, 2, StalenessPolicy::Async);
+        assert_eq!(server.store().num_shards(), 4);
+        assert_eq!(server.policy(), StalenessPolicy::Async);
+        server.store().publish_dense(&[1.0], 0);
+        assert_eq!(server.store().len(), 1);
+    }
+}

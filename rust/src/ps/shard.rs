@@ -1,0 +1,190 @@
+//! Hash-partitioned, versioned key-value shards — the storage layer of
+//! the parameter server (Petuum-style "sharded key-value store with
+//! versioned values"). Each shard is an independent map behind its own
+//! `RwLock`, so pulls from disjoint shards never contend and pushes
+//! serialize only per shard.
+
+use crate::util::FastHashMap;
+use std::sync::RwLock;
+
+/// One versioned parameter cell. `version` is the server round/clock
+/// the value was last written at (0 = the initial publish).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cell {
+    pub version: u64,
+    pub value: f64,
+}
+
+/// Fibonacci multiplicative key spreader (same constant as
+/// [`crate::util::fasthash`]): dense variable ids would otherwise pile
+/// onto one shard under a plain modulus.
+const SPREAD: u64 = 0x517cc1b727220a95;
+
+/// The sharded store. Keys are `usize` parameter ids in a flat,
+/// problem-defined key space (see `ModelProblem::ps_state`).
+pub struct ShardedStore {
+    shards: Vec<RwLock<FastHashMap<usize, Cell>>>,
+}
+
+impl ShardedStore {
+    pub fn new(num_shards: usize) -> Self {
+        assert!(num_shards >= 1, "need at least one shard");
+        ShardedStore {
+            shards: (0..num_shards).map(|_| RwLock::new(FastHashMap::default())).collect(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Deterministic key -> shard routing (pure function of the key and
+    /// the shard count, identical across store instances).
+    #[inline]
+    pub fn shard_of(&self, key: usize) -> usize {
+        (((key as u64).wrapping_mul(SPREAD) >> 32) % self.shards.len() as u64) as usize
+    }
+
+    /// Total number of cells across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().expect("shard lock poisoned").len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Overwrite-publish `(key, value)` entries at `version` (the
+    /// coordinator's path: seeding the store and republishing derived
+    /// state with exact canonical values).
+    pub fn publish(&self, entries: &[(usize, f64)], version: u64) {
+        self.for_each_shard_mut(entries, |map, key, value| {
+            map.insert(key, Cell { version, value });
+        });
+    }
+
+    /// Publish a dense state vector: key `i` gets `values[i]`.
+    pub fn publish_dense(&self, values: &[f64], version: u64) {
+        for (key, &value) in values.iter().enumerate() {
+            let shard = self.shard_of(key);
+            let mut map = self.shards[shard].write().expect("shard lock poisoned");
+            map.insert(key, Cell { version, value });
+        }
+    }
+
+    /// Apply additive deltas (the worker push path): `value += delta`,
+    /// `version = max(version, at)`. Missing keys start from 0.0 at
+    /// version 0, matching an all-zero initial model.
+    pub fn add_deltas(&self, deltas: &[(usize, f64)], at: u64) {
+        self.for_each_shard_mut(deltas, |map, key, delta| {
+            let cell = map.entry(key).or_default();
+            cell.value += delta;
+            cell.version = cell.version.max(at);
+        });
+    }
+
+    /// Read cells for `keys`, preserving request order. Each shard's
+    /// read lock is taken once per call. Unpublished keys read as the
+    /// default cell (value 0.0, version 0).
+    pub fn read(&self, keys: &[usize]) -> Vec<Cell> {
+        let mut out = vec![Cell::default(); keys.len()];
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (pos, &key) in keys.iter().enumerate() {
+            by_shard[self.shard_of(key)].push(pos);
+        }
+        for (shard, positions) in by_shard.iter().enumerate() {
+            if positions.is_empty() {
+                continue;
+            }
+            let map = self.shards[shard].read().expect("shard lock poisoned");
+            for &pos in positions {
+                if let Some(cell) = map.get(&keys[pos]) {
+                    out[pos] = *cell;
+                }
+            }
+        }
+        out
+    }
+
+    /// Group `entries` by shard and apply `f` under each shard's write
+    /// lock (taken once per touched shard).
+    fn for_each_shard_mut(
+        &self,
+        entries: &[(usize, f64)],
+        mut f: impl FnMut(&mut FastHashMap<usize, Cell>, usize, f64),
+    ) {
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (pos, &(key, _)) in entries.iter().enumerate() {
+            by_shard[self.shard_of(key)].push(pos);
+        }
+        for (shard, positions) in by_shard.iter().enumerate() {
+            if positions.is_empty() {
+                continue;
+            }
+            let mut map = self.shards[shard].write().expect("shard lock poisoned");
+            for &pos in positions {
+                let (key, value) = entries[pos];
+                f(&mut map, key, value);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let a = ShardedStore::new(8);
+        let b = ShardedStore::new(8);
+        for key in 0..10_000 {
+            let s = a.shard_of(key);
+            assert_eq!(s, b.shard_of(key), "routing must not depend on the instance");
+            assert!(s < 8);
+        }
+    }
+
+    #[test]
+    fn routing_spreads_dense_keys() {
+        let store = ShardedStore::new(8);
+        let mut counts = [0usize; 8];
+        for key in 0..8000 {
+            counts[store.shard_of(key)] += 1;
+        }
+        for (shard, &c) in counts.iter().enumerate() {
+            assert!(c > 400, "shard {shard} got only {c}/8000 dense keys");
+        }
+    }
+
+    #[test]
+    fn publish_read_roundtrip_preserves_order() {
+        let store = ShardedStore::new(4);
+        store.publish_dense(&[1.0, 2.0, 3.0, 4.0], 7);
+        let cells = store.read(&[3, 0, 2]);
+        assert_eq!(cells[0], Cell { version: 7, value: 4.0 });
+        assert_eq!(cells[1], Cell { version: 7, value: 1.0 });
+        assert_eq!(cells[2], Cell { version: 7, value: 3.0 });
+        assert_eq!(store.len(), 4);
+    }
+
+    #[test]
+    fn add_deltas_accumulates_and_bumps_version() {
+        let store = ShardedStore::new(3);
+        store.publish(&[(10, 1.0)], 0);
+        store.add_deltas(&[(10, 0.5), (11, -2.0)], 4);
+        store.add_deltas(&[(10, 0.25)], 2); // older clock: value adds, version keeps max
+        let cells = store.read(&[10, 11, 12]);
+        assert_eq!(cells[0], Cell { version: 4, value: 1.75 });
+        assert_eq!(cells[1], Cell { version: 4, value: -2.0 });
+        assert_eq!(cells[2], Cell::default(), "missing key reads as zero");
+    }
+
+    #[test]
+    fn publish_overwrites() {
+        let store = ShardedStore::new(2);
+        store.add_deltas(&[(5, 123.0)], 1);
+        store.publish(&[(5, 2.5)], 9);
+        assert_eq!(store.read(&[5])[0], Cell { version: 9, value: 2.5 });
+    }
+}

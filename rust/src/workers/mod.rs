@@ -1,15 +1,19 @@
-//! The distributed runtime: an in-process, message-passing realization
-//! of the STRADS architecture (paper Fig. 3 / §3) on tokio.
+//! The distributed runtime: coordinator + worker OS threads over mpsc
+//! channels and the sharded parameter server (paper Fig. 3 / §3,
+//! generalized to the Petuum SSP architecture).
 //!
-//! One coordinator task owns the canonical model state and the sharded
-//! SAP scheduler; P worker tasks own nothing but the (shared, immutable)
-//! design matrix. Per round the coordinator plans blocks, ships each
-//! worker its block plus a *residual snapshot* (what a remote worker's
-//! stale replica would hold), the workers compute CD proposals and send
-//! them back, and the coordinator applies all proposals at once — the
-//! same parallel semantics the simulator models, here executed by real
-//! concurrent tasks over channels. The paper's 0MQ sockets become tokio
-//! mpsc channels; everything else is structurally identical.
+//! One coordinator owns the canonical model state and the sharded SAP
+//! scheduler; P worker threads own nothing but the problem's immutable
+//! [`crate::ps::PsKernel`] data (design matrix / ratings). Workers pull
+//! versioned, staleness-bounded snapshots from the parameter server
+//! ([`crate::ps`]), compute update deltas, and push coalesced delta
+//! batches back; the coordinator applies complete rounds to the
+//! canonical model and advances the SSP clock. Any
+//! [`crate::problem::ModelProblem`] with a PS kernel runs here — Lasso
+//! and MF both do. (The vendored offline crate set has no async
+//! runtime; OS threads + channels give the same message-passing
+//! architecture, and the paper's own implementation was likewise
+//! thread-per-worker over 0MQ sockets.)
 
 pub mod service;
 

@@ -1,33 +1,101 @@
-//! Coordinator + worker threads over mpsc channels.
+//! The distributed execution loop: a coordinator thread driving any
+//! [`ModelProblem`] over real worker threads through the sharded
+//! parameter server (`ps::`).
 //!
-//! (The vendored offline crate set has no async runtime; OS threads +
-//! channels give the same message-passing architecture — and the paper's
-//! own implementation was likewise thread-per-worker over 0MQ sockets.)
+//! Per round the coordinator plans blocks (the problem's own round
+//! structure if it has one, the SAP scheduler otherwise) and enqueues
+//! them to workers. Each worker, per block: SSP-gated `pull` of the
+//! keys its kernel needs, `propose` deltas against that (possibly
+//! stale) snapshot, `push` them into its coalescing batch, and
+//! `flush_clock` — which applies the batch to the server shards and
+//! forwards it to the coordinator. The coordinator applies complete
+//! rounds in block order to the canonical model (`apply_deltas`),
+//! feeds the scheduler's step 4, republishes derived state, and
+//! advances the applied clock that gates the workers.
+//!
+//! Staleness discipline: with `StalenessPolicy::Bounded(s)` the
+//! coordinator only dispatches rounds within `s` of the applied clock,
+//! so a round-`r` pull reads state at most `s` rounds behind — the same
+//! bound the client-side gate enforces independently (the gate is what
+//! a networked deployment would rely on; here dispatch throttling makes
+//! it non-blocking). `s = 0` is therefore a BSP barrier and reproduces
+//! the engine path exactly: same plans, same snapshots, same apply
+//! order, same arithmetic. `Async` removes the gate and pipelines a
+//! fixed window of rounds.
 
 use crate::config::RunConfig;
-use crate::data::lasso_synth::LassoData;
-use crate::lasso::NativeLasso;
-use crate::linalg::DenseMatrix;
+use crate::coordinator::balance::imbalance;
 use crate::metrics::{Trace, TracePoint};
 use crate::problem::ModelProblem;
+use crate::ps::{ParameterServer, PsClient, StalenessPolicy};
 use crate::schedulers::{DynamicScheduler, Scheduler};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-/// Work shipped to one worker for one round.
+/// Rounds kept in flight in fully-asynchronous mode.
+const ASYNC_PIPELINE_DEPTH: u64 = 16;
+
+/// One block of one round, shipped to a worker.
 struct WorkItem {
-    round: usize,
-    /// (coordinate, current beta_j) pairs to propose updates for.
-    coords: Vec<(usize, f64)>,
-    /// The stale residual replica this worker computes against.
-    r_snapshot: Arc<Vec<f32>>,
+    round: u64,
+    block_idx: usize,
+    vars: Vec<usize>,
 }
 
-/// A worker's reply: proposed new beta values.
-struct WorkerReply {
-    round: usize,
-    proposals: Vec<(usize, f64)>,
+/// A worker's flushed, coalesced delta batch for one block.
+struct FlushMsg {
+    round: u64,
+    block_idx: usize,
+    deltas: Vec<(usize, f64)>,
+    stale_gap: u64,
+}
+
+/// Per-round reassembly buffer on the coordinator.
+struct RoundBuf {
+    parts: Vec<Option<Vec<(usize, f64)>>>,
+    received: usize,
+    imbalance: f64,
+    problem_planned: bool,
+    stale_gap_sum: u64,
+}
+
+impl RoundBuf {
+    fn new(blocks: usize, imbalance: f64, problem_planned: bool) -> Self {
+        RoundBuf {
+            parts: (0..blocks).map(|_| None).collect(),
+            received: 0,
+            imbalance,
+            problem_planned,
+            stale_gap_sum: 0,
+        }
+    }
+
+    fn store(&mut self, msg: FlushMsg) {
+        debug_assert!(self.parts[msg.block_idx].is_none(), "duplicate flush for a block");
+        self.parts[msg.block_idx] = Some(msg.deltas);
+        self.received += 1;
+        self.stale_gap_sum += msg.stale_gap;
+    }
+
+    fn complete(&self) -> bool {
+        self.received == self.parts.len()
+    }
+
+    fn mean_staleness(&self) -> f64 {
+        if self.parts.is_empty() {
+            0.0
+        } else {
+            self.stale_gap_sum as f64 / self.parts.len() as f64
+        }
+    }
+
+    /// Concatenate the parts in block order — the deterministic apply
+    /// order that matches the engine path's block iteration.
+    fn into_ordered(self) -> Vec<(usize, f64)> {
+        self.parts.into_iter().flat_map(|p| p.expect("round complete")).collect()
+    }
 }
 
 /// Summary of a distributed run.
@@ -35,150 +103,213 @@ struct WorkerReply {
 pub struct DistributedReport {
     pub trace: Trace,
     pub rounds: usize,
-    pub proposals_processed: usize,
+    /// State-space deltas applied to the canonical model.
+    pub deltas_applied: usize,
+    /// Coalesced delta bytes flushed through the server.
+    pub bytes_flushed: u64,
+    /// Pulls that had to block at the SSP gate.
+    pub gate_waits: u64,
+    /// Mean staleness gap over all pulls.
+    pub mean_staleness: f64,
 }
 
-/// Run `rounds` SAP rounds of parallel Lasso on `p` real worker
-/// threads. Wall-clock, not virtual time (this is the architecture demo
-/// / correctness path; the core-count sweeps use the simulator).
+/// Run up to `rounds` rounds of `problem` on `cfg.workers` real worker
+/// threads through a parameter server configured by `cfg.ps`.
+/// Wall-clock, not virtual time (this is the architecture/correctness
+/// path; the core-count sweeps use the simulator).
 pub fn run_distributed(
-    data: &LassoData,
+    problem: &mut dyn ModelProblem,
     cfg: &RunConfig,
     rounds: usize,
+    dataset: &str,
 ) -> anyhow::Result<DistributedReport> {
     let p = cfg.workers;
-    let x: Arc<DenseMatrix> = Arc::new(data.x.clone());
-    let lambda = cfg.lambda;
+    let policy = cfg.ps.policy();
+    let kernel = problem
+        .ps_kernel()
+        .ok_or_else(|| anyhow::anyhow!("problem does not provide a parameter-server kernel"))?;
 
-    // Worker threads: private work channel in, shared reply channel out.
-    let (reply_tx, reply_rx) = mpsc::channel::<WorkerReply>();
+    // Seed the server with the full state at version 0.
+    let server = Arc::new(ParameterServer::new(cfg.ps.shards, p, policy));
+    server.store().publish_dense(&problem.ps_state(), 0);
+
+    // Worker threads: private work queue in, shared flush channel out.
+    let (flush_tx, flush_rx) = mpsc::channel::<FlushMsg>();
     let mut work_txs = Vec::with_capacity(p);
     let mut handles = Vec::with_capacity(p);
-    for _ in 0..p {
+    for worker in 0..p {
         let (tx, rx) = mpsc::channel::<WorkItem>();
         work_txs.push(tx);
-        let reply_tx = reply_tx.clone();
-        let x = Arc::clone(&x);
+        let flush_tx = flush_tx.clone();
+        let kernel = Arc::clone(&kernel);
+        let mut client = PsClient::new(Arc::clone(&server), worker);
         handles.push(std::thread::spawn(move || {
             while let Ok(item) = rx.recv() {
-                let proposals = item
-                    .coords
-                    .iter()
-                    .map(|&(j, beta_j)| {
-                        (j, NativeLasso::propose_from(&x, &item.r_snapshot, j, beta_j, lambda))
-                    })
-                    .collect();
-                if reply_tx.send(WorkerReply { round: item.round, proposals }).is_err() {
+                let keys = kernel.pull_keys(&item.vars, item.round);
+                let Ok((snap, stale_gap, _waited)) = client.pull(&keys, item.round) else {
+                    break; // shutdown while gated
+                };
+                let proposals = kernel.propose(&snap, &item.vars, item.round);
+                client.push(&proposals);
+                let deltas = client.flush_clock(item.round);
+                let msg =
+                    FlushMsg { round: item.round, block_idx: item.block_idx, deltas, stale_gap };
+                if flush_tx.send(msg).is_err() {
                     break;
                 }
             }
         }));
     }
-    drop(reply_tx);
+    drop(flush_tx);
 
-    // Coordinator: canonical state + sharded SAP scheduler.
-    let mut problem = NativeLasso::new(data, lambda);
+    // Coordinator state: canonical model + (lazily used) SAP scheduler.
     let mut scheduler = DynamicScheduler::new(problem.num_vars(), &cfg.sap, cfg.engine.seed);
-    let mut trace = Trace::new("distributed", "lasso", p);
+    let window = match policy {
+        StalenessPolicy::Bounded(s) => s,
+        StalenessPolicy::Async => ASYNC_PIPELINE_DEPTH,
+    };
+    let rounds = rounds as u64;
+    let mut planned = 0u64;
+    let mut applied = 0u64;
+    let mut converged = false;
+    let mut pending: BTreeMap<u64, RoundBuf> = BTreeMap::new();
+    let mut trace = Trace::new(&format!("dist-{}", policy.label()), dataset, p);
+    let mut deltas_applied = 0usize;
     let wall = Instant::now();
-    let mut proposals_processed = 0usize;
-    let mut rounds_done = 0usize;
 
-    for round in 0..rounds {
-        let blocks = scheduler.plan(&mut problem, p);
-        if blocks.is_empty() {
-            break;
+    loop {
+        // Dispatch every round the staleness window admits.
+        while !converged && planned < rounds && planned <= applied + window {
+            let (blocks, problem_planned) = match problem.plan_round(planned as usize, p) {
+                Some(blocks) => (blocks, true),
+                None => (scheduler.plan(problem, p), false),
+            };
+            if blocks.is_empty() {
+                converged = true;
+                break;
+            }
+            pending.insert(
+                planned,
+                RoundBuf::new(blocks.len(), imbalance(&blocks), problem_planned),
+            );
+            for (block_idx, block) in blocks.into_iter().enumerate() {
+                work_txs[block_idx % p]
+                    .send(WorkItem { round: planned, block_idx, vars: block.vars })
+                    .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+            }
+            planned += 1;
         }
-        rounds_done = round + 1;
-        let snapshot = Arc::new(problem.residual().to_vec());
-        let mut outstanding = 0usize;
-        for (widx, block) in blocks.iter().enumerate() {
-            let coords: Vec<(usize, f64)> =
-                block.vars.iter().map(|&j| (j, problem.beta()[j])).collect();
-            work_txs[widx % p]
-                .send(WorkItem { round, coords, r_snapshot: Arc::clone(&snapshot) })
-                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
-            outstanding += 1;
+        if applied == planned {
+            break; // all dispatched rounds applied (or nothing planned)
         }
-        // Barrier: collect every worker's proposals for this round.
-        let mut proposals = Vec::new();
-        while outstanding > 0 {
-            let reply = reply_rx.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
-            debug_assert_eq!(reply.round, round);
-            proposals.extend(reply.proposals);
-            outstanding -= 1;
-        }
-        proposals_processed += proposals.len();
-        let result = problem.apply_proposals(&proposals);
-        scheduler.observe(&result);
 
-        if round % cfg.engine.record_every == 0 {
-            trace.push(TracePoint {
-                round,
-                vtime: wall.elapsed().as_secs_f64(),
-                wtime: wall.elapsed().as_secs_f64(),
-                objective: result.objective.unwrap_or_else(|| problem.objective()),
-                active_vars: problem.active_vars(),
-                imbalance: 1.0,
-            });
+        // Collect one flush, then apply every now-complete round in order.
+        let msg = flush_rx.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
+        pending.get_mut(&msg.round).expect("flush for unplanned round").store(msg);
+        while pending.get(&applied).map(RoundBuf::complete).unwrap_or(false) {
+            let buf = pending.remove(&applied).expect("checked above");
+            let round_imbalance = buf.imbalance;
+            let round_staleness = buf.mean_staleness();
+            let problem_planned = buf.problem_planned;
+            let ordered = buf.into_ordered();
+            deltas_applied += ordered.len();
+            let result = problem.apply_deltas(&ordered);
+            if !problem_planned {
+                scheduler.observe(&result);
+            }
+            let republish = problem.ps_republish();
+            if !republish.is_empty() {
+                server.store().publish(&republish, applied + 1);
+            }
+            server.clock().advance_applied(applied + 1);
+
+            if (applied as usize) % cfg.engine.record_every == 0 {
+                trace.push(TracePoint {
+                    round: applied as usize,
+                    vtime: wall.elapsed().as_secs_f64(),
+                    wtime: wall.elapsed().as_secs_f64(),
+                    objective: result.objective.unwrap_or_else(|| problem.objective()),
+                    active_vars: problem.active_vars(),
+                    imbalance: round_imbalance,
+                    staleness: round_staleness,
+                    net_bytes: server.stats().bytes_flushed.load(Ordering::Relaxed),
+                });
+            }
+            applied += 1;
         }
     }
 
-    // Final exact objective, then shut workers down.
+    // Final exact objective, then shut the workers down.
     let obj = problem.objective();
     trace.push(TracePoint {
-        round: rounds_done,
+        round: applied as usize,
         vtime: wall.elapsed().as_secs_f64(),
         wtime: wall.elapsed().as_secs_f64(),
         objective: obj,
         active_vars: problem.active_vars(),
-        imbalance: 1.0,
+        imbalance: trace.points.last().map(|pt| pt.imbalance).unwrap_or(1.0),
+        staleness: server.stats().mean_staleness(),
+        net_bytes: server.stats().bytes_flushed.load(Ordering::Relaxed),
     });
     drop(work_txs);
+    server.clock().shutdown();
     for h in handles {
         let _ = h.join();
     }
-    Ok(DistributedReport { trace, rounds: rounds_done, proposals_processed })
+    let stats = server.stats();
+    Ok(DistributedReport {
+        trace,
+        rounds: applied as usize,
+        deltas_applied,
+        bytes_flushed: stats.bytes_flushed.load(Ordering::Relaxed),
+        gate_waits: stats.gate_waits.load(Ordering::Relaxed),
+        mean_staleness: stats.mean_staleness(),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::lasso_synth::{generate, LassoSynthSpec};
+    use crate::lasso::NativeLasso;
 
     #[test]
     fn distributed_run_converges_like_local() {
         let data = generate(&LassoSynthSpec::tiny(), 21);
         let mut cfg = RunConfig { workers: 4, lambda: 1e-3, ..Default::default() };
         cfg.sap.shards = 2;
-        let report = run_distributed(&data, &cfg, 300).unwrap();
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report = run_distributed(&mut problem, &cfg, 300, "tiny").unwrap();
         let first = report.trace.points.first().unwrap().objective;
         let last = report.trace.final_objective();
         assert!(last < first * 0.8, "first {first} last {last}");
-        assert!(report.proposals_processed > 0);
+        assert!(report.deltas_applied > 0);
+        assert!(report.bytes_flushed > 0, "flushes must be metered");
     }
 
     #[test]
     fn distributed_matches_engine_semantics() {
-        // Same seed, same scheduler config, 1 worker: the distributed
-        // path must produce the same final objective as the local
-        // engine (proposals computed against the same snapshots).
+        // Same seed, same scheduler config, staleness 0: the distributed
+        // path must produce the same final objective as the local engine
+        // semantics (proposals computed against identical snapshots,
+        // applied in identical order).
         let data = generate(&LassoSynthSpec::tiny(), 22);
         let mut cfg = RunConfig { workers: 1, lambda: 1e-3, ..Default::default() };
         cfg.sap.shards = 1;
-        let report = run_distributed(&data, &cfg, 50).unwrap();
-
         let mut problem = NativeLasso::new(&data, cfg.lambda);
-        let mut sched = DynamicScheduler::new(problem.num_vars(), &cfg.sap, cfg.engine.seed);
+        let report = run_distributed(&mut problem, &cfg, 50, "tiny").unwrap();
+
+        let mut local = NativeLasso::new(&data, cfg.lambda);
+        let mut sched = DynamicScheduler::new(local.num_vars(), &cfg.sap, cfg.engine.seed);
         for _ in 0..50 {
-            let blocks = sched.plan(&mut problem, 1);
+            let blocks = sched.plan(&mut local, 1);
             if blocks.is_empty() {
                 break;
             }
-            let res = problem.update_blocks(&blocks);
+            let res = local.update_blocks(&blocks);
             sched.observe(&res);
         }
-        let local_obj = problem.objective();
+        let local_obj = local.objective();
         let dist_obj = report.trace.final_objective();
         assert!(
             (local_obj - dist_obj).abs() < 1e-6 * local_obj.abs().max(1.0),
@@ -190,7 +321,35 @@ mod tests {
     fn many_workers_few_blocks_is_safe() {
         let data = generate(&LassoSynthSpec::tiny(), 23);
         let cfg = RunConfig { workers: 16, lambda: 1e-2, ..Default::default() };
-        let report = run_distributed(&data, &cfg, 20).unwrap();
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report = run_distributed(&mut problem, &cfg, 20, "tiny").unwrap();
         assert!(report.rounds > 0);
+    }
+
+    #[test]
+    fn kernel_less_problem_is_rejected() {
+        struct NoPs;
+        impl ModelProblem for NoPs {
+            fn num_vars(&self) -> usize {
+                1
+            }
+            fn workload(&self, _j: usize) -> u64 {
+                1
+            }
+            fn dependencies(&mut self, cands: &[usize]) -> Vec<f64> {
+                vec![0.0; cands.len() * cands.len()]
+            }
+            fn update_blocks(
+                &mut self,
+                _blocks: &[crate::problem::Block],
+            ) -> crate::problem::RoundResult {
+                Default::default()
+            }
+            fn objective(&mut self) -> f64 {
+                0.0
+            }
+        }
+        let cfg = RunConfig::default();
+        assert!(run_distributed(&mut NoPs, &cfg, 10, "none").is_err());
     }
 }

@@ -1,0 +1,147 @@
+//! End-to-end coverage of the parameter-server path: any ModelProblem
+//! on real worker threads, staleness-0 parity with the engine
+//! semantics, staleness sweeps, and the new trace metrics.
+
+use strads::config::RunConfig;
+use strads::data::lasso_synth::{self, LassoSynthSpec};
+use strads::data::mf_powerlaw::{self, MfSynthSpec};
+use strads::lasso::NativeLasso;
+use strads::mf::DistMf;
+use strads::prelude::*;
+
+fn lasso_cfg(workers: usize) -> RunConfig {
+    let mut cfg = RunConfig { workers, lambda: 1e-3, ..Default::default() };
+    cfg.sap.shards = 2;
+    cfg
+}
+
+#[test]
+fn lasso_multiworker_staleness0_matches_engine_path() {
+    // With staleness 0, every pull reads the exact canonical state, so
+    // the distributed run must reproduce the engine path bit-for-bit:
+    // same plans, same proposals, same apply order.
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 42);
+    let cfg = lasso_cfg(4);
+    let rounds = 120;
+
+    let mut dist_problem = NativeLasso::new(&data, cfg.lambda);
+    let report =
+        strads::workers::run_distributed(&mut dist_problem, &cfg, rounds, "tiny").unwrap();
+
+    let mut local = NativeLasso::new(&data, cfg.lambda);
+    let mut sched = DynamicScheduler::new(local.num_vars(), &cfg.sap, cfg.engine.seed);
+    for _ in 0..rounds {
+        let blocks = sched.plan(&mut local, cfg.workers);
+        if blocks.is_empty() {
+            break;
+        }
+        let res = local.update_blocks(&blocks);
+        sched.observe(&res);
+    }
+    let local_obj = local.objective();
+    let dist_obj = report.trace.final_objective();
+    assert!(
+        (local_obj - dist_obj).abs() < 1e-6 * local_obj.abs().max(1.0),
+        "local {local_obj} dist {dist_obj}"
+    );
+    assert!(dist_obj < report.trace.points[0].objective * 0.9, "must actually converge");
+}
+
+#[test]
+fn lasso_staleness_sweep_runs_end_to_end() {
+    // The acceptance sweep: bounds 0, 2, 8 and async all run end-to-end
+    // with metered flushes. Bounded runs must also converge; the async
+    // run has no convergence guarantee (unbounded staleness is exactly
+    // the interference regime the paper warns about), so it is only
+    // required to complete.
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 7);
+    for setting in ["0", "2", "8", "async"] {
+        let mut cfg = lasso_cfg(4);
+        cfg.ps.set_staleness_arg(setting).unwrap();
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report =
+            strads::workers::run_distributed(&mut problem, &cfg, 200, "tiny").unwrap();
+        assert!(report.bytes_flushed > 0, "staleness={setting}: no flushes metered");
+        assert_eq!(report.rounds, 200, "staleness={setting} stopped early");
+        if setting != "async" {
+            let first = report.trace.points.first().unwrap().objective;
+            let last = report.trace.final_objective();
+            assert!(last.is_finite(), "staleness={setting} diverged to non-finite");
+            assert!(last < first * 0.9, "staleness={setting}: first {first} last {last}");
+        }
+    }
+}
+
+#[test]
+fn trace_records_staleness_and_flushed_bytes() {
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 9);
+    let mut cfg = lasso_cfg(4);
+    cfg.ps.set_staleness_arg("2").unwrap();
+    let mut problem = NativeLasso::new(&data, cfg.lambda);
+    let report = strads::workers::run_distributed(&mut problem, &cfg, 60, "tiny").unwrap();
+    let points = &report.trace.points;
+    assert!(points.len() >= 2);
+    // net_bytes is cumulative and must be positive and nondecreasing
+    assert!(points.last().unwrap().net_bytes > 0);
+    for w in points.windows(2) {
+        assert!(w[1].net_bytes >= w[0].net_bytes, "net_bytes must be cumulative");
+    }
+    // per-round staleness stays within the configured bound
+    for p in points {
+        assert!(p.staleness.is_finite() && p.staleness >= 0.0);
+        assert!(p.staleness <= 2.0 + 1e-9, "staleness {} exceeds bound", p.staleness);
+    }
+    // the scheduler label carries the policy
+    assert_eq!(report.trace.scheduler, "dist-stale=2");
+}
+
+#[test]
+fn mf_distributed_staleness0_matches_local_rounds() {
+    // MF through the same generic path: CCD++ rank sweeps as PS rounds.
+    // At staleness 0 the distributed factors follow the local execution
+    // of the identical round structure exactly.
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 31);
+    let mut dist = DistMf::new(&data.a, 4, 0.05, 32);
+    let rounds = dist.rounds_for_iters(3);
+    let cfg = RunConfig { workers: 4, ..Default::default() };
+    let report = strads::workers::run_distributed(&mut dist, &cfg, rounds, "tiny").unwrap();
+    let dist_obj = report.trace.final_objective();
+
+    let mut local = DistMf::new(&data.a, 4, 0.05, 32);
+    for round in 0..rounds {
+        let blocks = local.plan_round(round, cfg.workers).expect("mf plans its own rounds");
+        local.update_blocks(&blocks);
+    }
+    let local_obj = local.objective();
+    assert!(
+        (local_obj - dist_obj).abs() < 1e-6 * local_obj.abs().max(1.0),
+        "local {local_obj} dist {dist_obj}"
+    );
+    // and it genuinely optimizes
+    assert!(
+        dist_obj < report.trace.points[0].objective * 0.9,
+        "distributed MF failed to converge: {dist_obj}"
+    );
+    assert_eq!(report.rounds, rounds);
+}
+
+#[test]
+fn mf_distributed_stale_runs_complete() {
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 33);
+    for setting in ["2", "async"] {
+        let mut cfg = RunConfig { workers: 4, ..Default::default() };
+        cfg.ps.set_staleness_arg(setting).unwrap();
+        let mut dist = DistMf::new(&data.a, 4, 0.05, 34);
+        let rounds = dist.rounds_for_iters(4);
+        let report =
+            strads::workers::run_distributed(&mut dist, &cfg, rounds, "tiny").unwrap();
+        assert_eq!(report.rounds, rounds, "staleness={setting} stopped early");
+        if setting != "async" {
+            // bounded-stale CCD still optimizes; async only has to finish
+            let first = report.trace.points.first().unwrap().objective;
+            let last = report.trace.final_objective();
+            assert!(last.is_finite());
+            assert!(last < first, "staleness={setting}: first {first} last {last}");
+        }
+    }
+}

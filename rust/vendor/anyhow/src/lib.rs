@@ -1,0 +1,225 @@
+//! Offline drop-in subset of the `anyhow` error crate.
+//!
+//! This build vendors every dependency (see `rust/vendor/`), so the
+//! real crates.io `anyhow` is not available. This crate implements the
+//! slice of its API the workspace actually uses — `Error`, `Result`,
+//! `anyhow!` / `bail!` / `ensure!`, `Context` on `Result` and `Option`,
+//! and `Error::msg` — with the same observable semantics: `Display`
+//! shows the outermost message, `{:#}` shows the full cause chain, and
+//! `Debug` renders a "Caused by:" list. Swap in the real crate by
+//! pointing the workspace dependency back at crates.io.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Drop-in for `anyhow::Error`: an erased error plus context layers.
+///
+/// Messages are stored root-cause first; the last entry is the
+/// outermost context. Like the real `anyhow::Error`, this type
+/// deliberately does NOT implement `std::error::Error`, which is what
+/// lets the blanket `From<E: StdError>` conversion below coexist with
+/// the reflexive `From<Error>`.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (`anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display + Send + Sync + 'static>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display + Send + Sync + 'static>(mut self, context: C) -> Self {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The root cause message (innermost layer).
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+
+    /// Messages from outermost context down to the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut layers = self.chain.iter().rev();
+        match layers.next() {
+            Some(outer) => write!(f, "{outer}")?,
+            None => write!(f, "unknown error")?,
+        }
+        if f.alternate() {
+            for layer in layers {
+                write!(f, ": {layer}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut layers = self.chain.iter().rev();
+        match layers.next() {
+            Some(outer) => write!(f, "{outer}")?,
+            None => write!(f, "unknown error")?,
+        }
+        let causes: Vec<&String> = layers.collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        // Flatten the std source() chain into our layered form.
+        let mut chain = Vec::new();
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        chain.reverse(); // root cause first
+        chain.push(err.to_string());
+        Error { chain }
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Drop-in for `anyhow::Context`: attach context to fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Drop-in for `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Drop-in for `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Drop-in for `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_layers_render_outermost_first() {
+        let e: Result<()> = std::result::Result::Err(io_err()).context("opening config");
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+
+        fn check(x: usize) -> Result<usize> {
+            ensure!(x > 2, "x too small: {x}");
+            if x > 100 {
+                bail!("x too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(check(5).unwrap(), 5);
+        assert_eq!(format!("{}", check(1).unwrap_err()), "x too small: 1");
+        assert_eq!(format!("{}", check(200).unwrap_err()), "x too big: 200");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+}
