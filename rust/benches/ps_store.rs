@@ -1,0 +1,66 @@
+//! Parameter-server storage micro-benchmarks: dense-segment slabs vs
+//! the hashed shard path on the access patterns the distributed runs
+//! actually produce — a contiguous residual-sized range read/publish
+//! per pull (the Lasso hot path) and scattered β-delta pushes.
+
+use strads::benchutil::{report, time_fn};
+use strads::ps::{PullSpec, ShardedStore};
+
+fn main() {
+    println!("== ps storage micro-benchmarks (n = 65536, 8 shards) ==\n");
+    let n = 65_536usize;
+    let values: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+    let dense = ShardedStore::with_segments(8, &[(0, n)]);
+    let hashed = ShardedStore::new(8);
+    dense.publish_dense(&values, 0);
+    hashed.publish_dense(&values, 0);
+
+    // --- the per-pull residual read ---------------------------------
+    let spec = PullSpec::from_ranges(vec![(0, n)]);
+    let (med, min, max) = time_fn(3, 30, || {
+        std::hint::black_box(dense.read_spec(&spec));
+    });
+    report(&format!("dense : read contiguous range ({n})"), med, min, max);
+    let (med, min, max) = time_fn(3, 30, || {
+        std::hint::black_box(hashed.read_spec(&spec));
+    });
+    report(&format!("hashed: read contiguous range ({n})"), med, min, max);
+
+    // --- the full-resync publish ------------------------------------
+    let (med, min, max) = time_fn(3, 30, || {
+        dense.publish_dense(&values, 1);
+    });
+    report("dense : publish_dense full state", med, min, max);
+    let (med, min, max) = time_fn(3, 30, || {
+        hashed.publish_dense(&values, 1);
+    });
+    report("hashed: publish_dense full state", med, min, max);
+
+    // --- the sparse tolerance-gated republish ------------------------
+    let sparse: Vec<(usize, f64)> = (0..n / 16).map(|i| (i * 16, 0.25)).collect();
+    let (med, min, max) = time_fn(3, 30, || {
+        dense.publish(&sparse, 2);
+    });
+    report(&format!("dense : sparse publish ({} entries)", sparse.len()), med, min, max);
+    let (med, min, max) = time_fn(3, 30, || {
+        hashed.publish(&sparse, 2);
+    });
+    report(&format!("hashed: sparse publish ({} entries)", sparse.len()), med, min, max);
+
+    // --- the worker β-delta push ------------------------------------
+    let deltas: Vec<(usize, f64)> = (0..512).map(|i| ((i * 127) % n, 0.5)).collect();
+    let (med, min, max) = time_fn(3, 50, || {
+        dense.add_deltas(&deltas, 3);
+    });
+    report("dense : add_deltas 512 scattered", med, min, max);
+    let (med, min, max) = time_fn(3, 50, || {
+        hashed.add_deltas(&deltas, 3);
+    });
+    report("hashed: add_deltas 512 scattered", med, min, max);
+
+    println!(
+        "\nhash probes metered: dense = {} (must stay 0), hashed = {}",
+        dense.hash_probes(),
+        hashed.hash_probes()
+    );
+}

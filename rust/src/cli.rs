@@ -11,8 +11,22 @@
 //!   read parameter-server state at most `s` rounds behind its own
 //!   round (`0` = BSP barrier, exactly the engine semantics; `async`
 //!   removes the gate entirely).
-//! * `--ps-shards N` — number of hash-partitioned server shards the
-//!   parameter store is split across (lock granularity).
+//! * `--ps-shards N` — number of server shards: hash partitions for
+//!   unregistered keys and the slab count that registered dense
+//!   segments are range-partitioned into (lock granularity).
+//! * `--republish-tol F` — incremental-republish tolerance: after each
+//!   applied round the coordinator republishes only derived-state
+//!   entries (e.g. Lasso residual cells) that moved by more than `F`
+//!   since their last publish, plus a periodic full re-sync. `0`
+//!   (default) is lossless — skip only bitwise-unchanged entries;
+//!   negative restores a full republish every round.
+//! * `--dense-segments 0|1` — register the problem's contiguous key
+//!   ranges as dense `Vec<Cell>` slabs (slice reads/publishes, zero
+//!   hash probes); `0` keeps everything on the hashed path.
+//! * `--pipeline 0|1` — gate-driven pipelining: with `s > 0`, dispatch
+//!   rounds past the staleness bound and let the SSP gate pace the
+//!   workers so scheduling overlaps compute; `0` throttles dispatch at
+//!   the bound instead.
 
 use std::collections::BTreeMap;
 

@@ -81,13 +81,37 @@ pub struct PsConfig {
     /// Fully asynchronous mode: the gate never blocks and the
     /// coordinator pipelines rounds freely (`staleness` is ignored).
     pub asynchronous: bool,
-    /// Number of hash-partitioned server shards.
+    /// Number of server shards: hash partitions for unregistered keys
+    /// and the slab count dense segments are range-partitioned into.
     pub shards: usize,
+    /// Incremental-republish tolerance: after each applied round the
+    /// coordinator republishes only derived-state entries that moved by
+    /// more than this since their last publish (plus a periodic full
+    /// re-sync). `0.0` is lossless (skip only bitwise-unchanged
+    /// entries); `< 0` restores full republish every round.
+    pub republish_tol: f64,
+    /// Register the problem's contiguous key ranges as dense segment
+    /// slabs (zero hash probes on those ranges). Off = hashed-only
+    /// storage, kept for A/B and equivalence testing.
+    pub dense_segments: bool,
+    /// Gate-driven pipelining: with a staleness bound s > 0, dispatch
+    /// rounds beyond the bound and let the SSP gate pace the workers so
+    /// scheduling overlaps compute. Off = dispatch throttling at the
+    /// bound. No effect at s = 0 (lock-step is required for engine-path
+    /// bit-exactness) or in async mode (always pipelined).
+    pub pipeline: bool,
 }
 
 impl Default for PsConfig {
     fn default() -> Self {
-        PsConfig { staleness: 0, asynchronous: false, shards: 8 }
+        PsConfig {
+            staleness: 0,
+            asynchronous: false,
+            shards: 8,
+            republish_tol: 0.0,
+            dense_segments: true,
+            pipeline: true,
+        }
     }
 }
 
@@ -204,6 +228,9 @@ impl RunConfig {
             "ps.staleness",
             "ps.async",
             "ps.shards",
+            "ps.republish_tol",
+            "ps.dense_segments",
+            "ps.pipeline",
         ];
         for k in conf.keys() {
             anyhow::ensure!(KNOWN.contains(&k), "unknown config key: {k}");
@@ -223,8 +250,15 @@ impl RunConfig {
         if let Some(v) = conf.get_usize("ps.async").map_err(anyhow::Error::msg)? {
             c.ps.asynchronous = v != 0;
         }
+        if let Some(v) = conf.get_usize("ps.dense_segments").map_err(anyhow::Error::msg)? {
+            c.ps.dense_segments = v != 0;
+        }
+        if let Some(v) = conf.get_usize("ps.pipeline").map_err(anyhow::Error::msg)? {
+            c.ps.pipeline = v != 0;
+        }
         load!(conf, c, f64:
             "lambda" => c.lambda,
+            "ps.republish_tol" => c.ps.republish_tol,
             "sap.rho" => c.sap.rho,
             "sap.eta" => c.sap.eta,
             "sap.init_priority" => c.sap.init_priority,
@@ -243,7 +277,7 @@ impl RunConfig {
     /// Serialize back to the preset format.
     pub fn to_conf_string(&self) -> String {
         format!(
-            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\n",
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\n",
             self.workers,
             self.lambda,
             self.sap.p_prime_factor,
@@ -263,6 +297,9 @@ impl RunConfig {
             self.ps.staleness,
             usize::from(self.ps.asynchronous),
             self.ps.shards,
+            self.ps.republish_tol,
+            usize::from(self.ps.dense_segments),
+            usize::from(self.ps.pipeline),
         )
     }
 
@@ -277,6 +314,10 @@ impl RunConfig {
         anyhow::ensure!(self.sap.eta > 0.0, "eta must be > 0");
         anyhow::ensure!(self.lambda >= 0.0, "lambda must be >= 0");
         anyhow::ensure!(self.ps.shards >= 1, "ps.shards must be >= 1");
+        anyhow::ensure!(
+            self.ps.republish_tol.is_finite(),
+            "ps.republish_tol must be finite (negative = full republish)"
+        );
         Ok(())
     }
 }
@@ -323,7 +364,10 @@ mod tests {
     fn ps_section_roundtrips_and_validates() {
         let conf = KvConf::parse("[ps]\nstaleness = 4\nasync = 0\nshards = 16\n").unwrap();
         let c = RunConfig::from_kvconf(&conf).unwrap();
-        assert_eq!(c.ps, PsConfig { staleness: 4, asynchronous: false, shards: 16 });
+        assert_eq!(
+            c.ps,
+            PsConfig { staleness: 4, asynchronous: false, shards: 16, ..Default::default() }
+        );
         assert_eq!(c.ps.policy(), crate::ps::StalenessPolicy::Bounded(4));
 
         let conf = KvConf::parse("[ps]\nasync = 1\n").unwrap();
@@ -332,6 +376,26 @@ mod tests {
 
         let bad = KvConf::parse("[ps]\nshards = 0\n").unwrap();
         assert!(RunConfig::from_kvconf(&bad).is_err());
+    }
+
+    #[test]
+    fn ps_dense_republish_pipeline_keys_parse() {
+        let conf = KvConf::parse(
+            "[ps]\nrepublish_tol = 1e-7\ndense_segments = 0\npipeline = 0\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.ps.republish_tol, 1e-7);
+        assert!(!c.ps.dense_segments);
+        assert!(!c.ps.pipeline);
+        // defaults: lossless incremental republish, dense + pipelined on
+        let d = PsConfig::default();
+        assert_eq!(d.republish_tol, 0.0);
+        assert!(d.dense_segments && d.pipeline);
+        // negative tolerance (= full republish) is a legal setting
+        let conf = KvConf::parse("[ps]\nrepublish_tol = -1\n").unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.ps.republish_tol, -1.0);
     }
 
     #[test]

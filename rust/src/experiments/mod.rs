@@ -192,31 +192,74 @@ pub fn ablation(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<
 /// Staleness sweep (the Petuum-style "fresh vs stale" curve): run the
 /// same distributed Lasso through the parameter server at staleness
 /// bounds 0, 2, 8 and fully-async, recording objective-vs-round traces
-/// with per-round staleness and flushed-bytes columns.
+/// with per-round staleness and net-bytes columns. When `out_json` is
+/// given, also emit a `BENCH_ps.json` perf snapshot (bytes flushed /
+/// republished, mean staleness, wall-clock per round) so successive
+/// PRs have a trajectory to compare against.
 pub fn staleness_sweep(
     cfg_base: &RunConfig,
     dataset: &str,
     rounds: usize,
     out_csv: Option<&std::path::Path>,
+    out_json: Option<&std::path::Path>,
 ) -> anyhow::Result<Vec<Trace>> {
     let data = lasso_synth::generate(&lasso_spec(dataset)?, cfg_base.engine.seed);
     let mut traces = Vec::new();
+    let mut rows = String::new();
     for setting in ["0", "2", "8", "async"] {
         let mut cfg = cfg_base.clone();
         cfg.ps.set_staleness_arg(setting)?;
         let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let wall = std::time::Instant::now();
         let report = crate::workers::run_distributed(&mut problem, &cfg, rounds, dataset)?;
+        let elapsed = wall.elapsed().as_secs_f64();
+        let sec_per_round =
+            if report.rounds > 0 { elapsed / report.rounds as f64 } else { 0.0 };
         println!(
-            "{}  (bytes={} gate_waits={} mean_staleness={:.2})",
+            "{}  (flushed={}B republished={}B gate_waits={} mean_staleness={:.2} \
+             {:.3}ms/round)",
             report.trace.summary(),
             report.bytes_flushed,
+            report.bytes_republished,
             report.gate_waits,
-            report.mean_staleness
+            report.mean_staleness,
+            sec_per_round * 1e3
         );
+        if !rows.is_empty() {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"staleness\": \"{}\", \"rounds\": {}, \"bytes_flushed\": {}, \
+             \"bytes_republished\": {}, \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
+             \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
+             \"final_objective\": {:.8e}}}",
+            setting,
+            report.rounds,
+            report.bytes_flushed,
+            report.bytes_republished,
+            report.mean_staleness,
+            report.max_stale_gap,
+            report.gate_waits,
+            report.hash_probes,
+            sec_per_round,
+            report.trace.final_objective()
+        ));
         if let Some(p) = out_csv {
             report.trace.append_csv(p).expect("csv write");
         }
         traces.push(report.trace);
+    }
+    if let Some(p) = out_json {
+        let body = format!(
+            "{{\n  \"bench\": \"ps_staleness_sweep\",\n  \"dataset\": \"{dataset}\",\n  \
+             \"workers\": {},\n  \"republish_tol\": {:e},\n  \"dense_segments\": {},\n  \
+             \"pipeline\": {},\n  \"settings\": [\n{rows}\n  ]\n}}\n",
+            cfg_base.workers,
+            cfg_base.ps.republish_tol,
+            cfg_base.ps.dense_segments,
+            cfg_base.ps.pipeline
+        );
+        std::fs::write(p, body)?;
     }
     Ok(traces)
 }

@@ -3,7 +3,7 @@
 use crate::data::lasso_synth::LassoData;
 use crate::linalg::{axpy, dot, norm2_sq, soft_threshold, DenseMatrix};
 use crate::problem::{Block, ModelProblem, RoundResult};
-use crate::ps::{PsKernel, PsSnapshot};
+use crate::ps::{PsKernel, PsSnapshot, PullSpec};
 use std::sync::Arc;
 
 /// Lasso problem state with native (host) execution.
@@ -12,6 +12,10 @@ pub struct NativeLasso<'a> {
     beta: Vec<f64>,
     /// Residual r = y - X β.
     r: Vec<f32>,
+    /// Image of the residual as last republished to the parameter
+    /// server (`ps_republish`'s incremental baseline). Starts equal to
+    /// `r`, which is what the round-0 `ps_state` seed publishes.
+    r_published: Vec<f32>,
     lambda: f64,
     /// Maintained Σ|β_j| for the incremental objective.
     l1: f64,
@@ -27,6 +31,7 @@ impl<'a> NativeLasso<'a> {
             x: &data.x,
             beta: vec![0.0; data.j()],
             r: data.y.clone(),
+            r_published: data.y.clone(),
             lambda,
             l1: 0.0,
             dep_cache: crate::util::FastHashMap::default(),
@@ -117,15 +122,18 @@ pub struct LassoPsKernel {
 }
 
 impl PsKernel for LassoPsKernel {
-    fn pull_keys(&self, vars: &[usize], _round: u64) -> Vec<usize> {
-        let mut keys: Vec<usize> = (0..self.n).collect();
-        keys.extend(vars.iter().map(|&j| self.n + j));
-        keys
+    fn pull_spec(&self, vars: &[usize], _round: u64) -> PullSpec {
+        // The residual as one contiguous range (a dense-segment slice
+        // read — no per-key enumeration, no hash probes), then the
+        // vars' β cells as scattered keys.
+        let mut spec = PullSpec::from_ranges(vec![(0, self.n)]);
+        spec.keys.extend(vars.iter().map(|&j| self.n + j));
+        spec
     }
 
     fn propose(&self, snap: &PsSnapshot, vars: &[usize], _round: u64) -> Vec<(usize, f64)> {
         // The residual occupies pull positions 0..n and the vars' betas
-        // positions n.. in vars order (see pull_keys) — everything is
+        // positions n.. in vars order (see pull_spec) — everything is
         // addressed positionally, so the snapshot's keyed index is never
         // built. The f64 cells are exact images of the coordinator's f32
         // residual, so the cast reconstructs it bit-for-bit.
@@ -267,8 +275,33 @@ impl ModelProblem for NativeLasso<'_> {
         RoundResult { deltas: out, objective, max_block_work: 1, total_work: total }
     }
 
-    fn ps_republish(&self) -> Vec<(usize, f64)> {
-        self.r.iter().enumerate().map(|(i, &v)| (i, v as f64)).collect()
+    fn ps_dense_segments(&self) -> Vec<(usize, usize)> {
+        // The residual is the contiguous, every-pull-reads-it range; β
+        // keys stay on the hashed path (scattered, a few per round).
+        vec![(0, self.r.len())]
+    }
+
+    fn ps_republish(&mut self, tol: f64, full: bool) -> Vec<(usize, f64)> {
+        if full || tol < 0.0 {
+            self.r_published.copy_from_slice(&self.r);
+            return self.r.iter().enumerate().map(|(i, &v)| (i, v as f64)).collect();
+        }
+        // Incremental: only entries that moved by more than `tol` since
+        // they were last published. With tol = 0.0 this is lossless —
+        // workers see exactly the values a full republish would give
+        // them — because a skipped entry is bitwise unchanged.
+        let tol = tol as f32;
+        let mut out = Vec::new();
+        for (i, (&cur, published)) in self.r.iter().zip(self.r_published.iter_mut()).enumerate()
+        {
+            // Negated <= so a NaN entry (divergent async run) still
+            // republishes instead of silently pinning a stale value.
+            if !((cur - *published).abs() <= tol) {
+                *published = cur;
+                out.push((i, cur as f64));
+            }
+        }
+        out
     }
 }
 

@@ -42,8 +42,14 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
   distributed: --problem lasso|mf --dataset ... --workers N --rounds N --lambda F
                --staleness N|async (SSP bound: pulls at most N rounds stale;
                                     'async' = no gate)  --ps-shards N
+               --republish-tol F (republish only derived entries that moved
+                                  > F since last publish; <0 = full each round)
+               --dense-segments 0|1 (contiguous key ranges as dense slabs)
+               --pipeline 0|1 (dispatch past the bound; SSP gate paces workers)
   staleness-sweep: --dataset tiny|adlike|wide --workers N --rounds N --lambda F
-               (runs staleness 0, 2, 8, async through the parameter server)";
+               --republish-tol F --dense-segments 0|1 --pipeline 0|1
+               (runs staleness 0, 2, 8, async through the parameter server;
+                writes staleness_sweep.csv + BENCH_ps.json to --out)";
 
 fn main() {
     if let Err(e) = run() {
@@ -154,8 +160,15 @@ fn run() -> anyhow::Result<()> {
             let lambda_default = if problem_kind == "mf" { 0.05 } else { 1e-3 };
             cfg.lambda = args.f64_or("lambda", lambda_default)?;
             let rounds = args.usize_or("rounds", 500)?;
-            cfg.ps.set_staleness_arg(&args.str_or("staleness", "0"))?;
+            // only override the preset's staleness when the flag is given
+            if let Some(staleness) = args.opt_str("staleness") {
+                cfg.ps.set_staleness_arg(&staleness)?;
+            }
             cfg.ps.shards = args.usize_or("ps-shards", cfg.ps.shards)?;
+            cfg.ps.republish_tol = args.f64_or("republish-tol", cfg.ps.republish_tol)?;
+            cfg.ps.dense_segments =
+                args.usize_or("dense-segments", usize::from(cfg.ps.dense_segments))? != 0;
+            cfg.ps.pipeline = args.usize_or("pipeline", usize::from(cfg.ps.pipeline))? != 0;
             args.finish()?;
             cfg.validate()?;
             let report = match problem_kind.as_str() {
@@ -178,24 +191,33 @@ fn run() -> anyhow::Result<()> {
             };
             println!("{}", report.trace.summary());
             println!(
-                "rounds={} deltas={} bytes_flushed={} gate_waits={} mean_staleness={:.2}",
+                "rounds={} deltas={} bytes_flushed={} bytes_republished={} gate_waits={} \
+                 mean_staleness={:.2} max_staleness={} hash_probes={}",
                 report.rounds,
                 report.deltas_applied,
                 report.bytes_flushed,
+                report.bytes_republished,
                 report.gate_waits,
-                report.mean_staleness
+                report.mean_staleness,
+                report.max_stale_gap,
+                report.hash_probes
             );
         }
         "staleness-sweep" => {
             let dataset = args.str_or("dataset", "tiny");
             cfg.workers = args.usize_or("workers", 4)?;
             cfg.lambda = args.f64_or("lambda", 1e-3)?;
+            cfg.ps.republish_tol = args.f64_or("republish-tol", cfg.ps.republish_tol)?;
+            cfg.ps.dense_segments =
+                args.usize_or("dense-segments", usize::from(cfg.ps.dense_segments))? != 0;
+            cfg.ps.pipeline = args.usize_or("pipeline", usize::from(cfg.ps.pipeline))? != 0;
             let rounds = args.usize_or("rounds", 300)?;
             args.finish()?;
             let csv = out_dir.join("staleness_sweep.csv");
             let _ = std::fs::remove_file(&csv);
-            experiments::staleness_sweep(&cfg, &dataset, rounds, Some(&csv))?;
-            println!("wrote {}", csv.display());
+            let json = out_dir.join("BENCH_ps.json");
+            experiments::staleness_sweep(&cfg, &dataset, rounds, Some(&csv), Some(&json))?;
+            println!("wrote {} and {}", csv.display(), json.display());
         }
         "ablation" => {
             cfg.workers = args.usize_or("workers", 64)?;

@@ -18,7 +18,7 @@
 //! nothing needs republishing.
 
 use crate::problem::{Block, ModelProblem, RoundResult};
-use crate::ps::{Cell, PsKernel, PsSnapshot};
+use crate::ps::{Cell, PsKernel, PsSnapshot, PullSpec};
 use crate::sparse::CsrMatrix;
 use crate::util::Rng;
 use std::sync::Arc;
@@ -55,32 +55,35 @@ impl MfPsKernel {
 }
 
 impl PsKernel for MfPsKernel {
-    fn pull_keys(&self, vars: &[usize], round: u64) -> Vec<usize> {
+    fn pull_spec(&self, vars: &[usize], round: u64) -> PullSpec {
         let (t, w_phase) = rank_phase(round, self.k);
         let (base_h, base_r) = (self.base_h(), self.base_r());
-        let mut keys = Vec::new();
+        let mut spec = PullSpec::default();
         if w_phase {
-            // The whole h_t row once, then each row's w cell + residual.
-            keys.extend((0..self.m).map(|j| base_h + t * self.m + j));
+            // The whole h_t row is one contiguous range; so is each
+            // row's residual run (A CSR order). Only the per-row w cell
+            // is scattered. `propose` addresses everything by key, so
+            // range-vs-key placement is free to differ.
+            spec.push_range(base_h + t * self.m, self.m);
             for &i in vars {
-                keys.push(i * self.k + t);
-                let lo = self.a.row_start(i);
-                keys.extend((lo..lo + self.a.row_nnz(i)).map(|pos| base_r + pos));
+                spec.push_key(i * self.k + t);
+                spec.push_range(base_r + self.a.row_start(i), self.a.row_nnz(i));
             }
         } else {
-            // The whole w_t column once, then each column's h cell +
-            // residual (residual keys live in A order via the mapping).
-            keys.extend((0..self.n).map(|i| i * self.k + t));
+            // The w_t column is k-strided and each column's residual
+            // entries live in A order via the transpose mapping — both
+            // scattered (but still hash-free under a dense segment).
+            spec.keys.extend((0..self.n).map(|i| i * self.k + t));
             for &v in vars {
                 let j = v - self.n;
-                keys.push(base_h + t * self.m + j);
+                spec.push_key(base_h + t * self.m + j);
                 let lo = self.at.row_start(j);
-                keys.extend(
+                spec.keys.extend(
                     (lo..lo + self.at.row_nnz(j)).map(|e| base_r + self.at_to_a_pos[e]),
                 );
             }
         }
-        keys
+        spec
     }
 
     fn propose(&self, snap: &PsSnapshot, vars: &[usize], round: u64) -> Vec<(usize, f64)> {
@@ -260,10 +263,17 @@ impl ModelProblem for DistMf {
         let round = self.local_round;
         self.local_round += 1;
         let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.iter().copied()).collect();
-        let keys = self.kernel.pull_keys(&vars, round);
-        let cells: Vec<Cell> =
-            keys.iter().map(|&key| Cell { version: 0, value: self.state_value(key) }).collect();
-        let snap = PsSnapshot::new(keys, cells);
+        let spec = self.kernel.pull_spec(&vars, round);
+        let mut cells: Vec<Cell> = Vec::with_capacity(spec.total_len());
+        for &(start, len) in &spec.ranges {
+            cells.extend(
+                (start..start + len).map(|key| Cell { version: 0, value: self.state_value(key) }),
+            );
+        }
+        cells.extend(
+            spec.keys.iter().map(|&key| Cell { version: 0, value: self.state_value(key) }),
+        );
+        let snap = PsSnapshot::from_spec(spec, cells);
         let deltas = self.kernel.propose(&snap, &vars, round);
         let mut result = self.apply_deltas(&deltas);
         result.max_block_work = blocks.iter().map(|b| b.work).max().unwrap_or(0);
@@ -303,6 +313,13 @@ impl ModelProblem for DistMf {
 
     fn ps_kernel(&self) -> Option<Arc<dyn PsKernel>> {
         Some(Arc::clone(&self.kernel) as Arc<dyn PsKernel>)
+    }
+
+    fn ps_dense_segments(&self) -> Vec<(usize, usize)> {
+        // W, H and the per-entry residual are all contiguous and all
+        // touched every sweep: register the whole key space as one
+        // dense segment so no MF traffic ever hashes.
+        vec![(0, self.kernel.base_r() + self.r.len())]
     }
 
     fn apply_deltas(&mut self, deltas: &[(usize, f64)]) -> RoundResult {

@@ -108,11 +108,30 @@ pub trait ModelProblem {
         unimplemented!("problem does not support the parameter-server path")
     }
 
+    /// Contiguous PS key ranges `(start, len)` worth registering as
+    /// dense segments so reads/publishes of those ranges go through
+    /// `Vec<Cell>` slabs instead of hash probes (e.g. the Lasso residual
+    /// `0..n`). Ranges must be disjoint. The default (no ranges) keeps
+    /// the whole key space on the hashed path.
+    fn ps_dense_segments(&self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+
     /// Derived state to overwrite-republish after [`Self::apply_deltas`]
     /// (exact canonical values, version = the applied round + 1). Lasso
     /// republishes its residual this way; problems whose PS cells stay
     /// exact under additive worker pushes return nothing.
-    fn ps_republish(&self) -> Vec<(usize, f64)> {
+    ///
+    /// The contract is *incremental*: return only entries whose value
+    /// moved by more than `tol` since they were last returned (the
+    /// implementation owns the last-published image), so unchanged
+    /// derived state never re-crosses the wire. `tol = 0.0` republishes
+    /// exactly the entries that changed at all (lossless); `tol < 0`
+    /// must republish everything (the pre-incremental behaviour, kept
+    /// as a baseline). When `full` is set the coordinator is forcing a
+    /// periodic full re-sync to bound accumulated drift: republish
+    /// every entry and reset the image.
+    fn ps_republish(&mut self, _tol: f64, _full: bool) -> Vec<(usize, f64)> {
         Vec::new()
     }
 

@@ -8,6 +8,13 @@ use crate::util::FastHashMap;
 /// Wire cost of one coalesced entry: 8-byte key + 8-byte f64 delta.
 pub const BYTES_PER_ENTRY: u64 = 16;
 
+/// Wire bytes for `entries` sparse `(key, value)` pairs — shared by the
+/// flush meter below and the coordinator's republish meter, so both
+/// sides of the `net_bytes` trace column use the same cost model.
+pub fn wire_bytes_for(entries: usize) -> u64 {
+    entries as u64 * BYTES_PER_ENTRY
+}
+
 /// A worker-local accumulation of parameter deltas.
 ///
 /// Coalescing sums deltas for duplicate keys; drain order is first-
@@ -65,7 +72,7 @@ impl DeltaBatch {
 
     /// Wire bytes the current batch would cost to flush.
     pub fn wire_bytes(&self) -> u64 {
-        self.order.len() as u64 * BYTES_PER_ENTRY
+        wire_bytes_for(self.order.len())
     }
 }
 

@@ -1,62 +1,101 @@
-//! The worker-side handle: `pull(keys) -> snapshot` / `push(deltas)` /
-//! `clock()`, the schedule/push/pull split of "Primitives for Dynamic
-//! Big Model Parallelism". A [`PsClient`] owns a worker's delta batch
-//! and talks to the shared [`ParameterServer`]; the compute itself is
-//! supplied by the problem as a [`PsKernel`].
+//! The worker-side handle: `pull(spec) -> snapshot` / `push(deltas)` /
+//! `flush_clock()`, the schedule/push/pull split of "Primitives for
+//! Dynamic Big Model Parallelism". A [`PsClient`] owns a worker's delta
+//! batch and talks to the shared [`ParameterServer`]; the compute
+//! itself is supplied by the problem as a [`PsKernel`]. Pulls are
+//! expressed as a [`PullSpec`] — contiguous ranges (served by dense
+//! segment slabs as slice copies) plus scattered keys — so kernels with
+//! dense shared state never enumerate per-key requests.
 
 use super::batch::DeltaBatch;
 use super::clock::ClockShutdown;
-use super::shard::Cell;
+use super::shard::{Cell, PullSpec};
 use super::ParameterServer;
 use crate::util::FastHashMap;
 use std::cell::OnceCell;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-/// A consistent-enough view of the pulled keys: values + the versions
-/// they were published/updated at. Preserves pull-request key order for
-/// positional access; the key -> position index is built lazily, so
-/// kernels that address the snapshot purely positionally (Lasso's dense
-/// residual prefix) never pay for it.
+/// A consistent-enough view of the pulled cells: values + the versions
+/// they were published/updated at. Cell order is the spec's ranges
+/// first (request order), then its scattered keys, so kernels that
+/// address the snapshot purely positionally (Lasso's dense residual
+/// prefix) pay for no key lookup at all. Keyed access resolves range
+/// members by binary search and scattered keys through a lazily built
+/// index.
 #[derive(Clone, Debug)]
 pub struct PsSnapshot {
+    /// `(first_key, len, positional_base)` per range, sorted by key.
+    range_index: Vec<(usize, usize, usize)>,
+    /// Scattered keys, occupying positions `keys_base..`.
     keys: Vec<usize>,
+    keys_base: usize,
     cells: Vec<Cell>,
     index: OnceCell<FastHashMap<usize, usize>>,
 }
 
 impl PsSnapshot {
+    /// Scattered-keys-only snapshot (the legacy constructor).
     pub fn new(keys: Vec<usize>, cells: Vec<Cell>) -> Self {
-        assert_eq!(keys.len(), cells.len());
-        PsSnapshot { keys, cells, index: OnceCell::new() }
+        Self::from_spec(PullSpec::from_keys(keys), cells)
+    }
+
+    /// Snapshot over a full pull spec; `cells` must follow the spec's
+    /// positional order (all ranges, then the scattered keys).
+    pub fn from_spec(spec: PullSpec, cells: Vec<Cell>) -> Self {
+        assert_eq!(spec.total_len(), cells.len());
+        let mut range_index = Vec::with_capacity(spec.ranges.len());
+        let mut base = 0usize;
+        for &(start, len) in &spec.ranges {
+            range_index.push((start, len, base));
+            base += len;
+        }
+        range_index.sort_unstable_by_key(|&(start, _, _)| start);
+        PsSnapshot { range_index, keys: spec.keys, keys_base: base, cells, index: OnceCell::new() }
     }
 
     pub fn len(&self) -> usize {
-        self.keys.len()
+        self.cells.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.keys.is_empty()
+        self.cells.is_empty()
     }
 
     fn index(&self) -> &FastHashMap<usize, usize> {
-        self.index
-            .get_or_init(|| self.keys.iter().enumerate().map(|(pos, &k)| (k, pos)).collect())
+        self.index.get_or_init(|| {
+            self.keys.iter().enumerate().map(|(i, &k)| (k, self.keys_base + i)).collect()
+        })
+    }
+
+    /// Position of `key` in the snapshot, if pulled. Range members are
+    /// found arithmetically (no hashing); scattered keys through the
+    /// lazy index, so purely positional kernels never build it.
+    #[inline]
+    fn position(&self, key: usize) -> Option<usize> {
+        let idx = self.range_index.partition_point(|&(start, _, _)| start <= key);
+        if idx > 0 {
+            let (start, len, base) = self.range_index[idx - 1];
+            if key < start + len {
+                return Some(base + (key - start));
+            }
+        }
+        self.index().get(&key).copied()
     }
 
     /// Value by key (None if the key was not pulled).
     #[inline]
     pub fn get(&self, key: usize) -> Option<f64> {
-        self.index().get(&key).map(|&pos| self.cells[pos].value)
+        self.position(key).map(|pos| self.cells[pos].value)
     }
 
     /// Version by key (None if the key was not pulled).
     #[inline]
     pub fn version(&self, key: usize) -> Option<u64> {
-        self.index().get(&key).map(|&pos| self.cells[pos].version)
+        self.position(key).map(|pos| self.cells[pos].version)
     }
 
-    /// Value by pull position (the order `pull` was called with).
+    /// Value by pull position (the order the spec was declared in).
     #[inline]
     pub fn value_at(&self, pos: usize) -> f64 {
         self.cells[pos].value
@@ -78,8 +117,10 @@ impl PsSnapshot {
 /// `round` lets problems with intrinsic round structure (e.g. MF rank
 /// sweeps) decode what the round means; flat problems ignore it.
 pub trait PsKernel: Send + Sync {
-    /// The keys a worker must pull to process `vars` in `round`.
-    fn pull_keys(&self, vars: &[usize], round: u64) -> Vec<usize>;
+    /// The cells a worker must pull to process `vars` in `round`:
+    /// contiguous ranges (the dense-segment fast path) plus scattered
+    /// keys.
+    fn pull_spec(&self, vars: &[usize], round: u64) -> PullSpec;
 
     /// Compute state-space deltas for `vars` against the snapshot.
     fn propose(&self, snap: &PsSnapshot, vars: &[usize], round: u64) -> Vec<(usize, f64)>;
@@ -98,22 +139,23 @@ impl PsClient {
     }
 
     /// SSP-gated pull: blocks until the applied state is within the
-    /// server's staleness bound of `round`, then reads the keys.
+    /// server's staleness bound of `round`, then reads the spec.
     /// Returns the snapshot plus `(staleness_gap, had_to_wait)`.
     pub fn pull(
         &self,
-        keys: &[usize],
+        spec: PullSpec,
         round: u64,
     ) -> Result<(PsSnapshot, u64, bool), ClockShutdown> {
         let (gap, waited) = self.server.clock().wait_admit(round, self.server.policy())?;
         let stats = self.server.stats();
         stats.pulls.fetch_add(1, Ordering::Relaxed);
         stats.stale_gap_sum.fetch_add(gap, Ordering::Relaxed);
+        stats.max_stale_gap.fetch_max(gap, Ordering::Relaxed);
         if waited {
             stats.gate_waits.fetch_add(1, Ordering::Relaxed);
         }
-        let cells = self.server.store().read(keys);
-        Ok((PsSnapshot::new(keys.to_vec(), cells), gap, waited))
+        let cells = self.server.store().read_spec(&spec);
+        Ok((PsSnapshot::from_spec(spec, cells), gap, waited))
     }
 
     /// Accumulate deltas into the local batch (coalescing duplicates).
@@ -163,13 +205,33 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_range_lookup_is_arithmetic() {
+        // ranges (10..13) and (20..22) occupy positions 0..3 and 3..5,
+        // scattered keys 99 and 3 positions 5 and 6.
+        let spec = PullSpec { ranges: vec![(10, 3), (20, 2)], keys: vec![99, 3] };
+        let cells: Vec<Cell> =
+            (0..7).map(|i| Cell { version: i as u64, value: i as f64 }).collect();
+        let snap = PsSnapshot::from_spec(spec, cells);
+        assert_eq!(snap.get(10), Some(0.0));
+        assert_eq!(snap.get(12), Some(2.0));
+        assert_eq!(snap.get(20), Some(3.0));
+        assert_eq!(snap.get(21), Some(4.0));
+        assert_eq!(snap.get(99), Some(5.0));
+        assert_eq!(snap.get(3), Some(6.0));
+        assert_eq!(snap.get(13), None, "between ranges");
+        assert_eq!(snap.get(22), None, "past the last range");
+        assert_eq!(snap.version(11), Some(1));
+        assert_eq!(snap.values_f32(0, 3), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
     fn pull_push_flush_roundtrip() {
-        let server =
-            Arc::new(ParameterServer::new(4, 1, StalenessPolicy::Bounded(0)));
+        let server = Arc::new(ParameterServer::new(4, 1, StalenessPolicy::Bounded(0)));
         server.store().publish_dense(&[1.0, 2.0, 3.0], 0);
         let mut client = PsClient::new(Arc::clone(&server), 0);
 
-        let (snap, gap, waited) = client.pull(&[0, 1, 2], 0).unwrap();
+        let (snap, gap, waited) =
+            client.pull(PullSpec::from_keys(vec![0, 1, 2]), 0).unwrap();
         assert_eq!((gap, waited), (0, false));
         assert_eq!(snap.values_f32(0, 3), vec![1.0, 2.0, 3.0]);
 
@@ -183,23 +245,41 @@ mod tests {
     }
 
     #[test]
+    fn ranged_pull_reads_dense_segment() {
+        let server = Arc::new(ParameterServer::with_segments(
+            4,
+            1,
+            StalenessPolicy::Bounded(0),
+            &[(0, 6)],
+        ));
+        let values: Vec<f64> = (0..6).map(|i| i as f64 * 2.0).collect();
+        server.store().publish_dense(&values, 0);
+        let client = PsClient::new(Arc::clone(&server), 0);
+        let (snap, _, _) =
+            client.pull(PullSpec::from_ranges(vec![(2, 3)]), 0).unwrap();
+        assert_eq!(snap.values_f32(0, 3), vec![4.0, 6.0, 8.0]);
+        assert_eq!(snap.get(4), Some(8.0));
+        assert_eq!(server.store().hash_probes(), 0, "dense pull must not hash");
+    }
+
+    #[test]
     fn gated_pull_respects_bound() {
-        let server =
-            Arc::new(ParameterServer::new(2, 1, StalenessPolicy::Bounded(2)));
+        let server = Arc::new(ParameterServer::new(2, 1, StalenessPolicy::Bounded(2)));
         let client = PsClient::new(Arc::clone(&server), 0);
         // applied = 0: rounds 0..=2 admitted without waiting
-        let (_, gap, waited) = client.pull(&[0], 2).unwrap();
+        let (_, gap, waited) = client.pull(PullSpec::from_keys(vec![0]), 2).unwrap();
         assert_eq!((gap, waited), (2, false));
         // round 3 would be 3 stale -> blocks until the server advances
         let t = {
             let server = Arc::clone(&server);
             std::thread::spawn(move || {
                 let client = PsClient::new(server, 0);
-                client.pull(&[0], 3).map(|(_, gap, _waited)| gap)
+                client.pull(PullSpec::from_keys(vec![0]), 3).map(|(_, gap, _waited)| gap)
             })
         };
         std::thread::sleep(std::time::Duration::from_millis(10));
         server.clock().advance_applied(1);
         assert_eq!(t.join().unwrap().unwrap(), 2);
+        assert_eq!(server.stats().max_stale_gap.load(Ordering::Relaxed), 2);
     }
 }

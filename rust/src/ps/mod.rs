@@ -2,41 +2,58 @@
 //! the distributed execution substrate (after Petuum; the client API
 //! follows the STRADS "Primitives" schedule/push/pull split).
 //!
-//! * [`shard`] — hash-partitioned, versioned key-value shards, each
-//!   behind its own lock.
+//! * [`shard`] — versioned cell storage in two representations behind
+//!   one API: **dense segments** (registered contiguous key ranges,
+//!   range-partitioned into `Vec<Cell>` slabs with slice reads and
+//!   publishes — zero hash-map probes) and **hashed shards** (everything
+//!   else, Petuum-style hash-partitioned maps). Each slab/shard sits
+//!   behind its own lock; batched ops take each touched lock once.
 //! * [`clock`] — per-worker SSP clocks and the `StalenessBound(s)` /
-//!   fully-async admission gate.
+//!   fully-async admission gate. Under gate-driven pipelining
+//!   (`workers::service`) this gate — not coordinator dispatch — is
+//!   what paces workers, so scheduling overlaps compute.
 //! * [`batch`] — worker-local delta batching/coalescing with wire-byte
 //!   metering.
 //! * [`client`] — the worker handle (`pull` / `push` / `flush_clock`)
-//!   and the [`PsKernel`] trait problems implement to run on it.
+//!   over [`PullSpec`] requests (ranges + scattered keys), and the
+//!   [`PsKernel`] trait problems implement to run on it.
 //!
-//! The execution loop that wires a [`ParameterServer`] to a
-//! `ModelProblem` and real worker threads lives in `workers::service`.
+//! Republish traffic (the coordinator overwriting derived state, e.g.
+//! the Lasso residual) is tolerance-gated and metered separately from
+//! worker flushes: see `ModelProblem::ps_republish` and the
+//! `ps.republish_tol` config knob. The execution loop that wires a
+//! [`ParameterServer`] to a `ModelProblem` and real worker threads
+//! lives in `workers::service`.
 
 pub mod batch;
 pub mod client;
 pub mod clock;
 pub mod shard;
 
-pub use batch::{BYTES_PER_ENTRY, DeltaBatch};
+pub use batch::{wire_bytes_for, BYTES_PER_ENTRY, DeltaBatch};
 pub use client::{PsClient, PsKernel, PsSnapshot};
 pub use clock::{ClockShutdown, ClockTable, StalenessPolicy};
-pub use shard::{Cell, ShardedStore};
+pub use shard::{Cell, PullSpec, ShardedStore};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Cross-thread run counters (all monotonic).
 #[derive(Debug, Default)]
 pub struct PsStats {
-    /// Coalesced delta bytes flushed through the server.
+    /// Coalesced delta bytes flushed through the server by workers.
     pub bytes_flushed: AtomicU64,
+    /// Derived-state bytes republished by the coordinator (tolerance-
+    /// gated sparse republish + periodic full re-syncs).
+    pub bytes_republished: AtomicU64,
     /// Number of flush batches.
     pub flushes: AtomicU64,
     /// Number of pulls served.
     pub pulls: AtomicU64,
     /// Sum over pulls of the observed staleness gap (rounds behind).
     pub stale_gap_sum: AtomicU64,
+    /// Largest staleness gap any pull ever observed (must stay within
+    /// the SSP bound — the concurrency tests pin this).
+    pub max_stale_gap: AtomicU64,
     /// Pulls that had to block at the SSP gate.
     pub gate_waits: AtomicU64,
 }
@@ -51,6 +68,12 @@ impl PsStats {
             self.stale_gap_sum.load(Ordering::Relaxed) as f64 / pulls as f64
         }
     }
+
+    /// Total wire traffic: worker flushes + coordinator republishes.
+    pub fn net_bytes(&self) -> u64 {
+        self.bytes_flushed.load(Ordering::Relaxed)
+            + self.bytes_republished.load(Ordering::Relaxed)
+    }
 }
 
 /// The server: sharded store + clock table + policy + stats. Shared
@@ -64,8 +87,20 @@ pub struct ParameterServer {
 
 impl ParameterServer {
     pub fn new(shards: usize, workers: usize, policy: StalenessPolicy) -> Self {
+        Self::with_segments(shards, workers, policy, &[])
+    }
+
+    /// Build a server whose store has the given `(start, len)` key
+    /// ranges registered as dense segments (see
+    /// [`ShardedStore::with_segments`]).
+    pub fn with_segments(
+        shards: usize,
+        workers: usize,
+        policy: StalenessPolicy,
+        segments: &[(usize, usize)],
+    ) -> Self {
         ParameterServer {
-            store: ShardedStore::new(shards),
+            store: ShardedStore::with_segments(shards, segments),
             clock: ClockTable::new(workers),
             policy,
             stats: PsStats::default(),
@@ -103,11 +138,27 @@ mod tests {
     }
 
     #[test]
+    fn stats_net_bytes_sums_flush_and_republish() {
+        let stats = PsStats::default();
+        stats.bytes_flushed.store(100, Ordering::Relaxed);
+        stats.bytes_republished.store(40, Ordering::Relaxed);
+        assert_eq!(stats.net_bytes(), 140);
+    }
+
+    #[test]
     fn server_wires_components() {
         let server = ParameterServer::new(4, 2, StalenessPolicy::Async);
         assert_eq!(server.store().num_shards(), 4);
         assert_eq!(server.policy(), StalenessPolicy::Async);
         server.store().publish_dense(&[1.0], 0);
         assert_eq!(server.store().len(), 1);
+    }
+
+    #[test]
+    fn server_with_segments_registers_them() {
+        let server =
+            ParameterServer::with_segments(4, 2, StalenessPolicy::Bounded(1), &[(0, 16)]);
+        assert_eq!(server.store().segments(), vec![(0, 16)]);
+        assert_eq!(server.store().len(), 16, "slab slots exist from registration");
     }
 }

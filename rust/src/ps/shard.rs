@@ -1,10 +1,26 @@
-//! Hash-partitioned, versioned key-value shards — the storage layer of
-//! the parameter server (Petuum-style "sharded key-value store with
-//! versioned values"). Each shard is an independent map behind its own
-//! `RwLock`, so pulls from disjoint shards never contend and pushes
-//! serialize only per shard.
+//! The storage layer of the parameter server: versioned cells living in
+//! one of two representations behind the same `publish` / `add_deltas`
+//! / `read` API.
+//!
+//! * **Dense segments** — registered contiguous key ranges (the Lasso
+//!   residual `0..n`, MF's factor/residual arrays) are range-partitioned
+//!   across the shard count as versioned `Vec<Cell>` slabs, each behind
+//!   its own `RwLock`. Every key in a segment is addressed by arithmetic
+//!   alone and contiguous requests ([`PullSpec`] ranges,
+//!   [`ShardedStore::publish_range`]) move as slice copies — zero
+//!   hash-map probes on the hot path.
+//! * **Hashed shards** — unregistered keys keep the Petuum-style
+//!   hash-partitioned maps, each behind its own `RwLock`, so sparse or
+//!   unbounded key spaces need no registration.
+//!
+//! Batched operations group their entries by lock unit (a hashed shard
+//! or a dense slab) and take each touched lock exactly once. The
+//! [`ShardedStore::hash_probes`] counter meters every probe the hashed
+//! path serves, which is how tests pin the "dense traffic never hashes"
+//! guarantee.
 
 use crate::util::FastHashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 /// One versioned parameter cell. `version` is the server round/clock
@@ -20,22 +36,154 @@ pub struct Cell {
 /// onto one shard under a plain modulus.
 const SPREAD: u64 = 0x517cc1b727220a95;
 
+/// One read request: contiguous key ranges plus scattered keys. Ranges
+/// over a registered dense segment are served as slab slice copies; the
+/// snapshot cell order is all ranges first (in request order), then the
+/// scattered keys (in request order). Ranges must be mutually disjoint.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PullSpec {
+    /// `(first_key, len)` contiguous runs.
+    pub ranges: Vec<(usize, usize)>,
+    /// Individually addressed keys.
+    pub keys: Vec<usize>,
+}
+
+impl PullSpec {
+    pub fn from_keys(keys: Vec<usize>) -> Self {
+        PullSpec { ranges: Vec::new(), keys }
+    }
+
+    pub fn from_ranges(ranges: Vec<(usize, usize)>) -> Self {
+        PullSpec { ranges, keys: Vec::new() }
+    }
+
+    /// Append a contiguous run (empty runs are dropped).
+    pub fn push_range(&mut self, start: usize, len: usize) {
+        if len > 0 {
+            self.ranges.push((start, len));
+        }
+    }
+
+    pub fn push_key(&mut self, key: usize) {
+        self.keys.push(key);
+    }
+
+    /// Total number of cells this spec reads.
+    pub fn total_len(&self) -> usize {
+        self.ranges.iter().map(|&(_, len)| len).sum::<usize>() + self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty() && self.keys.is_empty()
+    }
+}
+
+/// One registered contiguous key range, range-partitioned into
+/// `chunk`-sized slabs (one per shard; the last may be shorter). Every
+/// key in `start..start + len` is slab-addressable by arithmetic alone.
+struct DenseSegment {
+    start: usize,
+    len: usize,
+    chunk: usize,
+    slabs: Vec<RwLock<Vec<Cell>>>,
+}
+
+impl DenseSegment {
+    fn new(start: usize, len: usize, num_shards: usize) -> Self {
+        debug_assert!(len > 0);
+        let chunk = (len + num_shards - 1) / num_shards;
+        let num_slabs = (len + chunk - 1) / chunk;
+        let slabs = (0..num_slabs)
+            .map(|s| {
+                let lo = s * chunk;
+                let hi = (lo + chunk).min(len);
+                RwLock::new(vec![Cell::default(); hi - lo])
+            })
+            .collect();
+        DenseSegment { start, len, chunk, slabs }
+    }
+
+    #[inline]
+    fn contains(&self, key: usize) -> bool {
+        key >= self.start && key < self.start + self.len
+    }
+
+    /// Decompose the in-segment range `rel..rel + len` into per-slab
+    /// runs, calling `f(slab, slab_offset, run_len, taken_so_far)` for
+    /// each — the one place the chunking arithmetic lives.
+    fn for_each_slab(&self, rel: usize, len: usize, mut f: impl FnMut(usize, usize, usize, usize)) {
+        let end = rel + len;
+        let mut rel = rel;
+        let mut taken = 0usize;
+        while rel < end {
+            let slab = rel / self.chunk;
+            let off = rel % self.chunk;
+            let take = (self.chunk - off).min(end - rel);
+            f(slab, off, take, taken);
+            rel += take;
+            taken += take;
+        }
+    }
+}
+
+/// Where a key lives: a dense slab slot or a hashed shard.
+#[derive(Clone, Copy, Debug)]
+enum Slot {
+    Dense { seg: usize, slab: usize, off: usize },
+    Hashed { shard: usize },
+}
+
 /// The sharded store. Keys are `usize` parameter ids in a flat,
 /// problem-defined key space (see `ModelProblem::ps_state`).
 pub struct ShardedStore {
     shards: Vec<RwLock<FastHashMap<usize, Cell>>>,
+    /// Registered dense segments, sorted by start, non-overlapping.
+    segments: Vec<DenseSegment>,
+    /// Probes served by the hashed path (dense-segment traffic never
+    /// increments this — the meter behind the zero-probe guarantee).
+    hash_probes: AtomicU64,
 }
 
 impl ShardedStore {
     pub fn new(num_shards: usize) -> Self {
+        Self::with_segments(num_shards, &[])
+    }
+
+    /// Build a store with the given `(start, len)` key ranges registered
+    /// as dense segments. Ranges must not overlap; zero-length ranges
+    /// are ignored. Registration happens at construction so the store
+    /// can be shared immutably across worker threads afterwards.
+    pub fn with_segments(num_shards: usize, segments: &[(usize, usize)]) -> Self {
         assert!(num_shards >= 1, "need at least one shard");
+        let mut segs: Vec<(usize, usize)> =
+            segments.iter().copied().filter(|&(_, len)| len > 0).collect();
+        segs.sort_unstable_by_key(|&(start, _)| start);
+        for w in segs.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "dense segments must not overlap");
+        }
         ShardedStore {
             shards: (0..num_shards).map(|_| RwLock::new(FastHashMap::default())).collect(),
+            segments: segs
+                .into_iter()
+                .map(|(start, len)| DenseSegment::new(start, len, num_shards))
+                .collect(),
+            hash_probes: AtomicU64::new(0),
         }
     }
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Registered dense segments as `(start, len)` pairs.
+    pub fn segments(&self) -> Vec<(usize, usize)> {
+        self.segments.iter().map(|s| (s.start, s.len)).collect()
+    }
+
+    /// Cumulative hashed-path probe count (reads and writes that went
+    /// through a hash map). Dense-segment accesses never count here.
+    pub fn hash_probes(&self) -> u64 {
+        self.hash_probes.load(Ordering::Relaxed)
     }
 
     /// Deterministic key -> shard routing (pure function of the key and
@@ -45,86 +193,239 @@ impl ShardedStore {
         (((key as u64).wrapping_mul(SPREAD) >> 32) % self.shards.len() as u64) as usize
     }
 
-    /// Total number of cells across all shards.
+    /// Total number of cells across all shards and slabs. Registered
+    /// dense ranges count in full: their slots exist from registration.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().expect("shard lock poisoned").len()).sum()
+        let hashed: usize =
+            self.shards.iter().map(|s| s.read().expect("shard lock poisoned").len()).sum();
+        hashed + self.segments.iter().map(|s| s.len).sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Resolve a key to its storage slot. Segments are few and sorted,
+    /// so this is a short binary search, then arithmetic.
+    #[inline]
+    fn locate(&self, key: usize) -> Slot {
+        let idx = self.segments.partition_point(|s| s.start <= key);
+        if idx > 0 {
+            let seg = &self.segments[idx - 1];
+            if seg.contains(key) {
+                let rel = key - seg.start;
+                return Slot::Dense { seg: idx - 1, slab: rel / seg.chunk, off: rel % seg.chunk };
+            }
+        }
+        Slot::Hashed { shard: self.shard_of(key) }
+    }
+
+    /// Lock-unit id for grouping: hashed shards first, then each
+    /// segment's slabs in registration order.
+    fn unit_of(&self, slot: Slot) -> usize {
+        match slot {
+            Slot::Hashed { shard } => shard,
+            Slot::Dense { seg, slab, .. } => {
+                let mut base = self.shards.len();
+                for s in &self.segments[..seg] {
+                    base += s.slabs.len();
+                }
+                base + slab
+            }
+        }
+    }
+
+    fn num_units(&self) -> usize {
+        self.shards.len() + self.segments.iter().map(|s| s.slabs.len()).sum::<usize>()
+    }
+
+    /// Index of the registered segment fully covering `start..start+len`.
+    fn segment_covering(&self, start: usize, len: usize) -> Option<usize> {
+        let idx = self.segments.partition_point(|s| s.start <= start);
+        if idx == 0 {
+            return None;
+        }
+        let seg = &self.segments[idx - 1];
+        (start >= seg.start && start + len <= seg.start + seg.len).then_some(idx - 1)
+    }
+
     /// Overwrite-publish `(key, value)` entries at `version` (the
     /// coordinator's path: seeding the store and republishing derived
     /// state with exact canonical values).
     pub fn publish(&self, entries: &[(usize, f64)], version: u64) {
-        self.for_each_shard_mut(entries, |map, key, value| {
-            map.insert(key, Cell { version, value });
-        });
+        self.for_each_slot_mut(
+            entries,
+            |cell, value| *cell = Cell { version, value },
+            |map, key, value| {
+                map.insert(key, Cell { version, value });
+            },
+        );
     }
 
-    /// Publish a dense state vector: key `i` gets `values[i]`.
-    pub fn publish_dense(&self, values: &[f64], version: u64) {
-        for (key, &value) in values.iter().enumerate() {
-            let shard = self.shard_of(key);
-            let mut map = self.shards[shard].write().expect("shard lock poisoned");
-            map.insert(key, Cell { version, value });
+    /// Overwrite-publish the contiguous range `start..start +
+    /// values.len()` at `version`. A range fully inside a registered
+    /// segment is written as slab slice fills (zero hash probes); any
+    /// other span falls back to the grouped per-key path.
+    pub fn publish_range(&self, start: usize, values: &[f64], version: u64) {
+        if values.is_empty() {
+            return;
         }
+        if let Some(seg_idx) = self.segment_covering(start, values.len()) {
+            let seg = &self.segments[seg_idx];
+            seg.for_each_slab(start - seg.start, values.len(), |slab, off, take, taken| {
+                let mut cells = seg.slabs[slab].write().expect("slab lock poisoned");
+                for (cell, &value) in
+                    cells[off..off + take].iter_mut().zip(&values[taken..taken + take])
+                {
+                    *cell = Cell { version, value };
+                }
+            });
+            return;
+        }
+        let entries: Vec<(usize, f64)> =
+            values.iter().enumerate().map(|(i, &v)| (start + i, v)).collect();
+        self.publish(&entries, version);
+    }
+
+    /// Publish a dense state vector: key `i` gets `values[i]` (the
+    /// round-0 seed and full-resync path). Grouped per lock unit — each
+    /// touched shard or slab lock is taken exactly once.
+    pub fn publish_dense(&self, values: &[f64], version: u64) {
+        self.publish_range(0, values, version);
     }
 
     /// Apply additive deltas (the worker push path): `value += delta`,
     /// `version = max(version, at)`. Missing keys start from 0.0 at
     /// version 0, matching an all-zero initial model.
     pub fn add_deltas(&self, deltas: &[(usize, f64)], at: u64) {
-        self.for_each_shard_mut(deltas, |map, key, delta| {
-            let cell = map.entry(key).or_default();
-            cell.value += delta;
-            cell.version = cell.version.max(at);
-        });
+        self.for_each_slot_mut(
+            deltas,
+            |cell, delta| {
+                cell.value += delta;
+                cell.version = cell.version.max(at);
+            },
+            |map, key, delta| {
+                let cell = map.entry(key).or_default();
+                cell.value += delta;
+                cell.version = cell.version.max(at);
+            },
+        );
     }
 
-    /// Read cells for `keys`, preserving request order. Each shard's
-    /// read lock is taken once per call. Unpublished keys read as the
-    /// default cell (value 0.0, version 0).
+    /// Read cells for `keys`, preserving request order. Each touched
+    /// lock (shard or slab) is taken once per call. Unpublished keys
+    /// read as the default cell (value 0.0, version 0).
     pub fn read(&self, keys: &[usize]) -> Vec<Cell> {
         let mut out = vec![Cell::default(); keys.len()];
-        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
-        for (pos, &key) in keys.iter().enumerate() {
-            by_shard[self.shard_of(key)].push(pos);
+        self.read_into(keys, &mut out);
+        out
+    }
+
+    /// Read a full [`PullSpec`]: all ranges (slice-copied where a
+    /// registered segment covers them), then the scattered keys.
+    pub fn read_spec(&self, spec: &PullSpec) -> Vec<Cell> {
+        let mut out = Vec::with_capacity(spec.total_len());
+        for &(start, len) in &spec.ranges {
+            self.read_range_into(start, len, &mut out);
         }
-        for (shard, positions) in by_shard.iter().enumerate() {
-            if positions.is_empty() {
-                continue;
-            }
-            let map = self.shards[shard].read().expect("shard lock poisoned");
-            for &pos in positions {
-                if let Some(cell) = map.get(&keys[pos]) {
-                    out[pos] = *cell;
-                }
-            }
+        if !spec.keys.is_empty() {
+            let base = out.len();
+            out.resize(base + spec.keys.len(), Cell::default());
+            self.read_into(&spec.keys, &mut out[base..]);
         }
         out
     }
 
-    /// Group `entries` by shard and apply `f` under each shard's write
-    /// lock (taken once per touched shard).
-    fn for_each_shard_mut(
+    /// Read the contiguous key range `start..start + len`, appending to
+    /// `out`. A range fully inside a registered segment is slice-copied
+    /// slab by slab; anything else falls back to the per-key path.
+    pub fn read_range_into(&self, start: usize, len: usize, out: &mut Vec<Cell>) {
+        if len == 0 {
+            return;
+        }
+        if let Some(seg_idx) = self.segment_covering(start, len) {
+            let seg = &self.segments[seg_idx];
+            seg.for_each_slab(start - seg.start, len, |slab, off, take, _taken| {
+                let cells = seg.slabs[slab].read().expect("slab lock poisoned");
+                out.extend_from_slice(&cells[off..off + take]);
+            });
+            return;
+        }
+        let keys: Vec<usize> = (start..start + len).collect();
+        let base = out.len();
+        out.resize(base + len, Cell::default());
+        self.read_into(&keys, &mut out[base..]);
+    }
+
+    /// Grouped positional read: `out[i]` receives the cell for
+    /// `keys[i]`.
+    fn read_into(&self, keys: &[usize], out: &mut [Cell]) {
+        debug_assert_eq!(keys.len(), out.len());
+        let mut slots: Vec<Slot> = Vec::with_capacity(keys.len());
+        let mut by_unit: Vec<Vec<usize>> = vec![Vec::new(); self.num_units()];
+        for (pos, &key) in keys.iter().enumerate() {
+            let slot = self.locate(key);
+            by_unit[self.unit_of(slot)].push(pos);
+            slots.push(slot);
+        }
+        for positions in by_unit.iter().filter(|p| !p.is_empty()) {
+            match slots[positions[0]] {
+                Slot::Hashed { shard } => {
+                    self.hash_probes.fetch_add(positions.len() as u64, Ordering::Relaxed);
+                    let map = self.shards[shard].read().expect("shard lock poisoned");
+                    for &pos in positions {
+                        if let Some(cell) = map.get(&keys[pos]) {
+                            out[pos] = *cell;
+                        }
+                    }
+                }
+                Slot::Dense { seg, slab, .. } => {
+                    let cells = self.segments[seg].slabs[slab].read().expect("slab lock poisoned");
+                    for &pos in positions {
+                        let Slot::Dense { off, .. } = slots[pos] else { unreachable!() };
+                        out[pos] = cells[off];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Group `entries` by lock unit (hashed shard or dense slab) and
+    /// apply the matching mutator under each unit's write lock, taken
+    /// once per touched unit. Within a unit, entries apply in request
+    /// order, so duplicate keys resolve identically to a sequential
+    /// application.
+    fn for_each_slot_mut(
         &self,
         entries: &[(usize, f64)],
-        mut f: impl FnMut(&mut FastHashMap<usize, Cell>, usize, f64),
+        mut dense: impl FnMut(&mut Cell, f64),
+        mut hashed: impl FnMut(&mut FastHashMap<usize, Cell>, usize, f64),
     ) {
-        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        let mut slots: Vec<Slot> = Vec::with_capacity(entries.len());
+        let mut by_unit: Vec<Vec<usize>> = vec![Vec::new(); self.num_units()];
         for (pos, &(key, _)) in entries.iter().enumerate() {
-            by_shard[self.shard_of(key)].push(pos);
+            let slot = self.locate(key);
+            by_unit[self.unit_of(slot)].push(pos);
+            slots.push(slot);
         }
-        for (shard, positions) in by_shard.iter().enumerate() {
-            if positions.is_empty() {
-                continue;
-            }
-            let mut map = self.shards[shard].write().expect("shard lock poisoned");
-            for &pos in positions {
-                let (key, value) = entries[pos];
-                f(&mut map, key, value);
+        for positions in by_unit.iter().filter(|p| !p.is_empty()) {
+            match slots[positions[0]] {
+                Slot::Hashed { shard } => {
+                    self.hash_probes.fetch_add(positions.len() as u64, Ordering::Relaxed);
+                    let mut map = self.shards[shard].write().expect("shard lock poisoned");
+                    for &pos in positions {
+                        let (key, value) = entries[pos];
+                        hashed(&mut map, key, value);
+                    }
+                }
+                Slot::Dense { seg, slab, .. } => {
+                    let mut cells =
+                        self.segments[seg].slabs[slab].write().expect("slab lock poisoned");
+                    for &pos in positions {
+                        let Slot::Dense { off, .. } = slots[pos] else { unreachable!() };
+                        dense(&mut cells[off], entries[pos].1);
+                    }
+                }
             }
         }
     }
@@ -186,5 +487,86 @@ mod tests {
         store.add_deltas(&[(5, 123.0)], 1);
         store.publish(&[(5, 2.5)], 9);
         assert_eq!(store.read(&[5])[0], Cell { version: 9, value: 2.5 });
+    }
+
+    #[test]
+    fn dense_segment_roundtrip_zero_hash_probes() {
+        let store = ShardedStore::with_segments(4, &[(0, 100)]);
+        let values: Vec<f64> = (0..100).map(|i| i as f64 * 0.5).collect();
+        store.publish_dense(&values, 3);
+        store.add_deltas(&[(7, 1.0), (99, -2.0), (0, 0.25)], 5);
+        let cells = store.read(&[99, 0, 7, 50]);
+        assert_eq!(cells[0], Cell { version: 5, value: 99.0 * 0.5 - 2.0 });
+        assert_eq!(cells[1], Cell { version: 5, value: 0.25 });
+        assert_eq!(cells[2], Cell { version: 5, value: 3.5 + 1.0 });
+        assert_eq!(cells[3], Cell { version: 3, value: 25.0 });
+        let mut range = Vec::new();
+        store.read_range_into(98, 2, &mut range);
+        assert_eq!(range[0].value, 49.0);
+        assert_eq!(range[1].value, 99.0 * 0.5 - 2.0);
+        assert_eq!(store.len(), 100, "registered range counts in full");
+        assert_eq!(store.hash_probes(), 0, "dense traffic must never hash");
+    }
+
+    #[test]
+    fn segment_slabs_partition_the_range() {
+        // 10 keys over 4 shards -> chunk 3: slabs of 3, 3, 3, 1.
+        let store = ShardedStore::with_segments(4, &[(5, 10)]);
+        let values: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        store.publish_range(5, &values, 1);
+        let all: Vec<usize> = (5..15).collect();
+        let cells = store.read(&all);
+        for (i, cell) in cells.iter().enumerate() {
+            assert_eq!(cell.value, i as f64, "key {}", 5 + i);
+            assert_eq!(cell.version, 1);
+        }
+        assert_eq!(store.hash_probes(), 0);
+    }
+
+    #[test]
+    fn mixed_dense_and_hashed_keys_route_correctly() {
+        let store = ShardedStore::with_segments(4, &[(10, 20)]);
+        store.publish(&[(5, 1.0), (15, 2.0), (40, 3.0)], 2);
+        let cells = store.read(&[5, 15, 40, 12]);
+        assert_eq!(cells[0], Cell { version: 2, value: 1.0 });
+        assert_eq!(cells[1], Cell { version: 2, value: 2.0 });
+        assert_eq!(cells[2], Cell { version: 2, value: 3.0 });
+        assert_eq!(cells[3], Cell::default(), "in-segment unpublished key reads as zero");
+        // keys 5 and 40 went through the hashed path (1 write + 1 read
+        // probe each); 15 and 12 are slab slots.
+        assert_eq!(store.hash_probes(), 4);
+    }
+
+    #[test]
+    fn read_spec_orders_ranges_then_keys() {
+        let store = ShardedStore::with_segments(2, &[(0, 8)]);
+        let values: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        store.publish_dense(&values, 1);
+        store.publish(&[(100, 42.0)], 1);
+        let spec = PullSpec { ranges: vec![(4, 2), (0, 3)], keys: vec![100, 6] };
+        assert_eq!(spec.total_len(), 7);
+        let cells = store.read_spec(&spec);
+        let got: Vec<f64> = cells.iter().map(|c| c.value).collect();
+        assert_eq!(got, vec![4.0, 5.0, 0.0, 1.0, 2.0, 42.0, 6.0]);
+        assert_eq!(store.hash_probes(), 2, "only key 100's write + read hash");
+    }
+
+    #[test]
+    fn publish_range_outside_segment_falls_back() {
+        let store = ShardedStore::with_segments(3, &[(50, 10)]);
+        // spans hashed keys and part of the segment: per-key fallback
+        store.publish_range(48, &[1.0, 2.0, 3.0, 4.0], 6);
+        let cells = store.read(&[48, 49, 50, 51]);
+        assert_eq!(cells[0].value, 1.0);
+        assert_eq!(cells[1].value, 2.0);
+        assert_eq!(cells[2].value, 3.0);
+        assert_eq!(cells[3].value, 4.0);
+        assert!(store.hash_probes() > 0, "keys 48/49 must have hashed");
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn overlapping_segments_rejected() {
+        let _ = ShardedStore::with_segments(2, &[(0, 10), (5, 10)]);
     }
 }

@@ -5,29 +5,38 @@
 //! Per round the coordinator plans blocks (the problem's own round
 //! structure if it has one, the SAP scheduler otherwise) and enqueues
 //! them to workers. Each worker, per block: SSP-gated `pull` of the
-//! keys its kernel needs, `propose` deltas against that (possibly
-//! stale) snapshot, `push` them into its coalescing batch, and
-//! `flush_clock` — which applies the batch to the server shards and
-//! forwards it to the coordinator. The coordinator applies complete
-//! rounds in block order to the canonical model (`apply_deltas`),
-//! feeds the scheduler's step 4, republishes derived state, and
-//! advances the applied clock that gates the workers.
+//! spec its kernel needs (contiguous ranges read straight out of dense
+//! segment slabs), `propose` deltas against that (possibly stale)
+//! snapshot, `push` them into its coalescing batch, and `flush_clock` —
+//! which applies the batch to the server shards and forwards it to the
+//! coordinator. The coordinator applies complete rounds in block order
+//! to the canonical model (`apply_deltas`), feeds the scheduler's step
+//! 4, republishes derived state (tolerance-gated: only entries that
+//! moved since their last publish, with a periodic full re-sync — see
+//! `ModelProblem::ps_republish` and `ps.republish_tol`), and advances
+//! the applied clock that gates the workers.
 //!
-//! Staleness discipline: with `StalenessPolicy::Bounded(s)` the
-//! coordinator only dispatches rounds within `s` of the applied clock,
-//! so a round-`r` pull reads state at most `s` rounds behind — the same
-//! bound the client-side gate enforces independently (the gate is what
-//! a networked deployment would rely on; here dispatch throttling makes
-//! it non-blocking). `s = 0` is therefore a BSP barrier and reproduces
-//! the engine path exactly: same plans, same snapshots, same apply
-//! order, same arithmetic. `Async` removes the gate and pipelines a
-//! fixed window of rounds.
+//! Staleness discipline is **gate-driven**: the client-side SSP gate
+//! (`ClockTable::wait_admit`) is the mechanism that bounds how stale a
+//! pull can be, exactly as a networked deployment would rely on it.
+//! With `ps.pipeline` set and `StalenessPolicy::Bounded(s > 0)`, the
+//! coordinator dispatches a few rounds *beyond* the bound so worker
+//! queues are always primed: a worker moves into round `t + 1` the
+//! instant the gate admits it, with no planner round-trip on the
+//! critical path — scheduling overlaps compute, and dispatch depth only
+//! bounds queue memory. `s = 0` keeps lock-step dispatch (planning
+//! round `r` consumes round `r - 1`'s observations, so there is nothing
+//! to overlap) and reproduces the engine path exactly: same plans, same
+//! snapshots, same apply order, same arithmetic. `Async` removes the
+//! gate and pipelines a fixed window of rounds. With `ps.pipeline = 0`,
+//! bounded runs fall back to dispatch throttling at the bound (the
+//! pre-pipelining behaviour, kept for A/B runs).
 
 use crate::config::RunConfig;
 use crate::coordinator::balance::imbalance;
 use crate::metrics::{Trace, TracePoint};
 use crate::problem::ModelProblem;
-use crate::ps::{ParameterServer, PsClient, StalenessPolicy};
+use crate::ps::{wire_bytes_for, ParameterServer, PsClient, StalenessPolicy};
 use crate::schedulers::{DynamicScheduler, Scheduler};
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
@@ -36,6 +45,16 @@ use std::time::Instant;
 
 /// Rounds kept in flight in fully-asynchronous mode.
 const ASYNC_PIPELINE_DEPTH: u64 = 16;
+
+/// Extra rounds dispatched beyond the staleness bound under gate-driven
+/// pipelining: deep enough that the gate (not an empty queue) is what
+/// paces workers, small enough to bound reassembly-buffer memory.
+const GATE_PIPELINE_AHEAD: u64 = 4;
+
+/// Full re-sync period for tolerance-gated republish: every this many
+/// applied rounds the coordinator republishes the complete derived
+/// state, bounding any drift the tolerance admitted.
+const FULL_RESYNC_EVERY: u64 = 32;
 
 /// One block of one round, shipped to a worker.
 struct WorkItem {
@@ -105,12 +124,20 @@ pub struct DistributedReport {
     pub rounds: usize,
     /// State-space deltas applied to the canonical model.
     pub deltas_applied: usize,
-    /// Coalesced delta bytes flushed through the server.
+    /// Coalesced delta bytes flushed through the server by workers.
     pub bytes_flushed: u64,
+    /// Derived-state bytes republished by the coordinator (tolerance-
+    /// gated; the incremental-republish regression tests pin this).
+    pub bytes_republished: u64,
     /// Pulls that had to block at the SSP gate.
     pub gate_waits: u64,
     /// Mean staleness gap over all pulls.
     pub mean_staleness: f64,
+    /// Largest staleness gap any pull observed (always <= the bound).
+    pub max_stale_gap: u64,
+    /// Hash-map probes the store served — dense-segment traffic never
+    /// counts here, so this is the fast-path acceptance meter.
+    pub hash_probes: u64,
 }
 
 /// Run up to `rounds` rounds of `problem` on `cfg.workers` real worker
@@ -129,8 +156,11 @@ pub fn run_distributed(
         .ps_kernel()
         .ok_or_else(|| anyhow::anyhow!("problem does not provide a parameter-server kernel"))?;
 
-    // Seed the server with the full state at version 0.
-    let server = Arc::new(ParameterServer::new(cfg.ps.shards, p, policy));
+    // Register the problem's contiguous key ranges as dense segments
+    // (unless disabled) and seed the server with the full state.
+    let segments =
+        if cfg.ps.dense_segments { problem.ps_dense_segments() } else { Vec::new() };
+    let server = Arc::new(ParameterServer::with_segments(cfg.ps.shards, p, policy, &segments));
     server.store().publish_dense(&problem.ps_state(), 0);
 
     // Worker threads: private work queue in, shared flush channel out.
@@ -145,8 +175,8 @@ pub fn run_distributed(
         let mut client = PsClient::new(Arc::clone(&server), worker);
         handles.push(std::thread::spawn(move || {
             while let Ok(item) = rx.recv() {
-                let keys = kernel.pull_keys(&item.vars, item.round);
-                let Ok((snap, stale_gap, _waited)) = client.pull(&keys, item.round) else {
+                let spec = kernel.pull_spec(&item.vars, item.round);
+                let Ok((snap, stale_gap, _waited)) = client.pull(spec, item.round) else {
                     break; // shutdown while gated
                 };
                 let proposals = kernel.propose(&snap, &item.vars, item.round);
@@ -165,6 +195,13 @@ pub fn run_distributed(
     // Coordinator state: canonical model + (lazily used) SAP scheduler.
     let mut scheduler = DynamicScheduler::new(problem.num_vars(), &cfg.sap, cfg.engine.seed);
     let window = match policy {
+        // s = 0: plan(r) depends on round r-1's observations — lock-step
+        // dispatch, bit-exact with the engine path.
+        StalenessPolicy::Bounded(0) => 0,
+        // Gate-driven pipelining: dispatch past the bound, let the SSP
+        // gate pace the workers.
+        StalenessPolicy::Bounded(s) if cfg.ps.pipeline => s + GATE_PIPELINE_AHEAD,
+        // Legacy dispatch throttling (pipeline disabled).
         StalenessPolicy::Bounded(s) => s,
         StalenessPolicy::Async => ASYNC_PIPELINE_DEPTH,
     };
@@ -178,7 +215,7 @@ pub fn run_distributed(
     let wall = Instant::now();
 
     loop {
-        // Dispatch every round the staleness window admits.
+        // Dispatch every round the pipeline window admits.
         while !converged && planned < rounds && planned <= applied + window {
             let (blocks, problem_planned) = match problem.plan_round(planned as usize, p) {
                 Some(blocks) => (blocks, true),
@@ -217,8 +254,17 @@ pub fn run_distributed(
             if !problem_planned {
                 scheduler.observe(&result);
             }
-            let republish = problem.ps_republish();
+            // Periodic full re-syncs only matter when a positive
+            // tolerance admits drift; tol <= 0 republishes are already
+            // exact (0 = bitwise incremental, < 0 = full every round).
+            let full_resync =
+                cfg.ps.republish_tol > 0.0 && (applied + 1) % FULL_RESYNC_EVERY == 0;
+            let republish = problem.ps_republish(cfg.ps.republish_tol, full_resync);
             if !republish.is_empty() {
+                server
+                    .stats()
+                    .bytes_republished
+                    .fetch_add(wire_bytes_for(republish.len()), Ordering::Relaxed);
                 server.store().publish(&republish, applied + 1);
             }
             server.clock().advance_applied(applied + 1);
@@ -232,7 +278,7 @@ pub fn run_distributed(
                     active_vars: problem.active_vars(),
                     imbalance: round_imbalance,
                     staleness: round_staleness,
-                    net_bytes: server.stats().bytes_flushed.load(Ordering::Relaxed),
+                    net_bytes: server.stats().net_bytes(),
                 });
             }
             applied += 1;
@@ -249,7 +295,7 @@ pub fn run_distributed(
         active_vars: problem.active_vars(),
         imbalance: trace.points.last().map(|pt| pt.imbalance).unwrap_or(1.0),
         staleness: server.stats().mean_staleness(),
-        net_bytes: server.stats().bytes_flushed.load(Ordering::Relaxed),
+        net_bytes: server.stats().net_bytes(),
     });
     drop(work_txs);
     server.clock().shutdown();
@@ -262,8 +308,11 @@ pub fn run_distributed(
         rounds: applied as usize,
         deltas_applied,
         bytes_flushed: stats.bytes_flushed.load(Ordering::Relaxed),
+        bytes_republished: stats.bytes_republished.load(Ordering::Relaxed),
         gate_waits: stats.gate_waits.load(Ordering::Relaxed),
         mean_staleness: stats.mean_staleness(),
+        max_stale_gap: stats.max_stale_gap.load(Ordering::Relaxed),
+        hash_probes: server.store().hash_probes(),
     })
 }
 
@@ -314,6 +363,36 @@ mod tests {
         assert!(
             (local_obj - dist_obj).abs() < 1e-6 * local_obj.abs().max(1.0),
             "local {local_obj} dist {dist_obj}"
+        );
+    }
+
+    #[test]
+    fn dense_segments_skip_residual_hashing() {
+        // With the residual registered (the default), store traffic for
+        // the residual range is slab-addressed: only the scattered β
+        // keys ever hash. Turning registration off must not change the
+        // result — only the probe count.
+        let data = generate(&LassoSynthSpec::tiny(), 24);
+        let mut on_cfg = RunConfig { workers: 2, lambda: 1e-3, ..Default::default() };
+        on_cfg.sap.shards = 2;
+        let mut off_cfg = on_cfg.clone();
+        off_cfg.ps.dense_segments = false;
+
+        let mut on_problem = NativeLasso::new(&data, on_cfg.lambda);
+        let on = run_distributed(&mut on_problem, &on_cfg, 40, "tiny").unwrap();
+        let mut off_problem = NativeLasso::new(&data, off_cfg.lambda);
+        let off = run_distributed(&mut off_problem, &off_cfg, 40, "tiny").unwrap();
+
+        assert_eq!(
+            on.trace.final_objective(),
+            off.trace.final_objective(),
+            "storage representation must be observationally invisible"
+        );
+        assert!(
+            on.hash_probes < off.hash_probes / 10,
+            "dense segments must eliminate residual hashing: on={} off={}",
+            on.hash_probes,
+            off.hash_probes
         );
     }
 

@@ -135,7 +135,7 @@ fn mf_objective_identical_across_partitions() {
 
 #[test]
 fn config_presets_load_and_apply() {
-    for preset in ["fig1", "fig4", "fig5", "quickstart"] {
+    for preset in ["fig1", "fig4", "fig5", "quickstart", "distributed"] {
         let path = format!("configs/{preset}.conf");
         let cfg = RunConfig::from_file(std::path::Path::new(&path))
             .unwrap_or_else(|e| panic!("preset {preset}: {e}"));
@@ -145,6 +145,11 @@ fn config_presets_load_and_apply() {
     let cfg = RunConfig::from_file(std::path::Path::new("configs/fig4.conf")).unwrap();
     assert_eq!(cfg.sap.rho, 0.1);
     assert_eq!(cfg.lambda, 5e-4);
+    // distributed preset documents the ps knobs end-to-end
+    let cfg = RunConfig::from_file(std::path::Path::new("configs/distributed.conf")).unwrap();
+    assert_eq!(cfg.ps.staleness, 2);
+    assert_eq!(cfg.ps.republish_tol, 1e-8);
+    assert!(cfg.ps.dense_segments && cfg.ps.pipeline);
 }
 
 #[test]

@@ -1,13 +1,19 @@
 //! End-to-end coverage of the parameter-server path: any ModelProblem
 //! on real worker threads, staleness-0 parity with the engine
-//! semantics, staleness sweeps, and the new trace metrics.
+//! semantics, staleness sweeps, trace metrics, the gate-driven
+//! pipelined loop under deliberately skewed workers, and the
+//! incremental-republish byte regression.
 
+use std::sync::Arc;
+use std::time::Duration;
 use strads::config::RunConfig;
 use strads::data::lasso_synth::{self, LassoSynthSpec};
 use strads::data::mf_powerlaw::{self, MfSynthSpec};
 use strads::lasso::NativeLasso;
 use strads::mf::DistMf;
 use strads::prelude::*;
+use strads::ps::{PsKernel, PsSnapshot, PullSpec};
+use strads::workers::DistributedReport;
 
 fn lasso_cfg(workers: usize) -> RunConfig {
     let mut cfg = RunConfig { workers, lambda: 1e-3, ..Default::default() };
@@ -63,6 +69,15 @@ fn lasso_staleness_sweep_runs_end_to_end() {
             strads::workers::run_distributed(&mut problem, &cfg, 200, "tiny").unwrap();
         assert!(report.bytes_flushed > 0, "staleness={setting}: no flushes metered");
         assert_eq!(report.rounds, 200, "staleness={setting} stopped early");
+        if let Ok(bound) = setting.parse::<u64>() {
+            // the gate, not dispatch throttling, enforces the bound
+            // under pipelining — no pull may ever exceed it
+            assert!(
+                report.max_stale_gap <= bound,
+                "staleness={setting}: observed gap {}",
+                report.max_stale_gap
+            );
+        }
         if setting != "async" {
             let first = report.trace.points.first().unwrap().objective;
             let last = report.trace.final_objective();
@@ -123,6 +138,184 @@ fn mf_distributed_staleness0_matches_local_rounds() {
         "distributed MF failed to converge: {dist_obj}"
     );
     assert_eq!(report.rounds, rounds);
+}
+
+/// Toy kernel with deliberately skewed per-block compute: block `b`
+/// sleeps proportionally to `b mod 4`, so fast workers race rounds
+/// ahead of the stragglers and pile up on the SSP gate — the
+/// concurrency regime gate-driven pipelining must keep correct.
+struct SkewKernel;
+
+impl PsKernel for SkewKernel {
+    fn pull_spec(&self, vars: &[usize], _round: u64) -> PullSpec {
+        PullSpec::from_keys(vars.to_vec())
+    }
+
+    fn propose(&self, _snap: &PsSnapshot, vars: &[usize], _round: u64) -> Vec<(usize, f64)> {
+        let skew = vars.first().copied().unwrap_or(0) as u64 % 4;
+        std::thread::sleep(Duration::from_micros(300 * skew));
+        vars.iter().map(|&v| (v, 1.0)).collect()
+    }
+}
+
+/// Coordinator side of the skew problem: every var gains exactly +1.0
+/// per round, so the final state is a staleness-independent invariant
+/// the stress test can assert bit-exactly.
+struct SkewProblem {
+    state: Vec<f64>,
+    kernel: Arc<SkewKernel>,
+}
+
+impl SkewProblem {
+    fn new(vars: usize) -> Self {
+        SkewProblem { state: vec![0.0; vars], kernel: Arc::new(SkewKernel) }
+    }
+}
+
+impl ModelProblem for SkewProblem {
+    fn num_vars(&self) -> usize {
+        self.state.len()
+    }
+
+    fn workload(&self, _j: usize) -> u64 {
+        1
+    }
+
+    fn dependencies(&mut self, cands: &[usize]) -> Vec<f64> {
+        vec![0.0; cands.len() * cands.len()]
+    }
+
+    fn update_blocks(&mut self, blocks: &[Block]) -> RoundResult {
+        let mut deltas = Vec::new();
+        for b in blocks {
+            for &v in &b.vars {
+                self.state[v] += 1.0;
+                deltas.push((v, 1.0));
+            }
+        }
+        RoundResult { deltas, objective: Some(0.0), max_block_work: 1, total_work: 1 }
+    }
+
+    fn objective(&mut self) -> f64 {
+        -self.state.iter().sum::<f64>()
+    }
+
+    fn ps_state(&self) -> Vec<f64> {
+        self.state.clone()
+    }
+
+    fn ps_kernel(&self) -> Option<Arc<dyn PsKernel>> {
+        Some(Arc::clone(&self.kernel) as Arc<dyn PsKernel>)
+    }
+
+    fn ps_dense_segments(&self) -> Vec<(usize, usize)> {
+        vec![(0, self.state.len())]
+    }
+
+    fn apply_deltas(&mut self, deltas: &[(usize, f64)]) -> RoundResult {
+        let mut out = Vec::with_capacity(deltas.len());
+        for &(key, delta) in deltas {
+            self.state[key] += delta;
+            out.push((key, delta.abs()));
+        }
+        let total = out.len() as u64;
+        RoundResult {
+            deltas: out,
+            objective: Some(-self.state.iter().sum::<f64>()),
+            max_block_work: 1,
+            total_work: total,
+        }
+    }
+
+    fn plan_round(&mut self, _round: usize, p: usize) -> Option<Vec<Block>> {
+        // Round-robin vars over p blocks: block index == skew class, and
+        // every var is scheduled exactly once per round.
+        let mut blocks: Vec<Block> =
+            (0..p).map(|_| Block { vars: Vec::new(), work: 0 }).collect();
+        for v in 0..self.state.len() {
+            blocks[v % p].vars.push(v);
+            blocks[v % p].work += 1;
+        }
+        blocks.retain(|b| !b.vars.is_empty());
+        Some(blocks)
+    }
+}
+
+#[test]
+fn skewed_workers_respect_staleness_bound_and_terminate() {
+    // N seeded worker threads with skewed per-round compute: the run
+    // must terminate, no pull may ever observe state more than s rounds
+    // stale, and the accumulated state must equal the lock-step result
+    // exactly (the updates commute, so bounded staleness cannot change
+    // the answer — only the overlap).
+    let rounds = 60usize;
+    for (s, pipeline) in [(0u64, true), (1, true), (3, true), (2, false)] {
+        let mut cfg = RunConfig { workers: 4, ..Default::default() };
+        cfg.ps.staleness = s as usize;
+        cfg.ps.pipeline = pipeline;
+        let mut problem = SkewProblem::new(16);
+        let report =
+            strads::workers::run_distributed(&mut problem, &cfg, rounds, "skew").unwrap();
+        assert_eq!(report.rounds, rounds, "s={s} pipeline={pipeline}: must terminate");
+        assert!(
+            report.max_stale_gap <= s,
+            "s={s} pipeline={pipeline}: observed gap {}",
+            report.max_stale_gap
+        );
+        for (v, &x) in problem.state.iter().enumerate() {
+            assert_eq!(x, rounds as f64, "s={s}: var {v} saw {x}");
+        }
+        assert_eq!(
+            report.hash_probes, 0,
+            "whole key space is dense-registered: nothing may hash"
+        );
+        if s == 0 {
+            assert_eq!(report.max_stale_gap, 0, "BSP pulls read exact state");
+        }
+    }
+}
+
+#[test]
+fn incremental_republish_converges_and_cuts_net_bytes() {
+    // The perf-win pin: tolerance-gated residual republish must track
+    // the full-republish objective and move strictly fewer bytes.
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 42);
+    let rounds = 400;
+    let run = |tol: f64| -> DistributedReport {
+        let mut cfg = lasso_cfg(4);
+        cfg.ps.republish_tol = tol;
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        strads::workers::run_distributed(&mut problem, &cfg, rounds, "tiny").unwrap()
+    };
+    let full = run(-1.0); // republish the entire residual every round
+    let exact = run(0.0); // skip only bitwise-unchanged entries
+    let gated = run(1e-8); // tolerance-gated (~1 f32 ulp at residual scale)
+
+    let full_obj = full.trace.final_objective();
+    // tol = 0 is lossless: workers see identical snapshots, so the
+    // entire run is bit-identical to full republish.
+    assert_eq!(exact.trace.final_objective(), full_obj);
+    // tolerance-gated drift is bounded by tol + the periodic full
+    // re-sync: within 1e-9 of the full-republish objective.
+    let gated_obj = gated.trace.final_objective();
+    assert!(
+        (gated_obj - full_obj).abs() < 1e-9 * full_obj.abs().max(1.0),
+        "full {full_obj} gated {gated_obj}"
+    );
+    // The republished traffic shrinks...
+    assert!(
+        exact.bytes_republished < full.bytes_republished,
+        "exact {} vs full {}",
+        exact.bytes_republished,
+        full.bytes_republished
+    );
+    assert!(gated.bytes_republished <= exact.bytes_republished);
+    // ...while worker flush traffic is untouched by the knob...
+    assert_eq!(exact.bytes_flushed, full.bytes_flushed);
+    // ...so the trace's cumulative net_bytes column ends strictly lower.
+    let net = |r: &DistributedReport| r.trace.points.last().unwrap().net_bytes;
+    assert!(net(&exact) < net(&full), "exact {} vs full {}", net(&exact), net(&full));
+    assert!(net(&gated) < net(&full), "gated {} vs full {}", net(&gated), net(&full));
 }
 
 #[test]

@@ -1,0 +1,125 @@
+//! Property-style equivalence tests for the parameter-server storage
+//! layer: for randomized key/delta/publish sequences, a `ShardedStore`
+//! with dense segments registered must be observationally identical —
+//! values, versions, read order — to the hashed-only store. Seeded
+//! deterministic RNG (`strads::util::Rng`), no proptest dependency.
+
+use strads::ps::{Cell, PullSpec, ShardedStore};
+use strads::util::Rng;
+
+const KEY_SPACE: usize = 160;
+
+/// Drive an identical randomized op sequence through both stores and
+/// compare every read. `segs` is registered on `dense` only; the two
+/// stores also use different shard counts, so the comparison covers
+/// routing independence as well.
+fn run_equivalence(seed: u64, segs: &[(usize, usize)]) {
+    let dense = ShardedStore::with_segments(5, segs);
+    let hashed = ShardedStore::new(7);
+    let mut rng = Rng::new(seed);
+    for step in 0..300 {
+        match rng.below(4) {
+            0 => {
+                // sparse publish (duplicate keys allowed: last-in-batch
+                // wins identically on both paths)
+                let n = rng.below(24) + 1;
+                let entries: Vec<(usize, f64)> = (0..n)
+                    .map(|_| (rng.below(KEY_SPACE), rng.f64() * 2.0 - 1.0))
+                    .collect();
+                let version = rng.below(64) as u64;
+                dense.publish(&entries, version);
+                hashed.publish(&entries, version);
+            }
+            1 => {
+                // additive deltas at a random clock
+                let n = rng.below(24) + 1;
+                let deltas: Vec<(usize, f64)> = (0..n)
+                    .map(|_| (rng.below(KEY_SPACE), rng.f64() - 0.5))
+                    .collect();
+                let at = rng.below(64) as u64;
+                dense.add_deltas(&deltas, at);
+                hashed.add_deltas(&deltas, at);
+            }
+            2 => {
+                // contiguous range publish at a random offset
+                let start = rng.below(KEY_SPACE - 1);
+                let len = rng.below(KEY_SPACE - start) + 1;
+                let values: Vec<f64> = (0..len).map(|_| rng.f64()).collect();
+                let version = rng.below(64) as u64;
+                dense.publish_range(start, &values, version);
+                hashed.publish_range(start, &values, version);
+            }
+            _ => {
+                // read a random key set (duplicates + misses included),
+                // preserving request order
+                let n = rng.below(40) + 1;
+                let keys: Vec<usize> =
+                    (0..n).map(|_| rng.below(KEY_SPACE + 20)).collect();
+                assert_eq!(
+                    dense.read(&keys),
+                    hashed.read(&keys),
+                    "step {step}: read divergence for keys {keys:?}"
+                );
+            }
+        }
+    }
+    // Full-sweep read: every cell agrees in value, version, and order.
+    let all: Vec<usize> = (0..KEY_SPACE + 20).collect();
+    assert_eq!(dense.read(&all), hashed.read(&all), "final sweep diverged");
+    // Spec reads (ranges + scattered keys) agree with per-key reads on
+    // both stores and with each other.
+    let spec = PullSpec { ranges: vec![(3, 40), (70, 25)], keys: vec![1, 150, 9, 9] };
+    let dense_cells = dense.read_spec(&spec);
+    assert_eq!(dense_cells, hashed.read_spec(&spec), "spec read diverged");
+    let mut flat_keys: Vec<usize> = (3..43).collect();
+    flat_keys.extend(70..95);
+    flat_keys.extend([1, 150, 9, 9]);
+    assert_eq!(dense_cells, dense.read(&flat_keys), "spec order != flat key order");
+}
+
+#[test]
+fn randomized_ops_dense_segments_match_hashed_store() {
+    for seed in [1u64, 7, 42] {
+        // segments covering parts of the key space (mixed routing)
+        run_equivalence(seed, &[(3, 50), (70, 40)]);
+        // one segment covering everything touched
+        run_equivalence(seed ^ 0xfeed, &[(0, KEY_SPACE + 20)]);
+        // no segments on either side: the harness itself is neutral
+        run_equivalence(seed ^ 0xbeef, &[]);
+    }
+}
+
+#[test]
+fn dense_only_traffic_never_hashes() {
+    // A store whose registered segment covers every touched key serves
+    // the whole randomized sequence with zero hash-map probes — the
+    // unit-level acceptance meter for the dense fast path.
+    let store = ShardedStore::with_segments(4, &[(0, KEY_SPACE)]);
+    let mut rng = Rng::new(99);
+    for _ in 0..100 {
+        let n = rng.below(16) + 1;
+        let entries: Vec<(usize, f64)> =
+            (0..n).map(|_| (rng.below(KEY_SPACE), rng.f64())).collect();
+        match rng.below(3) {
+            0 => store.publish(&entries, rng.below(16) as u64),
+            1 => store.add_deltas(&entries, rng.below(16) as u64),
+            _ => {
+                let keys: Vec<usize> = entries.iter().map(|&(k, _)| k).collect();
+                let _ = store.read(&keys);
+                let _ = store.read_spec(&PullSpec::from_ranges(vec![(0, KEY_SPACE)]));
+            }
+        }
+    }
+    assert_eq!(store.hash_probes(), 0, "registered-range traffic must never hash");
+}
+
+#[test]
+fn unpublished_cells_read_as_default_on_both_paths() {
+    let dense = ShardedStore::with_segments(3, &[(10, 30)]);
+    let hashed = ShardedStore::new(3);
+    let keys: Vec<usize> = (0..60).collect();
+    let d = dense.read(&keys);
+    let h = hashed.read(&keys);
+    assert_eq!(d, h);
+    assert!(d.iter().all(|&c| c == Cell::default()));
+}
