@@ -12,6 +12,7 @@ use strads::coordinator::priority::PriorityKind;
 use strads::coordinator::{merge_balanced, select_independent, ShardSet};
 use strads::data::lasso_synth::{generate, LassoSynthSpec};
 use strads::lasso::NativeLasso;
+use strads::linalg::{axpy, dot};
 use strads::problem::{Block, ModelProblem};
 use strads::schedulers::{DynamicScheduler, Scheduler};
 use strads::util::{Fenwick, Rng};
@@ -22,6 +23,21 @@ fn main() {
     let p = 240;
     let p_prime = 480;
     let mut rng = Rng::new(1);
+
+    // --- linalg kernels (the per-coordinate L1 hot path) ------------
+    let n = 65_536usize;
+    let va: Vec<f32> = (0..n).map(|i| (i as f32 * 0.001).sin()).collect();
+    let vb: Vec<f32> = (0..n).map(|i| (i as f32 * 0.002).cos()).collect();
+    let (med, min, max) = time_fn(3, 50, || {
+        std::hint::black_box(dot(&va, &vb));
+    });
+    report(&format!("linalg: dot {n} (8-lane chunked)"), med, min, max);
+    let mut vy = vb.clone();
+    let (med, min, max) = time_fn(3, 50, || {
+        axpy(0.5, &va, &mut vy);
+        std::hint::black_box(&vy);
+    });
+    report(&format!("linalg: axpy {n} (8-lane chunked)"), med, min, max);
 
     // --- Fenwick ops ------------------------------------------------
     let weights: Vec<f64> = (0..j).map(|_| rng.f64() + 1e-6).collect();

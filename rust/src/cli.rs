@@ -12,8 +12,8 @@
 //!   round (`0` = BSP barrier, exactly the engine semantics; `async`
 //!   removes the gate entirely).
 //! * `--ps-shards N` — number of server shards: hash partitions for
-//!   unregistered keys and the slab count that registered dense
-//!   segments are range-partitioned into (lock granularity).
+//!   unregistered keys. Registered dense segments are single epoch
+//!   slabs (read concurrency via `Arc`-shared epochs) and ignore this.
 //! * `--republish-tol F` — incremental-republish tolerance: after each
 //!   applied round the coordinator republishes only derived-state
 //!   entries (e.g. Lasso residual cells) that moved by more than `F`
@@ -21,8 +21,9 @@
 //!   (default) is lossless — skip only bitwise-unchanged entries;
 //!   negative restores a full republish every round.
 //! * `--dense-segments 0|1` — register the problem's contiguous key
-//!   ranges as dense `Vec<Cell>` slabs (slice reads/publishes, zero
-//!   hash probes); `0` keeps everything on the hashed path.
+//!   ranges as immutable f32 epoch slabs (zero-copy `Arc` range pulls,
+//!   copy-on-publish writes, zero hash probes, 4 bytes/cell pull
+//!   wire); `0` keeps everything on the hashed f64 `Cell` path.
 //! * `--pipeline 0|1` — gate-driven pipelining: with `s > 0`, dispatch
 //!   rounds past the staleness bound and let the SSP gate pace the
 //!   workers so scheduling overlaps compute; `0` throttles dispatch at

@@ -81,14 +81,20 @@ pub struct PsConfig {
     /// Fully asynchronous mode: the gate never blocks and the
     /// coordinator pipelines rounds freely (`staleness` is ignored).
     pub asynchronous: bool,
-    /// Number of server shards: hash partitions for unregistered keys
-    /// and the slab count dense segments are range-partitioned into.
+    /// Number of server shards: hash partitions for unregistered keys.
+    /// Dense segments are epoch slabs (one per segment) and ignore
+    /// this — their read concurrency comes from `Arc`-shared epochs,
+    /// not partitioning.
     pub shards: usize,
     /// Incremental-republish tolerance: after each applied round the
     /// coordinator republishes only derived-state entries that moved by
     /// more than this since their last publish (plus a periodic full
     /// re-sync). `0.0` is lossless (skip only bitwise-unchanged
-    /// entries); `< 0` restores full republish every round.
+    /// entries); `< 0` restores full republish every round. Composes
+    /// with the store's copy-on-publish epochs: the sparse entries that
+    /// do get republished mutate a fresh epoch clone only when workers
+    /// still hold the previous one, and update the slab in place
+    /// otherwise.
     pub republish_tol: f64,
     /// Register the problem's contiguous key ranges as dense segment
     /// slabs (zero hash probes on those ranges). Off = hashed-only

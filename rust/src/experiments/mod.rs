@@ -194,8 +194,10 @@ pub fn ablation(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<
 /// bounds 0, 2, 8 and fully-async, recording objective-vs-round traces
 /// with per-round staleness and net-bytes columns. When `out_json` is
 /// given, also emit a `BENCH_ps.json` perf snapshot (bytes flushed /
-/// republished, mean staleness, wall-clock per round) so successive
-/// PRs have a trajectory to compare against.
+/// republished / pulled, pull bytes per round against the 16-byte-cell
+/// baseline, zero-copy snapshot-clone and copy-on-publish counts, mean
+/// staleness, wall-clock per round) so successive PRs have a
+/// trajectory to compare against.
 pub fn staleness_sweep(
     cfg_base: &RunConfig,
     dataset: &str,
@@ -215,12 +217,22 @@ pub fn staleness_sweep(
         let elapsed = wall.elapsed().as_secs_f64();
         let sec_per_round =
             if report.rounds > 0 { elapsed / report.rounds as f64 } else { 0.0 };
+        let pull_bytes_per_round =
+            if report.rounds > 0 { report.pull_bytes as f64 / report.rounds as f64 } else { 0.0 };
+        // What the replaced 16-byte-per-cell wire format would have
+        // moved for the same pulls — the bandwidth-halving baseline.
+        let pull_bytes_cell_equiv = 16 * report.cells_pulled;
         println!(
-            "{}  (flushed={}B republished={}B gate_waits={} mean_staleness={:.2} \
+            "{}  (flushed={}B republished={}B pulled={}B [{:.1}x under cell wire] \
+             snapshot_clones={} cow_clones={} gate_waits={} mean_staleness={:.2} \
              {:.3}ms/round)",
             report.trace.summary(),
             report.bytes_flushed,
             report.bytes_republished,
+            report.pull_bytes,
+            pull_bytes_cell_equiv as f64 / (report.pull_bytes.max(1)) as f64,
+            report.snapshot_clones,
+            report.cow_clones,
             report.gate_waits,
             report.mean_staleness,
             sec_per_round * 1e3
@@ -230,13 +242,20 @@ pub fn staleness_sweep(
         }
         rows.push_str(&format!(
             "    {{\"staleness\": \"{}\", \"rounds\": {}, \"bytes_flushed\": {}, \
-             \"bytes_republished\": {}, \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
+             \"bytes_republished\": {}, \"pull_bytes\": {}, \"pull_bytes_per_round\": {:.1}, \
+             \"pull_bytes_cell_equiv\": {}, \"snapshot_clones\": {}, \"cow_clones\": {}, \
+             \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
              \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
              \"final_objective\": {:.8e}}}",
             setting,
             report.rounds,
             report.bytes_flushed,
             report.bytes_republished,
+            report.pull_bytes,
+            pull_bytes_per_round,
+            pull_bytes_cell_equiv,
+            report.snapshot_clones,
+            report.cow_clones,
             report.mean_staleness,
             report.max_stale_gap,
             report.gate_waits,

@@ -135,9 +135,11 @@ impl PsKernel for LassoPsKernel {
         // The residual occupies pull positions 0..n and the vars' betas
         // positions n.. in vars order (see pull_spec) — everything is
         // addressed positionally, so the snapshot's keyed index is never
-        // built. The f64 cells are exact images of the coordinator's f32
-        // residual, so the cast reconstructs it bit-for-bit.
-        let r = snap.values_f32(0, self.n);
+        // built. `range_f32` borrows the server's f32 epoch slab
+        // directly (zero copy, zero allocation); the slab is an exact
+        // image of the coordinator's f32 residual, so losing the old
+        // f64 cell round-trip is lossless.
+        let r = snap.range_f32(0, self.n);
         vars.iter()
             .enumerate()
             .map(|(idx, &j)| {

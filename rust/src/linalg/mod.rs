@@ -13,32 +13,47 @@ pub mod dense;
 
 pub use dense::DenseMatrix;
 
-/// Dot product of two equal-length slices (unrolled 4-wide; the
-/// autovectorizer turns this into SIMD on release builds).
+/// Dot product of two equal-length slices: 8 independent lane
+/// accumulators over `chunks_exact(8)` blocks, so the bounds checks
+/// vanish and the autovectorizer maps the lanes onto one SIMD register
+/// (two on AVX) with no cross-lane dependency per step.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let k = i * 4;
-        s0 += a[k] * b[k];
-        s1 += a[k + 1] * b[k + 1];
-        s2 += a[k + 2] * b[k + 2];
-        s3 += a[k + 3] * b[k + 3];
+    let mut acc = [0.0f32; 8];
+    let a_chunks = a.chunks_exact(8);
+    let b_chunks = b.chunks_exact(8);
+    let a_rem = a_chunks.remainder();
+    let b_rem = b_chunks.remainder();
+    for (ca, cb) in a_chunks.zip(b_chunks) {
+        for lane in 0..8 {
+            acc[lane] += ca[lane] * cb[lane];
+        }
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for k in chunks * 4..a.len() {
-        s += a[k] * b[k];
+    // Pairwise lane reduction (balanced tree, not a serial chain).
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for (xi, yi) in a_rem.iter().zip(b_rem) {
+        s += xi * yi;
     }
     s
 }
 
-/// y += alpha * x
+/// y += alpha * x, in `chunks_exact` blocks of 8 so the element loop
+/// compiles branch-free (elementwise: bitwise identical to the scalar
+/// loop, any order).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+    let x_chunks = x.chunks_exact(8);
+    let x_rem = x_chunks.remainder();
+    let mut y_chunks = y.chunks_exact_mut(8);
+    for (cy, cx) in y_chunks.by_ref().zip(x_chunks) {
+        for lane in 0..8 {
+            cy[lane] += alpha * cx[lane];
+        }
+    }
+    for (yi, xi) in y_chunks.into_remainder().iter_mut().zip(x_rem) {
         *yi += alpha * xi;
     }
 }
@@ -85,6 +100,36 @@ mod tests {
         let mut y = [10.0f32, 10.0, 10.0];
         axpy(0.5, &x, &mut y);
         assert_eq!(y, [10.5, 11.0, 11.5]);
+    }
+
+    /// Property check of the chunked kernels against scalar references
+    /// over randomized lengths (covering every remainder class) and
+    /// values: dot within 1e-5 relative of an f64 reference, axpy
+    /// bitwise equal to the scalar loop.
+    #[test]
+    fn chunked_kernels_match_scalar_reference() {
+        let mut rng = crate::util::Rng::new(0xd07);
+        for case in 0..200 {
+            let len = if case < 40 { case } else { rng.below(2000) + 1 };
+            let a: Vec<f32> = (0..len).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+            let alpha = (rng.f64() - 0.5) as f32;
+
+            let reference: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot(&a, &b) as f64;
+            let scale = a.iter().map(|&v| (v as f64).abs()).sum::<f64>().max(1.0);
+            assert!(
+                (got - reference).abs() <= 1e-5 * scale,
+                "len {len}: dot {got} vs reference {reference}"
+            );
+
+            let mut y = b.clone();
+            axpy(alpha, &a, &mut y);
+            for i in 0..len {
+                assert_eq!(y[i], b[i] + alpha * a[i], "len {len} elem {i}");
+            }
+        }
     }
 
     #[test]

@@ -191,12 +191,16 @@ fn run() -> anyhow::Result<()> {
             };
             println!("{}", report.trace.summary());
             println!(
-                "rounds={} deltas={} bytes_flushed={} bytes_republished={} gate_waits={} \
-                 mean_staleness={:.2} max_staleness={} hash_probes={}",
+                "rounds={} deltas={} bytes_flushed={} bytes_republished={} pull_bytes={} \
+                 snapshot_clones={} cow_clones={} gate_waits={} mean_staleness={:.2} \
+                 max_staleness={} hash_probes={}",
                 report.rounds,
                 report.deltas_applied,
                 report.bytes_flushed,
                 report.bytes_republished,
+                report.pull_bytes,
+                report.snapshot_clones,
+                report.cow_clones,
                 report.gate_waits,
                 report.mean_staleness,
                 report.max_stale_gap,

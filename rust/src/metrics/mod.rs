@@ -19,8 +19,10 @@ pub struct TracePoint {
     /// Mean observed pull staleness (rounds behind) this round — the
     /// parameter-server path; 0 on the simulator paths.
     pub staleness: f64,
-    /// Cumulative coalesced delta bytes flushed through the parameter
-    /// server when this point was recorded; 0 on the simulator paths.
+    /// Cumulative parameter-server wire bytes (worker flushes +
+    /// coordinator republishes + worker pulls, with f32 epoch ranges
+    /// metered at 4 bytes/cell) when this point was recorded; 0 on
+    /// the simulator paths.
     pub net_bytes: u64,
 }
 

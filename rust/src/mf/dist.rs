@@ -8,17 +8,42 @@
 //! et al. (the H sweep sees the freshly applied `w_t`), and with a
 //! staleness bound `s` it is bounded-stale CCD.
 //!
-//! PS key space (all f64): `0..n*k` is W row-major (`w[i*k+t]`),
+//! PS key space: `0..n*k` is W row-major (`w[i*k+t]`),
 //! `n*k..n*k+k*m` is H rank-major (`h[t*m+j]`), and the tail
 //! `base_r..base_r+nnz` is the observed-entry residual in A's CSR
-//! order. Workers push deltas for the factor they updated plus the
-//! implied residual deltas; every key is touched by at most one worker
-//! per round (blocks partition rows/columns), so additive server cells
-//! stay exactly in lockstep with the coordinator's canonical arrays and
-//! nothing needs republishing.
+//! order. W, H and R are registered as three dense f32 epoch segments,
+//! and the canonical coordinator arrays are themselves f32: at
+//! staleness 0 a server cell and its canonical counterpart see the
+//! identical sequence of f32 additions (blocks partition rows/columns,
+//! so every key is touched by at most one worker per round, and the
+//! SSP gate serializes rounds), which keeps the epoch slabs bitwise in
+//! lockstep with the coordinator and means nothing needs republishing.
+//! Under staleness >= 1 flushes from different rounds can reach the
+//! server out of the coordinator's apply order, so (addition not being
+//! associative) server cells may drift from the canonical arrays by
+//! rounding — at f32 ulp scale now, exactly as the previous f64 cells
+//! drifted at f64 ulp scale; bounded-stale CCD is stochastic in that
+//! regime and no test or invariant relies on stale-run lockstep.
+//! Workers push f64 deltas for the factor they updated plus the
+//! implied residual deltas.
+//!
+//! The lockstep argument assumes the dense segments are registered
+//! (the default). With `ps.dense_segments = 0` the hashed cells
+//! accumulate the same deltas in f64 while the coordinator rounds to
+//! f32, so pulled values can differ from the canonical arrays by ulps
+//! and staleness-0 parity with the local executor is approximate
+//! rather than bitwise (the A/B knob remains bitwise-faithful for
+//! Lasso, whose residual is coordinator-republished, not
+//! worker-accumulated).
+//!
+//! The f32 state is a deliberate precision trade scoped to this PS
+//! wrapper: it buys the 4-byte wire and the bitwise server lockstep.
+//! [`crate::mf::NativeMf`] remains the full-precision (f64) local
+//! CCD++ backend for engine-path runs that never touch the parameter
+//! server.
 
 use crate::problem::{Block, ModelProblem, RoundResult};
-use crate::ps::{Cell, PsKernel, PsSnapshot, PullSpec};
+use crate::ps::{Cell, PsKernel, PsSnapshot, PullSpec, RangePull};
 use crate::sparse::CsrMatrix;
 use crate::util::Rng;
 use std::sync::Arc;
@@ -145,14 +170,17 @@ impl PsKernel for MfPsKernel {
     }
 }
 
-/// The coordinator-side MF state (all f64, so additive PS cells match
-/// the canonical arrays exactly).
+/// The coordinator-side MF state. The arrays are f32 — the dense
+/// segment wire precision — so the server's additive epoch slabs stay
+/// bitwise identical to the canonical arrays (same f32 additions in
+/// the same per-key order), and the local executor reproduces the
+/// distributed staleness-0 run exactly.
 pub struct DistMf {
     kernel: Arc<MfPsKernel>,
-    w: Vec<f64>,
-    h: Vec<f64>,
+    w: Vec<f32>,
+    h: Vec<f32>,
     /// Residual r_ij = a_ij - w_i . h_j per observed entry, A CSR order.
-    r: Vec<f64>,
+    r: Vec<f32>,
     /// Row/column nnz, the load-balance weights.
     row_weights: Vec<u64>,
     col_weights: Vec<u64>,
@@ -166,8 +194,8 @@ impl DistMf {
         let m = a.ncols();
         let mut rng = Rng::new(seed);
         let scale = 1.0 / (k as f64).sqrt();
-        let w: Vec<f64> = (0..n * k).map(|_| rng.normal() * scale).collect();
-        let h: Vec<f64> = (0..k * m).map(|_| rng.normal() * scale).collect();
+        let w: Vec<f32> = (0..n * k).map(|_| (rng.normal() * scale) as f32).collect();
+        let h: Vec<f32> = (0..k * m).map(|_| (rng.normal() * scale) as f32).collect();
 
         let at = a.transpose();
         // At entry index -> A CSR position (cursor scatter, same trick
@@ -183,13 +211,14 @@ impl DistMf {
             }
         }
 
-        // Initial residual from the fresh factors.
+        // Initial residual from the fresh factors (f64 accumulation,
+        // stored at the f32 state precision).
         let mut r = Vec::with_capacity(a.nnz());
         for i in 0..n {
             let wi = &w[i * k..(i + 1) * k];
             for (j, aij) in a.row(i) {
-                let pred: f64 = (0..k).map(|t| wi[t] * h[t * m + j]).sum();
-                r.push(aij as f64 - pred);
+                let pred: f64 = (0..k).map(|t| wi[t] as f64 * h[t * m + j] as f64).sum();
+                r.push((aij as f64 - pred) as f32);
             }
         }
 
@@ -225,7 +254,7 @@ impl DistMf {
     }
 
     #[inline]
-    fn state_value(&self, key: usize) -> f64 {
+    fn state_f32(&self, key: usize) -> f32 {
         let (base_h, base_r) = (self.kernel.base_h(), self.kernel.base_r());
         if key < base_h {
             self.w[key]
@@ -258,22 +287,28 @@ impl ModelProblem for DistMf {
 
     fn update_blocks(&mut self, blocks: &[Block]) -> RoundResult {
         // Local (engine-path) execution of one PS round: snapshot own
-        // state, run the kernel, apply — identical math to the
-        // distributed path at staleness 0.
+        // state through the same range-view representation the
+        // distributed pull produces, run the kernel, apply — identical
+        // math to the distributed path at staleness 0.
         let round = self.local_round;
         self.local_round += 1;
         let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.iter().copied()).collect();
         let spec = self.kernel.pull_spec(&vars, round);
-        let mut cells: Vec<Cell> = Vec::with_capacity(spec.total_len());
-        for &(start, len) in &spec.ranges {
-            cells.extend(
-                (start..start + len).map(|key| Cell { version: 0, value: self.state_value(key) }),
-            );
-        }
-        cells.extend(
-            spec.keys.iter().map(|&key| Cell { version: 0, value: self.state_value(key) }),
-        );
-        let snap = PsSnapshot::from_spec(spec, cells);
+        let ranges: Vec<RangePull> = spec
+            .ranges
+            .iter()
+            .map(|&(start, len)| {
+                let values: Vec<f32> =
+                    (start..start + len).map(|key| self.state_f32(key)).collect();
+                RangePull::owned(start, 0, values)
+            })
+            .collect();
+        let cells: Vec<Cell> = spec
+            .keys
+            .iter()
+            .map(|&key| Cell { version: 0, value: self.state_f32(key) as f64 })
+            .collect();
+        let snap = PsSnapshot::from_pull(ranges, spec.keys, cells);
         let deltas = self.kernel.propose(&snap, &vars, round);
         let mut result = self.apply_deltas(&deltas);
         result.max_block_work = blocks.iter().map(|b| b.work).max().unwrap_or(0);
@@ -282,7 +317,7 @@ impl ModelProblem for DistMf {
     }
 
     fn objective(&mut self) -> f64 {
-        // Exact recompute from the factors, non-destructive: the
+        // Exact f64 recompute from the factors, non-destructive: the
         // maintained residual stays additive so it remains in lockstep
         // with the PS cells.
         let (n, m, k) = (self.kernel.n, self.kernel.m, self.kernel.k);
@@ -290,13 +325,14 @@ impl ModelProblem for DistMf {
         for i in 0..n {
             let wi = &self.w[i * k..(i + 1) * k];
             for (j, aij) in self.kernel.a.row(i) {
-                let pred: f64 = (0..k).map(|t| wi[t] * self.h[t * m + j]).sum();
+                let pred: f64 =
+                    (0..k).map(|t| wi[t] as f64 * self.h[t * m + j] as f64).sum();
                 let e = aij as f64 - pred;
                 sse += e * e;
             }
         }
-        let reg: f64 = self.w.iter().map(|v| v * v).sum::<f64>()
-            + self.h.iter().map(|v| v * v).sum::<f64>();
+        let reg: f64 = self.w.iter().map(|&v| v as f64 * v as f64).sum::<f64>()
+            + self.h.iter().map(|&v| v as f64 * v as f64).sum::<f64>();
         sse + self.kernel.lambda * reg
     }
 
@@ -305,9 +341,9 @@ impl ModelProblem for DistMf {
     }
 
     fn ps_state(&self) -> Vec<f64> {
-        let mut state = self.w.clone();
-        state.extend_from_slice(&self.h);
-        state.extend_from_slice(&self.r);
+        let mut state: Vec<f64> = self.w.iter().map(|&v| v as f64).collect();
+        state.extend(self.h.iter().map(|&v| v as f64));
+        state.extend(self.r.iter().map(|&v| v as f64));
         state
     }
 
@@ -317,9 +353,11 @@ impl ModelProblem for DistMf {
 
     fn ps_dense_segments(&self) -> Vec<(usize, usize)> {
         // W, H and the per-entry residual are all contiguous and all
-        // touched every sweep: register the whole key space as one
-        // dense segment so no MF traffic ever hashes.
-        vec![(0, self.kernel.base_r() + self.r.len())]
+        // touched every sweep. Three segments (not one) so a phase's
+        // copy-on-publish clones only the slabs it writes, and no pull
+        // range ever spans a factor/residual boundary.
+        let (base_h, base_r) = (self.kernel.base_h(), self.kernel.base_r());
+        vec![(0, base_h), (base_h, base_r - base_h), (base_r, self.r.len())]
     }
 
     fn apply_deltas(&mut self, deltas: &[(usize, f64)]) -> RoundResult {
@@ -327,15 +365,17 @@ impl ModelProblem for DistMf {
         let (k, m, n) = (self.kernel.k, self.kernel.m, self.kernel.n);
         let mut out = Vec::new();
         for &(key, delta) in deltas {
+            // f32 accumulation, matching the server's epoch slabs bit
+            // for bit (same delta, same order, same precision).
             if key < base_h {
-                self.w[key] += delta;
+                self.w[key] += delta as f32;
                 out.push((key / k, delta.abs()));
             } else if key < base_r {
                 let idx = key - base_h;
-                self.h[idx] += delta;
+                self.h[idx] += delta as f32;
                 out.push((n + idx % m, delta.abs()));
             } else {
-                self.r[key - base_r] += delta;
+                self.r[key - base_r] += delta as f32;
             }
         }
         let total = out.len() as u64;
@@ -386,7 +426,10 @@ mod tests {
         for it in 0..4 {
             run_rounds_local(&mut p, one_iter, 4);
             let obj = p.objective();
-            assert!(obj < prev + 1e-9, "iter {it}: {obj} vs {prev}");
+            // 1e-6 slack: each f32-rounded update sits within O(eps^2)
+            // of the per-coordinate minimizer, so tiny upticks are
+            // rounding, not regressions.
+            assert!(obj < prev + 1e-6, "iter {it}: {obj} vs {prev}");
             prev = obj;
         }
     }
@@ -418,7 +461,7 @@ mod tests {
     #[test]
     fn residual_stays_consistent_with_factors() {
         // After updates, the maintained additive residual must match
-        // a_ij - w_i . h_j to f64 rounding.
+        // a_ij - w_i . h_j to f32 accumulation accuracy.
         let mut p = tiny(14);
         let rounds = p.rounds_for_iters(2);
         run_rounds_local(&mut p, rounds, 4);
@@ -427,11 +470,12 @@ mod tests {
         let a = Arc::clone(&p.kernel.a);
         for i in 0..p.n() {
             for (j, aij) in a.row(i) {
-                let pred: f64 =
-                    (0..k).map(|t| p.w[i * k + t] * p.h[t * m + j]).sum();
+                let pred: f64 = (0..k)
+                    .map(|t| p.w[i * k + t] as f64 * p.h[t * m + j] as f64)
+                    .sum();
                 let want = aij as f64 - pred;
                 assert!(
-                    (p.r[pos] - want).abs() < 1e-9,
+                    (p.r[pos] as f64 - want).abs() < 1e-4,
                     "entry ({i},{j}): maintained {} vs exact {want}",
                     p.r[pos]
                 );
@@ -443,17 +487,18 @@ mod tests {
     #[test]
     fn block_split_does_not_change_result() {
         // Rows/cols within a phase are independent: 1-worker and
-        // 8-worker plans must produce identical factors at staleness 0.
+        // 8-worker plans must produce bitwise identical factors at
+        // staleness 0 (same snapshots, same f32 additions per key).
         let mut a1 = tiny(15);
         let mut a8 = tiny(15);
         let rounds = a1.rounds_for_iters(2);
         run_rounds_local(&mut a1, rounds, 1);
         run_rounds_local(&mut a8, rounds, 8);
         for (x, y) in a1.w.iter().zip(a8.w.iter()) {
-            assert!((x - y).abs() < 1e-12);
+            assert_eq!(x, y);
         }
         for (x, y) in a1.h.iter().zip(a8.h.iter()) {
-            assert!((x - y).abs() < 1e-12);
+            assert_eq!(x, y);
         }
     }
 }

@@ -3,33 +3,43 @@
 //! Dynamic Big Model Parallelism". A [`PsClient`] owns a worker's delta
 //! batch and talks to the shared [`ParameterServer`]; the compute
 //! itself is supplied by the problem as a [`PsKernel`]. Pulls are
-//! expressed as a [`PullSpec`] — contiguous ranges (served by dense
-//! segment slabs as slice copies) plus scattered keys — so kernels with
-//! dense shared state never enumerate per-key requests.
+//! expressed as a [`PullSpec`] — contiguous ranges (served as zero-copy
+//! `Arc` views of dense-segment epochs) plus scattered keys — so
+//! kernels with dense shared state never enumerate per-key requests and
+//! never pay a copy for the dense part.
 
 use super::batch::DeltaBatch;
 use super::clock::ClockShutdown;
-use super::shard::{Cell, PullSpec};
+use super::shard::{Cell, PullSpec, RangePull};
 use super::ParameterServer;
 use crate::util::FastHashMap;
 use std::cell::OnceCell;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-/// A consistent-enough view of the pulled cells: values + the versions
-/// they were published/updated at. Cell order is the spec's ranges
+/// A consistent-enough view of the pulled state. Pulled ranges are
+/// immutable f32 epoch views ([`RangePull`]) — for a range covered by a
+/// dense segment the snapshot holds an `Arc` into the server's
+/// published slab, so constructing the snapshot copied nothing and the
+/// view stays bitwise stable however the server advances. Scattered
+/// keys are versioned [`Cell`]s. Positional order is the spec's ranges
 /// first (request order), then its scattered keys, so kernels that
 /// address the snapshot purely positionally (Lasso's dense residual
-/// prefix) pay for no key lookup at all. Keyed access resolves range
-/// members by binary search and scattered keys through a lazily built
-/// index.
+/// prefix via [`PsSnapshot::range_f32`]) pay for no key lookup at all.
+/// Keyed access resolves range members by binary search and scattered
+/// keys through a lazily built index.
 #[derive(Clone, Debug)]
 pub struct PsSnapshot {
-    /// `(first_key, len, positional_base)` per range, sorted by key.
+    /// `(first_key, len, range_idx)` per range, sorted by key.
     range_index: Vec<(usize, usize, usize)>,
+    /// Pulled ranges in request order.
+    ranges: Vec<RangePull>,
+    /// `bases[i]` is `ranges[i]`'s first snapshot position.
+    bases: Vec<usize>,
     /// Scattered keys, occupying positions `keys_base..`.
     keys: Vec<usize>,
     keys_base: usize,
+    /// Cells for the scattered keys only (ranges carry f32 images).
     cells: Vec<Cell>,
     index: OnceCell<FastHashMap<usize, usize>>,
 }
@@ -37,29 +47,39 @@ pub struct PsSnapshot {
 impl PsSnapshot {
     /// Scattered-keys-only snapshot (the legacy constructor).
     pub fn new(keys: Vec<usize>, cells: Vec<Cell>) -> Self {
-        Self::from_spec(PullSpec::from_keys(keys), cells)
+        Self::from_pull(Vec::new(), keys, cells)
     }
 
-    /// Snapshot over a full pull spec; `cells` must follow the spec's
-    /// positional order (all ranges, then the scattered keys).
-    pub fn from_spec(spec: PullSpec, cells: Vec<Cell>) -> Self {
-        assert_eq!(spec.total_len(), cells.len());
-        let mut range_index = Vec::with_capacity(spec.ranges.len());
+    /// Snapshot over pulled ranges plus scattered keys; `cells` must
+    /// hold one cell per scattered key, in key order.
+    pub fn from_pull(ranges: Vec<RangePull>, keys: Vec<usize>, cells: Vec<Cell>) -> Self {
+        assert_eq!(keys.len(), cells.len());
+        let mut bases = Vec::with_capacity(ranges.len());
         let mut base = 0usize;
-        for &(start, len) in &spec.ranges {
-            range_index.push((start, len, base));
-            base += len;
+        let mut range_index = Vec::with_capacity(ranges.len());
+        for (ri, r) in ranges.iter().enumerate() {
+            bases.push(base);
+            range_index.push((r.start(), r.len(), ri));
+            base += r.len();
         }
         range_index.sort_unstable_by_key(|&(start, _, _)| start);
-        PsSnapshot { range_index, keys: spec.keys, keys_base: base, cells, index: OnceCell::new() }
+        PsSnapshot {
+            range_index,
+            ranges,
+            bases,
+            keys,
+            keys_base: base,
+            cells,
+            index: OnceCell::new(),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.cells.len()
+        self.keys_base + self.cells.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.cells.is_empty()
+        self.len() == 0
     }
 
     fn index(&self) -> &FastHashMap<usize, usize> {
@@ -68,48 +88,84 @@ impl PsSnapshot {
         })
     }
 
-    /// Position of `key` in the snapshot, if pulled. Range members are
+    /// The pulled range containing `key`, if any, with the in-range
+    /// offset. Ranges are few and sorted: a short binary search.
+    #[inline]
+    fn range_of(&self, key: usize) -> Option<(usize, usize)> {
+        let idx = self.range_index.partition_point(|&(start, _, _)| start <= key);
+        if idx > 0 {
+            let (start, len, ri) = self.range_index[idx - 1];
+            if key < start + len {
+                return Some((ri, key - start));
+            }
+        }
+        None
+    }
+
+    /// Value by key (None if the key was not pulled). Range members are
     /// found arithmetically (no hashing); scattered keys through the
     /// lazy index, so purely positional kernels never build it.
     #[inline]
-    fn position(&self, key: usize) -> Option<usize> {
-        let idx = self.range_index.partition_point(|&(start, _, _)| start <= key);
-        if idx > 0 {
-            let (start, len, base) = self.range_index[idx - 1];
-            if key < start + len {
-                return Some(base + (key - start));
-            }
-        }
-        self.index().get(&key).copied()
-    }
-
-    /// Value by key (None if the key was not pulled).
-    #[inline]
     pub fn get(&self, key: usize) -> Option<f64> {
-        self.position(key).map(|pos| self.cells[pos].value)
+        if let Some((ri, off)) = self.range_of(key) {
+            return Some(self.ranges[ri].values()[off] as f64);
+        }
+        self.index().get(&key).map(|&pos| self.cells[pos - self.keys_base].value)
     }
 
-    /// Version by key (None if the key was not pulled).
+    /// Version by key (None if the key was not pulled): the epoch
+    /// version for range members, the cell version for scattered keys.
     #[inline]
     pub fn version(&self, key: usize) -> Option<u64> {
-        self.position(key).map(|pos| self.cells[pos].version)
+        if let Some((ri, _)) = self.range_of(key) {
+            return Some(self.ranges[ri].version());
+        }
+        self.index().get(&key).map(|&pos| self.cells[pos - self.keys_base].version)
     }
 
     /// Value by pull position (the order the spec was declared in).
     #[inline]
     pub fn value_at(&self, pos: usize) -> f64 {
-        self.cells[pos].value
+        if pos < self.keys_base {
+            let ri = self.bases.partition_point(|&b| b <= pos) - 1;
+            self.ranges[ri].values()[pos - self.bases[ri]] as f64
+        } else {
+            self.cells[pos - self.keys_base].value
+        }
     }
 
-    /// Values of positions `start..start + len` as f32 (e.g. a dense
-    /// residual range pulled as a contiguous prefix).
-    pub fn values_f32(&self, start: usize, len: usize) -> Vec<f32> {
-        self.cells[start..start + len].iter().map(|c| c.value as f32).collect()
+    /// The f32 image of positions `start..start + len` — zero copy, no
+    /// allocation: this borrows straight out of the pulled range's
+    /// (possibly server-shared) slab. The span must lie within a single
+    /// pulled range; panics otherwise (a kernel/spec mismatch).
+    pub fn range_f32(&self, start: usize, len: usize) -> &[f32] {
+        if len == 0 {
+            return &[];
+        }
+        assert!(
+            start < self.keys_base,
+            "range_f32 position {start} is past the pulled ranges"
+        );
+        let ri = self.bases.partition_point(|&b| b <= start) - 1;
+        let off = start - self.bases[ri];
+        let values = self.ranges[ri].values();
+        assert!(
+            off + len <= values.len(),
+            "range_f32 span {start}+{len} crosses a pulled-range boundary"
+        );
+        &values[off..off + len]
     }
 
-    /// Oldest version among the pulled cells (staleness diagnostics).
+    /// Oldest version among the pulled data (staleness diagnostics) —
+    /// per-epoch metadata for ranges plus the scattered cells, so this
+    /// is O(ranges + scattered keys), not a scan of every pulled value.
     pub fn min_version(&self) -> u64 {
-        self.cells.iter().map(|c| c.version).min().unwrap_or(0)
+        self.ranges
+            .iter()
+            .map(RangePull::version)
+            .chain(self.cells.iter().map(|c| c.version))
+            .min()
+            .unwrap_or(0)
     }
 }
 
@@ -118,8 +174,8 @@ impl PsSnapshot {
 /// sweeps) decode what the round means; flat problems ignore it.
 pub trait PsKernel: Send + Sync {
     /// The cells a worker must pull to process `vars` in `round`:
-    /// contiguous ranges (the dense-segment fast path) plus scattered
-    /// keys.
+    /// contiguous ranges (the zero-copy dense-segment fast path) plus
+    /// scattered keys.
     fn pull_spec(&self, vars: &[usize], round: u64) -> PullSpec;
 
     /// Compute state-space deltas for `vars` against the snapshot.
@@ -154,8 +210,11 @@ impl PsClient {
         if waited {
             stats.gate_waits.fetch_add(1, Ordering::Relaxed);
         }
-        let cells = self.server.store().read_spec(&spec);
-        Ok((PsSnapshot::from_spec(spec, cells), gap, waited))
+        let pulled = self.server.store().read_spec(&spec);
+        stats.bytes_pulled.fetch_add(pulled.wire_bytes(), Ordering::Relaxed);
+        stats.cells_pulled.fetch_add(pulled.total_cells() as u64, Ordering::Relaxed);
+        stats.snapshot_clones.fetch_add(pulled.shared_ranges() as u64, Ordering::Relaxed);
+        Ok((PsSnapshot::from_pull(pulled.ranges, spec.keys, pulled.cells), gap, waited))
     }
 
     /// Accumulate deltas into the local batch (coalescing duplicates).
@@ -208,10 +267,14 @@ mod tests {
     fn snapshot_range_lookup_is_arithmetic() {
         // ranges (10..13) and (20..22) occupy positions 0..3 and 3..5,
         // scattered keys 99 and 3 positions 5 and 6.
-        let spec = PullSpec { ranges: vec![(10, 3), (20, 2)], keys: vec![99, 3] };
-        let cells: Vec<Cell> =
-            (0..7).map(|i| Cell { version: i as u64, value: i as f64 }).collect();
-        let snap = PsSnapshot::from_spec(spec, cells);
+        let ranges = vec![
+            RangePull::owned(10, 7, vec![0.0, 1.0, 2.0]),
+            RangePull::owned(20, 9, vec![3.0, 4.0]),
+        ];
+        let cells =
+            vec![Cell { version: 5, value: 5.0 }, Cell { version: 6, value: 6.0 }];
+        let snap = PsSnapshot::from_pull(ranges, vec![99, 3], cells);
+        assert_eq!(snap.len(), 7);
         assert_eq!(snap.get(10), Some(0.0));
         assert_eq!(snap.get(12), Some(2.0));
         assert_eq!(snap.get(20), Some(3.0));
@@ -220,8 +283,24 @@ mod tests {
         assert_eq!(snap.get(3), Some(6.0));
         assert_eq!(snap.get(13), None, "between ranges");
         assert_eq!(snap.get(22), None, "past the last range");
-        assert_eq!(snap.version(11), Some(1));
-        assert_eq!(snap.values_f32(0, 3), vec![0.0, 1.0, 2.0]);
+        assert_eq!(snap.version(11), Some(7), "range members report the epoch version");
+        assert_eq!(snap.version(99), Some(5));
+        assert_eq!(snap.value_at(3), 3.0);
+        assert_eq!(snap.value_at(5), 5.0);
+        assert_eq!(snap.range_f32(0, 3), &[0.0f32, 1.0, 2.0]);
+        assert_eq!(snap.range_f32(3, 2), &[3.0f32, 4.0]);
+        assert_eq!(snap.min_version(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "crosses")]
+    fn range_f32_must_not_cross_pulled_ranges() {
+        let ranges = vec![
+            RangePull::owned(0, 0, vec![0.0, 1.0]),
+            RangePull::owned(10, 0, vec![2.0]),
+        ];
+        let snap = PsSnapshot::from_pull(ranges, Vec::new(), Vec::new());
+        let _ = snap.range_f32(1, 2);
     }
 
     #[test]
@@ -233,7 +312,8 @@ mod tests {
         let (snap, gap, waited) =
             client.pull(PullSpec::from_keys(vec![0, 1, 2]), 0).unwrap();
         assert_eq!((gap, waited), (0, false));
-        assert_eq!(snap.values_f32(0, 3), vec![1.0, 2.0, 3.0]);
+        assert_eq!(snap.get(0), Some(1.0));
+        assert_eq!(snap.get(2), Some(3.0));
 
         client.push(&[(1, 0.5), (1, 0.5), (2, -1.0)]);
         let flushed = client.flush_clock(0);
@@ -245,7 +325,7 @@ mod tests {
     }
 
     #[test]
-    fn ranged_pull_reads_dense_segment() {
+    fn ranged_pull_is_a_zero_copy_epoch_view() {
         let server = Arc::new(ParameterServer::with_segments(
             4,
             1,
@@ -257,9 +337,14 @@ mod tests {
         let client = PsClient::new(Arc::clone(&server), 0);
         let (snap, _, _) =
             client.pull(PullSpec::from_ranges(vec![(2, 3)]), 0).unwrap();
-        assert_eq!(snap.values_f32(0, 3), vec![4.0, 6.0, 8.0]);
+        assert_eq!(snap.range_f32(0, 3), &[4.0f32, 6.0, 8.0]);
         assert_eq!(snap.get(4), Some(8.0));
         assert_eq!(server.store().hash_probes(), 0, "dense pull must not hash");
+        let stats = server.stats();
+        assert_eq!(stats.snapshot_clones.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.cells_pulled.load(Ordering::Relaxed), 3);
+        // 3 f32 cells + one epoch version
+        assert_eq!(stats.bytes_pulled.load(Ordering::Relaxed), 8 + 4 * 3);
     }
 
     #[test]

@@ -2,12 +2,25 @@
 //! the distributed execution substrate (after Petuum; the client API
 //! follows the STRADS "Primitives" schedule/push/pull split).
 //!
-//! * [`shard`] — versioned cell storage in two representations behind
-//!   one API: **dense segments** (registered contiguous key ranges,
-//!   range-partitioned into `Vec<Cell>` slabs with slice reads and
-//!   publishes — zero hash-map probes) and **hashed shards** (everything
-//!   else, Petuum-style hash-partitioned maps). Each slab/shard sits
-//!   behind its own lock; batched ops take each touched lock once.
+//! * [`shard`] — versioned storage in two representations behind one
+//!   API. **Dense segments** (registered contiguous key ranges — the
+//!   hot, every-pull-reads-it state) are stored as immutable **f32
+//!   epoch slabs**: one `Arc<Vec<f32>>` image plus a single per-epoch
+//!   version, 4 bytes per cell instead of the 16-byte per-cell `Cell`.
+//!   Covered range pulls are O(1) `Arc` clones ([`RangePull`]) — no
+//!   copy, no allocation, no lock held while the kernel consumes the
+//!   data — and writes are copy-on-publish (`Arc::make_mut`): the slab
+//!   is cloned only when a reader still holds the old epoch, so a held
+//!   snapshot is immutable by construction. The clone cost is one slab
+//!   copy (4 bytes/cell) per epoch transition, independent of how few
+//!   keys the write touches — worst case (every flush racing a held
+//!   snapshot) that is `flushes/round x 4 bytes/cell`, which `cow_clones`
+//!   meters; it vanishes when no reader holds the epoch (workers drop
+//!   their views before flushing — see `workers::service`), and
+//!   chunked epochs to shrink the clone unit are a ROADMAP follow-up.
+//!   **Hashed shards** keep everything
+//!   unregistered in Petuum-style hash-partitioned `Cell` maps (full
+//!   f64, per-cell versions).
 //! * [`clock`] — per-worker SSP clocks and the `StalenessBound(s)` /
 //!   fully-async admission gate. Under gate-driven pipelining
 //!   (`workers::service`) this gate — not coordinator dispatch — is
@@ -15,15 +28,26 @@
 //! * [`batch`] — worker-local delta batching/coalescing with wire-byte
 //!   metering.
 //! * [`client`] — the worker handle (`pull` / `push` / `flush_clock`)
-//!   over [`PullSpec`] requests (ranges + scattered keys), and the
-//!   [`PsKernel`] trait problems implement to run on it.
+//!   over [`PullSpec`] requests, and the [`PsKernel`] trait problems
+//!   implement to run on it. [`PsSnapshot::range_f32`] hands kernels
+//!   the pulled f32 image directly.
+//!
+//! The pull-dominated STRADS loop (every worker pulls the full shared
+//! state each round, pushes sparse deltas) is why the dense path is
+//! read-optimized: pull traffic is metered at 4 bytes/cell + one epoch
+//! version per range (`PsStats::bytes_pulled`) instead of 16-byte
+//! cells, and staleness metadata (`PsSnapshot::min_version`) comes from
+//! per-epoch versions rather than an O(n) cell scan per pull.
 //!
 //! Republish traffic (the coordinator overwriting derived state, e.g.
 //! the Lasso residual) is tolerance-gated and metered separately from
-//! worker flushes: see `ModelProblem::ps_republish` and the
-//! `ps.republish_tol` config knob. The execution loop that wires a
-//! [`ParameterServer`] to a `ModelProblem` and real worker threads
-//! lives in `workers::service`.
+//! worker flushes: entries that moved by less than `ps.republish_tol`
+//! never reach the store, and the sparse republish that does arrive
+//! composes with copy-on-publish — it mutates a fresh epoch clone only
+//! when workers still hold the previous epoch, and updates the slab in
+//! place otherwise. See `ModelProblem::ps_republish`. The execution
+//! loop that wires a [`ParameterServer`] to a `ModelProblem` and real
+//! worker threads lives in `workers::service`.
 
 pub mod batch;
 pub mod client;
@@ -33,7 +57,7 @@ pub mod shard;
 pub use batch::{wire_bytes_for, BYTES_PER_ENTRY, DeltaBatch};
 pub use client::{PsClient, PsKernel, PsSnapshot};
 pub use clock::{ClockShutdown, ClockTable, StalenessPolicy};
-pub use shard::{Cell, PullSpec, ShardedStore};
+pub use shard::{Cell, PullSpec, RangePull, ShardedStore, SpecPull};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -45,6 +69,17 @@ pub struct PsStats {
     /// Derived-state bytes republished by the coordinator (tolerance-
     /// gated sparse republish + periodic full re-syncs).
     pub bytes_republished: AtomicU64,
+    /// Pull bytes served to workers: 4 bytes/cell + one 8-byte epoch
+    /// version for shared f32 ranges, 16-byte cells for everything
+    /// else (see `SpecPull::wire_bytes`).
+    pub bytes_pulled: AtomicU64,
+    /// Total cells covered by pulls (range members + scattered keys);
+    /// `16 * cells_pulled` is what the per-cell wire format this
+    /// design replaced would have moved.
+    pub cells_pulled: AtomicU64,
+    /// Range pulls served as zero-copy shared epoch views (an `Arc`
+    /// clone instead of a cell copy).
+    pub snapshot_clones: AtomicU64,
     /// Number of flush batches.
     pub flushes: AtomicU64,
     /// Number of pulls served.
@@ -69,10 +104,12 @@ impl PsStats {
         }
     }
 
-    /// Total wire traffic: worker flushes + coordinator republishes.
+    /// Total wire traffic: worker flushes + coordinator republishes +
+    /// worker pulls (the dominant term in the pull-heavy STRADS loop).
     pub fn net_bytes(&self) -> u64 {
         self.bytes_flushed.load(Ordering::Relaxed)
             + self.bytes_republished.load(Ordering::Relaxed)
+            + self.bytes_pulled.load(Ordering::Relaxed)
     }
 }
 
@@ -138,11 +175,12 @@ mod tests {
     }
 
     #[test]
-    fn stats_net_bytes_sums_flush_and_republish() {
+    fn stats_net_bytes_sums_flush_republish_and_pull() {
         let stats = PsStats::default();
         stats.bytes_flushed.store(100, Ordering::Relaxed);
         stats.bytes_republished.store(40, Ordering::Relaxed);
-        assert_eq!(stats.net_bytes(), 140);
+        stats.bytes_pulled.store(7, Ordering::Relaxed);
+        assert_eq!(stats.net_bytes(), 147);
     }
 
     #[test]

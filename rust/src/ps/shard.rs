@@ -1,30 +1,41 @@
-//! The storage layer of the parameter server: versioned cells living in
-//! one of two representations behind the same `publish` / `add_deltas`
-//! / `read` API.
+//! The storage layer of the parameter server: two representations
+//! behind the same `publish` / `add_deltas` / `read` API.
 //!
 //! * **Dense segments** — registered contiguous key ranges (the Lasso
-//!   residual `0..n`, MF's factor/residual arrays) are range-partitioned
-//!   across the shard count as versioned `Vec<Cell>` slabs, each behind
-//!   its own `RwLock`. Every key in a segment is addressed by arithmetic
-//!   alone and contiguous requests ([`PullSpec`] ranges,
-//!   [`ShardedStore::publish_range`]) move as slice copies — zero
-//!   hash-map probes on the hot path.
+//!   residual `0..n`, MF's factor/residual arrays) live as immutable
+//!   **f32 epoch slabs**: one `Arc<Vec<f32>>` value image plus a single
+//!   per-epoch `u64` version per segment (4 bytes per cell instead of
+//!   the 16-byte per-cell `Cell`). Writers build the next epoch
+//!   copy-on-publish — `Arc::make_mut` clones the slab only when a
+//!   reader still holds the previous epoch — so a covered range pull is
+//!   an O(1) `Arc` clone with no lock held while the data is consumed
+//!   and zero allocation ([`RangePull`]). Every key in a segment is
+//!   addressed by arithmetic alone; dense traffic never touches a hash
+//!   map.
 //! * **Hashed shards** — unregistered keys keep the Petuum-style
-//!   hash-partitioned maps, each behind its own `RwLock`, so sparse or
-//!   unbounded key spaces need no registration.
+//!   hash-partitioned `Cell` maps (full f64 values, per-cell versions),
+//!   each behind its own `RwLock`, so sparse or unbounded key spaces
+//!   need no registration.
 //!
 //! Batched operations group their entries by lock unit (a hashed shard
-//! or a dense slab) and take each touched lock exactly once. The
+//! or a segment epoch) and take each touched lock exactly once. The
 //! [`ShardedStore::hash_probes`] counter meters every probe the hashed
-//! path serves, which is how tests pin the "dense traffic never hashes"
-//! guarantee.
+//! path serves (the "dense traffic never hashes" guarantee), and
+//! [`ShardedStore::cow_clones`] meters how often a write actually had
+//! to clone an epoch because readers held it — the copy-on-publish
+//! cost meter. Tolerance-gated sparse republish composes with this:
+//! entries under `tol` are skipped before they reach the store, and the
+//! entries that do arrive mutate a fresh epoch clone only when workers
+//! still hold the old one; otherwise the epoch is updated in place.
 
+use super::batch::wire_bytes_for;
 use crate::util::FastHashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
-/// One versioned parameter cell. `version` is the server round/clock
-/// the value was last written at (0 = the initial publish).
+/// One versioned parameter cell (the hashed representation, and the
+/// unit scattered-key reads are reported in). `version` is the server
+/// round/clock the value was last written at (0 = the initial publish).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Cell {
     pub version: u64,
@@ -37,9 +48,10 @@ pub struct Cell {
 const SPREAD: u64 = 0x517cc1b727220a95;
 
 /// One read request: contiguous key ranges plus scattered keys. Ranges
-/// over a registered dense segment are served as slab slice copies; the
-/// snapshot cell order is all ranges first (in request order), then the
-/// scattered keys (in request order). Ranges must be mutually disjoint.
+/// over a registered dense segment are served as zero-copy epoch views;
+/// the snapshot cell order is all ranges first (in request order), then
+/// the scattered keys (in request order). Ranges must be mutually
+/// disjoint.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PullSpec {
     /// `(first_key, len)` contiguous runs.
@@ -78,59 +90,159 @@ impl PullSpec {
     }
 }
 
-/// One registered contiguous key range, range-partitioned into
-/// `chunk`-sized slabs (one per shard; the last may be shorter). Every
-/// key in `start..start + len` is slab-addressable by arithmetic alone.
+/// One pulled contiguous range: an f32 value image plus the epoch
+/// version it was read at. `Shared` is the zero-copy fast path — a
+/// slice view into the segment's published epoch slab, kept alive by
+/// the `Arc` and immutable by construction (writers never mutate an
+/// epoch a reader holds; they clone it first). `Owned` is the
+/// materialized fallback for ranges not covered by one segment.
+#[derive(Clone, Debug)]
+pub struct RangePull {
+    start: usize,
+    version: u64,
+    data: RangeData,
+}
+
+#[derive(Clone, Debug)]
+enum RangeData {
+    Shared { slab: Arc<Vec<f32>>, offset: usize, len: usize },
+    Owned(Vec<f32>),
+}
+
+impl RangePull {
+    /// Build an owned range view — the local-execution path
+    /// (`DistMf::update_blocks`) and tests snapshot their own state
+    /// through this.
+    pub fn owned(start: usize, version: u64, values: Vec<f32>) -> Self {
+        RangePull { start, version, data: RangeData::Owned(values) }
+    }
+
+    /// First key of the range.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// The epoch version (dense path), or the oldest version across
+    /// the span (fallback path; missing cells count as 0) — either
+    /// way, safe input for `PsSnapshot::min_version`.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            RangeData::Shared { len, .. } => *len,
+            RangeData::Owned(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this view shares the store's epoch slab (zero-copy).
+    pub fn is_shared(&self) -> bool {
+        matches!(self.data, RangeData::Shared { .. })
+    }
+
+    /// The f32 value image. For `Shared` views this borrows straight
+    /// out of the epoch slab — no copy was ever made.
+    pub fn values(&self) -> &[f32] {
+        match &self.data {
+            RangeData::Shared { slab, offset, len } => &slab[*offset..offset + len],
+            RangeData::Owned(v) => v,
+        }
+    }
+}
+
+/// The result of reading a full [`PullSpec`]: one [`RangePull`] per
+/// requested range (request order) plus one [`Cell`] per scattered key
+/// (request order).
+#[derive(Clone, Debug)]
+pub struct SpecPull {
+    pub ranges: Vec<RangePull>,
+    pub cells: Vec<Cell>,
+}
+
+impl SpecPull {
+    /// Total cells this pull covers (range members + scattered keys).
+    pub fn total_cells(&self) -> usize {
+        self.ranges.iter().map(|r| r.len()).sum::<usize>() + self.cells.len()
+    }
+
+    /// Ranges served zero-copy off a shared epoch slab.
+    pub fn shared_ranges(&self) -> usize {
+        self.ranges.iter().filter(|r| r.is_shared()).count()
+    }
+
+    /// Modeled wire bytes of this pull. Shared f32 epoch ranges move 4
+    /// bytes per cell plus one 8-byte epoch version; fallback ranges
+    /// and scattered keys move full 16-byte `(key, f64)` cells. The
+    /// per-cell `Cell` path this design replaced metered every pulled
+    /// cell at 16 bytes — `16 * total_cells()` is that baseline.
+    pub fn wire_bytes(&self) -> u64 {
+        let mut bytes = wire_bytes_for(self.cells.len());
+        for r in &self.ranges {
+            bytes += if r.is_shared() {
+                8 + 4 * r.len() as u64
+            } else {
+                wire_bytes_for(r.len())
+            };
+        }
+        bytes
+    }
+}
+
+/// One epoch of a dense segment: the published f32 value image plus the
+/// single version covering every cell in it. The `Arc` is what pulls
+/// clone; writers go through `ShardedStore::cow_values`.
+struct Epoch {
+    values: Arc<Vec<f32>>,
+    version: u64,
+}
+
+/// One registered contiguous key range stored as an epoch slab. A
+/// segment is a single lock unit: reads are O(1) `Arc` clones so read
+/// concurrency never contends on slab partitioning, and keeping the
+/// image contiguous is what lets a full-range pull hand kernels one
+/// `&[f32]` (splitting it would change dot-product summation order and
+/// break engine-path bit-exactness).
 struct DenseSegment {
     start: usize,
     len: usize,
-    chunk: usize,
-    slabs: Vec<RwLock<Vec<Cell>>>,
+    epoch: RwLock<Epoch>,
 }
 
 impl DenseSegment {
-    fn new(start: usize, len: usize, num_shards: usize) -> Self {
+    fn new(start: usize, len: usize) -> Self {
         debug_assert!(len > 0);
-        let chunk = (len + num_shards - 1) / num_shards;
-        let num_slabs = (len + chunk - 1) / chunk;
-        let slabs = (0..num_slabs)
-            .map(|s| {
-                let lo = s * chunk;
-                let hi = (lo + chunk).min(len);
-                RwLock::new(vec![Cell::default(); hi - lo])
-            })
-            .collect();
-        DenseSegment { start, len, chunk, slabs }
+        DenseSegment {
+            start,
+            len,
+            epoch: RwLock::new(Epoch { values: Arc::new(vec![0.0f32; len]), version: 0 }),
+        }
     }
 
     #[inline]
     fn contains(&self, key: usize) -> bool {
         key >= self.start && key < self.start + self.len
     }
-
-    /// Decompose the in-segment range `rel..rel + len` into per-slab
-    /// runs, calling `f(slab, slab_offset, run_len, taken_so_far)` for
-    /// each — the one place the chunking arithmetic lives.
-    fn for_each_slab(&self, rel: usize, len: usize, mut f: impl FnMut(usize, usize, usize, usize)) {
-        let end = rel + len;
-        let mut rel = rel;
-        let mut taken = 0usize;
-        while rel < end {
-            let slab = rel / self.chunk;
-            let off = rel % self.chunk;
-            let take = (self.chunk - off).min(end - rel);
-            f(slab, off, take, taken);
-            rel += take;
-            taken += take;
-        }
-    }
 }
 
-/// Where a key lives: a dense slab slot or a hashed shard.
+/// Where a key lives: a dense segment slot or a hashed shard.
 #[derive(Clone, Copy, Debug)]
 enum Slot {
-    Dense { seg: usize, slab: usize, off: usize },
+    Dense { seg: usize, off: usize },
     Hashed { shard: usize },
+}
+
+/// One maximal sub-run of a contiguous key range, classified by where
+/// it is stored (see [`ShardedStore::for_each_span`]).
+enum Span {
+    /// `len` keys starting at `key`, at offset `rel` inside segment `seg`.
+    Dense { seg: usize, rel: usize, key: usize, len: usize },
+    /// `len` unregistered keys starting at `key`.
+    Hashed { key: usize, len: usize },
 }
 
 /// The sharded store. Keys are `usize` parameter ids in a flat,
@@ -142,6 +254,9 @@ pub struct ShardedStore {
     /// Probes served by the hashed path (dense-segment traffic never
     /// increments this — the meter behind the zero-probe guarantee).
     hash_probes: AtomicU64,
+    /// Epoch clones forced by copy-on-publish: a write found readers
+    /// still holding the current epoch and cloned it before mutating.
+    cow_clones: AtomicU64,
 }
 
 impl ShardedStore {
@@ -163,11 +278,9 @@ impl ShardedStore {
         }
         ShardedStore {
             shards: (0..num_shards).map(|_| RwLock::new(FastHashMap::default())).collect(),
-            segments: segs
-                .into_iter()
-                .map(|(start, len)| DenseSegment::new(start, len, num_shards))
-                .collect(),
+            segments: segs.into_iter().map(|(start, len)| DenseSegment::new(start, len)).collect(),
             hash_probes: AtomicU64::new(0),
+            cow_clones: AtomicU64::new(0),
         }
     }
 
@@ -186,6 +299,12 @@ impl ShardedStore {
         self.hash_probes.load(Ordering::Relaxed)
     }
 
+    /// How many epoch slab clones copy-on-publish has performed (a
+    /// write arrived while a reader held the current epoch).
+    pub fn cow_clones(&self) -> u64 {
+        self.cow_clones.load(Ordering::Relaxed)
+    }
+
     /// Deterministic key -> shard routing (pure function of the key and
     /// the shard count, identical across store instances).
     #[inline]
@@ -193,7 +312,7 @@ impl ShardedStore {
         (((key as u64).wrapping_mul(SPREAD) >> 32) % self.shards.len() as u64) as usize
     }
 
-    /// Total number of cells across all shards and slabs. Registered
+    /// Total number of cells across all shards and segments. Registered
     /// dense ranges count in full: their slots exist from registration.
     pub fn len(&self) -> usize {
         let hashed: usize =
@@ -213,30 +332,23 @@ impl ShardedStore {
         if idx > 0 {
             let seg = &self.segments[idx - 1];
             if seg.contains(key) {
-                let rel = key - seg.start;
-                return Slot::Dense { seg: idx - 1, slab: rel / seg.chunk, off: rel % seg.chunk };
+                return Slot::Dense { seg: idx - 1, off: key - seg.start };
             }
         }
         Slot::Hashed { shard: self.shard_of(key) }
     }
 
-    /// Lock-unit id for grouping: hashed shards first, then each
-    /// segment's slabs in registration order.
+    /// Lock-unit id for grouping: hashed shards first, then segments in
+    /// registration order.
     fn unit_of(&self, slot: Slot) -> usize {
         match slot {
             Slot::Hashed { shard } => shard,
-            Slot::Dense { seg, slab, .. } => {
-                let mut base = self.shards.len();
-                for s in &self.segments[..seg] {
-                    base += s.slabs.len();
-                }
-                base + slab
-            }
+            Slot::Dense { seg, .. } => self.shards.len() + seg,
         }
     }
 
     fn num_units(&self) -> usize {
-        self.shards.len() + self.segments.iter().map(|s| s.slabs.len()).sum::<usize>()
+        self.shards.len() + self.segments.len()
     }
 
     /// Index of the registered segment fully covering `start..start+len`.
@@ -249,13 +361,62 @@ impl ShardedStore {
         (start >= seg.start && start + len <= seg.start + seg.len).then_some(idx - 1)
     }
 
+    /// Mutable access to an epoch's value image under copy-on-publish:
+    /// clones the slab (and meters the clone) only if a reader still
+    /// holds the current epoch's `Arc`; otherwise mutates in place.
+    fn cow_values<'a>(&self, epoch: &'a mut Epoch) -> &'a mut Vec<f32> {
+        // Meter by whether make_mut actually relocated the slab — a
+        // reader can drop its Arc between any pre-check and the clone
+        // decision, so a strong-count probe would over-count.
+        let shared = Arc::as_ptr(&epoch.values);
+        let values = Arc::make_mut(&mut epoch.values);
+        if !std::ptr::eq(shared, values) {
+            self.cow_clones.fetch_add(1, Ordering::Relaxed);
+        }
+        values
+    }
+
+    /// Decompose the key range `start..start+len` into maximal sub-runs
+    /// per storage location, in key order — segment overlaps become
+    /// [`Span::Dense`] runs, gaps become [`Span::Hashed`] runs. This is
+    /// how partially-covered ranges are served without materializing a
+    /// per-key routing table for the whole range.
+    fn for_each_span(&self, start: usize, len: usize, mut f: impl FnMut(Span)) {
+        let end = start + len;
+        let mut key = start;
+        let mut idx = self.segments.partition_point(|s| s.start + s.len <= key);
+        while key < end {
+            match self.segments.get(idx) {
+                Some(seg) if seg.start <= key => {
+                    let take = (seg.start + seg.len).min(end) - key;
+                    f(Span::Dense { seg: idx, rel: key - seg.start, key, len: take });
+                    key += take;
+                    if key == seg.start + seg.len {
+                        idx += 1;
+                    }
+                }
+                Some(seg) => {
+                    let take = seg.start.min(end) - key;
+                    f(Span::Hashed { key, len: take });
+                    key += take;
+                }
+                None => {
+                    f(Span::Hashed { key, len: end - key });
+                    key = end;
+                }
+            }
+        }
+    }
+
     /// Overwrite-publish `(key, value)` entries at `version` (the
     /// coordinator's path: seeding the store and republishing derived
-    /// state with exact canonical values).
+    /// state with exact canonical values). Dense-segment entries land
+    /// in the segment's f32 image and bump its epoch version.
     pub fn publish(&self, entries: &[(usize, f64)], version: u64) {
         self.for_each_slot_mut(
             entries,
-            |cell, value| *cell = Cell { version, value },
+            version,
+            |slot, value| *slot = value as f32,
             |map, key, value| {
                 map.insert(key, Cell { version, value });
             },
@@ -263,47 +424,51 @@ impl ShardedStore {
     }
 
     /// Overwrite-publish the contiguous range `start..start +
-    /// values.len()` at `version`. A range fully inside a registered
-    /// segment is written as slab slice fills (zero hash probes); any
-    /// other span falls back to the grouped per-key path.
+    /// values.len()` at `version`. Segment-covered spans are written as
+    /// slice fills into the (copy-on-publish) epoch image — zero hash
+    /// probes; hashed gaps are grouped per shard.
     pub fn publish_range(&self, start: usize, values: &[f64], version: u64) {
         if values.is_empty() {
             return;
         }
-        if let Some(seg_idx) = self.segment_covering(start, values.len()) {
-            let seg = &self.segments[seg_idx];
-            seg.for_each_slab(start - seg.start, values.len(), |slab, off, take, taken| {
-                let mut cells = seg.slabs[slab].write().expect("slab lock poisoned");
-                for (cell, &value) in
-                    cells[off..off + take].iter_mut().zip(&values[taken..taken + take])
-                {
-                    *cell = Cell { version, value };
+        self.for_each_span(start, values.len(), |span| match span {
+            Span::Dense { seg, rel, key, len } => {
+                let mut epoch = self.segments[seg].epoch.write().expect("epoch lock poisoned");
+                let slab = self.cow_values(&mut epoch);
+                let src = &values[key - start..key - start + len];
+                for (dst, &v) in slab[rel..rel + len].iter_mut().zip(src) {
+                    *dst = v as f32;
                 }
-            });
-            return;
-        }
-        let entries: Vec<(usize, f64)> =
-            values.iter().enumerate().map(|(i, &v)| (start + i, v)).collect();
-        self.publish(&entries, version);
+                epoch.version = epoch.version.max(version);
+            }
+            Span::Hashed { key, len } => {
+                // Gap keys route through the canonical grouped publish
+                // (one lock take per touched shard, probes metered
+                // there); the entry buffer is gap-sized, not
+                // range-sized.
+                let entries: Vec<(usize, f64)> =
+                    (key..key + len).map(|k| (k, values[k - start])).collect();
+                self.publish(&entries, version);
+            }
+        });
     }
 
     /// Publish a dense state vector: key `i` gets `values[i]` (the
-    /// round-0 seed and full-resync path). Grouped per lock unit — each
-    /// touched shard or slab lock is taken exactly once.
+    /// round-0 seed and full-resync path).
     pub fn publish_dense(&self, values: &[f64], version: u64) {
         self.publish_range(0, values, version);
     }
 
     /// Apply additive deltas (the worker push path): `value += delta`,
-    /// `version = max(version, at)`. Missing keys start from 0.0 at
-    /// version 0, matching an all-zero initial model.
+    /// versions advance to at least `at`. Missing hashed keys start
+    /// from 0.0 at version 0, matching an all-zero initial model.
+    /// Dense-segment accumulation happens in f32 — the wire precision
+    /// those segments store.
     pub fn add_deltas(&self, deltas: &[(usize, f64)], at: u64) {
         self.for_each_slot_mut(
             deltas,
-            |cell, delta| {
-                cell.value += delta;
-                cell.version = cell.version.max(at);
-            },
+            at,
+            |slot, delta| *slot += delta as f32,
             |map, key, delta| {
                 let cell = map.entry(key).or_default();
                 cell.value += delta;
@@ -313,48 +478,77 @@ impl ShardedStore {
     }
 
     /// Read cells for `keys`, preserving request order. Each touched
-    /// lock (shard or slab) is taken once per call. Unpublished keys
-    /// read as the default cell (value 0.0, version 0).
+    /// lock (shard or segment epoch) is taken once per call. Unpublished
+    /// hashed keys read as the default cell; dense keys read their f32
+    /// image at the segment's epoch version.
     pub fn read(&self, keys: &[usize]) -> Vec<Cell> {
         let mut out = vec![Cell::default(); keys.len()];
         self.read_into(keys, &mut out);
         out
     }
 
-    /// Read a full [`PullSpec`]: all ranges (slice-copied where a
-    /// registered segment covers them), then the scattered keys.
-    pub fn read_spec(&self, spec: &PullSpec) -> Vec<Cell> {
-        let mut out = Vec::with_capacity(spec.total_len());
-        for &(start, len) in &spec.ranges {
-            self.read_range_into(start, len, &mut out);
-        }
-        if !spec.keys.is_empty() {
-            let base = out.len();
-            out.resize(base + spec.keys.len(), Cell::default());
-            self.read_into(&spec.keys, &mut out[base..]);
-        }
-        out
+    /// Read a full [`PullSpec`]: each range as a [`RangePull`] (an O(1)
+    /// zero-copy epoch view where a registered segment covers it), then
+    /// the scattered keys as cells.
+    pub fn read_spec(&self, spec: &PullSpec) -> SpecPull {
+        let ranges =
+            spec.ranges.iter().map(|&(start, len)| self.read_range(start, len)).collect();
+        let cells =
+            if spec.keys.is_empty() { Vec::new() } else { self.read(&spec.keys) };
+        SpecPull { ranges, cells }
     }
 
-    /// Read the contiguous key range `start..start + len`, appending to
-    /// `out`. A range fully inside a registered segment is slice-copied
-    /// slab by slab; anything else falls back to the per-key path.
-    pub fn read_range_into(&self, start: usize, len: usize, out: &mut Vec<Cell>) {
+    /// Read the contiguous key range `start..start + len`. A range
+    /// fully inside a registered segment returns a shared epoch view —
+    /// the lock is held only long enough to clone the `Arc`, so no lock
+    /// is held while the caller consumes the data. Anything else
+    /// materializes one owned f32 copy by walking the range's spans
+    /// directly (segment overlaps as slice copies, hashed gaps grouped
+    /// per shard — no per-key routing table is allocated).
+    pub fn read_range(&self, start: usize, len: usize) -> RangePull {
         if len == 0 {
-            return;
+            return RangePull::owned(start, 0, Vec::new());
         }
         if let Some(seg_idx) = self.segment_covering(start, len) {
             let seg = &self.segments[seg_idx];
-            seg.for_each_slab(start - seg.start, len, |slab, off, take, _taken| {
-                let cells = seg.slabs[slab].read().expect("slab lock poisoned");
-                out.extend_from_slice(&cells[off..off + take]);
-            });
-            return;
+            let epoch = seg.epoch.read().expect("epoch lock poisoned");
+            return RangePull {
+                start,
+                version: epoch.version,
+                data: RangeData::Shared {
+                    slab: Arc::clone(&epoch.values),
+                    offset: start - seg.start,
+                    len,
+                },
+            };
         }
-        let keys: Vec<usize> = (start..start + len).collect();
-        let base = out.len();
-        out.resize(base + len, Cell::default());
-        self.read_into(&keys, &mut out[base..]);
+        // Fallback version = the OLDEST version across the span
+        // (missing hashed cells count as 0), preserving the
+        // `min_version` staleness-diagnostic contract the per-cell
+        // scan used to provide.
+        let mut out = vec![0.0f32; len];
+        let mut version = u64::MAX;
+        self.for_each_span(start, len, |span| match span {
+            Span::Dense { seg, rel, key, len: take } => {
+                let epoch = self.segments[seg].epoch.read().expect("epoch lock poisoned");
+                out[key - start..key - start + take]
+                    .copy_from_slice(&epoch.values[rel..rel + take]);
+                version = version.min(epoch.version);
+            }
+            Span::Hashed { key, len: take } => {
+                // Gap keys route through the canonical grouped read;
+                // the key/cell buffers are gap-sized, not range-sized.
+                // Missing keys stay at the default cell (version 0).
+                let keys: Vec<usize> = (key..key + take).collect();
+                let mut cells = vec![Cell::default(); take];
+                self.read_into(&keys, &mut cells);
+                for (i, cell) in cells.iter().enumerate() {
+                    out[key - start + i] = cell.value as f32;
+                    version = version.min(cell.version);
+                }
+            }
+        });
+        RangePull { start, version, data: RangeData::Owned(out) }
     }
 
     /// Grouped positional read: `out[i]` receives the cell for
@@ -379,26 +573,31 @@ impl ShardedStore {
                         }
                     }
                 }
-                Slot::Dense { seg, slab, .. } => {
-                    let cells = self.segments[seg].slabs[slab].read().expect("slab lock poisoned");
+                Slot::Dense { seg, .. } => {
+                    let epoch =
+                        self.segments[seg].epoch.read().expect("epoch lock poisoned");
                     for &pos in positions {
                         let Slot::Dense { off, .. } = slots[pos] else { unreachable!() };
-                        out[pos] = cells[off];
+                        out[pos] =
+                            Cell { version: epoch.version, value: epoch.values[off] as f64 };
                     }
                 }
             }
         }
     }
 
-    /// Group `entries` by lock unit (hashed shard or dense slab) and
+    /// Group `entries` by lock unit (hashed shard or segment epoch) and
     /// apply the matching mutator under each unit's write lock, taken
     /// once per touched unit. Within a unit, entries apply in request
     /// order, so duplicate keys resolve identically to a sequential
-    /// application.
+    /// application. Each touched segment's epoch version advances to at
+    /// least `at`, and its slab goes through copy-on-publish exactly
+    /// once per call.
     fn for_each_slot_mut(
         &self,
         entries: &[(usize, f64)],
-        mut dense: impl FnMut(&mut Cell, f64),
+        at: u64,
+        mut dense: impl FnMut(&mut f32, f64),
         mut hashed: impl FnMut(&mut FastHashMap<usize, Cell>, usize, f64),
     ) {
         let mut slots: Vec<Slot> = Vec::with_capacity(entries.len());
@@ -418,13 +617,15 @@ impl ShardedStore {
                         hashed(&mut map, key, value);
                     }
                 }
-                Slot::Dense { seg, slab, .. } => {
-                    let mut cells =
-                        self.segments[seg].slabs[slab].write().expect("slab lock poisoned");
+                Slot::Dense { seg, .. } => {
+                    let mut epoch =
+                        self.segments[seg].epoch.write().expect("epoch lock poisoned");
+                    let slab = self.cow_values(&mut epoch);
                     for &pos in positions {
                         let Slot::Dense { off, .. } = slots[pos] else { unreachable!() };
-                        dense(&mut cells[off], entries[pos].1);
+                        dense(&mut slab[off], entries[pos].1);
                     }
+                    epoch.version = epoch.version.max(at);
                 }
             }
         }
@@ -496,21 +697,22 @@ mod tests {
         store.publish_dense(&values, 3);
         store.add_deltas(&[(7, 1.0), (99, -2.0), (0, 0.25)], 5);
         let cells = store.read(&[99, 0, 7, 50]);
+        // One epoch version covers the whole segment: the deltas at
+        // clock 5 advanced it for every cell, including untouched ones.
         assert_eq!(cells[0], Cell { version: 5, value: 99.0 * 0.5 - 2.0 });
         assert_eq!(cells[1], Cell { version: 5, value: 0.25 });
         assert_eq!(cells[2], Cell { version: 5, value: 3.5 + 1.0 });
-        assert_eq!(cells[3], Cell { version: 3, value: 25.0 });
-        let mut range = Vec::new();
-        store.read_range_into(98, 2, &mut range);
-        assert_eq!(range[0].value, 49.0);
-        assert_eq!(range[1].value, 99.0 * 0.5 - 2.0);
+        assert_eq!(cells[3], Cell { version: 5, value: 25.0 });
+        let range = store.read_range(98, 2);
+        assert!(range.is_shared(), "covered range must be a shared epoch view");
+        assert_eq!(range.values(), &[49.0f32, 99.0 * 0.5 - 2.0]);
+        assert_eq!(range.version(), 5);
         assert_eq!(store.len(), 100, "registered range counts in full");
         assert_eq!(store.hash_probes(), 0, "dense traffic must never hash");
     }
 
     #[test]
-    fn segment_slabs_partition_the_range() {
-        // 10 keys over 4 shards -> chunk 3: slabs of 3, 3, 3, 1.
+    fn segment_offset_and_epoch_version_roundtrip() {
         let store = ShardedStore::with_segments(4, &[(5, 10)]);
         let values: Vec<f64> = (0..10).map(|i| i as f64).collect();
         store.publish_range(5, &values, 1);
@@ -520,6 +722,13 @@ mod tests {
             assert_eq!(cell.value, i as f64, "key {}", 5 + i);
             assert_eq!(cell.version, 1);
         }
+        // republish at a later version: new epoch, all cells advance
+        store.publish_range(7, &[40.0, 41.0], 6);
+        let cells = store.read(&[5, 7, 8, 14]);
+        assert_eq!(cells[0], Cell { version: 6, value: 0.0 });
+        assert_eq!(cells[1], Cell { version: 6, value: 40.0 });
+        assert_eq!(cells[2], Cell { version: 6, value: 41.0 });
+        assert_eq!(cells[3], Cell { version: 6, value: 9.0 });
         assert_eq!(store.hash_probes(), 0);
     }
 
@@ -531,30 +740,56 @@ mod tests {
         assert_eq!(cells[0], Cell { version: 2, value: 1.0 });
         assert_eq!(cells[1], Cell { version: 2, value: 2.0 });
         assert_eq!(cells[2], Cell { version: 2, value: 3.0 });
-        assert_eq!(cells[3], Cell::default(), "in-segment unpublished key reads as zero");
+        // in-segment unpublished key: zero value, but the segment's
+        // epoch version (the publish touched its slab)
+        assert_eq!(cells[3], Cell { version: 2, value: 0.0 });
         // keys 5 and 40 went through the hashed path (1 write + 1 read
-        // probe each); 15 and 12 are slab slots.
+        // probe each); 15 and 12 are epoch slots.
         assert_eq!(store.hash_probes(), 4);
     }
 
     #[test]
-    fn read_spec_orders_ranges_then_keys() {
+    fn read_spec_serves_ranges_then_keys() {
         let store = ShardedStore::with_segments(2, &[(0, 8)]);
         let values: Vec<f64> = (0..8).map(|i| i as f64).collect();
         store.publish_dense(&values, 1);
         store.publish(&[(100, 42.0)], 1);
         let spec = PullSpec { ranges: vec![(4, 2), (0, 3)], keys: vec![100, 6] };
         assert_eq!(spec.total_len(), 7);
-        let cells = store.read_spec(&spec);
-        let got: Vec<f64> = cells.iter().map(|c| c.value).collect();
-        assert_eq!(got, vec![4.0, 5.0, 0.0, 1.0, 2.0, 42.0, 6.0]);
+        let pulled = store.read_spec(&spec);
+        assert_eq!(pulled.total_cells(), 7);
+        assert_eq!(pulled.shared_ranges(), 2, "both ranges covered by the segment");
+        assert_eq!(pulled.ranges[0].values(), &[4.0f32, 5.0]);
+        assert_eq!(pulled.ranges[0].start(), 4);
+        assert_eq!(pulled.ranges[1].values(), &[0.0f32, 1.0, 2.0]);
+        let got: Vec<f64> = pulled.cells.iter().map(|c| c.value).collect();
+        assert_eq!(got, vec![42.0, 6.0]);
+        // shared ranges meter 4 bytes/cell + 8/epoch; keys meter 16
+        assert_eq!(pulled.wire_bytes(), (8 + 4 * 2) + (8 + 4 * 3) + 16 * 2);
         assert_eq!(store.hash_probes(), 2, "only key 100's write + read hash");
+    }
+
+    #[test]
+    fn uncovered_range_read_walks_spans() {
+        let store = ShardedStore::with_segments(3, &[(50, 10)]);
+        store.publish(&[(48, 1.0), (49, 2.0)], 4);
+        store.publish_range(50, &[3.0, 4.0], 6);
+        // 48..52 spans a hashed gap and part of the segment: one owned
+        // copy; the version is the OLDEST across the parts (the
+        // staleness-diagnostic contract), here the hashed cells at 4
+        let range = store.read_range(48, 4);
+        assert!(!range.is_shared());
+        assert_eq!(range.values(), &[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(range.version(), 4);
+        // a span containing an unpublished hashed key reads as oldest 0
+        assert_eq!(store.read_range(47, 5).version(), 0);
+        assert!(store.hash_probes() > 0, "keys 48/49 must have hashed");
     }
 
     #[test]
     fn publish_range_outside_segment_falls_back() {
         let store = ShardedStore::with_segments(3, &[(50, 10)]);
-        // spans hashed keys and part of the segment: per-key fallback
+        // spans hashed keys and part of the segment: span decomposition
         store.publish_range(48, &[1.0, 2.0, 3.0, 4.0], 6);
         let cells = store.read(&[48, 49, 50, 51]);
         assert_eq!(cells[0].value, 1.0);
@@ -562,6 +797,26 @@ mod tests {
         assert_eq!(cells[2].value, 3.0);
         assert_eq!(cells[3].value, 4.0);
         assert!(store.hash_probes() > 0, "keys 48/49 must have hashed");
+    }
+
+    #[test]
+    fn held_epoch_views_are_immutable() {
+        let store = ShardedStore::with_segments(2, &[(0, 16)]);
+        let values: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        store.publish_dense(&values, 1);
+        let held = store.read_range(0, 16);
+        let before: Vec<f32> = held.values().to_vec();
+        assert_eq!(store.cow_clones(), 0, "publish with no readers mutates in place");
+        // Writers arriving while `held` is alive must clone the epoch.
+        store.add_deltas(&[(3, 100.0)], 2);
+        store.publish_range(0, &vec![9.0; 16], 3);
+        assert_eq!(held.values(), &before[..], "held snapshot must stay bitwise stable");
+        assert_eq!(held.version(), 1);
+        assert!(store.cow_clones() >= 1, "a reader-held epoch forces a clone");
+        // A fresh pull sees the new epoch.
+        let fresh = store.read_range(0, 16);
+        assert_eq!(fresh.values()[3], 9.0);
+        assert_eq!(fresh.version(), 3);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //! Per round the coordinator plans blocks (the problem's own round
 //! structure if it has one, the SAP scheduler otherwise) and enqueues
 //! them to workers. Each worker, per block: SSP-gated `pull` of the
-//! spec its kernel needs (contiguous ranges read straight out of dense
-//! segment slabs), `propose` deltas against that (possibly stale)
+//! spec its kernel needs (contiguous ranges arrive as zero-copy `Arc`
+//! views of dense-segment f32 epochs — an O(1) clone, no allocation),
+//! `propose` deltas against that (possibly stale)
 //! snapshot, `push` them into its coalescing batch, and `flush_clock` —
 //! which applies the batch to the server shards and forwards it to the
 //! coordinator. The coordinator applies complete rounds in block order
@@ -138,6 +139,17 @@ pub struct DistributedReport {
     /// Hash-map probes the store served — dense-segment traffic never
     /// counts here, so this is the fast-path acceptance meter.
     pub hash_probes: u64,
+    /// Pull bytes served to workers (f32 epoch ranges at 4 bytes/cell
+    /// + one epoch version each; everything else as 16-byte cells).
+    pub pull_bytes: u64,
+    /// Total cells covered by pulls — `16 * cells_pulled` is what the
+    /// replaced per-cell wire format would have moved.
+    pub cells_pulled: u64,
+    /// Range pulls served as zero-copy shared epoch views.
+    pub snapshot_clones: u64,
+    /// Epoch slab clones copy-on-publish performed because a reader
+    /// still held the old epoch.
+    pub cow_clones: u64,
 }
 
 /// Run up to `rounds` rounds of `problem` on `cfg.workers` real worker
@@ -180,6 +192,10 @@ pub fn run_distributed(
                     break; // shutdown while gated
                 };
                 let proposals = kernel.propose(&snap, &item.vars, item.round);
+                // Release the epoch views before flushing: a worker
+                // must never force copy-on-publish clones (its own
+                // flush, or a peer's) with a snapshot it is done with.
+                drop(snap);
                 client.push(&proposals);
                 let deltas = client.flush_clock(item.round);
                 let msg =
@@ -313,6 +329,10 @@ pub fn run_distributed(
         mean_staleness: stats.mean_staleness(),
         max_stale_gap: stats.max_stale_gap.load(Ordering::Relaxed),
         hash_probes: server.store().hash_probes(),
+        pull_bytes: stats.bytes_pulled.load(Ordering::Relaxed),
+        cells_pulled: stats.cells_pulled.load(Ordering::Relaxed),
+        snapshot_clones: stats.snapshot_clones.load(Ordering::Relaxed),
+        cow_clones: server.store().cow_clones(),
     })
 }
 

@@ -319,6 +319,72 @@ fn incremental_republish_converges_and_cuts_net_bytes() {
 }
 
 #[test]
+fn f32_epoch_wire_is_lossless_and_cuts_pull_bytes() {
+    // The zero-copy regression pin for the f32 epoch wire. A
+    // staleness-0 run with dense segments ON (f32 epoch slabs) must be
+    // bitwise identical to the same run with them OFF (f64 cells
+    // holding exact images of the coordinator's f32 residual): if the
+    // f32 slab lost anything, the two trajectories would diverge. The
+    // dense run must also move less than half the pull bytes — both
+    // against the cells-off run and against the 16-byte-per-cell
+    // accounting of the representation it replaced.
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 42);
+    let rounds = 120;
+    let mut on_cfg = lasso_cfg(4);
+    let mut off_cfg = on_cfg.clone();
+    off_cfg.ps.dense_segments = false;
+
+    let mut on_problem = NativeLasso::new(&data, on_cfg.lambda);
+    let on = strads::workers::run_distributed(&mut on_problem, &on_cfg, rounds, "tiny").unwrap();
+    let mut off_problem = NativeLasso::new(&data, off_cfg.lambda);
+    let off =
+        strads::workers::run_distributed(&mut off_problem, &off_cfg, rounds, "tiny").unwrap();
+
+    assert_eq!(
+        on.trace.final_objective(),
+        off.trace.final_objective(),
+        "f32 epoch wire must be bit-lossless vs the f64 cell wire"
+    );
+    for (j, (a, b)) in on_problem.beta().iter().zip(off_problem.beta()).enumerate() {
+        assert_eq!(a, b, "beta[{j}] diverged between storage representations");
+    }
+    assert!(
+        on.pull_bytes * 2 < off.pull_bytes,
+        "f32 ranges must at least halve pull traffic: on={} off={}",
+        on.pull_bytes,
+        off.pull_bytes
+    );
+    assert!(
+        on.pull_bytes * 2 < 16 * on.cells_pulled,
+        "pull bytes {} must undercut half the 16B/cell baseline ({} cells)",
+        on.pull_bytes,
+        on.cells_pulled
+    );
+    assert!(on.snapshot_clones > 0, "residual pulls must be served as epoch views");
+    assert_eq!(off.snapshot_clones, 0, "hashed fallback ranges are owned copies");
+
+    // And the dense run still matches the engine path itself: beta
+    // reconstruction (beta += delta) is the only rounding difference,
+    // so the agreement is far tighter than the convergence tolerance.
+    let mut local = NativeLasso::new(&data, on_cfg.lambda);
+    let mut sched = DynamicScheduler::new(local.num_vars(), &on_cfg.sap, on_cfg.engine.seed);
+    for _ in 0..rounds {
+        let blocks = sched.plan(&mut local, on_cfg.workers);
+        if blocks.is_empty() {
+            break;
+        }
+        let res = local.update_blocks(&blocks);
+        sched.observe(&res);
+    }
+    let local_obj = local.objective();
+    let dist_obj = on.trace.final_objective();
+    assert!(
+        (local_obj - dist_obj).abs() < 1e-12 * local_obj.abs().max(1.0),
+        "engine {local_obj} vs distributed {dist_obj}"
+    );
+}
+
+#[test]
 fn mf_distributed_stale_runs_complete() {
     let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 33);
     for setting in ["2", "async"] {

@@ -1,34 +1,143 @@
-//! Property-style equivalence tests for the parameter-server storage
-//! layer: for randomized key/delta/publish sequences, a `ShardedStore`
-//! with dense segments registered must be observationally identical —
-//! values, versions, read order — to the hashed-only store. Seeded
-//! deterministic RNG (`strads::util::Rng`), no proptest dependency.
+//! Property-style tests for the parameter-server storage layer under
+//! the f32-epoch dense representation: for randomized
+//! publish/delta/range-publish/read sequences, a `ShardedStore` must
+//! agree exactly with a transparent reference model that applies the
+//! same operations with the same precision rules — f32 values and one
+//! per-epoch version for dense-segment keys, f64 `Cell`s for hashed
+//! keys. Seeded deterministic RNG (`strads::util::Rng`), no proptest
+//! dependency.
 
+use std::sync::Arc;
 use strads::ps::{Cell, PullSpec, ShardedStore};
 use strads::util::Rng;
 
 const KEY_SPACE: usize = 160;
+/// Reads also probe past the written key space (misses included).
+const MODEL_SPACE: usize = KEY_SPACE + 20;
 
-/// Drive an identical randomized op sequence through both stores and
-/// compare every read. `segs` is registered on `dense` only; the two
-/// stores also use different shard counts, so the comparison covers
-/// routing independence as well.
-fn run_equivalence(seed: u64, segs: &[(usize, usize)]) {
-    let dense = ShardedStore::with_segments(5, segs);
-    let hashed = ShardedStore::new(7);
+/// The executable spec of the store's observable behaviour: dense keys
+/// are f32 slots sharing one monotone per-segment version; hashed keys
+/// are f64 cells with per-cell versions (publish overwrites them,
+/// deltas max them).
+struct RefModel {
+    segs: Vec<(usize, usize)>,
+    dense_vals: Vec<f32>,
+    seg_ver: Vec<u64>,
+    hash_vals: Vec<f64>,
+    hash_ver: Vec<u64>,
+    hash_present: Vec<bool>,
+}
+
+impl RefModel {
+    fn new(segs: &[(usize, usize)]) -> Self {
+        RefModel {
+            segs: segs.to_vec(),
+            dense_vals: vec![0.0; MODEL_SPACE],
+            seg_ver: vec![0; segs.len()],
+            hash_vals: vec![0.0; MODEL_SPACE],
+            hash_ver: vec![0; MODEL_SPACE],
+            hash_present: vec![false; MODEL_SPACE],
+        }
+    }
+
+    fn seg_of(&self, key: usize) -> Option<usize> {
+        self.segs.iter().position(|&(s, l)| key >= s && key < s + l)
+    }
+
+    fn publish(&mut self, entries: &[(usize, f64)], version: u64) {
+        for &(key, value) in entries {
+            match self.seg_of(key) {
+                Some(s) => {
+                    self.dense_vals[key] = value as f32;
+                    self.seg_ver[s] = self.seg_ver[s].max(version);
+                }
+                None => {
+                    self.hash_vals[key] = value;
+                    self.hash_ver[key] = version;
+                    self.hash_present[key] = true;
+                }
+            }
+        }
+    }
+
+    fn add_deltas(&mut self, deltas: &[(usize, f64)], at: u64) {
+        for &(key, delta) in deltas {
+            match self.seg_of(key) {
+                Some(s) => {
+                    self.dense_vals[key] += delta as f32;
+                    self.seg_ver[s] = self.seg_ver[s].max(at);
+                }
+                None => {
+                    self.hash_vals[key] += delta;
+                    self.hash_ver[key] = self.hash_ver[key].max(at);
+                    self.hash_present[key] = true;
+                }
+            }
+        }
+    }
+
+    fn publish_range(&mut self, start: usize, values: &[f64], version: u64) {
+        let entries: Vec<(usize, f64)> =
+            values.iter().enumerate().map(|(i, &v)| (start + i, v)).collect();
+        self.publish(&entries, version);
+    }
+
+    fn expected_cell(&self, key: usize) -> Cell {
+        match self.seg_of(key) {
+            Some(s) => Cell { version: self.seg_ver[s], value: self.dense_vals[key] as f64 },
+            None if self.hash_present[key] => {
+                Cell { version: self.hash_ver[key], value: self.hash_vals[key] }
+            }
+            None => Cell::default(),
+        }
+    }
+
+    /// Expected f32 image + version of a contiguous range read. The
+    /// version is the OLDEST across the range — a segment contributes
+    /// its epoch version, a hashed cell its own, and a missing hashed
+    /// cell 0 — matching the staleness-diagnostic contract.
+    fn expected_range(&self, start: usize, len: usize) -> (Vec<f32>, u64) {
+        let mut values = Vec::with_capacity(len);
+        let mut version = u64::MAX;
+        for key in start..start + len {
+            match self.seg_of(key) {
+                Some(s) => {
+                    values.push(self.dense_vals[key]);
+                    version = version.min(self.seg_ver[s]);
+                }
+                None if self.hash_present[key] => {
+                    values.push(self.hash_vals[key] as f32);
+                    version = version.min(self.hash_ver[key]);
+                }
+                None => {
+                    values.push(0.0);
+                    version = 0;
+                }
+            }
+        }
+        (values, if len == 0 { 0 } else { version })
+    }
+}
+
+/// Drive an identical randomized op sequence through the store and the
+/// reference model and compare every read — per-key cells, contiguous
+/// range views, and full spec pulls.
+fn run_model_equivalence(seed: u64, segs: &[(usize, usize)]) {
+    let store = ShardedStore::with_segments(5, segs);
+    let mut model = RefModel::new(segs);
     let mut rng = Rng::new(seed);
-    for step in 0..300 {
-        match rng.below(4) {
+    for step in 0..400 {
+        match rng.below(5) {
             0 => {
                 // sparse publish (duplicate keys allowed: last-in-batch
-                // wins identically on both paths)
+                // wins identically on both sides)
                 let n = rng.below(24) + 1;
                 let entries: Vec<(usize, f64)> = (0..n)
                     .map(|_| (rng.below(KEY_SPACE), rng.f64() * 2.0 - 1.0))
                     .collect();
                 let version = rng.below(64) as u64;
-                dense.publish(&entries, version);
-                hashed.publish(&entries, version);
+                store.publish(&entries, version);
+                model.publish(&entries, version);
             }
             1 => {
                 // additive deltas at a random clock
@@ -37,8 +146,8 @@ fn run_equivalence(seed: u64, segs: &[(usize, usize)]) {
                     .map(|_| (rng.below(KEY_SPACE), rng.f64() - 0.5))
                     .collect();
                 let at = rng.below(64) as u64;
-                dense.add_deltas(&deltas, at);
-                hashed.add_deltas(&deltas, at);
+                store.add_deltas(&deltas, at);
+                model.add_deltas(&deltas, at);
             }
             2 => {
                 // contiguous range publish at a random offset
@@ -46,47 +155,99 @@ fn run_equivalence(seed: u64, segs: &[(usize, usize)]) {
                 let len = rng.below(KEY_SPACE - start) + 1;
                 let values: Vec<f64> = (0..len).map(|_| rng.f64()).collect();
                 let version = rng.below(64) as u64;
-                dense.publish_range(start, &values, version);
-                hashed.publish_range(start, &values, version);
+                store.publish_range(start, &values, version);
+                model.publish_range(start, &values, version);
             }
-            _ => {
+            3 => {
                 // read a random key set (duplicates + misses included),
                 // preserving request order
                 let n = rng.below(40) + 1;
                 let keys: Vec<usize> =
-                    (0..n).map(|_| rng.below(KEY_SPACE + 20)).collect();
-                assert_eq!(
-                    dense.read(&keys),
-                    hashed.read(&keys),
-                    "step {step}: read divergence for keys {keys:?}"
-                );
+                    (0..n).map(|_| rng.below(MODEL_SPACE)).collect();
+                let got = store.read(&keys);
+                for (&key, cell) in keys.iter().zip(&got) {
+                    assert_eq!(
+                        *cell,
+                        model.expected_cell(key),
+                        "step {step}: read divergence for key {key}"
+                    );
+                }
+            }
+            _ => {
+                // contiguous range read (covered, partial, or hashed)
+                let start = rng.below(MODEL_SPACE - 1);
+                let len = rng.below(MODEL_SPACE - start) + 1;
+                let got = store.read_range(start, len);
+                let (values, version) = model.expected_range(start, len);
+                assert_eq!(got.values(), &values[..], "step {step}: range ({start},{len})");
+                assert_eq!(got.version(), version, "step {step}: range ({start},{len})");
             }
         }
     }
     // Full-sweep read: every cell agrees in value, version, and order.
-    let all: Vec<usize> = (0..KEY_SPACE + 20).collect();
-    assert_eq!(dense.read(&all), hashed.read(&all), "final sweep diverged");
-    // Spec reads (ranges + scattered keys) agree with per-key reads on
-    // both stores and with each other.
+    let all: Vec<usize> = (0..MODEL_SPACE).collect();
+    let got = store.read(&all);
+    for (key, cell) in got.iter().enumerate() {
+        assert_eq!(*cell, model.expected_cell(key), "final sweep diverged at key {key}");
+    }
+    // Spec reads (ranges + scattered keys) agree with the model too.
     let spec = PullSpec { ranges: vec![(3, 40), (70, 25)], keys: vec![1, 150, 9, 9] };
-    let dense_cells = dense.read_spec(&spec);
-    assert_eq!(dense_cells, hashed.read_spec(&spec), "spec read diverged");
-    let mut flat_keys: Vec<usize> = (3..43).collect();
-    flat_keys.extend(70..95);
-    flat_keys.extend([1, 150, 9, 9]);
-    assert_eq!(dense_cells, dense.read(&flat_keys), "spec order != flat key order");
+    let pulled = store.read_spec(&spec);
+    assert_eq!(pulled.total_cells(), spec.total_len());
+    for (rp, &(start, len)) in pulled.ranges.iter().zip(&spec.ranges) {
+        let (values, version) = model.expected_range(start, len);
+        assert_eq!(rp.values(), &values[..], "spec range ({start},{len}) diverged");
+        assert_eq!(rp.version(), version);
+        assert_eq!(rp.start(), start);
+    }
+    for (&key, cell) in spec.keys.iter().zip(&pulled.cells) {
+        assert_eq!(*cell, model.expected_cell(key), "spec key {key} diverged");
+    }
 }
 
 #[test]
-fn randomized_ops_dense_segments_match_hashed_store() {
+fn randomized_ops_match_reference_model() {
     for seed in [1u64, 7, 42] {
         // segments covering parts of the key space (mixed routing)
-        run_equivalence(seed, &[(3, 50), (70, 40)]);
+        run_model_equivalence(seed, &[(3, 50), (70, 40)]);
         // one segment covering everything touched
-        run_equivalence(seed ^ 0xfeed, &[(0, KEY_SPACE + 20)]);
-        // no segments on either side: the harness itself is neutral
-        run_equivalence(seed ^ 0xbeef, &[]);
+        run_model_equivalence(seed ^ 0xfeed, &[(0, MODEL_SPACE)]);
+        // no segments: the hashed-only path against the same model
+        run_model_equivalence(seed ^ 0xbeef, &[]);
     }
+}
+
+#[test]
+fn hashed_only_stores_agree_across_shard_counts() {
+    // With no segments registered, two stores with different shard
+    // counts must be observationally identical cell for cell (routing
+    // is an implementation detail).
+    let a = ShardedStore::new(5);
+    let b = ShardedStore::new(7);
+    let mut rng = Rng::new(1234);
+    for _ in 0..200 {
+        let n = rng.below(16) + 1;
+        let entries: Vec<(usize, f64)> =
+            (0..n).map(|_| (rng.below(KEY_SPACE), rng.f64())).collect();
+        match rng.below(3) {
+            0 => {
+                let v = rng.below(16) as u64;
+                a.publish(&entries, v);
+                b.publish(&entries, v);
+            }
+            1 => {
+                let at = rng.below(16) as u64;
+                a.add_deltas(&entries, at);
+                b.add_deltas(&entries, at);
+            }
+            _ => {
+                let keys: Vec<usize> = entries.iter().map(|&(k, _)| k).collect();
+                assert_eq!(a.read(&keys), b.read(&keys));
+            }
+        }
+    }
+    let all: Vec<usize> = (0..MODEL_SPACE).collect();
+    assert_eq!(a.read(&all), b.read(&all), "final sweep diverged");
 }
 
 #[test]
@@ -106,7 +267,8 @@ fn dense_only_traffic_never_hashes() {
             _ => {
                 let keys: Vec<usize> = entries.iter().map(|&(k, _)| k).collect();
                 let _ = store.read(&keys);
-                let _ = store.read_spec(&PullSpec::from_ranges(vec![(0, KEY_SPACE)]));
+                let pulled = store.read_spec(&PullSpec::from_ranges(vec![(0, KEY_SPACE)]));
+                assert_eq!(pulled.shared_ranges(), 1, "covered range must be zero-copy");
             }
         }
     }
@@ -122,4 +284,58 @@ fn unpublished_cells_read_as_default_on_both_paths() {
     let h = hashed.read(&keys);
     assert_eq!(d, h);
     assert!(d.iter().all(|&c| c == Cell::default()));
+}
+
+#[test]
+fn held_snapshot_is_bitwise_stable_under_concurrent_writes() {
+    // Epoch isolation: a worker's held range view must stay bitwise
+    // identical while the coordinator full-resyncs and other workers
+    // push deltas concurrently — the writers clone the epoch instead of
+    // mutating what the reader holds.
+    const N: usize = 4096;
+    let store = Arc::new(ShardedStore::with_segments(4, &[(0, N)]));
+    let seed: Vec<f64> = (0..N).map(|i| (i as f64 * 0.01).cos()).collect();
+    store.publish_dense(&seed, 0);
+
+    let held = store.read_spec(&PullSpec::from_ranges(vec![(0, N)]));
+    let before: Vec<f32> = held.ranges[0].values().to_vec();
+    assert_eq!(held.ranges[0].version(), 0);
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let store = Arc::clone(&store);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + t);
+            for round in 1..200u64 {
+                if t == 0 {
+                    // the coordinator: full re-syncs with values that
+                    // differ from the seed every round, so any epoch
+                    // mutated in place would be caught immediately
+                    let resync: Vec<f64> =
+                        (0..N).map(|i| i as f64 + round as f64).collect();
+                    store.publish_dense(&resync, round);
+                } else {
+                    // a worker: scattered delta pushes
+                    let deltas: Vec<(usize, f64)> =
+                        (0..32).map(|_| (rng.below(N), rng.f64() - 0.5)).collect();
+                    store.add_deltas(&deltas, round);
+                }
+            }
+        }));
+    }
+    // While the writers churn epochs, the held view must not move.
+    for _ in 0..100 {
+        assert_eq!(held.ranges[0].values(), &before[..]);
+        assert_eq!(held.ranges[0].version(), 0);
+        std::thread::yield_now();
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(held.ranges[0].values(), &before[..], "held epoch mutated");
+    assert!(store.cow_clones() >= 1, "writes against a held epoch must clone");
+    // A fresh pull observes a post-write epoch instead.
+    let fresh = store.read_range(0, N);
+    assert_eq!(fresh.version(), 199);
+    assert_eq!(store.hash_probes(), 0, "all traffic was dense");
 }
