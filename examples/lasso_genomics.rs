@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         let exes =
             LassoExes::new(Rc::clone(&store), "adlike", &data.x.to_row_major(), &data.y)?;
         let mut problem = ArtifactLasso::new(exes, &data.y, cfg.lambda);
-        let mut sched = kind.build(problem.num_vars(), &cfg);
+        let mut sched = kind.build(problem.num_vars(), &cfg.sap, cfg.engine.seed);
         let mut cluster =
             VirtualCluster::new(cfg.workers, cfg.sap.shards, CostModel::new(&cfg.cost));
         let mut trace = Trace::new(kind.name(), "adlike", cfg.workers);

@@ -28,6 +28,21 @@
 //!   rounds past the staleness bound and let the SSP gate pace the
 //!   workers so scheduling overlaps compute; `0` throttles dispatch at
 //!   the bound instead.
+//! * `--scheduler dynamic|static|random` — which scheduling policy
+//!   plans distributed rounds (routed through `SchedKind::build`, so
+//!   all three policies run on the real-thread path, not just the
+//!   simulator).
+//! * `--sched-shards N` — scheduler-service shard threads S: each owns
+//!   a fixed random J/S slice of the variables and plans its rounds
+//!   (round-robin) on its own thread, pipelined ahead of execution
+//!   into a bounded plan queue. `0` (default) follows `sap.shards`, so
+//!   the distributed planner is identical to the engine-path scheduler
+//!   built from the same config.
+//! * `--sched-pipeline-depth N` — how many rounds each shard thread
+//!   may plan ahead of the coordinator popping them (queue bound).
+//! * `--sched-service 0|1` — `0` plans inline on the coordinator
+//!   thread (the pre-service behaviour, kept for A/B runs; also the
+//!   automatic fallback for problems without a scheduling oracle).
 
 use std::collections::BTreeMap;
 

@@ -72,6 +72,51 @@ impl Default for EngineConfig {
     }
 }
 
+/// Scheduler-service parameters (the distributed path's planning side,
+/// `sched_service::`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedConfig {
+    /// Which scheduling policy plans distributed rounds (selects the
+    /// shared planner-core policy on both the service and the inline
+    /// path, so `static` and `random` run distributed too).
+    pub kind: crate::schedulers::SchedKind,
+    /// Scheduler shard (thread) count S for the service. `0` (the
+    /// default) follows `sap.shards`, keeping the distributed planner
+    /// identical to the engine-path scheduler built from the same
+    /// config — the staleness-0 bit-exactness contract.
+    pub shards: usize,
+    /// Bounded per-shard plan-queue depth: how many rounds each shard
+    /// thread may plan ahead of the coordinator popping them.
+    pub pipeline_depth: usize,
+    /// Run planning on dedicated shard threads (the pipelined service).
+    /// Off = plan inline on the coordinator thread (the pre-service
+    /// behaviour, kept for A/B runs; also the automatic fallback for
+    /// problems without a thread-shareable scheduling oracle).
+    pub service: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            kind: crate::schedulers::SchedKind::Dynamic,
+            shards: 0,
+            pipeline_depth: 2,
+            service: true,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// The effective scheduler shard count (0 = follow `sap.shards`).
+    pub fn effective_shards(&self, sap: &SapConfig) -> usize {
+        if self.shards == 0 {
+            sap.shards
+        } else {
+            self.shards
+        }
+    }
+}
+
 /// Parameter-server parameters (the distributed path, `ps::`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PsConfig {
@@ -177,6 +222,7 @@ pub struct RunConfig {
     pub engine: EngineConfig,
     pub cost: CostModelConfig,
     pub ps: PsConfig,
+    pub sched: SchedConfig,
     /// Worker (core) count P.
     pub workers: usize,
     /// Regularization λ.
@@ -190,6 +236,7 @@ impl Default for RunConfig {
             engine: EngineConfig::default(),
             cost: CostModelConfig::default(),
             ps: PsConfig::default(),
+            sched: SchedConfig::default(),
             workers: 16,
             lambda: 5e-4,
         }
@@ -237,6 +284,10 @@ impl RunConfig {
             "ps.republish_tol",
             "ps.dense_segments",
             "ps.pipeline",
+            "sched.scheduler",
+            "sched.shards",
+            "sched.pipeline_depth",
+            "sched.service",
         ];
         for k in conf.keys() {
             anyhow::ensure!(KNOWN.contains(&k), "unknown config key: {k}");
@@ -252,7 +303,15 @@ impl RunConfig {
             "engine.max_rounds" => c.engine.max_rounds,
             "ps.staleness" => c.ps.staleness,
             "ps.shards" => c.ps.shards,
+            "sched.shards" => c.sched.shards,
+            "sched.pipeline_depth" => c.sched.pipeline_depth,
         );
+        if let Some(v) = conf.get("sched.scheduler") {
+            c.sched.kind = crate::schedulers::SchedKind::parse(v)?;
+        }
+        if let Some(v) = conf.get_usize("sched.service").map_err(anyhow::Error::msg)? {
+            c.sched.service = v != 0;
+        }
         if let Some(v) = conf.get_usize("ps.async").map_err(anyhow::Error::msg)? {
             c.ps.asynchronous = v != 0;
         }
@@ -283,7 +342,7 @@ impl RunConfig {
     /// Serialize back to the preset format.
     pub fn to_conf_string(&self) -> String {
         format!(
-            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\n",
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n",
             self.workers,
             self.lambda,
             self.sap.p_prime_factor,
@@ -306,6 +365,10 @@ impl RunConfig {
             self.ps.republish_tol,
             usize::from(self.ps.dense_segments),
             usize::from(self.ps.pipeline),
+            self.sched.kind.name(),
+            self.sched.shards,
+            self.sched.pipeline_depth,
+            usize::from(self.sched.service),
         )
     }
 
@@ -320,6 +383,7 @@ impl RunConfig {
         anyhow::ensure!(self.sap.eta > 0.0, "eta must be > 0");
         anyhow::ensure!(self.lambda >= 0.0, "lambda must be >= 0");
         anyhow::ensure!(self.ps.shards >= 1, "ps.shards must be >= 1");
+        anyhow::ensure!(self.sched.pipeline_depth >= 1, "sched.pipeline_depth must be >= 1");
         anyhow::ensure!(
             self.ps.republish_tol.is_finite(),
             "ps.republish_tol must be finite (negative = full republish)"
@@ -402,6 +466,36 @@ mod tests {
         let conf = KvConf::parse("[ps]\nrepublish_tol = -1\n").unwrap();
         let c = RunConfig::from_kvconf(&conf).unwrap();
         assert_eq!(c.ps.republish_tol, -1.0);
+    }
+
+    #[test]
+    fn sched_section_parses_and_defaults() {
+        let conf = KvConf::parse(
+            "[sched]\nscheduler = static\nshards = 2\npipeline_depth = 4\nservice = 0\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.sched.kind, crate::schedulers::SchedKind::Static);
+        assert_eq!(c.sched.shards, 2);
+        assert_eq!(c.sched.pipeline_depth, 4);
+        assert!(!c.sched.service);
+        // defaults: dynamic policy, shards follow sap.shards, service on
+        let d = SchedConfig::default();
+        assert_eq!(d.kind, crate::schedulers::SchedKind::Dynamic);
+        assert_eq!(d.effective_shards(&SapConfig::default()), SapConfig::default().shards);
+        assert!(d.service);
+        // explicit shard count overrides sap.shards
+        assert_eq!(
+            SchedConfig { shards: 7, ..Default::default() }
+                .effective_shards(&SapConfig::default()),
+            7
+        );
+        // depth 0 is rejected
+        let bad = KvConf::parse("[sched]\npipeline_depth = 0\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+        // bogus policy is rejected
+        let bad = KvConf::parse("[sched]\nscheduler = bogus\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
     }
 
     #[test]

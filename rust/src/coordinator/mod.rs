@@ -1,4 +1,5 @@
-//! The SAP scheduling machinery (paper §2–§3) — STRADS's contribution.
+//! The SAP scheduling primitives (paper §2–§3) — the pieces STRADS's
+//! scheduling stack is built from.
 //!
 //! The four SAP steps map to submodules:
 //!
@@ -10,9 +11,12 @@
 //!    "curse of the last reducer" fix, used heavily by MF).
 //! 4. progress monitoring lives in `priority::PriorityDist::report`.
 //!
-//! **[`shard`]** implements the §3 distributed design: S scheduler
-//! shards, each owning a fixed J/S slice of the variables with its own
-//! local p_s(j), taking round-robin turns to produce dispatch plans.
+//! **[`shard`]** holds the §3 fixed random ownership partition. The
+//! composition of all four steps into per-shard planners — used both
+//! synchronously by the engine-path schedulers ([`crate::schedulers`])
+//! and as rotating shard *threads* by the pipelined scheduler service
+//! on the distributed path — lives in [`crate::sched_service`]: one
+//! scheduling stack, two execution shapes.
 
 pub mod balance;
 pub mod depcheck;
@@ -22,7 +26,7 @@ pub mod shard;
 pub use balance::{merge_balanced, partition_balanced, partition_uniform};
 pub use depcheck::select_independent;
 pub use priority::PriorityDist;
-pub use shard::ShardSet;
+pub use shard::partition_owned;
 
 /// Cost accounting for one scheduling decision, consumed by the virtual
 /// cluster's cost model (the scheduler must never be the bottleneck —

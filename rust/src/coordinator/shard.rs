@@ -1,183 +1,83 @@
-//! §3's distributed scheduler design: S shards, fixed variable
-//! ownership, round-robin dispatch turns.
+//! §3's fixed random variable-ownership partition: each scheduler
+//! shard owns a random J/S slice of the variables (assigned once,
+//! never migrated) and only ever co-schedules variables it owns, so
+//! cross-shard dependency checks are unnecessary — blocks from
+//! different shards execute in *different* rounds (the staleness
+//! argument of §3).
 //!
-//! Each shard owns a random J/S slice of the variables (assigned once,
-//! never migrated) and maintains its own local importance distribution
-//! p_s(j). Shards take strict turns producing dispatch plans; because a
-//! shard only co-schedules variables it owns, cross-shard dependency
-//! checks are unnecessary — blocks from different shards execute in
-//! *different* rounds (the staleness argument of §3). [`ShardSet`]
-//! encapsulates ownership, local<->global id translation, and the
-//! rotation.
+//! The partition itself lives here as a primitive; the shard planners
+//! built on top of it (local importance state, per-shard RNG streams,
+//! round-robin rotation, and the threaded pipelined service) are in
+//! [`crate::sched_service`] — one scheduling stack shared by the
+//! engine path and the distributed path.
 
-use crate::coordinator::priority::{PriorityDist, PriorityKind};
 use crate::util::Rng;
 
-/// One scheduler shard: owned variables + local importance distribution.
-#[derive(Clone, Debug)]
-pub struct Shard {
-    /// Global variable ids owned by this shard.
-    pub owned: Vec<usize>,
-    /// Importance distribution over local indices (0..owned.len()).
-    pub priority: PriorityDist,
-}
-
-/// The full shard set with round-robin rotation state.
-#[derive(Clone, Debug)]
-pub struct ShardSet {
-    shards: Vec<Shard>,
-    /// Global variable id -> (shard, local index).
-    owner: Vec<(u32, u32)>,
-    /// Whose turn it is to dispatch next.
-    turn: usize,
-}
-
-impl ShardSet {
-    /// Randomly assign `num_vars` variables to `s` shards (paper: "each
-    /// thread s is randomly assigned J/S variables ... these assignments
-    /// remain fixed throughout").
-    pub fn new(
-        num_vars: usize,
-        s: usize,
-        eta: f64,
-        init_priority: f64,
-        kind: PriorityKind,
-        rng: &mut Rng,
-    ) -> Self {
-        let s = s.max(1).min(num_vars.max(1));
-        let mut perm: Vec<usize> = (0..num_vars).collect();
-        rng.shuffle(&mut perm);
-        let mut shards: Vec<Shard> = Vec::with_capacity(s);
-        let mut owner = vec![(0u32, 0u32); num_vars];
-        let base = num_vars / s;
-        let extra = num_vars % s;
-        let mut cursor = 0;
-        for si in 0..s {
-            let len = base + usize::from(si < extra);
-            let owned: Vec<usize> = perm[cursor..cursor + len].to_vec();
-            cursor += len;
-            for (li, &g) in owned.iter().enumerate() {
-                owner[g] = (si as u32, li as u32);
-            }
-            shards.push(Shard {
-                priority: PriorityDist::new(owned.len(), eta, init_priority, kind),
-                owned,
-            });
+/// Randomly partition `num_vars` variables across `s` shards (paper:
+/// "each thread s is randomly assigned J/S variables ... these
+/// assignments remain fixed throughout"). `s` is clamped to
+/// `[1, num_vars]` so no shard is empty.
+///
+/// Returns the per-shard owned lists (global ids) plus the inverse
+/// table: global id -> (shard, local index).
+pub fn partition_owned(
+    num_vars: usize,
+    s: usize,
+    rng: &mut Rng,
+) -> (Vec<Vec<usize>>, Vec<(u32, u32)>) {
+    let s = s.max(1).min(num_vars.max(1));
+    let mut perm: Vec<usize> = (0..num_vars).collect();
+    rng.shuffle(&mut perm);
+    let mut owned_lists: Vec<Vec<usize>> = Vec::with_capacity(s);
+    let mut owner = vec![(0u32, 0u32); num_vars];
+    let base = num_vars / s;
+    let extra = num_vars % s;
+    let mut cursor = 0;
+    for si in 0..s {
+        let len = base + usize::from(si < extra);
+        let owned: Vec<usize> = perm[cursor..cursor + len].to_vec();
+        cursor += len;
+        for (li, &g) in owned.iter().enumerate() {
+            owner[g] = (si as u32, li as u32);
         }
-        ShardSet { shards, owner, turn: 0 }
+        owned_lists.push(owned);
     }
-
-    pub fn num_shards(&self) -> usize {
-        self.shards.len()
-    }
-
-    pub fn shard(&self, i: usize) -> &Shard {
-        &self.shards[i]
-    }
-
-    /// The shard whose turn it is; advances the rotation.
-    pub fn next_turn(&mut self) -> usize {
-        let t = self.turn;
-        self.turn = (self.turn + 1) % self.shards.len();
-        t
-    }
-
-    /// Draw `k` distinct candidates (global ids) from shard `si`'s local
-    /// importance distribution, in descending-weight-ish sample order.
-    pub fn sample_candidates(&mut self, si: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
-        let shard = &mut self.shards[si];
-        let locals = shard.priority.sample_candidates(k, rng);
-        locals.into_iter().map(|li| shard.owned[li]).collect()
-    }
-
-    /// SAP step 4: report measured progress for a *global* variable id.
-    pub fn report(&mut self, global: usize, delta_abs: f64) {
-        let (si, li) = self.owner[global];
-        self.shards[si as usize].priority.report(li as usize, delta_abs);
-    }
-
-    /// Fraction of all variables updated at least once.
-    pub fn coverage(&self) -> f64 {
-        let total: usize = self.shards.iter().map(|s| s.owned.len()).sum();
-        if total == 0 {
-            return 1.0;
-        }
-        let covered: f64 =
-            self.shards.iter().map(|s| s.priority.coverage() * s.owned.len() as f64).sum();
-        covered / total as f64
-    }
+    (owned_lists, owner)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn mk(num_vars: usize, s: usize) -> ShardSet {
-        let mut rng = Rng::new(9);
-        ShardSet::new(num_vars, s, 1e-6, 1e3, PriorityKind::Linear, &mut rng)
-    }
-
     #[test]
-    fn ownership_is_a_partition() {
-        let set = mk(103, 4);
-        let mut all: Vec<usize> =
-            (0..4).flat_map(|i| set.shard(i).owned.clone()).collect();
+    fn ownership_is_a_partition_with_balanced_sizes() {
+        let mut rng = Rng::new(9);
+        let (lists, owner) = partition_owned(103, 4, &mut rng);
+        let mut all: Vec<usize> = lists.iter().flatten().copied().collect();
         all.sort();
         assert_eq!(all, (0..103).collect::<Vec<_>>());
-        // sizes differ by at most 1
-        let sizes: Vec<usize> = (0..4).map(|i| set.shard(i).owned.len()).collect();
+        let sizes: Vec<usize> = lists.iter().map(|l| l.len()).collect();
         assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
-    }
-
-    #[test]
-    fn round_robin_rotation() {
-        let mut set = mk(10, 3);
-        let turns: Vec<usize> = (0..7).map(|_| set.next_turn()).collect();
-        assert_eq!(turns, vec![0, 1, 2, 0, 1, 2, 0]);
-    }
-
-    #[test]
-    fn candidates_come_from_owning_shard() {
-        let mut set = mk(100, 5);
-        let mut rng = Rng::new(1);
-        for si in 0..5 {
-            let cands = set.sample_candidates(si, 8, &mut rng);
-            let owned: std::collections::HashSet<_> =
-                set.shard(si).owned.iter().copied().collect();
-            assert!(cands.iter().all(|c| owned.contains(c)));
-            // distinct
-            let set2: std::collections::HashSet<_> = cands.iter().collect();
-            assert_eq!(set2.len(), cands.len());
+        // inverse table is consistent
+        for (si, list) in lists.iter().enumerate() {
+            for (li, &g) in list.iter().enumerate() {
+                assert_eq!(owner[g], (si as u32, li as u32));
+            }
         }
-    }
-
-    #[test]
-    fn report_routes_to_owner() {
-        let mut set = mk(50, 4);
-        // find a var owned by shard 2 and bump it hugely
-        let g = set.shard(2).owned[0];
-        for v in 0..50 {
-            set.report(v, 1e-9); // touch everything
-        }
-        set.report(g, 100.0);
-        let (si, li) = set.owner[g];
-        assert_eq!(si, 2);
-        assert!(set.shards[2].priority.weight(li as usize) > 99.0);
     }
 
     #[test]
     fn more_shards_than_vars_clamps() {
-        let set = mk(3, 10);
-        assert_eq!(set.num_shards(), 3);
+        let mut rng = Rng::new(9);
+        let (lists, _) = partition_owned(3, 10, &mut rng);
+        assert_eq!(lists.len(), 3);
+        assert!(lists.iter().all(|l| l.len() == 1));
     }
 
     #[test]
-    fn coverage_aggregates_across_shards() {
-        let mut set = mk(40, 4);
-        assert_eq!(set.coverage(), 0.0);
-        for v in 0..20 {
-            set.report(v, 0.1);
-        }
-        assert!((set.coverage() - 0.5).abs() < 1e-9);
+    fn partition_is_seed_deterministic() {
+        let (a, _) = partition_owned(50, 4, &mut Rng::new(7));
+        let (b, _) = partition_owned(50, 4, &mut Rng::new(7));
+        assert_eq!(a, b);
     }
 }

@@ -51,6 +51,7 @@ pub fn run_rounds(
                     imbalance: last_imbalance,
                     staleness: 0.0,
                     net_bytes: 0,
+                    sched_wait: sched_secs,
                 });
                 return;
             }
@@ -72,6 +73,7 @@ pub fn run_rounds(
                 imbalance: last_imbalance,
                 staleness: 0.0,
                 net_bytes: 0,
+                sched_wait: sched_secs,
             });
 
             // Automatic stopping condition (paper §5.1: "a minimum
@@ -98,6 +100,7 @@ pub fn run_rounds(
             imbalance: last_imbalance,
             staleness: 0.0,
             net_bytes: 0,
+            sched_wait: 0.0,
         });
     }
 }

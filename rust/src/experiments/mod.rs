@@ -10,45 +10,12 @@ use crate::lasso::NativeLasso;
 use crate::metrics::Trace;
 use crate::mf::{run_mf, MfPartition, NativeMf};
 use crate::problem::ModelProblem;
-use crate::schedulers::{DynamicScheduler, RandomScheduler, Scheduler, StaticBlockScheduler};
 use crate::sim::{CostModel, VirtualCluster};
 
-/// Scheduler selector shared by CLI and drivers.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SchedKind {
-    Dynamic,
-    Static,
-    Random,
-}
-
-impl SchedKind {
-    pub fn name(self) -> &'static str {
-        match self {
-            SchedKind::Dynamic => "dynamic",
-            SchedKind::Static => "static",
-            SchedKind::Random => "random",
-        }
-    }
-
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
-            "dynamic" | "strads" => Ok(SchedKind::Dynamic),
-            "static" => Ok(SchedKind::Static),
-            "random" | "shotgun" => Ok(SchedKind::Random),
-            other => anyhow::bail!("unknown scheduler {other}"),
-        }
-    }
-
-    pub fn build(self, num_vars: usize, cfg: &RunConfig) -> Box<dyn Scheduler> {
-        match self {
-            SchedKind::Dynamic => {
-                Box::new(DynamicScheduler::new(num_vars, &cfg.sap, cfg.engine.seed))
-            }
-            SchedKind::Static => Box::new(StaticBlockScheduler::new(&cfg.sap, cfg.engine.seed)),
-            SchedKind::Random => Box::new(RandomScheduler::new(cfg.engine.seed)),
-        }
-    }
-}
+// Re-exported for back-compat: the selector moved next to the
+// schedulers themselves so the distributed coordinator can route
+// construction through it without a module cycle.
+pub use crate::schedulers::SchedKind;
 
 /// Lasso dataset selector.
 pub fn lasso_spec(name: &str) -> anyhow::Result<LassoSynthSpec> {
@@ -78,7 +45,7 @@ pub fn run_lasso_native(
     cfg: &RunConfig,
 ) -> Trace {
     let mut problem = NativeLasso::new(data, cfg.lambda);
-    let mut scheduler = sched.build(problem.num_vars(), cfg);
+    let mut scheduler = sched.build(problem.num_vars(), &cfg.sap, cfg.engine.seed);
     // Every scheduler gets the same S-shard latency hiding: it is an
     // infrastructure property (rotating scheduler threads), not part of
     // the policy under comparison.
@@ -225,7 +192,7 @@ pub fn staleness_sweep(
         println!(
             "{}  (flushed={}B republished={}B pulled={}B [{:.1}x under cell wire] \
              snapshot_clones={} cow_clones={} gate_waits={} mean_staleness={:.2} \
-             {:.3}ms/round)",
+             sched_wait={:.3}s queue_depth={:.2} {:.3}ms/round)",
             report.trace.summary(),
             report.bytes_flushed,
             report.bytes_republished,
@@ -235,6 +202,8 @@ pub fn staleness_sweep(
             report.cow_clones,
             report.gate_waits,
             report.mean_staleness,
+            report.sched_wait_total,
+            report.plan_queue_depth,
             sec_per_round * 1e3
         );
         if !rows.is_empty() {
@@ -246,6 +215,7 @@ pub fn staleness_sweep(
              \"pull_bytes_cell_equiv\": {}, \"snapshot_clones\": {}, \"cow_clones\": {}, \
              \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
              \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
+             \"sched_wait_total\": {:.6e}, \"plan_queue_depth\": {:.2}, \
              \"final_objective\": {:.8e}}}",
             setting,
             report.rounds,
@@ -261,6 +231,8 @@ pub fn staleness_sweep(
             report.gate_waits,
             report.hash_probes,
             sec_per_round,
+            report.sched_wait_total,
+            report.plan_queue_depth,
             report.trace.final_objective()
         ));
         if let Some(p) = out_csv {
@@ -272,11 +244,14 @@ pub fn staleness_sweep(
         let body = format!(
             "{{\n  \"bench\": \"ps_staleness_sweep\",\n  \"dataset\": \"{dataset}\",\n  \
              \"workers\": {},\n  \"republish_tol\": {:e},\n  \"dense_segments\": {},\n  \
-             \"pipeline\": {},\n  \"settings\": [\n{rows}\n  ]\n}}\n",
+             \"pipeline\": {},\n  \"scheduler\": \"{}\",\n  \"sched_shards\": {},\n  \
+             \"settings\": [\n{rows}\n  ]\n}}\n",
             cfg_base.workers,
             cfg_base.ps.republish_tol,
             cfg_base.ps.dense_segments,
-            cfg_base.ps.pipeline
+            cfg_base.ps.pipeline,
+            cfg_base.sched.kind.name(),
+            cfg_base.sched.effective_shards(&cfg_base.sap)
         );
         std::fs::write(p, body)?;
     }

@@ -19,4 +19,4 @@ pub mod artifact;
 pub mod native;
 
 pub use artifact::ArtifactLasso;
-pub use native::{LassoPsKernel, NativeLasso};
+pub use native::{LassoPsKernel, LassoSchedOracle, NativeLasso};

@@ -110,6 +110,31 @@ impl<'a> NativeLasso<'a> {
     }
 }
 
+/// The Lasso scheduling oracle for the scheduler-service path: pair
+/// dependencies are column correlations of the immutable design
+/// matrix, so shard threads can evaluate them without the coordinator.
+/// Values match [`NativeLasso::dependency_pair`] bit-for-bit (same
+/// `col_dot` in the same argument order, same f32 → f64 widening) —
+/// the staleness-0 bit-exactness pin depends on it.
+pub struct LassoSchedOracle {
+    x: DenseMatrix,
+}
+
+impl crate::sched_service::SchedOracle for LassoSchedOracle {
+    fn num_vars(&self) -> usize {
+        self.x.ncols()
+    }
+
+    fn workload(&self, _j: usize) -> u64 {
+        1
+    }
+
+    fn dependency_pair(&self, a: usize, b: usize) -> f64 {
+        let (lo, hi) = (a.min(b), a.max(b));
+        self.x.col_dot(lo, hi).abs() as f64
+    }
+}
+
 /// The Lasso worker compute for the parameter-server path. PS key
 /// space: keys `0..n` hold the residual r (republished exactly by the
 /// coordinator each round), keys `n..n+J` hold β. Workers pull the full
@@ -248,6 +273,10 @@ impl ModelProblem for NativeLasso<'_> {
             n: self.r.len(),
             lambda: self.lambda,
         }))
+    }
+
+    fn sched_oracle(&self) -> Option<Arc<dyn crate::sched_service::SchedOracle>> {
+        Some(Arc::new(LassoSchedOracle { x: self.x.clone() }))
     }
 
     fn apply_deltas(&mut self, deltas: &[(usize, f64)]) -> RoundResult {

@@ -5,8 +5,9 @@
 //! Xing; CMU, 2013) as a three-layer rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the paper's contribution: the SAP scheduling
-//!   engine ([`coordinator`]), baseline schedulers ([`schedulers`]), the
-//!   sharded round-robin scheduler service, the sharded parameter
+//!   primitives ([`coordinator`]), the sharded pipelined scheduler
+//!   service and its planner core ([`sched_service`]), the baseline
+//!   schedulers over that core ([`schedulers`]), the sharded parameter
 //!   server with bounded-staleness clocks ([`ps`]), the worker pool
 //!   that runs any [`problem::ModelProblem`] over it ([`workers`]), the
 //!   virtual cluster simulator ([`sim`]), data generators ([`data`])
@@ -50,6 +51,7 @@ pub mod mf;
 pub mod problem;
 pub mod ps;
 pub mod runtime;
+pub mod sched_service;
 pub mod schedulers;
 pub mod sim;
 pub mod sparse;
@@ -65,8 +67,9 @@ pub mod prelude {
     pub use crate::metrics::Trace;
     pub use crate::problem::{Block, ModelProblem, RoundResult};
     pub use crate::ps::StalenessPolicy;
+    pub use crate::sched_service::{SchedOracle, SchedService};
     pub use crate::schedulers::{
-        DynamicScheduler, RandomScheduler, Scheduler, StaticBlockScheduler,
+        DynamicScheduler, RandomScheduler, SchedKind, Scheduler, StaticBlockScheduler,
     };
     pub use crate::sim::VirtualCluster;
     pub use crate::workers::run_distributed;

@@ -40,13 +40,18 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
   run-mf:      --dataset tiny|netflix|yahoo --partition balanced|uniform
                --workers N --iters N --lambda F --artifacts
   distributed: --problem lasso|mf --dataset ... --workers N --rounds N --lambda F
+               --scheduler dynamic|static|random (plans distributed rounds)
                --staleness N|async (SSP bound: pulls at most N rounds stale;
                                     'async' = no gate)  --ps-shards N
                --republish-tol F (republish only derived entries that moved
                                   > F since last publish; <0 = full each round)
                --dense-segments 0|1 (contiguous key ranges as dense slabs)
                --pipeline 0|1 (dispatch past the bound; SSP gate paces workers)
+               --sched-shards N (scheduler service shard threads; 0 = follow
+                                 sap.shards)  --sched-pipeline-depth N
+               --sched-service 0|1 (0 = plan inline on the coordinator)
   staleness-sweep: --dataset tiny|adlike|wide --workers N --rounds N --lambda F
+               --scheduler dynamic|static|random --sched-shards N
                --republish-tol F --dense-segments 0|1 --pipeline 0|1
                (runs staleness 0, 2, 8, async through the parameter server;
                 writes staleness_sweep.csv + BENCH_ps.json to --out)";
@@ -169,6 +174,14 @@ fn run() -> anyhow::Result<()> {
             cfg.ps.dense_segments =
                 args.usize_or("dense-segments", usize::from(cfg.ps.dense_segments))? != 0;
             cfg.ps.pipeline = args.usize_or("pipeline", usize::from(cfg.ps.pipeline))? != 0;
+            if let Some(kind) = args.opt_str("scheduler") {
+                cfg.sched.kind = SchedKind::parse(&kind)?;
+            }
+            cfg.sched.shards = args.usize_or("sched-shards", cfg.sched.shards)?;
+            cfg.sched.pipeline_depth =
+                args.usize_or("sched-pipeline-depth", cfg.sched.pipeline_depth)?;
+            cfg.sched.service =
+                args.usize_or("sched-service", usize::from(cfg.sched.service))? != 0;
             args.finish()?;
             cfg.validate()?;
             let report = match problem_kind.as_str() {
@@ -193,7 +206,8 @@ fn run() -> anyhow::Result<()> {
             println!(
                 "rounds={} deltas={} bytes_flushed={} bytes_republished={} pull_bytes={} \
                  snapshot_clones={} cow_clones={} gate_waits={} mean_staleness={:.2} \
-                 max_staleness={} hash_probes={}",
+                 max_staleness={} hash_probes={} sched_wait={:.3}s plan_queue_depth={:.2} \
+                 sched_service={}",
                 report.rounds,
                 report.deltas_applied,
                 report.bytes_flushed,
@@ -204,7 +218,10 @@ fn run() -> anyhow::Result<()> {
                 report.gate_waits,
                 report.mean_staleness,
                 report.max_stale_gap,
-                report.hash_probes
+                report.hash_probes,
+                report.sched_wait_total,
+                report.plan_queue_depth,
+                report.sched_service_used
             );
         }
         "staleness-sweep" => {
@@ -215,8 +232,13 @@ fn run() -> anyhow::Result<()> {
             cfg.ps.dense_segments =
                 args.usize_or("dense-segments", usize::from(cfg.ps.dense_segments))? != 0;
             cfg.ps.pipeline = args.usize_or("pipeline", usize::from(cfg.ps.pipeline))? != 0;
+            if let Some(kind) = args.opt_str("scheduler") {
+                cfg.sched.kind = SchedKind::parse(&kind)?;
+            }
+            cfg.sched.shards = args.usize_or("sched-shards", cfg.sched.shards)?;
             let rounds = args.usize_or("rounds", 300)?;
             args.finish()?;
+            cfg.validate()?;
             let csv = out_dir.join("staleness_sweep.csv");
             let _ = std::fs::remove_file(&csv);
             let json = out_dir.join("BENCH_ps.json");
@@ -273,7 +295,7 @@ fn run_lasso_artifacts(
     let store = Rc::new(ArtifactStore::open(&default_artifacts_dir())?);
     let exes = LassoExes::new(store, dataset, &data.x.to_row_major(), &data.y)?;
     let mut problem = ArtifactLasso::new(exes, &data.y, cfg.lambda);
-    let mut scheduler = sched.build(problem.num_vars(), cfg);
+    let mut scheduler = sched.build(problem.num_vars(), &cfg.sap, cfg.engine.seed);
     let mut cluster = VirtualCluster::new(cfg.workers, cfg.sap.shards, CostModel::new(&cfg.cost));
     let mut trace = Trace::new(sched.name(), dataset, cfg.workers);
     run_rounds(&mut problem, scheduler.as_mut(), &mut cluster, &cfg.engine, &mut trace);

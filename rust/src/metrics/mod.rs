@@ -24,6 +24,11 @@ pub struct TracePoint {
     /// metered at 4 bytes/cell) when this point was recorded; 0 on
     /// the simulator paths.
     pub net_bytes: u64,
+    /// Seconds the coordinator spent blocked on (or inline computing)
+    /// this round's plan — the scheduling stall the pipelined service
+    /// exists to hide. `vtime` excludes it on the distributed path, so
+    /// compute and scheduling time are separable in the trace.
+    pub sched_wait: f64,
 }
 
 /// A full run trace plus identifying metadata.
@@ -73,13 +78,13 @@ impl Trace {
         if new {
             writeln!(
                 f,
-                "scheduler,dataset,workers,round,vtime,wtime,objective,active_vars,imbalance,staleness,net_bytes"
+                "scheduler,dataset,workers,round,vtime,wtime,objective,active_vars,imbalance,staleness,net_bytes,sched_wait"
             )?;
         }
         for p in &self.points {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{:.8e},{},{:.4},{:.4},{}",
+                "{},{},{},{},{:.6},{:.6},{:.8e},{},{:.4},{:.4},{},{:.6}",
                 self.scheduler,
                 self.dataset,
                 self.workers,
@@ -90,7 +95,8 @@ impl Trace {
                 p.active_vars,
                 p.imbalance,
                 p.staleness,
-                p.net_bytes
+                p.net_bytes,
+                p.sched_wait
             )?;
         }
         Ok(())
@@ -126,6 +132,7 @@ mod tests {
                 imbalance: 1.0,
                 staleness: 0.0,
                 net_bytes: 0,
+                sched_wait: 0.0,
             });
         }
         t

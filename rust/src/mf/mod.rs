@@ -114,6 +114,7 @@ pub fn run_mf(
                 imbalance: imb,
                 staleness: 0.0,
                 net_bytes: 0,
+                sched_wait: 0.0,
             });
         }
     }

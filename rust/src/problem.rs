@@ -141,4 +141,15 @@ pub trait ModelProblem {
     fn plan_round(&mut self, _round: usize, _p: usize) -> Option<Vec<Block>> {
         None
     }
+
+    /// Thread-shareable scheduling-side view (dependency strengths +
+    /// workloads over immutable data) so the pipelined scheduler
+    /// service can plan on dedicated shard threads. It must agree with
+    /// [`Self::dependency_pair`] / [`Self::workload`] value-for-value —
+    /// that agreement is what keeps the staleness-0 distributed path
+    /// bit-exact with the engine path. `None` (the default) makes the
+    /// distributed coordinator plan inline instead.
+    fn sched_oracle(&self) -> Option<Arc<dyn crate::sched_service::SchedOracle>> {
+        None
+    }
 }

@@ -1,0 +1,155 @@
+//! Measured, least-loaded worker dispatch (the dynamic load-balancing
+//! half of the scheduler service).
+//!
+//! The old distributed path assigned block `i` of every round to worker
+//! `i % p` — blind to both block workloads and worker speed, so one
+//! slow core (or one heavy block landing on an already-busy worker)
+//! stalls the round. [`Dispatcher`] keeps, per worker, an EWMA of the
+//! *measured* seconds-per-work-unit (from worker-reported compute
+//! times) and the expected seconds of work already queued, and sends
+//! each block to the worker with the earliest expected completion.
+//! Assignment only moves timing, never results: deltas are reassembled
+//! in block order regardless of which worker computed them, so the
+//! staleness-0 path stays bit-exact under any dispatch policy.
+
+/// EWMA weight given to each new service-rate measurement.
+const RATE_ALPHA: f64 = 0.3;
+
+/// Least-loaded worker assignment over measured service rates.
+pub struct Dispatcher {
+    /// Expected seconds of dispatched-but-unfinished work per worker.
+    backlog: Vec<f64>,
+    /// EWMA seconds per work unit per worker (seeded from the cost
+    /// model's calibrated rate until real measurements arrive).
+    rate: Vec<f64>,
+}
+
+impl Dispatcher {
+    pub fn new(workers: usize, default_sec_per_unit: f64) -> Self {
+        let seed_rate = if default_sec_per_unit > 0.0 { default_sec_per_unit } else { 1e-6 };
+        Dispatcher { backlog: vec![0.0; workers], rate: vec![seed_rate; workers] }
+    }
+
+    /// Pick the worker with the earliest expected completion for a
+    /// block of `work` units; charge its backlog. Returns the worker
+    /// and the charged estimate (echoed back at completion so the
+    /// backlog can be released exactly). Ties break to the lowest
+    /// index, so dispatch is deterministic given the same history.
+    pub fn pick(&mut self, work: u64) -> (usize, f64) {
+        let mut best = 0usize;
+        let mut best_t = f64::INFINITY;
+        for w in 0..self.backlog.len() {
+            let t = self.backlog[w] + work as f64 * self.rate[w];
+            if t < best_t {
+                best_t = t;
+                best = w;
+            }
+        }
+        let est = work as f64 * self.rate[best];
+        self.backlog[best] += est;
+        (best, est)
+    }
+
+    /// A block completed on `worker`: release its backlog charge and
+    /// fold the measured compute seconds into the worker's rate.
+    pub fn complete(&mut self, worker: usize, work: u64, est_sec: f64, measured_sec: f64) {
+        self.backlog[worker] = (self.backlog[worker] - est_sec).max(0.0);
+        if work > 0 && measured_sec >= 0.0 {
+            let obs = measured_sec / work as f64;
+            self.rate[worker] = (1.0 - RATE_ALPHA) * self.rate[worker] + RATE_ALPHA * obs;
+        }
+    }
+
+    /// Current measured seconds-per-unit estimates (diagnostics).
+    pub fn rates(&self) -> &[f64] {
+        &self.rate
+    }
+}
+
+/// Measured straggler ratio of one round: max per-worker busy seconds
+/// over the mean, across the workers that actually computed blocks
+/// this round (1.0 = perfectly level, same convention as the planned
+/// [`crate::coordinator::balance::imbalance`]).
+pub fn measured_imbalance(samples: &[(usize, f64)]) -> f64 {
+    if samples.is_empty() {
+        return 1.0;
+    }
+    let mut busy = std::collections::BTreeMap::<usize, f64>::new();
+    for &(w, sec) in samples {
+        *busy.entry(w).or_insert(0.0) += sec;
+    }
+    let max = busy.values().cloned().fold(0.0f64, f64::max);
+    let mean = busy.values().sum::<f64>() / busy.len() as f64;
+    if mean <= 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_workers_round_robin_under_uniform_blocks() {
+        // With identical rates and equal work, least-loaded + lowest-
+        // index tie-break walks the workers in order.
+        let mut d = Dispatcher::new(4, 1.0);
+        let picks: Vec<usize> = (0..8).map(|_| d.pick(1).0).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn slow_worker_gets_less_work() {
+        let mut d = Dispatcher::new(2, 1e-3);
+        // Worker 0 measures 10x slower than worker 1.
+        for _ in 0..20 {
+            d.complete(0, 1, 0.0, 10e-3);
+            d.complete(1, 1, 0.0, 1e-3);
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..22 {
+            let (w, est) = d.pick(1);
+            counts[w] += 1;
+            // complete immediately so backlog reflects rate only
+            d.complete(w, 1, est, if w == 0 { 10e-3 } else { 1e-3 });
+        }
+        assert!(
+            counts[1] > counts[0] * 3,
+            "fast worker must absorb most blocks: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn backlog_releases_exactly() {
+        let mut d = Dispatcher::new(1, 1.0);
+        let (w, est) = d.pick(5);
+        assert_eq!(w, 0);
+        assert!(est > 0.0);
+        d.complete(0, 5, est, 5.0);
+        // backlog fully released (clamped at zero regardless)
+        let (_, est2) = d.pick(1);
+        assert!(est2 > 0.0);
+    }
+
+    #[test]
+    fn heavy_block_avoids_loaded_worker() {
+        let mut d = Dispatcher::new(2, 1.0);
+        let (w0, _) = d.pick(100); // loads worker 0
+        assert_eq!(w0, 0);
+        let (w1, _) = d.pick(100);
+        assert_eq!(w1, 1, "second heavy block must go to the idle worker");
+    }
+
+    #[test]
+    fn measured_imbalance_math() {
+        assert_eq!(measured_imbalance(&[]), 1.0);
+        assert_eq!(measured_imbalance(&[(0, 2.0), (1, 2.0)]), 1.0);
+        // worker 0 busy 3s, worker 1 busy 1s -> max/mean = 3/2
+        let v = measured_imbalance(&[(0, 1.0), (0, 2.0), (1, 1.0)]);
+        assert!((v - 1.5).abs() < 1e-12);
+        // all-zero measurements degrade to 1.0, not NaN
+        assert_eq!(measured_imbalance(&[(0, 0.0), (1, 0.0)]), 1.0);
+    }
+}

@@ -1,0 +1,302 @@
+//! The scheduler service: sharded, pipelined SAP planning off the
+//! coordinator's critical path (paper §3; Lee et al. 2014's
+//! "scheduler threads" primitive).
+//!
+//! [`planner`] holds the shared planning core — per-shard planners
+//! over the fixed ownership partition, used synchronously by the
+//! engine-path schedulers. [`SchedService`] runs the *same* planners
+//! on S dedicated threads: each shard plans its rounds (round-robin,
+//! shard s owns rounds r with r mod S = s) into a bounded per-shard
+//! plan queue, consuming round progress reports ([`crate::problem::RoundResult`]
+//! deltas) asynchronously from an observation channel. The coordinator
+//! pops the next round's plan (measuring `sched_wait`, the time it
+//! actually blocked) and broadcasts each applied round's deltas back.
+//!
+//! **Observation contract.** A shard may plan its round `r` only after
+//! folding observations through round `r − 1 − lookahead`. At
+//! `lookahead = 0` (staleness 0) that is *all* observations through
+//! `r − 1` — exactly the serial rotation — so the lock-step
+//! distributed path stays bit-exact with the engine path (plans are a
+//! pure function of seed + observation prefix; pinned by test). With a
+//! staleness bound the lookahead equals the dispatch window, so shards
+//! plan ahead while workers compute and the queue, not the planner, is
+//! what the coordinator touches per round.
+//!
+//! [`dispatch`] is the worker-assignment side: measured per-worker
+//! service rates feed a least-loaded dispatcher replacing the old
+//! `block_idx % p` round-robin.
+
+pub mod dispatch;
+pub mod planner;
+
+pub use dispatch::{measured_imbalance, Dispatcher};
+pub use planner::{OracleDeps, PlanDeps, PlannerSet, ProblemDeps, SchedOracle, ShardPlanner};
+
+use crate::config::SapConfig;
+use crate::coordinator::priority::PriorityKind;
+use crate::problem::Block;
+use crate::schedulers::SchedKind;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Progress report broadcast to every shard thread: one applied
+/// round's (variable, |δ|) deltas, shared rather than copied.
+type ObsMsg = Arc<Vec<(usize, f64)>>;
+
+/// The running scheduler service: S shard threads planning ahead into
+/// bounded queues. Dropping the service shuts the threads down.
+pub struct SchedService {
+    shards: usize,
+    plan_rxs: Vec<mpsc::Receiver<Vec<Block>>>,
+    obs_txs: Vec<mpsc::Sender<ObsMsg>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Next round index to pop (service-local numbering: only rounds
+    /// the service plans — problem-planned rounds never enter it).
+    next: u64,
+    /// Plans produced minus plans popped, across all shard queues.
+    queued: Arc<AtomicI64>,
+    wait_total: f64,
+    depth_sum: f64,
+    depth_samples: u64,
+}
+
+impl SchedService {
+    /// Spawn `shards` shard-planner threads over `oracle`'s variable
+    /// space. `p` is the worker count plans are sized for;
+    /// `lookahead` is the observation slack (0 = lock-step, see module
+    /// docs); `depth` bounds each shard's plan queue (≥ 1).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        oracle: Arc<dyn SchedOracle>,
+        kind: SchedKind,
+        pkind: PriorityKind,
+        sap: &SapConfig,
+        seed: u64,
+        shards: usize,
+        p: usize,
+        lookahead: u64,
+        depth: usize,
+    ) -> Self {
+        let set = PlannerSet::new(oracle.num_vars(), shards, kind, pkind, sap, seed);
+        let (planners, owner) = set.into_parts();
+        let s = planners.len();
+        let depth = depth.max(1);
+        let queued = Arc::new(AtomicI64::new(0));
+        let mut plan_rxs = Vec::with_capacity(s);
+        let mut obs_txs = Vec::with_capacity(s);
+        let mut handles = Vec::with_capacity(s);
+        for mut planner in planners {
+            let si = planner.index() as u64;
+            let (plan_tx, plan_rx) = mpsc::sync_channel::<Vec<Block>>(depth);
+            let (obs_tx, obs_rx) = mpsc::channel::<ObsMsg>();
+            plan_rxs.push(plan_rx);
+            obs_txs.push(obs_tx);
+            let oracle = Arc::clone(&oracle);
+            let owner = Arc::clone(&owner);
+            let queued = Arc::clone(&queued);
+            handles.push(std::thread::spawn(move || {
+                let mut folded: u64 = 0; // observation rounds folded
+                let mut round = si; // rounds this shard plans: si, si+S, ...
+                loop {
+                    // Gate: round r needs observations through
+                    // r - 1 - lookahead folded (see module docs).
+                    while folded < round.saturating_sub(lookahead) {
+                        match obs_rx.recv() {
+                            Ok(deltas) => {
+                                planner.absorb(&owner, &deltas);
+                                folded += 1;
+                            }
+                            Err(_) => return, // coordinator gone
+                        }
+                    }
+                    // Freshness: fold anything else already delivered
+                    // before planning (never blocks; at lookahead 0
+                    // nothing newer can exist, so this keeps the
+                    // lock-step path deterministic).
+                    while let Ok(deltas) = obs_rx.try_recv() {
+                        planner.absorb(&owner, &deltas);
+                        folded += 1;
+                    }
+                    let blocks = planner.plan(&mut OracleDeps(&*oracle), p);
+                    queued.fetch_add(1, Ordering::Relaxed);
+                    if plan_tx.send(blocks).is_err() {
+                        return; // coordinator gone
+                    }
+                    round += s as u64;
+                }
+            }));
+        }
+        SchedService {
+            shards: s,
+            plan_rxs,
+            obs_txs,
+            handles,
+            next: 0,
+            queued,
+            wait_total: 0.0,
+            depth_sum: 0.0,
+            depth_samples: 0,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Pop the next round's plan (blocking — the round-robin rotation
+    /// fixes which shard it comes from). Returns the plan and the
+    /// seconds this call actually blocked (`sched_wait`).
+    pub fn pop_plan(&mut self) -> anyhow::Result<(Vec<Block>, f64)> {
+        let si = (self.next % self.shards as u64) as usize;
+        let t = Instant::now();
+        let blocks = self.plan_rxs[si]
+            .recv()
+            .map_err(|_| anyhow::anyhow!("scheduler shard {si} thread died"))?;
+        let wait = t.elapsed().as_secs_f64();
+        self.next += 1;
+        let depth = self.queued.fetch_sub(1, Ordering::Relaxed) - 1;
+        self.depth_sum += depth.max(0) as f64;
+        self.depth_samples += 1;
+        self.wait_total += wait;
+        Ok((blocks, wait))
+    }
+
+    /// Broadcast one applied round's progress deltas to every shard.
+    pub fn observe(&mut self, deltas: ObsMsg) {
+        for tx in &self.obs_txs {
+            // A dead shard thread surfaces on the next pop; ignore here.
+            let _ = tx.send(Arc::clone(&deltas));
+        }
+    }
+
+    /// Total coordinator seconds spent blocked waiting for plans.
+    pub fn sched_wait_total(&self) -> f64 {
+        self.wait_total
+    }
+
+    /// Mean plan-queue depth observed across pops (how far ahead the
+    /// shards were, in plans, each time the coordinator came asking).
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.depth_samples == 0 {
+            0.0
+        } else {
+            self.depth_sum / self.depth_samples as f64
+        }
+    }
+}
+
+impl Drop for SchedService {
+    fn drop(&mut self) {
+        // Closing both channel sides unblocks every shard thread state
+        // (gate recv errors; full-queue send errors), then join.
+        self.plan_rxs.clear();
+        self.obs_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::RoundResult;
+
+    struct ChainOracle {
+        n: usize,
+    }
+
+    impl SchedOracle for ChainOracle {
+        fn num_vars(&self) -> usize {
+            self.n
+        }
+        fn dependency_pair(&self, a: usize, b: usize) -> f64 {
+            if a.abs_diff(b) == 1 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+    }
+
+    fn deltas_for(blocks: &[Block]) -> Vec<(usize, f64)> {
+        blocks.iter().flat_map(|b| b.vars.iter().map(|&v| (v, 0.1))).collect()
+    }
+
+    #[test]
+    fn lockstep_service_matches_serial_rotation() {
+        // lookahead 0: the threaded service must reproduce the serial
+        // PlannerSet rotation plan-for-plan (the bit-exactness core).
+        let oracle = Arc::new(ChainOracle { n: 150 });
+        let sap = SapConfig::default();
+        let mut svc = SchedService::spawn(
+            Arc::clone(&oracle) as Arc<dyn SchedOracle>,
+            SchedKind::Dynamic,
+            PriorityKind::Linear,
+            &sap,
+            11,
+            3,
+            4,
+            0,
+            2,
+        );
+        let mut serial = PlannerSet::new(150, 3, SchedKind::Dynamic, PriorityKind::Linear, &sap, 11);
+        for round in 0..15 {
+            let (svc_plan, _wait) = svc.pop_plan().unwrap();
+            let serial_plan = serial.plan_turn(&mut OracleDeps(&*oracle), 4);
+            assert_eq!(svc_plan, serial_plan, "round {round} diverged");
+            let deltas = Arc::new(deltas_for(&svc_plan));
+            svc.observe(Arc::clone(&deltas));
+            serial.observe(&RoundResult {
+                deltas: (*deltas).clone(),
+                ..Default::default()
+            });
+        }
+        assert!(svc.sched_wait_total() >= 0.0);
+    }
+
+    #[test]
+    fn pipelined_service_plans_ahead() {
+        // With slack, shards fill their queues without observations.
+        let oracle = Arc::new(ChainOracle { n: 100 });
+        let mut svc = SchedService::spawn(
+            oracle,
+            SchedKind::Dynamic,
+            PriorityKind::Linear,
+            &SapConfig::default(),
+            3,
+            2,
+            4,
+            u64::MAX,
+            2,
+        );
+        // Give the shard threads a moment to prime the queues, then
+        // pop a full wave without ever observing.
+        for _ in 0..8 {
+            let (plan, _) = svc.pop_plan().unwrap();
+            assert!(!plan.is_empty());
+        }
+        assert!(svc.mean_queue_depth() >= 0.0);
+    }
+
+    #[test]
+    fn drop_shuts_down_blocked_threads() {
+        let oracle = Arc::new(ChainOracle { n: 50 });
+        let svc = SchedService::spawn(
+            oracle,
+            SchedKind::Dynamic,
+            PriorityKind::Linear,
+            &SapConfig::default(),
+            5,
+            2,
+            2,
+            0,
+            1,
+        );
+        // Shard 0 has planned round 0 (gate 0 ≤ 0) and may be blocked
+        // sending round 2; shard 1 is gated on observations. Drop must
+        // unblock and join all of them without hanging.
+        drop(svc);
+    }
+}

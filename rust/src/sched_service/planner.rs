@@ -1,0 +1,505 @@
+//! The shard planner core — the one implementation of SAP planning
+//! shared by the synchronous engine-path schedulers
+//! ([`crate::schedulers`]) and the threaded scheduler service
+//! ([`super::SchedService`]).
+//!
+//! A [`ShardPlanner`] owns one shard of the variable space (a fixed
+//! random J/S slice, assigned once), its local importance state, its
+//! own deterministic RNG stream (forked from the run seed, so the
+//! serial rotation and the threaded service consume *identical*
+//! per-shard streams), and a memo cache of pairwise dependencies.
+//! [`PlannerSet`] is the serial composition: round-robin turns over the
+//! shard planners, exactly the paper's §3 rotation. The service splits
+//! a `PlannerSet` into its shard planners and runs each on its own
+//! thread; because every planner's inputs (candidate stream, priority
+//! state, dependency values) are per-shard, the two execution shapes
+//! produce bit-identical plan sequences at lock-step observation
+//! delivery.
+//!
+//! Dependency and workload queries go through [`PlanDeps`], with two
+//! adapters: [`ProblemDeps`] borrows the `&mut dyn ModelProblem` the
+//! engine path already holds; [`OracleDeps`] reads a thread-shareable
+//! [`SchedOracle`] (immutable data, e.g. the Lasso design matrix) so
+//! shard threads can plan without touching the coordinator's canonical
+//! state. Both return the same values for the same pair, which is what
+//! the staleness-0 bit-exactness pin relies on.
+
+use crate::config::SapConfig;
+use crate::coordinator::depcheck::select_independent_lazy;
+use crate::coordinator::priority::{PriorityDist, PriorityKind};
+use crate::coordinator::shard::partition_owned;
+use crate::coordinator::{merge_balanced, select_independent, SchedCost};
+use crate::problem::{Block, ModelProblem, RoundResult};
+use crate::schedulers::SchedKind;
+use crate::util::{FastHashMap, Rng};
+use std::sync::Arc;
+
+/// Memo-cache flush threshold (entries): bounds planner memory the same
+/// way `NativeLasso` bounds its own dependency cache.
+const MEMO_CAP: usize = 2_000_000;
+
+/// Thread-shareable scheduling-side view of a problem: everything a
+/// shard planner needs to plan without the coordinator's `&mut`
+/// problem. Implementations hold immutable data only (e.g. a clone of
+/// the design matrix), exactly like [`crate::ps::PsKernel`] does for
+/// the worker side.
+pub trait SchedOracle: Send + Sync {
+    /// Number of schedulable variables J.
+    fn num_vars(&self) -> usize;
+
+    /// Workload units of variable `j` (load-balanced merge input).
+    fn workload(&self, _j: usize) -> u64 {
+        1
+    }
+
+    /// Pairwise dependency strength |d(x_a, x_b)|. Must return the
+    /// same value as the problem's own `dependency_pair` for the
+    /// staleness-0 path to stay bit-exact with the engine path.
+    fn dependency_pair(&self, a: usize, b: usize) -> f64;
+}
+
+/// What a planner queries while planning: dependency strengths and
+/// workloads. One trait, two sources (problem or oracle).
+pub trait PlanDeps {
+    fn workload(&mut self, j: usize) -> u64;
+    /// Whether on-demand pair queries are cheap (lazy greedy) or the
+    /// dense candidate matrix should be materialized in one call.
+    fn supports_pair(&self) -> bool;
+    fn dep_pair(&mut self, a: usize, b: usize) -> f64;
+    fn dep_matrix(&mut self, cands: &[usize]) -> Vec<f64>;
+}
+
+/// Engine-path adapter: plan against the problem itself.
+pub struct ProblemDeps<'a>(pub &'a mut dyn ModelProblem);
+
+impl PlanDeps for ProblemDeps<'_> {
+    fn workload(&mut self, j: usize) -> u64 {
+        self.0.workload(j)
+    }
+
+    fn supports_pair(&self) -> bool {
+        self.0.supports_pair_dependency()
+    }
+
+    fn dep_pair(&mut self, a: usize, b: usize) -> f64 {
+        self.0.dependency_pair(a, b)
+    }
+
+    fn dep_matrix(&mut self, cands: &[usize]) -> Vec<f64> {
+        self.0.dependencies(cands)
+    }
+}
+
+/// Service-path adapter: plan against a shared immutable oracle.
+pub struct OracleDeps<'a>(pub &'a dyn SchedOracle);
+
+impl PlanDeps for OracleDeps<'_> {
+    fn workload(&mut self, j: usize) -> u64 {
+        self.0.workload(j)
+    }
+
+    fn supports_pair(&self) -> bool {
+        true
+    }
+
+    fn dep_pair(&mut self, a: usize, b: usize) -> f64 {
+        self.0.dependency_pair(a, b)
+    }
+
+    fn dep_matrix(&mut self, cands: &[usize]) -> Vec<f64> {
+        let c = cands.len();
+        let mut out = vec![0.0f64; c * c];
+        for i in 0..c {
+            for k in (i + 1)..c {
+                let v = self.0.dependency_pair(cands[i], cands[k]);
+                out[i * c + k] = v;
+                out[k * c + i] = v;
+            }
+        }
+        out
+    }
+}
+
+/// Per-shard selection policy — the three scheduling models of the
+/// paper's evaluation, sharded uniformly.
+enum PlanPolicy {
+    /// STRADS/SAP: importance-sampled candidates + ρ depcheck.
+    Dynamic(PriorityDist),
+    /// Static blocks: uniform candidates + the same ρ depcheck, no
+    /// importance feedback.
+    Static,
+    /// Shotgun: uniform selection, no structure at all.
+    Random,
+}
+
+/// One scheduler shard: owned variables, local importance state, a
+/// private RNG stream, and a dependency memo cache.
+pub struct ShardPlanner {
+    index: usize,
+    /// Global variable ids owned by this shard (fixed for the run).
+    owned: Vec<usize>,
+    policy: PlanPolicy,
+    rng: Rng,
+    cfg: SapConfig,
+    memo: FastHashMap<(u32, u32), f64>,
+    last_cost: SchedCost,
+}
+
+impl ShardPlanner {
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn owned(&self) -> &[usize] {
+        &self.owned
+    }
+
+    pub fn last_cost(&self) -> SchedCost {
+        self.last_cost
+    }
+
+    /// SAP step 4 for one owned variable (local index).
+    fn report_local(&mut self, li: usize, delta_abs: f64) {
+        if let PlanPolicy::Dynamic(dist) = &mut self.policy {
+            dist.report(li, delta_abs);
+        }
+    }
+
+    /// Fold a round's progress report: every delta whose variable this
+    /// shard owns (per the shared `owner` table) updates the local
+    /// importance state. Non-dynamic policies ignore progress.
+    pub fn absorb(&mut self, owner: &[(u32, u32)], deltas: &[(usize, f64)]) {
+        if !matches!(self.policy, PlanPolicy::Dynamic(_)) {
+            return;
+        }
+        let me = self.index as u32;
+        for &(v, d) in deltas {
+            let (si, li) = owner[v];
+            if si == me {
+                self.report_local(li as usize, d);
+            }
+        }
+    }
+
+    /// Fraction of owned variables updated at least once.
+    pub fn coverage(&self) -> f64 {
+        match &self.policy {
+            PlanPolicy::Dynamic(dist) => dist.coverage(),
+            _ => 1.0,
+        }
+    }
+
+    /// Plan one round from this shard: candidate draw (policy-specific)
+    /// → ρ-constrained greedy selection → LPT merge to ≤ `p` blocks.
+    pub fn plan(&mut self, deps: &mut dyn PlanDeps, p: usize) -> Vec<Block> {
+        // Step 1: draw candidates from this shard's partition.
+        let (cands, limit) = match &mut self.policy {
+            PlanPolicy::Dynamic(dist) => {
+                // P' = factor * limit importance-sampled candidates;
+                // Fenwick sampling-without-replacement returns
+                // high-weight candidates earlier on average, which is
+                // the priority order the greedy step-2 pass wants.
+                let limit = p * self.cfg.coords_per_worker;
+                let p_prime = limit * self.cfg.p_prime_factor;
+                let locals = dist.sample_candidates(p_prime, &mut self.rng);
+                let cands: Vec<usize> = locals.into_iter().map(|li| self.owned[li]).collect();
+                (cands, limit)
+            }
+            PlanPolicy::Static => {
+                let n = self.owned.len();
+                let p_prime = (p * self.cfg.p_prime_factor).min(n);
+                let locals = self.rng.sample_distinct(n, p_prime);
+                let cands: Vec<usize> = locals.into_iter().map(|li| self.owned[li]).collect();
+                (cands, p)
+            }
+            PlanPolicy::Random => {
+                // Shotgun: uniform distinct singletons, no depcheck, no
+                // merge — every selected variable is its own block.
+                let n = self.owned.len();
+                let locals = self.rng.sample_distinct(n, p.min(n));
+                let blocks: Vec<Block> = locals
+                    .into_iter()
+                    .map(|li| {
+                        let v = self.owned[li];
+                        Block::singleton(v, deps.workload(v))
+                    })
+                    .collect();
+                self.last_cost = SchedCost { candidates: blocks.len(), dep_checks: 0 };
+                return blocks;
+            }
+        };
+
+        // Step 2: ρ-constrained greedy selection, memoizing pair
+        // strengths (hot pairs recur across rounds — identical values
+        // either way, so memoization never changes the selection).
+        let rho = self.cfg.rho;
+        let picked = if deps.supports_pair() {
+            if self.memo.len() > MEMO_CAP {
+                self.memo.clear();
+            }
+            let memo = &mut self.memo;
+            let mut checks = 0usize;
+            let picked = select_independent_lazy(
+                &cands,
+                |a, b| {
+                    checks += 1;
+                    let key = (a.min(b) as u32, a.max(b) as u32);
+                    match memo.get(&key) {
+                        Some(&v) => v,
+                        None => {
+                            let v = deps.dep_pair(a, b);
+                            memo.insert(key, v);
+                            v
+                        }
+                    }
+                },
+                rho,
+                limit,
+            );
+            self.last_cost = SchedCost { candidates: cands.len(), dep_checks: checks };
+            picked
+        } else {
+            let dep = deps.dep_matrix(&cands);
+            let picked = select_independent(&cands, &dep, rho, limit);
+            self.last_cost = SchedCost {
+                candidates: cands.len(),
+                dep_checks: cands.len() * picked.len().max(1),
+            };
+            picked
+        };
+
+        // Step 3: load-balanced merge down to <= p worker blocks.
+        let blocks: Vec<Block> = picked
+            .iter()
+            .map(|&ci| {
+                let v = cands[ci];
+                Block::singleton(v, deps.workload(v))
+            })
+            .collect();
+        merge_balanced(blocks, p)
+    }
+}
+
+/// The full shard-planner set with round-robin rotation — the serial
+/// execution shape (engine path). The threaded service consumes the
+/// same planners via [`PlannerSet::into_parts`].
+pub struct PlannerSet {
+    planners: Vec<ShardPlanner>,
+    /// Global variable id -> (shard, local index), shared with the
+    /// service's shard threads for progress routing.
+    owner: Arc<Vec<(u32, u32)>>,
+    turn: usize,
+}
+
+impl PlannerSet {
+    /// Build `shards` planners over `num_vars` variables (random fixed
+    /// ownership, per-shard RNG streams forked from `seed` in shard
+    /// order — construction is a pure function of its arguments).
+    pub fn new(
+        num_vars: usize,
+        shards: usize,
+        kind: SchedKind,
+        pkind: PriorityKind,
+        sap: &SapConfig,
+        seed: u64,
+    ) -> Self {
+        let mut master = Rng::new(seed);
+        let (owned_lists, owner) = partition_owned(num_vars, shards, &mut master);
+        let planners = owned_lists
+            .into_iter()
+            .enumerate()
+            .map(|(si, owned)| {
+                let rng = master.fork(si as u64);
+                let policy = match kind {
+                    SchedKind::Dynamic => PlanPolicy::Dynamic(PriorityDist::new(
+                        owned.len(),
+                        sap.eta,
+                        sap.init_priority,
+                        pkind,
+                    )),
+                    SchedKind::Static => PlanPolicy::Static,
+                    SchedKind::Random => PlanPolicy::Random,
+                };
+                ShardPlanner {
+                    index: si,
+                    owned,
+                    policy,
+                    rng,
+                    cfg: sap.clone(),
+                    memo: FastHashMap::default(),
+                    last_cost: SchedCost::default(),
+                }
+            })
+            .collect();
+        PlannerSet { planners, owner: Arc::new(owner), turn: 0 }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.planners.len()
+    }
+
+    /// Split into the per-thread planners + the shared ownership table
+    /// (the service's construction path).
+    pub fn into_parts(self) -> (Vec<ShardPlanner>, Arc<Vec<(u32, u32)>>) {
+        (self.planners, self.owner)
+    }
+
+    /// Plan the next round: the shard whose turn it is plans; the
+    /// rotation advances.
+    pub fn plan_turn(&mut self, deps: &mut dyn PlanDeps, p: usize) -> Vec<Block> {
+        let si = self.turn;
+        self.turn = (self.turn + 1) % self.planners.len();
+        self.planners[si].plan(deps, p)
+    }
+
+    /// SAP step 4: route measured progress to the owning shards.
+    pub fn observe(&mut self, result: &RoundResult) {
+        for &(v, d) in &result.deltas {
+            let (si, li) = self.owner[v];
+            self.planners[si as usize].report_local(li as usize, d);
+        }
+    }
+
+    /// Scheduling cost of the most recent plan (the shard that planned
+    /// last — the rotation means exactly one shard worked per round).
+    pub fn last_cost(&self) -> SchedCost {
+        let prev = (self.turn + self.planners.len() - 1) % self.planners.len();
+        self.planners[prev].last_cost()
+    }
+
+    /// Fraction of all variables updated at least once.
+    pub fn coverage(&self) -> f64 {
+        let total: usize = self.planners.iter().map(|s| s.owned.len()).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let covered: f64 =
+            self.planners.iter().map(|s| s.coverage() * s.owned.len() as f64).sum();
+        covered / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Oracle over a 1-d chain: adjacent variables conflict.
+    struct ChainOracle {
+        n: usize,
+    }
+
+    impl SchedOracle for ChainOracle {
+        fn num_vars(&self) -> usize {
+            self.n
+        }
+        fn dependency_pair(&self, a: usize, b: usize) -> f64 {
+            if a.abs_diff(b) == 1 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+    }
+
+    fn mk(num_vars: usize, s: usize, kind: SchedKind, seed: u64) -> PlannerSet {
+        PlannerSet::new(num_vars, s, kind, PriorityKind::Linear, &SapConfig::default(), seed)
+    }
+
+    #[test]
+    fn ownership_is_a_partition() {
+        let set = mk(103, 4, SchedKind::Dynamic, 9);
+        let mut all: Vec<usize> =
+            set.planners.iter().flat_map(|p| p.owned.clone()).collect();
+        all.sort();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        let sizes: Vec<usize> = set.planners.iter().map(|p| p.owned.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn more_shards_than_vars_clamps() {
+        let set = mk(3, 10, SchedKind::Dynamic, 9);
+        assert_eq!(set.num_shards(), 3);
+    }
+
+    #[test]
+    fn rotation_planning_is_deterministic() {
+        // Same seed + shard count => identical plan streams, regardless
+        // of interleaved observations being identical too.
+        let oracle = ChainOracle { n: 200 };
+        let mut a = mk(200, 3, SchedKind::Dynamic, 5);
+        let mut b = mk(200, 3, SchedKind::Dynamic, 5);
+        for round in 0..12 {
+            let pa = a.plan_turn(&mut OracleDeps(&oracle), 4);
+            let pb = b.plan_turn(&mut OracleDeps(&oracle), 4);
+            assert_eq!(pa, pb, "round {round} diverged");
+            let deltas: Vec<(usize, f64)> =
+                pa.iter().flat_map(|blk| blk.vars.iter().map(|&v| (v, 0.1))).collect();
+            let result = RoundResult { deltas, ..Default::default() };
+            a.observe(&result);
+            b.observe(&result);
+        }
+    }
+
+    #[test]
+    fn plans_respect_rho_on_every_policy_with_depcheck() {
+        let oracle = ChainOracle { n: 300 };
+        for kind in [SchedKind::Dynamic, SchedKind::Static] {
+            let mut set = mk(300, 2, kind, 7);
+            for _ in 0..10 {
+                let blocks = set.plan_turn(&mut OracleDeps(&oracle), 8);
+                let vars: Vec<usize> =
+                    blocks.iter().flat_map(|b| b.vars.clone()).collect();
+                for (i, &x) in vars.iter().enumerate() {
+                    for &y in &vars[i + 1..] {
+                        assert!(x.abs_diff(y) != 1, "{kind:?} co-scheduled {x},{y}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn observe_routes_to_owner_and_reprioritizes() {
+        let oracle = ChainOracle { n: 64 };
+        let sap = SapConfig { shards: 1, init_priority: 1e-6, ..SapConfig::default() };
+        let mut set =
+            PlannerSet::new(64, 1, SchedKind::Dynamic, PriorityKind::Linear, &sap, 5);
+        set.observe(&RoundResult {
+            deltas: (0..64).map(|v| (v, if v == 10 { 100.0 } else { 1e-9 })).collect(),
+            ..Default::default()
+        });
+        let mut hits = 0;
+        for _ in 0..50 {
+            let blocks = set.plan_turn(&mut OracleDeps(&oracle), 1);
+            if blocks.iter().any(|b| b.vars.contains(&10)) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 45, "hits {hits}");
+    }
+
+    #[test]
+    fn coverage_aggregates_across_shards() {
+        let mut set = mk(40, 4, SchedKind::Dynamic, 9);
+        assert_eq!(set.coverage(), 0.0);
+        let result = RoundResult {
+            deltas: (0..20).map(|v| (v, 0.1)).collect(),
+            ..Default::default()
+        };
+        set.observe(&result);
+        assert!((set.coverage() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_policy_never_dep_checks_and_fills_workers() {
+        let oracle = ChainOracle { n: 100 };
+        let mut set = mk(100, 1, SchedKind::Random, 4);
+        let blocks = set.plan_turn(&mut OracleDeps(&oracle), 16);
+        assert_eq!(blocks.len(), 16);
+        assert_eq!(set.last_cost().dep_checks, 0);
+        let vars: Vec<usize> = blocks.iter().flat_map(|b| b.vars.clone()).collect();
+        let distinct: std::collections::HashSet<_> = vars.iter().collect();
+        assert_eq!(distinct.len(), vars.len());
+    }
+}

@@ -1,19 +1,19 @@
 //! The STRADS dynamic scheduler: the full SAP loop over sharded
-//! importance distributions (paper §2 + §3).
+//! importance distributions (paper §2 + §3), as a synchronous wrapper
+//! over the shared planner core. The distributed scheduler service
+//! runs the *same* [`PlannerSet`] planners on shard threads, so at
+//! lock-step observation delivery the two paths produce bit-identical
+//! plan sequences.
 
 use crate::config::SapConfig;
 use crate::coordinator::priority::PriorityKind;
-use crate::coordinator::depcheck::select_independent_lazy;
-use crate::coordinator::{merge_balanced, select_independent, SchedCost, ShardSet};
+use crate::coordinator::SchedCost;
 use crate::problem::{Block, ModelProblem, RoundResult};
-use crate::schedulers::Scheduler;
-use crate::util::Rng;
+use crate::sched_service::{PlannerSet, ProblemDeps};
+use crate::schedulers::{SchedKind, Scheduler};
 
 pub struct DynamicScheduler {
-    shards: ShardSet,
-    cfg: SapConfig,
-    rng: Rng,
-    last_cost: SchedCost,
+    set: PlannerSet,
 }
 
 impl DynamicScheduler {
@@ -27,16 +27,15 @@ impl DynamicScheduler {
     }
 
     fn with_kind(num_vars: usize, cfg: &SapConfig, seed: u64, kind: PriorityKind) -> Self {
-        let mut rng = Rng::new(seed);
-        let shards =
-            ShardSet::new(num_vars, cfg.shards, cfg.eta, cfg.init_priority, kind, &mut rng);
-        DynamicScheduler { shards, cfg: cfg.clone(), rng, last_cost: SchedCost::default() }
+        DynamicScheduler {
+            set: PlannerSet::new(num_vars, cfg.shards, SchedKind::Dynamic, kind, cfg, seed),
+        }
     }
 
     /// Fraction of variables updated at least once (drives the paper's
     /// "early sharp drop" diagnostic).
     pub fn coverage(&self) -> f64 {
-        self.shards.coverage()
+        self.set.coverage()
     }
 }
 
@@ -46,65 +45,19 @@ impl Scheduler for DynamicScheduler {
     }
 
     fn plan(&mut self, problem: &mut dyn ModelProblem, p: usize) -> Vec<Block> {
-        // Step 1: the shard whose turn it is draws P' = factor*P
-        // candidates from its local p_s(j). Fenwick sampling-without-
-        // replacement returns high-weight candidates earlier on average,
-        // which is the priority order the greedy step-2 pass wants.
-        let si = self.shards.next_turn();
-        // Future-work extension (paper §6): dispatch up to
-        // coords_per_worker coordinates per worker — the selection limit
-        // grows, the pairwise rho constraint still covers every pair,
-        // and the LPT merge packs the result into <= p blocks.
-        let limit = p * self.cfg.coords_per_worker;
-        let p_prime = limit * self.cfg.p_prime_factor;
-        let cands = self.shards.sample_candidates(si, p_prime, &mut self.rng);
-
-        // Step 2: dependency check over the candidate set. Problems
-        // with cheap pair queries (native host dots) get the lazy
-        // greedy; bulk-Gram problems (device artifacts) get one call.
-        let picked = if problem.supports_pair_dependency() {
-            let mut checks = 0usize;
-            let picked = select_independent_lazy(
-                &cands,
-                |a, b| {
-                    checks += 1;
-                    problem.dependency_pair(a, b)
-                },
-                self.cfg.rho,
-                limit,
-            );
-            self.last_cost = SchedCost { candidates: cands.len(), dep_checks: checks };
-            picked
-        } else {
-            let dep = problem.dependencies(&cands);
-            let picked = select_independent(&cands, &dep, self.cfg.rho, limit);
-            self.last_cost = SchedCost {
-                candidates: cands.len(),
-                dep_checks: cands.len() * picked.len().max(1),
-            };
-            picked
-        };
-
-        // Step 3: load-balanced merge down to <= p worker blocks.
-        let blocks: Vec<Block> = picked
-            .iter()
-            .map(|&ci| {
-                let v = cands[ci];
-                Block::singleton(v, problem.workload(v))
-            })
-            .collect();
-        merge_balanced(blocks, p)
+        // The shard whose turn it is samples its candidates, runs the
+        // ρ-constrained greedy selection, and LPT-merges — see
+        // `sched_service::planner` for the shared implementation.
+        self.set.plan_turn(&mut ProblemDeps(problem), p)
     }
 
     fn observe(&mut self, result: &RoundResult) {
         // Step 4: fold measured |δ| into the owning shard's p_s(j).
-        for &(var, delta) in &result.deltas {
-            self.shards.report(var, delta);
-        }
+        self.set.observe(result);
     }
 
     fn last_cost(&self) -> SchedCost {
-        self.last_cost
+        self.set.last_cost()
     }
 }
 

@@ -1,4 +1,8 @@
-//! The three scheduling models compared in the paper's evaluation:
+//! The three scheduling models compared in the paper's evaluation, as
+//! synchronous engine-path drivers over the *one* shared planning core
+//! in [`crate::sched_service::planner`] (the distributed path runs the
+//! identical planners on dedicated shard threads — see
+//! [`crate::sched_service::SchedService`]):
 //!
 //! * [`DynamicScheduler`] — STRADS / SAP: importance-sampled candidates,
 //!   ρ-constrained dependency checking, load-balanced dispatch, sharded
@@ -9,6 +13,11 @@
 //!   runtime values).
 //! * [`RandomScheduler`] — Shotgun (Bradley et al. 2011): uniformly
 //!   random selection, no structure at all.
+//!
+//! [`SchedKind`] is the selector every entry point (CLI, experiment
+//! drivers, the distributed coordinator) routes construction through,
+//! so `--scheduler static|random` works identically on the simulated
+//! and the real-thread paths.
 
 mod dynamic;
 mod random;
@@ -18,6 +27,7 @@ pub use dynamic::DynamicScheduler;
 pub use random::RandomScheduler;
 pub use static_block::StaticBlockScheduler;
 
+use crate::config::SapConfig;
 use crate::coordinator::SchedCost;
 use crate::problem::{Block, ModelProblem, RoundResult};
 
@@ -33,4 +43,41 @@ pub trait Scheduler {
 
     /// Scheduling work performed by the last `plan` call (cost model).
     fn last_cost(&self) -> SchedCost;
+}
+
+/// Scheduler selector shared by the CLI, the experiment drivers, and
+/// the distributed coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    Dynamic,
+    Static,
+    Random,
+}
+
+impl SchedKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedKind::Dynamic => "dynamic",
+            SchedKind::Static => "static",
+            SchedKind::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "dynamic" | "strads" => Ok(SchedKind::Dynamic),
+            "static" => Ok(SchedKind::Static),
+            "random" | "shotgun" => Ok(SchedKind::Random),
+            other => anyhow::bail!("unknown scheduler {other}"),
+        }
+    }
+
+    /// Build the engine-path (synchronous) scheduler of this kind.
+    pub fn build(self, num_vars: usize, sap: &SapConfig, seed: u64) -> Box<dyn Scheduler> {
+        match self {
+            SchedKind::Dynamic => Box::new(DynamicScheduler::new(num_vars, sap, seed)),
+            SchedKind::Static => Box::new(StaticBlockScheduler::new(sap, seed)),
+            SchedKind::Random => Box::new(RandomScheduler::new(seed)),
+        }
+    }
 }

@@ -1,21 +1,24 @@
 //! The unstructured baseline: Shotgun (Bradley et al., 2011). Variables
 //! are selected uniformly at random with no dependency checking — the
 //! paper's "no structures" scheduler, which suffers interference when
-//! correlated variables collide in a round.
+//! correlated variables collide in a round. Runs on the shared planner
+//! core's random policy (one unsharded planner).
 
+use crate::config::SapConfig;
+use crate::coordinator::priority::PriorityKind;
 use crate::coordinator::SchedCost;
 use crate::problem::{Block, ModelProblem, RoundResult};
-use crate::schedulers::Scheduler;
-use crate::util::Rng;
+use crate::sched_service::{PlannerSet, ProblemDeps};
+use crate::schedulers::{SchedKind, Scheduler};
 
 pub struct RandomScheduler {
-    rng: Rng,
-    last_cost: SchedCost,
+    seed: u64,
+    set: Option<PlannerSet>,
 }
 
 impl RandomScheduler {
     pub fn new(seed: u64) -> Self {
-        RandomScheduler { rng: Rng::new(seed), last_cost: SchedCost::default() }
+        RandomScheduler { seed, set: None }
     }
 }
 
@@ -25,16 +28,23 @@ impl Scheduler for RandomScheduler {
     }
 
     fn plan(&mut self, problem: &mut dyn ModelProblem, p: usize) -> Vec<Block> {
-        let n = problem.num_vars();
-        let picked = self.rng.sample_distinct(n, p.min(n));
-        self.last_cost = SchedCost { candidates: picked.len(), dep_checks: 0 };
-        picked.into_iter().map(|v| Block::singleton(v, problem.workload(v))).collect()
+        if self.set.is_none() {
+            self.set = Some(PlannerSet::new(
+                problem.num_vars(),
+                1,
+                SchedKind::Random,
+                PriorityKind::Linear,
+                &SapConfig::default(),
+                self.seed,
+            ));
+        }
+        self.set.as_mut().expect("just built").plan_turn(&mut ProblemDeps(problem), p)
     }
 
     fn observe(&mut self, _result: &RoundResult) {}
 
     fn last_cost(&self) -> SchedCost {
-        self.last_cost
+        self.set.as_ref().map(|s| s.last_cost()).unwrap_or_default()
     }
 }
 

@@ -3,24 +3,27 @@
 //! dependency check, but there is no importance distribution — the
 //! block structure reflects only the (static) data correlations, never
 //! the runtime values of β. Load balancing is kept (it too is static:
-//! workloads don't change).
+//! workloads don't change). Runs on the shared planner core (one
+//! unsharded planner; the distributed service shards the same policy).
 
 use crate::config::SapConfig;
-use crate::coordinator::depcheck::select_independent_lazy;
-use crate::coordinator::{merge_balanced, select_independent, SchedCost};
+use crate::coordinator::priority::PriorityKind;
+use crate::coordinator::SchedCost;
 use crate::problem::{Block, ModelProblem, RoundResult};
-use crate::schedulers::Scheduler;
-use crate::util::Rng;
+use crate::sched_service::{PlannerSet, ProblemDeps};
+use crate::schedulers::{SchedKind, Scheduler};
 
 pub struct StaticBlockScheduler {
     cfg: SapConfig,
-    rng: Rng,
-    last_cost: SchedCost,
+    seed: u64,
+    /// Built lazily on the first plan (the variable count comes from
+    /// the problem).
+    set: Option<PlannerSet>,
 }
 
 impl StaticBlockScheduler {
     pub fn new(cfg: &SapConfig, seed: u64) -> Self {
-        StaticBlockScheduler { cfg: cfg.clone(), rng: Rng::new(seed), last_cost: SchedCost::default() }
+        StaticBlockScheduler { cfg: cfg.clone(), seed, set: None }
     }
 }
 
@@ -30,49 +33,26 @@ impl Scheduler for StaticBlockScheduler {
     }
 
     fn plan(&mut self, problem: &mut dyn ModelProblem, p: usize) -> Vec<Block> {
-        let n = problem.num_vars();
-        let p_prime = (p * self.cfg.p_prime_factor).min(n);
-        // Uniform candidates: the static scheduler has no notion of
-        // which variables currently matter.
-        let cands = self.rng.sample_distinct(n, p_prime);
-        let picked = if problem.supports_pair_dependency() {
-            let mut checks = 0usize;
-            let picked = select_independent_lazy(
-                &cands,
-                |a, b| {
-                    checks += 1;
-                    problem.dependency_pair(a, b)
-                },
-                self.cfg.rho,
-                p,
-            );
-            self.last_cost = SchedCost { candidates: cands.len(), dep_checks: checks };
-            picked
-        } else {
-            let dep = problem.dependencies(&cands);
-            let picked = select_independent(&cands, &dep, self.cfg.rho, p);
-            self.last_cost = SchedCost {
-                candidates: cands.len(),
-                dep_checks: cands.len() * picked.len().max(1),
-            };
-            picked
-        };
-        let blocks: Vec<Block> = picked
-            .iter()
-            .map(|&ci| {
-                let v = cands[ci];
-                Block::singleton(v, problem.workload(v))
-            })
-            .collect();
-        merge_balanced(blocks, p)
+        if self.set.is_none() {
+            self.set = Some(PlannerSet::new(
+                problem.num_vars(),
+                1,
+                SchedKind::Static,
+                PriorityKind::Linear,
+                &self.cfg,
+                self.seed,
+            ));
+        }
+        self.set.as_mut().expect("just built").plan_turn(&mut ProblemDeps(problem), p)
     }
 
     fn observe(&mut self, _result: &RoundResult) {
-        // Static: runtime progress never feeds back into selection.
+        // Static: runtime progress never feeds back into selection
+        // (the planner's static policy discards reports anyway).
     }
 
     fn last_cost(&self) -> SchedCost {
-        self.last_cost
+        self.set.as_ref().map(|s| s.last_cost()).unwrap_or_default()
     }
 }
 

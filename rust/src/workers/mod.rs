@@ -2,8 +2,10 @@
 //! channels and the sharded parameter server (paper Fig. 3 / §3,
 //! generalized to the Petuum SSP architecture).
 //!
-//! One coordinator owns the canonical model state and the sharded SAP
-//! scheduler; P worker threads own nothing but the problem's immutable
+//! One coordinator owns the canonical model state; the sharded SAP
+//! scheduler runs as a pipelined thread-per-shard service
+//! ([`crate::sched_service`]) planning rounds ahead of execution; P
+//! worker threads own nothing but the problem's immutable
 //! [`crate::ps::PsKernel`] data (design matrix / ratings). Workers pull
 //! versioned, staleness-bounded snapshots from the parameter server
 //! ([`crate::ps`]), compute update deltas, and push coalesced delta

@@ -1,44 +1,64 @@
 //! The distributed execution loop: a coordinator thread driving any
 //! [`ModelProblem`] over real worker threads through the sharded
-//! parameter server (`ps::`).
+//! parameter server (`ps::`) and the sharded pipelined scheduler
+//! service (`sched_service::`).
 //!
-//! Per round the coordinator plans blocks (the problem's own round
-//! structure if it has one, the SAP scheduler otherwise) and enqueues
-//! them to workers. Each worker, per block: SSP-gated `pull` of the
-//! spec its kernel needs (contiguous ranges arrive as zero-copy `Arc`
-//! views of dense-segment f32 epochs — an O(1) clone, no allocation),
-//! `propose` deltas against that (possibly stale)
-//! snapshot, `push` them into its coalescing batch, and `flush_clock` —
-//! which applies the batch to the server shards and forwards it to the
-//! coordinator. The coordinator applies complete rounds in block order
-//! to the canonical model (`apply_deltas`), feeds the scheduler's step
-//! 4, republishes derived state (tolerance-gated: only entries that
-//! moved since their last publish, with a periodic full re-sync — see
-//! `ModelProblem::ps_republish` and `ps.republish_tol`), and advances
-//! the applied clock that gates the workers.
+//! Per round the coordinator obtains a plan — the problem's own round
+//! structure if it has one, otherwise the configured scheduler
+//! (`sched.scheduler`, routed through
+//! [`crate::schedulers::SchedKind`]): by default the
+//! [`SchedService`]'s shard threads, which plan rounds *ahead* into
+//! bounded queues concurrently with worker execution, consuming round
+//! progress asynchronously; problems without a thread-shareable
+//! [`crate::sched_service::SchedOracle`] (or `sched.service = 0`) fall
+//! back to inline planning on the coordinator thread. Either way the
+//! time the coordinator actually spends blocked on (or computing) a
+//! plan is measured per round as `sched_wait`; the trace's `vtime`
+//! excludes it, so compute and scheduling stalls are separable.
+//!
+//! Blocks are dispatched by measured load ([`Dispatcher`]): each
+//! worker's service rate is estimated from its reported per-block
+//! compute seconds, and every block goes to the worker with the
+//! earliest expected completion (replacing the old `block_idx % p`
+//! round-robin). Each worker, per block: SSP-gated `pull` of the spec
+//! its kernel needs (contiguous ranges arrive as zero-copy `Arc` views
+//! of dense-segment f32 epochs — an O(1) clone, no allocation),
+//! `propose` deltas against that (possibly stale) snapshot, `push`
+//! them into its coalescing batch, and `flush_clock` — which applies
+//! the batch to the server shards and forwards it (plus the measured
+//! compute seconds) to the coordinator. The coordinator applies
+//! complete rounds in block order to the canonical model
+//! (`apply_deltas`), broadcasts the round's progress deltas to the
+//! scheduler shards (SAP step 4), republishes derived state
+//! (tolerance-gated — see `ModelProblem::ps_republish` and
+//! `ps.republish_tol`), and advances the applied clock that gates the
+//! workers.
 //!
 //! Staleness discipline is **gate-driven**: the client-side SSP gate
 //! (`ClockTable::wait_admit`) is the mechanism that bounds how stale a
 //! pull can be, exactly as a networked deployment would rely on it.
 //! With `ps.pipeline` set and `StalenessPolicy::Bounded(s > 0)`, the
 //! coordinator dispatches a few rounds *beyond* the bound so worker
-//! queues are always primed: a worker moves into round `t + 1` the
-//! instant the gate admits it, with no planner round-trip on the
-//! critical path — scheduling overlaps compute, and dispatch depth only
-//! bounds queue memory. `s = 0` keeps lock-step dispatch (planning
-//! round `r` consumes round `r - 1`'s observations, so there is nothing
-//! to overlap) and reproduces the engine path exactly: same plans, same
-//! snapshots, same apply order, same arithmetic. `Async` removes the
-//! gate and pipelines a fixed window of rounds. With `ps.pipeline = 0`,
-//! bounded runs fall back to dispatch throttling at the bound (the
-//! pre-pipelining behaviour, kept for A/B runs).
+//! queues are always primed, and the scheduler shards plan with the
+//! same observation slack — scheduling overlaps compute end to end.
+//! `s = 0` keeps lock-step dispatch, and the service's observation
+//! contract (plans for round `r` consume *all* observations through
+//! round `r - 1`) makes the whole path reproduce the engine semantics
+//! exactly: same plans, same snapshots, same apply order, same
+//! arithmetic (pinned by test). `Async` removes the gate and pipelines
+//! a fixed window of rounds. With `ps.pipeline = 0`, bounded runs fall
+//! back to dispatch throttling at the bound (the pre-pipelining
+//! behaviour, kept for A/B runs).
 
 use crate::config::RunConfig;
 use crate::coordinator::balance::imbalance;
+use crate::coordinator::priority::PriorityKind;
 use crate::metrics::{Trace, TracePoint};
 use crate::problem::ModelProblem;
 use crate::ps::{wire_bytes_for, ParameterServer, PsClient, StalenessPolicy};
-use crate::schedulers::{DynamicScheduler, Scheduler};
+use crate::sched_service::{
+    measured_imbalance, Dispatcher, PlannerSet, ProblemDeps, SchedService,
+};
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -62,12 +82,25 @@ struct WorkItem {
     round: u64,
     block_idx: usize,
     vars: Vec<usize>,
+    /// Workload units (dispatch accounting, echoed back on flush).
+    work: u64,
+    /// The dispatcher's backlog charge for this block (echoed back).
+    est_sec: f64,
+    /// The worker this block was assigned to (echoed back).
+    worker: usize,
 }
 
 /// A worker's flushed, coalesced delta batch for one block.
 struct FlushMsg {
     round: u64,
     block_idx: usize,
+    worker: usize,
+    work: u64,
+    est_sec: f64,
+    /// Measured seconds from snapshot-in-hand to flush complete (gate
+    /// wait excluded) — the dispatcher's service-rate signal and the
+    /// measured-imbalance input.
+    compute_sec: f64,
     deltas: Vec<(usize, f64)>,
     stale_gap: u64,
 }
@@ -76,18 +109,26 @@ struct FlushMsg {
 struct RoundBuf {
     parts: Vec<Option<Vec<(usize, f64)>>>,
     received: usize,
-    imbalance: f64,
+    /// Planned (workload-unit) straggler ratio — the fallback when a
+    /// round completes too fast for timing to mean anything.
+    planned_imbalance: f64,
+    /// (worker, compute_sec) per completed block.
+    timings: Vec<(usize, f64)>,
     problem_planned: bool,
+    /// Seconds the coordinator was blocked obtaining this round's plan.
+    sched_wait: f64,
     stale_gap_sum: u64,
 }
 
 impl RoundBuf {
-    fn new(blocks: usize, imbalance: f64, problem_planned: bool) -> Self {
+    fn new(blocks: usize, planned_imbalance: f64, problem_planned: bool, sched_wait: f64) -> Self {
         RoundBuf {
             parts: (0..blocks).map(|_| None).collect(),
             received: 0,
-            imbalance,
+            planned_imbalance,
+            timings: Vec::with_capacity(blocks),
             problem_planned,
+            sched_wait,
             stale_gap_sum: 0,
         }
     }
@@ -97,6 +138,7 @@ impl RoundBuf {
         self.parts[msg.block_idx] = Some(msg.deltas);
         self.received += 1;
         self.stale_gap_sum += msg.stale_gap;
+        self.timings.push((msg.worker, msg.compute_sec));
     }
 
     fn complete(&self) -> bool {
@@ -111,11 +153,35 @@ impl RoundBuf {
         }
     }
 
+    /// Measured straggler ratio (per-worker busy seconds); falls back
+    /// to the planned workload ratio when nothing measurable happened.
+    fn round_imbalance(&self) -> f64 {
+        let measured = measured_imbalance(&self.timings);
+        if self.timings.iter().any(|&(_, s)| s > 0.0) {
+            measured
+        } else {
+            self.planned_imbalance
+        }
+    }
+
     /// Concatenate the parts in block order — the deterministic apply
     /// order that matches the engine path's block iteration.
     fn into_ordered(self) -> Vec<(usize, f64)> {
         self.parts.into_iter().flat_map(|p| p.expect("round complete")).collect()
     }
+}
+
+/// The coordinator's planning source for scheduler rounds. Both arms
+/// run the identical planner set (same policy, same shard count, same
+/// seed), so `sched.service` toggles only *where* planning happens —
+/// the A/B contract the inline-parity test pins for every scheduler
+/// kind.
+enum Planner {
+    /// Pipelined shard threads (the scheduler service).
+    Service(SchedService),
+    /// The same shard planners, rotated inline on the coordinator
+    /// thread (no oracle, or `sched.service = 0`).
+    Inline(PlannerSet),
 }
 
 /// Summary of a distributed run.
@@ -150,10 +216,20 @@ pub struct DistributedReport {
     /// Epoch slab clones copy-on-publish performed because a reader
     /// still held the old epoch.
     pub cow_clones: u64,
+    /// Total coordinator seconds blocked on (or inline computing)
+    /// plans — the quantity scheduler sharding + pipelining shrinks.
+    pub sched_wait_total: f64,
+    /// Mean plan-queue depth the service showed at each pop (0.0 on
+    /// the inline path: there is no queue).
+    pub plan_queue_depth: f64,
+    /// Whether the pipelined scheduler service planned this run (false
+    /// = inline fallback).
+    pub sched_service_used: bool,
 }
 
 /// Run up to `rounds` rounds of `problem` on `cfg.workers` real worker
-/// threads through a parameter server configured by `cfg.ps`.
+/// threads through a parameter server configured by `cfg.ps`, planned
+/// by the scheduler `cfg.sched` selects.
 /// Wall-clock, not virtual time (this is the architecture/correctness
 /// path; the core-count sweeps use the simulator).
 pub fn run_distributed(
@@ -191,6 +267,9 @@ pub fn run_distributed(
                 let Ok((snap, stale_gap, _waited)) = client.pull(spec, item.round) else {
                     break; // shutdown while gated
                 };
+                // Compute clock starts once the snapshot is in hand:
+                // gate wait is staleness discipline, not service time.
+                let compute_start = Instant::now();
                 let proposals = kernel.propose(&snap, &item.vars, item.round);
                 // Release the epoch views before flushing: a worker
                 // must never force copy-on-publish clones (its own
@@ -198,8 +277,16 @@ pub fn run_distributed(
                 drop(snap);
                 client.push(&proposals);
                 let deltas = client.flush_clock(item.round);
-                let msg =
-                    FlushMsg { round: item.round, block_idx: item.block_idx, deltas, stale_gap };
+                let msg = FlushMsg {
+                    round: item.round,
+                    block_idx: item.block_idx,
+                    worker: item.worker,
+                    work: item.work,
+                    est_sec: item.est_sec,
+                    compute_sec: compute_start.elapsed().as_secs_f64(),
+                    deltas,
+                    stale_gap,
+                };
                 if flush_tx.send(msg).is_err() {
                     break;
                 }
@@ -208,8 +295,6 @@ pub fn run_distributed(
     }
     drop(flush_tx);
 
-    // Coordinator state: canonical model + (lazily used) SAP scheduler.
-    let mut scheduler = DynamicScheduler::new(problem.num_vars(), &cfg.sap, cfg.engine.seed);
     let window = match policy {
         // s = 0: plan(r) depends on round r-1's observations — lock-step
         // dispatch, bit-exact with the engine path.
@@ -221,33 +306,89 @@ pub fn run_distributed(
         StalenessPolicy::Bounded(s) => s,
         StalenessPolicy::Async => ASYNC_PIPELINE_DEPTH,
     };
+
+    // Planning source: the threaded shard service when the problem
+    // exposes a scheduling oracle (and the config allows it), the same
+    // planner set rotated inline otherwise. Both honor the configured
+    // `sched.scheduler` kind, so `--scheduler static|random` works
+    // distributed too. The oracle (a design-matrix clone for Lasso) is
+    // only materialized when the service will actually use it.
+    let sched_shards = cfg.sched.effective_shards(&cfg.sap);
+    let mut sap = cfg.sap.clone();
+    sap.shards = sched_shards;
+    let oracle = if cfg.sched.service { problem.sched_oracle() } else { None };
+    let mut planner = match oracle {
+        Some(oracle) => Planner::Service(SchedService::spawn(
+            oracle,
+            cfg.sched.kind,
+            PriorityKind::Linear,
+            &sap,
+            cfg.engine.seed,
+            sched_shards,
+            p,
+            window,
+            cfg.sched.pipeline_depth,
+        )),
+        None => Planner::Inline(PlannerSet::new(
+            problem.num_vars(),
+            sched_shards,
+            cfg.sched.kind,
+            PriorityKind::Linear,
+            &sap,
+            cfg.engine.seed,
+        )),
+    };
+    let service_used = matches!(planner, Planner::Service(_));
+
     let rounds = rounds as u64;
     let mut planned = 0u64;
     let mut applied = 0u64;
     let mut converged = false;
     let mut pending: BTreeMap<u64, RoundBuf> = BTreeMap::new();
+    let mut dispatcher = Dispatcher::new(p, cfg.cost.sec_per_work_unit);
     let mut trace = Trace::new(&format!("dist-{}", policy.label()), dataset, p);
     let mut deltas_applied = 0usize;
+    let mut sched_wait_cum = 0.0f64;
     let wall = Instant::now();
 
     loop {
         // Dispatch every round the pipeline window admits.
         while !converged && planned < rounds && planned <= applied + window {
-            let (blocks, problem_planned) = match problem.plan_round(planned as usize, p) {
-                Some(blocks) => (blocks, true),
-                None => (scheduler.plan(problem, p), false),
-            };
+            let (blocks, problem_planned, sched_wait) =
+                match problem.plan_round(planned as usize, p) {
+                    Some(blocks) => (blocks, true, 0.0),
+                    None => {
+                        let (blocks, wait) = match &mut planner {
+                            Planner::Service(svc) => svc.pop_plan()?,
+                            Planner::Inline(set) => {
+                                let t = Instant::now();
+                                let blocks = set.plan_turn(&mut ProblemDeps(problem), p);
+                                (blocks, t.elapsed().as_secs_f64())
+                            }
+                        };
+                        (blocks, false, wait)
+                    }
+                };
             if blocks.is_empty() {
                 converged = true;
                 break;
             }
+            sched_wait_cum += sched_wait;
             pending.insert(
                 planned,
-                RoundBuf::new(blocks.len(), imbalance(&blocks), problem_planned),
+                RoundBuf::new(blocks.len(), imbalance(&blocks), problem_planned, sched_wait),
             );
             for (block_idx, block) in blocks.into_iter().enumerate() {
-                work_txs[block_idx % p]
-                    .send(WorkItem { round: planned, block_idx, vars: block.vars })
+                let (worker, est_sec) = dispatcher.pick(block.work);
+                work_txs[worker]
+                    .send(WorkItem {
+                        round: planned,
+                        block_idx,
+                        vars: block.vars,
+                        work: block.work,
+                        est_sec,
+                        worker,
+                    })
                     .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
             }
             planned += 1;
@@ -258,17 +399,29 @@ pub fn run_distributed(
 
         // Collect one flush, then apply every now-complete round in order.
         let msg = flush_rx.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
+        dispatcher.complete(msg.worker, msg.work, msg.est_sec, msg.compute_sec);
         pending.get_mut(&msg.round).expect("flush for unplanned round").store(msg);
         while pending.get(&applied).map(RoundBuf::complete).unwrap_or(false) {
             let buf = pending.remove(&applied).expect("checked above");
-            let round_imbalance = buf.imbalance;
+            let round_imbalance = buf.round_imbalance();
             let round_staleness = buf.mean_staleness();
+            let round_sched_wait = buf.sched_wait;
             let problem_planned = buf.problem_planned;
             let ordered = buf.into_ordered();
             deltas_applied += ordered.len();
-            let result = problem.apply_deltas(&ordered);
+            let mut result = problem.apply_deltas(&ordered);
             if !problem_planned {
-                scheduler.observe(&result);
+                // SAP step 4: feed measured progress back to whichever
+                // planner is running (the service broadcasts it to
+                // every shard thread — taking the deltas, since only
+                // the objective is read below, keeps the coordinator's
+                // apply loop copy-free).
+                match &mut planner {
+                    Planner::Service(svc) => {
+                        svc.observe(Arc::new(std::mem::take(&mut result.deltas)));
+                    }
+                    Planner::Inline(set) => set.observe(&result),
+                }
             }
             // Periodic full re-syncs only matter when a positive
             // tolerance admits drift; tol <= 0 republishes are already
@@ -288,13 +441,16 @@ pub fn run_distributed(
             if (applied as usize) % cfg.engine.record_every == 0 {
                 trace.push(TracePoint {
                     round: applied as usize,
-                    vtime: wall.elapsed().as_secs_f64(),
+                    // vtime excludes scheduling stalls so the trace
+                    // separates compute from plan waits.
+                    vtime: wall.elapsed().as_secs_f64() - sched_wait_cum,
                     wtime: wall.elapsed().as_secs_f64(),
                     objective: result.objective.unwrap_or_else(|| problem.objective()),
                     active_vars: problem.active_vars(),
                     imbalance: round_imbalance,
                     staleness: round_staleness,
                     net_bytes: server.stats().net_bytes(),
+                    sched_wait: round_sched_wait,
                 });
             }
             applied += 1;
@@ -305,14 +461,23 @@ pub fn run_distributed(
     let obj = problem.objective();
     trace.push(TracePoint {
         round: applied as usize,
-        vtime: wall.elapsed().as_secs_f64(),
+        vtime: wall.elapsed().as_secs_f64() - sched_wait_cum,
         wtime: wall.elapsed().as_secs_f64(),
         objective: obj,
         active_vars: problem.active_vars(),
         imbalance: trace.points.last().map(|pt| pt.imbalance).unwrap_or(1.0),
         staleness: server.stats().mean_staleness(),
         net_bytes: server.stats().net_bytes(),
+        sched_wait: 0.0,
     });
+    // One accumulator serves both the report and the vtime exclusion,
+    // so the two can never desynchronize.
+    let sched_wait_total = sched_wait_cum;
+    let plan_queue_depth = match &planner {
+        Planner::Service(svc) => svc.mean_queue_depth(),
+        Planner::Inline(_) => 0.0,
+    };
+    drop(planner); // join the shard threads before the workers
     drop(work_txs);
     server.clock().shutdown();
     for h in handles {
@@ -333,6 +498,9 @@ pub fn run_distributed(
         cells_pulled: stats.cells_pulled.load(Ordering::Relaxed),
         snapshot_clones: stats.snapshot_clones.load(Ordering::Relaxed),
         cow_clones: server.store().cow_clones(),
+        sched_wait_total,
+        plan_queue_depth,
+        sched_service_used: service_used,
     })
 }
 
@@ -341,6 +509,7 @@ mod tests {
     use super::*;
     use crate::data::lasso_synth::{generate, LassoSynthSpec};
     use crate::lasso::NativeLasso;
+    use crate::schedulers::DynamicScheduler;
 
     #[test]
     fn distributed_run_converges_like_local() {
@@ -354,6 +523,7 @@ mod tests {
         assert!(last < first * 0.8, "first {first} last {last}");
         assert!(report.deltas_applied > 0);
         assert!(report.bytes_flushed > 0, "flushes must be metered");
+        assert!(report.sched_service_used, "lasso exposes an oracle: the service must plan");
     }
 
     #[test]
@@ -450,5 +620,25 @@ mod tests {
         }
         let cfg = RunConfig::default();
         assert!(run_distributed(&mut NoPs, &cfg, 10, "none").is_err());
+    }
+
+    #[test]
+    fn sched_wait_is_recorded_and_vtime_excludes_it() {
+        let data = generate(&LassoSynthSpec::tiny(), 25);
+        let mut cfg = RunConfig { workers: 2, lambda: 1e-3, ..Default::default() };
+        cfg.sap.shards = 2;
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report = run_distributed(&mut problem, &cfg, 60, "tiny").unwrap();
+        // Lock-step planning always blocks at least briefly per round.
+        assert!(report.sched_wait_total > 0.0, "sched_wait must be measured");
+        for pt in &report.trace.points {
+            assert!(pt.sched_wait >= 0.0);
+            assert!(
+                pt.vtime <= pt.wtime + 1e-12,
+                "vtime {} must exclude sched_wait (wtime {})",
+                pt.vtime,
+                pt.wtime
+            );
+        }
     }
 }

@@ -4,11 +4,14 @@
 //! several hundred random instances per property, seeds printed on
 //! failure.
 
+use strads::config::SapConfig;
 use strads::coordinator::balance::{imbalance, merge_balanced, partition_balanced, partition_uniform};
 use strads::coordinator::depcheck::{is_rho_independent, select_independent};
+use strads::coordinator::partition_owned;
 use strads::coordinator::priority::{PriorityDist, PriorityKind};
-use strads::coordinator::ShardSet;
-use strads::problem::Block;
+use strads::problem::{Block, RoundResult};
+use strads::sched_service::PlannerSet;
+use strads::schedulers::SchedKind;
 use strads::util::{Fenwick, Rng};
 
 fn rand_weights(rng: &mut Rng, n: usize, heavy_tail: bool) -> Vec<u64> {
@@ -192,25 +195,37 @@ fn prop_priority_sampling_respects_weight_ordering() {
 }
 
 #[test]
-fn prop_shardset_routing_is_consistent() {
+fn prop_shard_partition_and_routing_are_consistent() {
     let mut rng = Rng::new(1008);
     for case in 0..50 {
         let num_vars = rng.below(500) + 10;
         let s = rng.below(8) + 1;
-        let mut set =
-            ShardSet::new(num_vars, s, 1e-6, 1.0, PriorityKind::Linear, &mut rng);
-        // every global var must be owned by exactly one shard
+        // The ownership primitive: every global var lands in exactly
+        // one shard, and the inverse table agrees.
+        let (lists, owner) = partition_owned(num_vars, s, &mut rng);
         let mut owned_count = vec![0usize; num_vars];
-        for si in 0..set.num_shards() {
-            for &g in &set.shard(si).owned {
+        for (si, list) in lists.iter().enumerate() {
+            for (li, &g) in list.iter().enumerate() {
                 owned_count[g] += 1;
+                assert_eq!(owner[g], (si as u32, li as u32), "case {case}");
             }
         }
         assert!(owned_count.iter().all(|&c| c == 1), "case {case}");
-        // reports route without panicking and coverage reaches 1.0
-        for g in 0..num_vars {
-            set.report(g, 0.5);
-        }
+        // The planner set built on it routes reports without panicking
+        // and coverage reaches 1.0 once everything is touched.
+        let seed = rng.next_u64();
+        let mut set = PlannerSet::new(
+            num_vars,
+            s,
+            SchedKind::Dynamic,
+            PriorityKind::Linear,
+            &SapConfig::default(),
+            seed,
+        );
+        set.observe(&RoundResult {
+            deltas: (0..num_vars).map(|g| (g, 0.5)).collect(),
+            ..Default::default()
+        });
         assert!((set.coverage() - 1.0).abs() < 1e-9, "case {case}");
     }
 }
