@@ -2,9 +2,12 @@
 //! the hashed shard path on the access patterns the distributed runs
 //! actually produce — a contiguous residual-sized range pull per round
 //! (the Lasso hot path, now an O(1) `Arc` clone), full and sparse
-//! republishes, and scattered β-delta pushes.
+//! republishes, scattered β-delta pushes, and the TCP wire codec on a
+//! residual-sized pull reply (what a networked worker pays per round on
+//! top of the store read).
 
 use strads::benchutil::{report, time_fn};
+use strads::ps::transport::wire::{decode_reply, encode_reply, Reply};
 use strads::ps::{Cell, PullSpec, ShardedStore};
 
 fn main() {
@@ -90,6 +93,27 @@ fn main() {
         hashed.add_deltas(&deltas, 4);
     });
     report("hashed: add_deltas 512 scattered", med, min, max);
+
+    // --- the tcp wire codec on a residual-sized pull reply -----------
+    // Serialization cost a networked worker adds per round: one covered
+    // range (n f32 cells -> raw LE bytes) each way. The encoded frame
+    // is ~4 bytes/cell — the 4 B/cell pull accounting made literal.
+    let pulled = dense.read_spec(&spec);
+    let reply = Reply::Pull { gap: 0, waited: false, ranges: pulled.ranges, cells: pulled.cells };
+    let encoded = encode_reply(&reply);
+    let (med, min, max) = time_fn(3, 50, || {
+        std::hint::black_box(encode_reply(&reply));
+    });
+    report(&format!("wire  : encode pull reply ({n} f32)"), med, min, max);
+    let (med, min, max) = time_fn(3, 50, || {
+        std::hint::black_box(decode_reply(&encoded).expect("self-encoded reply"));
+    });
+    report(&format!("wire  : decode pull reply ({n} f32)"), med, min, max);
+    println!(
+        "wire  : encoded payload = {} bytes for {n} cells ({:.2} B/cell)",
+        encoded.len(),
+        encoded.len() as f64 / n as f64
+    );
 
     println!(
         "\nhash probes metered: dense = {} (must stay 0), hashed = {}; \

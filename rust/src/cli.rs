@@ -43,6 +43,16 @@
 //! * `--sched-service 0|1` — `0` plans inline on the coordinator
 //!   thread (the pre-service behaviour, kept for A/B runs; also the
 //!   automatic fallback for problems without a scheduling oracle).
+//! * `--ps-transport inproc|tcp` — the carriage between clients and
+//!   the parameter server. `inproc` (default) keeps the server in this
+//!   process (zero-copy `Arc` pulls); `tcp` talks the length-prefixed
+//!   binary wire protocol (docs/ARCHITECTURE.md §Wire protocol) to a
+//!   `strads ps-server` process at `--ps-addr`. Staleness-0 runs are
+//!   bitwise identical across the two — the f32 wire is lossless — and
+//!   tcp runs additionally report `socket_bytes`, the *real* traffic
+//!   moved, next to the modeled `net_bytes` meter.
+//! * `--ps-addr host:port` — where that `ps-server` listens (also the
+//!   default bind address for `strads ps-server --addr`).
 
 use std::collections::BTreeMap;
 

@@ -151,6 +151,15 @@ pub struct PsConfig {
     /// bound. No effect at s = 0 (lock-step is required for engine-path
     /// bit-exactness) or in async mode (always pipelined).
     pub pipeline: bool,
+    /// Which carriage moves pull/flush/publish/clock traffic between
+    /// the run and its parameter server: `inproc` (shared memory in one
+    /// process — the default, zero-copy pulls) or `tcp` (a length-
+    /// prefixed binary protocol to a `strads ps-server` process at
+    /// [`PsConfig::addr`]). Staleness-0 runs are bitwise identical
+    /// across transports (the f32 wire is lossless).
+    pub transport: crate::ps::TransportKind,
+    /// `host:port` of the `ps-server` process (`tcp` transport only).
+    pub addr: String,
 }
 
 impl Default for PsConfig {
@@ -162,6 +171,8 @@ impl Default for PsConfig {
             republish_tol: 0.0,
             dense_segments: true,
             pipeline: true,
+            transport: crate::ps::TransportKind::InProc,
+            addr: "127.0.0.1:37021".to_string(),
         }
     }
 }
@@ -284,6 +295,8 @@ impl RunConfig {
             "ps.republish_tol",
             "ps.dense_segments",
             "ps.pipeline",
+            "ps.transport",
+            "ps.addr",
             "sched.scheduler",
             "sched.shards",
             "sched.pipeline_depth",
@@ -321,6 +334,12 @@ impl RunConfig {
         if let Some(v) = conf.get_usize("ps.pipeline").map_err(anyhow::Error::msg)? {
             c.ps.pipeline = v != 0;
         }
+        if let Some(v) = conf.get("ps.transport") {
+            c.ps.transport = crate::ps::TransportKind::parse(v)?;
+        }
+        if let Some(v) = conf.get("ps.addr") {
+            c.ps.addr = v.to_string();
+        }
         load!(conf, c, f64:
             "lambda" => c.lambda,
             "ps.republish_tol" => c.ps.republish_tol,
@@ -342,7 +361,7 @@ impl RunConfig {
     /// Serialize back to the preset format.
     pub fn to_conf_string(&self) -> String {
         format!(
-            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n",
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n",
             self.workers,
             self.lambda,
             self.sap.p_prime_factor,
@@ -365,6 +384,8 @@ impl RunConfig {
             self.ps.republish_tol,
             usize::from(self.ps.dense_segments),
             usize::from(self.ps.pipeline),
+            self.ps.transport.name(),
+            self.ps.addr,
             self.sched.kind.name(),
             self.sched.shards,
             self.sched.pipeline_depth,
@@ -387,6 +408,10 @@ impl RunConfig {
         anyhow::ensure!(
             self.ps.republish_tol.is_finite(),
             "ps.republish_tol must be finite (negative = full republish)"
+        );
+        anyhow::ensure!(
+            !self.ps.addr.is_empty(),
+            "ps.addr must be a host:port (required by the tcp transport)"
         );
         Ok(())
     }
@@ -466,6 +491,20 @@ mod tests {
         let conf = KvConf::parse("[ps]\nrepublish_tol = -1\n").unwrap();
         let c = RunConfig::from_kvconf(&conf).unwrap();
         assert_eq!(c.ps.republish_tol, -1.0);
+    }
+
+    #[test]
+    fn ps_transport_keys_parse() {
+        let conf = KvConf::parse("[ps]\ntransport = tcp\naddr = 127.0.0.1:4100\n").unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.ps.transport, crate::ps::TransportKind::Tcp);
+        assert_eq!(c.ps.addr, "127.0.0.1:4100");
+        // default carriage is in-process shared memory
+        assert_eq!(PsConfig::default().transport, crate::ps::TransportKind::InProc);
+        let bad = KvConf::parse("[ps]\ntransport = smoke-signals\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+        let bad = KvConf::parse("[ps]\naddr = \"\"\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
     }
 
     #[test]

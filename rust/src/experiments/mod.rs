@@ -163,8 +163,10 @@ pub fn ablation(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<
 /// given, also emit a `BENCH_ps.json` perf snapshot (bytes flushed /
 /// republished / pulled, pull bytes per round against the 16-byte-cell
 /// baseline, zero-copy snapshot-clone and copy-on-publish counts, mean
-/// staleness, wall-clock per round) so successive PRs have a
-/// trajectory to compare against.
+/// staleness, wall-clock per round, plus the run's transport and the
+/// *real* socket bytes it moved — 0 in-process, measured traffic under
+/// `--ps-transport tcp`) so successive PRs have a trajectory to
+/// compare against.
 pub fn staleness_sweep(
     cfg_base: &RunConfig,
     dataset: &str,
@@ -191,13 +193,15 @@ pub fn staleness_sweep(
         let pull_bytes_cell_equiv = 16 * report.cells_pulled;
         println!(
             "{}  (flushed={}B republished={}B pulled={}B [{:.1}x under cell wire] \
-             snapshot_clones={} cow_clones={} gate_waits={} mean_staleness={:.2} \
-             sched_wait={:.3}s queue_depth={:.2} {:.3}ms/round)",
+             socket={}B/{} snapshot_clones={} cow_clones={} gate_waits={} \
+             mean_staleness={:.2} sched_wait={:.3}s queue_depth={:.2} {:.3}ms/round)",
             report.trace.summary(),
             report.bytes_flushed,
             report.bytes_republished,
             report.pull_bytes,
             pull_bytes_cell_equiv as f64 / (report.pull_bytes.max(1)) as f64,
+            report.socket_bytes,
+            report.transport,
             report.snapshot_clones,
             report.cow_clones,
             report.gate_waits,
@@ -212,8 +216,8 @@ pub fn staleness_sweep(
         rows.push_str(&format!(
             "    {{\"staleness\": \"{}\", \"rounds\": {}, \"bytes_flushed\": {}, \
              \"bytes_republished\": {}, \"pull_bytes\": {}, \"pull_bytes_per_round\": {:.1}, \
-             \"pull_bytes_cell_equiv\": {}, \"snapshot_clones\": {}, \"cow_clones\": {}, \
-             \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
+             \"pull_bytes_cell_equiv\": {}, \"socket_bytes\": {}, \"snapshot_clones\": {}, \
+             \"cow_clones\": {}, \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
              \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
              \"sched_wait_total\": {:.6e}, \"plan_queue_depth\": {:.2}, \
              \"final_objective\": {:.8e}}}",
@@ -224,6 +228,7 @@ pub fn staleness_sweep(
             report.pull_bytes,
             pull_bytes_per_round,
             pull_bytes_cell_equiv,
+            report.socket_bytes,
             report.snapshot_clones,
             report.cow_clones,
             report.mean_staleness,
@@ -244,12 +249,13 @@ pub fn staleness_sweep(
         let body = format!(
             "{{\n  \"bench\": \"ps_staleness_sweep\",\n  \"dataset\": \"{dataset}\",\n  \
              \"workers\": {},\n  \"republish_tol\": {:e},\n  \"dense_segments\": {},\n  \
-             \"pipeline\": {},\n  \"scheduler\": \"{}\",\n  \"sched_shards\": {},\n  \
-             \"settings\": [\n{rows}\n  ]\n}}\n",
+             \"pipeline\": {},\n  \"transport\": \"{}\",\n  \"scheduler\": \"{}\",\n  \
+             \"sched_shards\": {},\n  \"settings\": [\n{rows}\n  ]\n}}\n",
             cfg_base.workers,
             cfg_base.ps.republish_tol,
             cfg_base.ps.dense_segments,
             cfg_base.ps.pipeline,
+            cfg_base.ps.transport.name(),
             cfg_base.sched.kind.name(),
             cfg_base.sched.effective_shards(&cfg_base.sap)
         );

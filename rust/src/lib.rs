@@ -8,8 +8,9 @@
 //!   primitives ([`coordinator`]), the sharded pipelined scheduler
 //!   service and its planner core ([`sched_service`]), the baseline
 //!   schedulers over that core ([`schedulers`]), the sharded parameter
-//!   server with bounded-staleness clocks ([`ps`]), the worker pool
-//!   that runs any [`problem::ModelProblem`] over it ([`workers`]), the
+//!   server with bounded-staleness clocks behind a pluggable
+//!   in-process/TCP transport ([`ps`], `strads ps-server`), the worker
+//!   pool that runs any [`problem::ModelProblem`] over it ([`workers`]), the
 //!   virtual cluster simulator ([`sim`]), data generators ([`data`])
 //!   and the experiment drivers.
 //! * **L2/L1 (python/, build-time only)** — JAX update graphs calling
@@ -66,7 +67,7 @@ pub mod prelude {
     pub use crate::engine::run_rounds;
     pub use crate::metrics::Trace;
     pub use crate::problem::{Block, ModelProblem, RoundResult};
-    pub use crate::ps::StalenessPolicy;
+    pub use crate::ps::{StalenessPolicy, TransportKind};
     pub use crate::sched_service::{SchedOracle, SchedService};
     pub use crate::schedulers::{
         DynamicScheduler, RandomScheduler, SchedKind, Scheduler, StaticBlockScheduler,

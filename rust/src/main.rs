@@ -10,6 +10,9 @@
 //! strads distributed ...         # real worker threads over the sharded
 //!                                #   parameter server (ps::), lasso or mf,
 //!                                #   with --staleness N|async --ps-shards N
+//!                                #   --ps-transport inproc|tcp
+//! strads ps-server ...           # host the parameter server in its own
+//!                                #   process (the tcp transport's far end)
 //! strads staleness-sweep ...     # fresh-vs-stale convergence curves
 //! strads calibrate               # fit the cost model to this host
 //! strads artifacts-info          # inspect the AOT artifact store
@@ -30,7 +33,7 @@ use strads::mf::{run_mf, ArtifactMf, DistMf, MfPartition, NativeMf};
 use strads::runtime::{default_artifacts_dir, ArtifactStore, LassoExes, MfExes};
 use strads::workers::run_distributed;
 
-const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|distributed|staleness-sweep|calibrate|artifacts-info> [flags]
+const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|distributed|ps-server|staleness-sweep|calibrate|artifacts-info> [flags]
   global: --config <preset.conf>  --out <dir>  --seed <u64>
   fig1:        --workers N --rounds N
   fig4:        --rounds N
@@ -50,9 +53,16 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --sched-shards N (scheduler service shard threads; 0 = follow
                                  sap.shards)  --sched-pipeline-depth N
                --sched-service 0|1 (0 = plan inline on the coordinator)
+               --ps-transport inproc|tcp (carriage to the parameter server;
+                                          tcp talks to a ps-server process)
+               --ps-addr host:port (where that ps-server listens)
+  ps-server:   --addr host:port (default from [ps] addr; port 0 = ephemeral)
+               hosts the sharded store + SSP clock; serves any number of
+               back-to-back runs (each run re-inits it); stop with SIGTERM
   staleness-sweep: --dataset tiny|adlike|wide --workers N --rounds N --lambda F
                --scheduler dynamic|static|random --sched-shards N
                --republish-tol F --dense-segments 0|1 --pipeline 0|1
+               --ps-transport inproc|tcp --ps-addr host:port
                (runs staleness 0, 2, 8, async through the parameter server;
                 writes staleness_sweep.csv + BENCH_ps.json to --out)";
 
@@ -174,6 +184,10 @@ fn run() -> anyhow::Result<()> {
             cfg.ps.dense_segments =
                 args.usize_or("dense-segments", usize::from(cfg.ps.dense_segments))? != 0;
             cfg.ps.pipeline = args.usize_or("pipeline", usize::from(cfg.ps.pipeline))? != 0;
+            if let Some(kind) = args.opt_str("ps-transport") {
+                cfg.ps.transport = strads::ps::TransportKind::parse(&kind)?;
+            }
+            cfg.ps.addr = args.str_or("ps-addr", &cfg.ps.addr);
             if let Some(kind) = args.opt_str("scheduler") {
                 cfg.sched.kind = SchedKind::parse(&kind)?;
             }
@@ -204,6 +218,12 @@ fn run() -> anyhow::Result<()> {
             };
             println!("{}", report.trace.summary());
             println!(
+                "transport={} socket_bytes={} (real; metered net_bytes={})",
+                report.transport,
+                report.socket_bytes,
+                report.bytes_flushed + report.bytes_republished + report.pull_bytes
+            );
+            println!(
                 "rounds={} deltas={} bytes_flushed={} bytes_republished={} pull_bytes={} \
                  snapshot_clones={} cow_clones={} gate_waits={} mean_staleness={:.2} \
                  max_staleness={} hash_probes={} sched_wait={:.3}s plan_queue_depth={:.2} \
@@ -232,6 +252,10 @@ fn run() -> anyhow::Result<()> {
             cfg.ps.dense_segments =
                 args.usize_or("dense-segments", usize::from(cfg.ps.dense_segments))? != 0;
             cfg.ps.pipeline = args.usize_or("pipeline", usize::from(cfg.ps.pipeline))? != 0;
+            if let Some(kind) = args.opt_str("ps-transport") {
+                cfg.ps.transport = strads::ps::TransportKind::parse(&kind)?;
+            }
+            cfg.ps.addr = args.str_or("ps-addr", &cfg.ps.addr);
             if let Some(kind) = args.opt_str("scheduler") {
                 cfg.sched.kind = SchedKind::parse(&kind)?;
             }
@@ -254,6 +278,14 @@ fn run() -> anyhow::Result<()> {
             let _ = std::fs::remove_file(&csv);
             experiments::ablation(&cfg, Some(&csv));
             println!("wrote {}", csv.display());
+        }
+        "ps-server" => {
+            let addr = args.str_or("addr", &cfg.ps.addr);
+            args.finish()?;
+            let server = strads::ps::PsTcpServer::bind(&addr)?;
+            println!("ps-server listening on {}", server.local_addr());
+            println!("  (problem-agnostic: each run's coordinator re-inits it; kill to stop)");
+            server.run();
         }
         "calibrate" => {
             args.finish()?;

@@ -1,20 +1,22 @@
 //! The worker-side handle: `pull(spec) -> snapshot` / `push(deltas)` /
 //! `flush_clock()`, the schedule/push/pull split of "Primitives for
 //! Dynamic Big Model Parallelism". A [`PsClient`] owns a worker's delta
-//! batch and talks to the shared [`ParameterServer`]; the compute
-//! itself is supplied by the problem as a [`PsKernel`]. Pulls are
-//! expressed as a [`PullSpec`] — contiguous ranges (served as zero-copy
-//! `Arc` views of dense-segment epochs) plus scattered keys — so
-//! kernels with dense shared state never enumerate per-key requests and
-//! never pay a copy for the dense part.
+//! batch and talks to the parameter server through whichever
+//! [`Transport`] the run selected (`[ps] transport = inproc|tcp`) —
+//! the client is transport-agnostic; the compute itself is supplied by
+//! the problem as a [`PsKernel`]. Pulls are expressed as a [`PullSpec`]
+//! — contiguous ranges (served as zero-copy `Arc` views of
+//! dense-segment epochs in-process, bitwise-identical owned f32 images
+//! over TCP) plus scattered keys — so kernels with dense shared state
+//! never enumerate per-key requests and never pay a copy for the dense
+//! part on the in-process path.
 
 use super::batch::DeltaBatch;
-use super::clock::ClockShutdown;
 use super::shard::{Cell, PullSpec, RangePull};
+use super::transport::{InProcTransport, Transport, TransportError};
 use super::ParameterServer;
 use crate::util::FastHashMap;
 use std::cell::OnceCell;
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 /// A consistent-enough view of the pulled state. Pulled ranges are
@@ -182,39 +184,40 @@ pub trait PsKernel: Send + Sync {
     fn propose(&self, snap: &PsSnapshot, vars: &[usize], round: u64) -> Vec<(usize, f64)>;
 }
 
-/// One worker's handle onto the parameter server.
+/// One worker's handle onto the parameter server, over any transport.
 pub struct PsClient {
-    server: Arc<ParameterServer>,
+    transport: Box<dyn Transport>,
     worker: usize,
     batch: DeltaBatch,
 }
 
 impl PsClient {
+    /// In-process client over a shared server — the zero-copy fast
+    /// path, and the constructor every same-address-space test uses.
     pub fn new(server: Arc<ParameterServer>, worker: usize) -> Self {
-        PsClient { server, worker, batch: DeltaBatch::new() }
+        Self::over(Box::new(InProcTransport::new(server, worker)), worker)
+    }
+
+    /// Client over an already-established transport (`worker` must be
+    /// the id the transport was minted for — see
+    /// `PsConnection::worker_transport`).
+    pub fn over(transport: Box<dyn Transport>, worker: usize) -> Self {
+        PsClient { transport, worker, batch: DeltaBatch::new() }
     }
 
     /// SSP-gated pull: blocks until the applied state is within the
     /// server's staleness bound of `round`, then reads the spec.
-    /// Returns the snapshot plus `(staleness_gap, had_to_wait)`.
+    /// Returns the snapshot plus `(staleness_gap, had_to_wait)`. The
+    /// gate wait (and all metering) happens server-side, so a networked
+    /// worker blocks inside the RPC exactly where an in-process one
+    /// blocks on the condvar.
     pub fn pull(
-        &self,
+        &mut self,
         spec: PullSpec,
         round: u64,
-    ) -> Result<(PsSnapshot, u64, bool), ClockShutdown> {
-        let (gap, waited) = self.server.clock().wait_admit(round, self.server.policy())?;
-        let stats = self.server.stats();
-        stats.pulls.fetch_add(1, Ordering::Relaxed);
-        stats.stale_gap_sum.fetch_add(gap, Ordering::Relaxed);
-        stats.max_stale_gap.fetch_max(gap, Ordering::Relaxed);
-        if waited {
-            stats.gate_waits.fetch_add(1, Ordering::Relaxed);
-        }
-        let pulled = self.server.store().read_spec(&spec);
-        stats.bytes_pulled.fetch_add(pulled.wire_bytes(), Ordering::Relaxed);
-        stats.cells_pulled.fetch_add(pulled.total_cells() as u64, Ordering::Relaxed);
-        stats.snapshot_clones.fetch_add(pulled.shared_ranges() as u64, Ordering::Relaxed);
-        Ok((PsSnapshot::from_pull(pulled.ranges, spec.keys, pulled.cells), gap, waited))
+    ) -> Result<(PsSnapshot, u64, bool), TransportError> {
+        let reply = self.transport.pull(&spec, round)?;
+        Ok((PsSnapshot::from_pull(reply.ranges, spec.keys, reply.cells), reply.gap, reply.waited))
     }
 
     /// Accumulate deltas into the local batch (coalescing duplicates).
@@ -222,18 +225,14 @@ impl PsClient {
         self.batch.extend(deltas);
     }
 
-    /// End-of-round clock: flush the coalesced batch to the shards
+    /// End-of-round clock: flush the coalesced batch to the server
     /// (versioned at `round + 1`), tick this worker's clock, and return
     /// the flushed batch (the coordinator applies the same deltas to
     /// the canonical model).
-    pub fn flush_clock(&mut self, round: u64) -> Vec<(usize, f64)> {
-        let stats = self.server.stats();
-        stats.bytes_flushed.fetch_add(self.batch.wire_bytes(), Ordering::Relaxed);
-        stats.flushes.fetch_add(1, Ordering::Relaxed);
+    pub fn flush_clock(&mut self, round: u64) -> Result<Vec<(usize, f64)>, TransportError> {
         let deltas = self.batch.drain();
-        self.server.store().add_deltas(&deltas, round + 1);
-        self.server.clock().record_flush(self.worker, round);
-        deltas
+        self.transport.flush(&deltas, round)?;
+        Ok(deltas)
     }
 
     pub fn worker(&self) -> usize {
@@ -245,6 +244,7 @@ impl PsClient {
 mod tests {
     use super::*;
     use crate::ps::StalenessPolicy;
+    use std::sync::atomic::Ordering;
 
     #[test]
     fn snapshot_positional_and_keyed_access_agree() {
@@ -316,7 +316,7 @@ mod tests {
         assert_eq!(snap.get(2), Some(3.0));
 
         client.push(&[(1, 0.5), (1, 0.5), (2, -1.0)]);
-        let flushed = client.flush_clock(0);
+        let flushed = client.flush_clock(0).unwrap();
         assert_eq!(flushed, vec![(1, 1.0), (2, -1.0)]);
         assert_eq!(server.store().read(&[1])[0].value, 3.0);
         assert_eq!(server.store().read(&[1])[0].version, 1);
@@ -334,7 +334,7 @@ mod tests {
         ));
         let values: Vec<f64> = (0..6).map(|i| i as f64 * 2.0).collect();
         server.store().publish_dense(&values, 0);
-        let client = PsClient::new(Arc::clone(&server), 0);
+        let mut client = PsClient::new(Arc::clone(&server), 0);
         let (snap, _, _) =
             client.pull(PullSpec::from_ranges(vec![(2, 3)]), 0).unwrap();
         assert_eq!(snap.range_f32(0, 3), &[4.0f32, 6.0, 8.0]);
@@ -350,7 +350,7 @@ mod tests {
     #[test]
     fn gated_pull_respects_bound() {
         let server = Arc::new(ParameterServer::new(2, 1, StalenessPolicy::Bounded(2)));
-        let client = PsClient::new(Arc::clone(&server), 0);
+        let mut client = PsClient::new(Arc::clone(&server), 0);
         // applied = 0: rounds 0..=2 admitted without waiting
         let (_, gap, waited) = client.pull(PullSpec::from_keys(vec![0]), 2).unwrap();
         assert_eq!((gap, waited), (2, false));
@@ -358,7 +358,7 @@ mod tests {
         let t = {
             let server = Arc::clone(&server);
             std::thread::spawn(move || {
-                let client = PsClient::new(server, 0);
+                let mut client = PsClient::new(server, 0);
                 client.pull(PullSpec::from_keys(vec![0]), 3).map(|(_, gap, _waited)| gap)
             })
         };

@@ -131,6 +131,12 @@ impl ClockTable {
         self.state.lock().expect("clock lock poisoned").applied
     }
 
+    /// How many worker clocks this table was built for (the TCP server
+    /// bounds-checks remote flush worker ids against it).
+    pub fn num_workers(&self) -> usize {
+        self.state.lock().expect("clock lock poisoned").worker_clocks.len()
+    }
+
     /// Slowest worker clock (diagnostics; the laggard that SSP protects).
     pub fn min_worker_clock(&self) -> u64 {
         let state = self.state.lock().expect("clock lock poisoned");

@@ -31,6 +31,15 @@
 //!   over [`PullSpec`] requests, and the [`PsKernel`] trait problems
 //!   implement to run on it. [`PsSnapshot::range_f32`] hands kernels
 //!   the pulled f32 image directly.
+//! * [`transport`] — the pluggable carriage under the client: the same
+//!   pull/flush/publish/clock traffic through shared memory
+//!   (`InProcTransport`, today's zero-copy path) or over a
+//!   length-prefixed binary wire protocol to a `strads ps-server`
+//!   process (`TcpTransport`). Both route through the
+//!   [`ParameterServer::serve_pull`]/[`ParameterServer::serve_flush`]/
+//!   [`ParameterServer::serve_publish`] helpers, so the transports are
+//!   observationally identical (staleness-0 runs are bitwise equal
+//!   across them — pinned by `tests/ps_transport.rs`).
 //!
 //! The pull-dominated STRADS loop (every worker pulls the full shared
 //! state each round, pushes sparse deltas) is why the dense path is
@@ -53,11 +62,15 @@ pub mod batch;
 pub mod client;
 pub mod clock;
 pub mod shard;
+pub mod transport;
 
 pub use batch::{wire_bytes_for, BYTES_PER_ENTRY, DeltaBatch};
 pub use client::{PsClient, PsKernel, PsSnapshot};
 pub use clock::{ClockShutdown, ClockTable, StalenessPolicy};
 pub use shard::{Cell, PullSpec, RangePull, ShardedStore, SpecPull};
+pub use transport::{
+    PsConnection, PsTcpServer, Transport, TransportError, TransportKind,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -113,6 +126,44 @@ impl PsStats {
     }
 }
 
+/// A point-in-time copy of every server-side meter in one plain
+/// struct. This is the coordinator's *only* view of the server under a
+/// multi-process transport (it crosses the wire as the `Stats` RPC), so
+/// everything `DistributedReport` needs lives here — including the
+/// store-level `hash_probes`/`cow_clones` counters that are not part of
+/// [`PsStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub bytes_flushed: u64,
+    pub bytes_republished: u64,
+    pub bytes_pulled: u64,
+    pub cells_pulled: u64,
+    pub snapshot_clones: u64,
+    pub flushes: u64,
+    pub pulls: u64,
+    pub stale_gap_sum: u64,
+    pub max_stale_gap: u64,
+    pub gate_waits: u64,
+    pub hash_probes: u64,
+    pub cow_clones: u64,
+}
+
+impl StatsSnapshot {
+    /// Modeled wire traffic: flushes + republishes + pulls.
+    pub fn net_bytes(&self) -> u64 {
+        self.bytes_flushed + self.bytes_republished + self.bytes_pulled
+    }
+
+    /// Mean staleness gap over all pulls so far.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.pulls == 0 {
+            0.0
+        } else {
+            self.stale_gap_sum as f64 / self.pulls as f64
+        }
+    }
+}
+
 /// The server: sharded store + clock table + policy + stats. Shared
 /// across worker threads behind an `Arc`.
 pub struct ParameterServer {
@@ -158,6 +209,66 @@ impl ParameterServer {
 
     pub fn stats(&self) -> &PsStats {
         &self.stats
+    }
+
+    /// Serve one SSP-gated pull: block until `round` is admitted, read
+    /// the spec, meter the traffic. Returns the pulled data plus the
+    /// observed `(staleness_gap, had_to_wait)`. This is the *single*
+    /// server-side pull path — the in-process transport and the TCP
+    /// server's request handler both call it, which is what keeps the
+    /// two transports observationally identical.
+    pub fn serve_pull(
+        &self,
+        spec: &PullSpec,
+        round: u64,
+    ) -> Result<(SpecPull, u64, bool), ClockShutdown> {
+        let (gap, waited) = self.clock.wait_admit(round, self.policy)?;
+        self.stats.pulls.fetch_add(1, Ordering::Relaxed);
+        self.stats.stale_gap_sum.fetch_add(gap, Ordering::Relaxed);
+        self.stats.max_stale_gap.fetch_max(gap, Ordering::Relaxed);
+        if waited {
+            self.stats.gate_waits.fetch_add(1, Ordering::Relaxed);
+        }
+        let pulled = self.store.read_spec(spec);
+        self.stats.bytes_pulled.fetch_add(pulled.wire_bytes(), Ordering::Relaxed);
+        self.stats.cells_pulled.fetch_add(pulled.total_cells() as u64, Ordering::Relaxed);
+        self.stats.snapshot_clones.fetch_add(pulled.shared_ranges() as u64, Ordering::Relaxed);
+        Ok((pulled, gap, waited))
+    }
+
+    /// Serve one worker flush: meter it, apply the coalesced deltas at
+    /// version `round + 1`, tick the worker's clock.
+    pub fn serve_flush(&self, worker: usize, deltas: &[(usize, f64)], round: u64) {
+        self.stats.bytes_flushed.fetch_add(wire_bytes_for(deltas.len()), Ordering::Relaxed);
+        self.stats.flushes.fetch_add(1, Ordering::Relaxed);
+        self.store.add_deltas(deltas, round + 1);
+        self.clock.record_flush(worker, round);
+    }
+
+    /// Serve one coordinator republish: meter it as republish traffic,
+    /// then overwrite-publish the entries.
+    pub fn serve_publish(&self, entries: &[(usize, f64)], version: u64) {
+        self.stats.bytes_republished.fetch_add(wire_bytes_for(entries.len()), Ordering::Relaxed);
+        self.store.publish(entries, version);
+    }
+
+    /// Snapshot every meter (server stats + store counters) into the
+    /// wire-crossable [`StatsSnapshot`].
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            bytes_flushed: self.stats.bytes_flushed.load(Ordering::Relaxed),
+            bytes_republished: self.stats.bytes_republished.load(Ordering::Relaxed),
+            bytes_pulled: self.stats.bytes_pulled.load(Ordering::Relaxed),
+            cells_pulled: self.stats.cells_pulled.load(Ordering::Relaxed),
+            snapshot_clones: self.stats.snapshot_clones.load(Ordering::Relaxed),
+            flushes: self.stats.flushes.load(Ordering::Relaxed),
+            pulls: self.stats.pulls.load(Ordering::Relaxed),
+            stale_gap_sum: self.stats.stale_gap_sum.load(Ordering::Relaxed),
+            max_stale_gap: self.stats.max_stale_gap.load(Ordering::Relaxed),
+            gate_waits: self.stats.gate_waits.load(Ordering::Relaxed),
+            hash_probes: self.store.hash_probes(),
+            cow_clones: self.store.cow_clones(),
+        }
     }
 }
 

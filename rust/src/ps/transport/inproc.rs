@@ -1,0 +1,98 @@
+//! The shared-memory transport: a thin adapter from [`Transport`] onto
+//! an `Arc<ParameterServer>` in the same address space. This is the
+//! pre-transport execution path verbatim — every operation delegates to
+//! the same serve helpers the TCP server calls, so refactoring the
+//! client onto the trait changed *where* the calls route, not what they
+//! do (the staleness-0 trajectories are pinned unchanged by the parity
+//! suite). Pulls keep their zero-copy property: a covered range comes
+//! back as the store's own `Arc`-shared epoch view, untouched by any
+//! serialization.
+
+use super::{PullReply, Transport, TransportError};
+use crate::ps::shard::PullSpec;
+use crate::ps::{ParameterServer, StatsSnapshot};
+use std::sync::Arc;
+
+/// One endpoint's in-process link to the server.
+pub struct InProcTransport {
+    server: Arc<ParameterServer>,
+    worker: usize,
+}
+
+impl InProcTransport {
+    pub fn new(server: Arc<ParameterServer>, worker: usize) -> Self {
+        InProcTransport { server, worker }
+    }
+
+    /// The shared server (tests reach through to its store/clock).
+    pub fn server(&self) -> &Arc<ParameterServer> {
+        &self.server
+    }
+}
+
+impl Transport for InProcTransport {
+    fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
+        let (pulled, gap, waited) =
+            self.server.serve_pull(spec, round).map_err(|_| TransportError::Shutdown)?;
+        Ok(PullReply { ranges: pulled.ranges, cells: pulled.cells, gap, waited })
+    }
+
+    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
+        self.server.serve_flush(self.worker, deltas, round);
+        Ok(())
+    }
+
+    fn publish(
+        &mut self,
+        entries: &[(usize, f64)],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.server.serve_publish(entries, version);
+        Ok(())
+    }
+
+    fn publish_range(
+        &mut self,
+        start: usize,
+        values: &[f64],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.server.store().publish_range(start, values, version);
+        Ok(())
+    }
+
+    fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
+        self.server.clock().advance_applied(applied);
+        Ok(())
+    }
+
+    fn stats(&mut self) -> Result<StatsSnapshot, TransportError> {
+        Ok(self.server.stats_snapshot())
+    }
+
+    fn shutdown_clock(&mut self) -> Result<(), TransportError> {
+        self.server.clock().shutdown();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::StalenessPolicy;
+
+    #[test]
+    fn inproc_pull_is_still_zero_copy() {
+        let server = Arc::new(ParameterServer::with_segments(
+            2,
+            1,
+            StalenessPolicy::Bounded(0),
+            &[(0, 8)],
+        ));
+        server.store().publish_dense(&[1.0; 8], 0);
+        let mut t = InProcTransport::new(Arc::clone(&server), 0);
+        let reply = t.pull(&PullSpec::from_ranges(vec![(0, 8)]), 0).unwrap();
+        assert!(reply.ranges[0].is_shared(), "must be the shared epoch view, not a copy");
+        assert_eq!(server.stats_snapshot().snapshot_clones, 1);
+    }
+}

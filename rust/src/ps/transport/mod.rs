@@ -1,0 +1,292 @@
+//! Pluggable transport between the distributed run and its parameter
+//! server: the same `pull / flush / publish / clock` traffic behind one
+//! [`Transport`] trait, carried either through shared memory
+//! ([`InProcTransport`] — today's single-address-space path, bit-exact
+//! with the pre-transport code) or over a length-prefixed binary wire
+//! protocol to a server in another process ([`tcp::TcpTransport`] +
+//! `strads ps-server`, see [`wire`]).
+//!
+//! The split keeps the *policy* (SSP gating, byte metering, storage) in
+//! one place — [`crate::ps::ParameterServer::serve_pull`] and friends —
+//! and makes the transport pure carriage: both implementations call the
+//! identical serve helpers, so a staleness-0 run produces the same
+//! trajectory over either (the loopback parity suite in
+//! `tests/ps_transport.rs` pins this bitwise; the f32 range wire is
+//! lossless by construction). What the transports *do* differ in is
+//! real traffic: [`PsConnection::socket_bytes`] meters the actual bytes
+//! moved through sockets (0 in-process), which `BENCH_ps.json` records
+//! next to the modeled `net_bytes` — the wire-byte meter becomes an
+//! observable instead of a model.
+//!
+//! Connection topology: the coordinator holds one link (init, seed,
+//! republish, clock advance, stats, teardown) and each worker thread
+//! holds its own (pull + flush) — a pull can block at the server-side
+//! SSP gate, so links are never shared between workers.
+
+pub mod inproc;
+pub mod tcp;
+pub mod wire;
+
+pub use inproc::InProcTransport;
+pub use tcp::{PsTcpServer, TcpTransport};
+
+use crate::config::PsConfig;
+use crate::ps::shard::{Cell, PullSpec, RangePull};
+use crate::ps::{ParameterServer, StatsSnapshot};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Which carriage a run uses between clients and the parameter server.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Shared memory within one process (the default; zero-copy pulls).
+    #[default]
+    InProc,
+    /// Loopback/remote TCP to a `strads ps-server` process.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a `[ps] transport` / `--ps-transport` setting.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "inproc" | "in-proc" | "local" => Ok(TransportKind::InProc),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => anyhow::bail!("unknown transport {other} (inproc|tcp)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Why a transport operation failed.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Clean teardown: the run's SSP gate waiters were woken. Workers
+    /// treat this as end-of-run, not an error.
+    Shutdown,
+    /// The carriage failed (connection refused, peer died mid-RPC).
+    Io(std::io::Error),
+    /// The peer sent bytes that don't parse as the protocol.
+    Protocol(String),
+    /// The server processed the request and rejected it.
+    Remote(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Shutdown => write!(f, "parameter server shut down"),
+            TransportError::Io(e) => write!(f, "ps transport i/o: {e}"),
+            TransportError::Protocol(m) => write!(f, "ps transport protocol: {m}"),
+            TransportError::Remote(m) => write!(f, "ps server error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+impl From<wire::WireError> for TransportError {
+    fn from(e: wire::WireError) -> Self {
+        TransportError::Protocol(e.0)
+    }
+}
+
+impl TransportError {
+    /// True for the clean end-of-run signal (as opposed to a fault).
+    pub fn is_shutdown(&self) -> bool {
+        matches!(self, TransportError::Shutdown)
+    }
+}
+
+/// The result of one transported pull: ranges in request order (for the
+/// in-process transport these are zero-copy shared epoch views; over
+/// TCP, owned bitwise-identical images), scattered cells in request-key
+/// order, and the SSP gate observation.
+#[derive(Debug)]
+pub struct PullReply {
+    pub ranges: Vec<RangePull>,
+    pub cells: Vec<Cell>,
+    pub gap: u64,
+    pub waited: bool,
+}
+
+/// One endpoint's view of the parameter server. Worker clients use
+/// `pull`/`flush`; the coordinator uses the rest. Methods take `&mut
+/// self` because a TCP link is a stateful RPC stream — each endpoint
+/// owns its own transport (see the module docs on topology).
+pub trait Transport: Send {
+    /// SSP-gated read of `spec` for worker-round `round`; blocks until
+    /// the staleness policy admits it.
+    fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError>;
+
+    /// Push this worker's coalesced round-`round` delta batch and tick
+    /// its clock.
+    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError>;
+
+    /// Coordinator republish of derived state at `version` (metered as
+    /// republish traffic).
+    fn publish(&mut self, entries: &[(usize, f64)], version: u64)
+        -> Result<(), TransportError>;
+
+    /// Contiguous overwrite-publish (the unmetered round-0 seed path).
+    fn publish_range(
+        &mut self,
+        start: usize,
+        values: &[f64],
+        version: u64,
+    ) -> Result<(), TransportError>;
+
+    /// Advance the server's applied clock (ungates workers).
+    fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError>;
+
+    /// Snapshot every server-side meter.
+    fn stats(&mut self) -> Result<StatsSnapshot, TransportError>;
+
+    /// Wake every SSP gate waiter for run teardown (the server itself
+    /// stays alive — over TCP, ready for the next `Init`).
+    fn shutdown_clock(&mut self) -> Result<(), TransportError>;
+}
+
+/// Worker id the coordinator's link reports on the wire. Never used for
+/// clock indexing (the coordinator doesn't flush), it only marks the
+/// link in diagnostics.
+pub const COORDINATOR_ID: usize = u32::MAX as usize;
+
+/// How `PsConnection` mints per-worker transports.
+enum Minter {
+    InProc(Arc<ParameterServer>),
+    Tcp(String),
+}
+
+/// A run's connection to its parameter server: the coordinator link
+/// plus a factory for per-worker links, selected by `[ps] transport`.
+/// This is the only place `workers::service` touches transport-kind
+/// specifics — everything downstream speaks [`Transport`].
+pub struct PsConnection {
+    coord: Box<dyn Transport>,
+    minter: Minter,
+    socket_bytes: Arc<AtomicU64>,
+}
+
+impl PsConnection {
+    /// Establish the coordinator's link for a run: in-process builds
+    /// the server here; TCP connects to `cfg.addr` and (re)initializes
+    /// the hosted server with this run's shape. Either way the server
+    /// comes up empty — seed it with `publish_range` before spawning
+    /// workers.
+    pub fn establish(
+        cfg: &PsConfig,
+        workers: usize,
+        segments: &[(usize, usize)],
+    ) -> Result<Self, TransportError> {
+        let socket_bytes = Arc::new(AtomicU64::new(0));
+        match cfg.transport {
+            TransportKind::InProc => {
+                let server = Arc::new(ParameterServer::with_segments(
+                    cfg.shards,
+                    workers,
+                    cfg.policy(),
+                    segments,
+                ));
+                Ok(PsConnection {
+                    coord: Box::new(InProcTransport::new(Arc::clone(&server), COORDINATOR_ID)),
+                    minter: Minter::InProc(server),
+                    socket_bytes,
+                })
+            }
+            TransportKind::Tcp => {
+                let mut coord = TcpTransport::connect(
+                    &cfg.addr,
+                    COORDINATOR_ID,
+                    Arc::clone(&socket_bytes),
+                )?;
+                coord.init(cfg.shards, workers, cfg.policy(), segments)?;
+                Ok(PsConnection {
+                    coord: Box::new(coord),
+                    minter: Minter::Tcp(cfg.addr.clone()),
+                    socket_bytes,
+                })
+            }
+        }
+    }
+
+    /// Mint `worker`'s own link (an `Arc` clone in-process, a fresh
+    /// socket over TCP). Call on the coordinator thread so connection
+    /// failures surface before any worker is spawned.
+    pub fn worker_transport(&self, worker: usize) -> Result<Box<dyn Transport>, TransportError> {
+        match &self.minter {
+            Minter::InProc(server) => {
+                Ok(Box::new(InProcTransport::new(Arc::clone(server), worker)))
+            }
+            Minter::Tcp(addr) => Ok(Box::new(TcpTransport::connect(
+                addr,
+                worker,
+                Arc::clone(&self.socket_bytes),
+            )?)),
+        }
+    }
+
+    /// The coordinator's link.
+    pub fn coord(&mut self) -> &mut dyn Transport {
+        &mut *self.coord
+    }
+
+    /// Real bytes moved through sockets so far, summed over every link
+    /// this connection minted (0 for the in-process transport). This is
+    /// measured traffic — frame headers included — as opposed to the
+    /// modeled `net_bytes` meter.
+    pub fn socket_bytes(&self) -> u64 {
+        self.socket_bytes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::InProc);
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::default().name(), "inproc");
+        assert_eq!(TransportKind::Tcp.name(), "tcp");
+    }
+
+    #[test]
+    fn inproc_connection_serves_the_full_coordinator_surface() {
+        let cfg = PsConfig::default();
+        let mut conn = PsConnection::establish(&cfg, 2, &[(0, 4)]).unwrap();
+        conn.coord().publish_range(0, &[1.0, 2.0, 3.0, 4.0], 0).unwrap();
+        conn.coord().publish(&[(2, 9.0)], 1).unwrap();
+        conn.coord().advance_applied(1).unwrap();
+
+        let mut w0 = conn.worker_transport(0).unwrap();
+        let reply = w0.pull(&PullSpec::from_ranges(vec![(0, 4)]), 1).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[1.0f32, 2.0, 9.0, 4.0]);
+        w0.flush(&[(0, 0.5)], 1).unwrap();
+
+        let stats = conn.coord().stats().unwrap();
+        assert_eq!(stats.pulls, 1);
+        assert_eq!(stats.flushes, 1);
+        assert!(stats.bytes_republished > 0, "publish must meter");
+        assert_eq!(conn.socket_bytes(), 0, "in-process moves no socket bytes");
+
+        conn.coord().shutdown_clock().unwrap();
+        let err = w0.pull(&PullSpec::from_keys(vec![0]), 100).unwrap_err();
+        assert!(err.is_shutdown(), "{err}");
+    }
+}

@@ -1,0 +1,411 @@
+//! The TCP transport: [`TcpTransport`] is the client side (one socket
+//! per endpoint, synchronous framed RPC — see [`wire`]), and
+//! [`PsTcpServer`] hosts a [`ParameterServer`] behind a listener
+//! (`strads ps-server`). The server is problem-agnostic: a run's
+//! coordinator sends `Init` (shape: shards, workers, policy, dense
+//! segments) and then seeds state with `PublishRange`, so one server
+//! process serves any `ModelProblem` and any number of back-to-back
+//! runs (each `Init` replaces the previous server instance).
+//!
+//! Threading: one OS thread per connection. This is deliberate — a
+//! worker's pull legitimately *blocks* at the server-side SSP gate
+//! until the applied clock admits it, exactly like the in-process gate,
+//! so connections must not share an event loop. Teardown paths:
+//! `ShutdownClock` wakes every gate waiter (their pulls return the
+//! `shutdown` error reply, which clients surface as
+//! [`TransportError::Shutdown`]); a dead client just drops its
+//! connection thread; [`PsTcpServer::stop`] force-closes everything.
+
+use super::wire::{self, Reply, Request};
+use super::{PullReply, Transport, TransportError};
+use crate::ps::clock::{ClockShutdown, StalenessPolicy};
+use crate::ps::shard::PullSpec;
+use crate::ps::{ParameterServer, StatsSnapshot};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+// ---- client ------------------------------------------------------------
+
+/// One endpoint's socket to a `ps-server`, counting every byte it moves
+/// (frame headers included) into the shared `socket_bytes` meter.
+pub struct TcpTransport {
+    stream: TcpStream,
+    worker: usize,
+    socket_bytes: Arc<AtomicU64>,
+    /// Reusable receive buffer (frames overwrite it).
+    buf: Vec<u8>,
+}
+
+impl TcpTransport {
+    /// Connect to `addr`. Fails fast (no retry loop): a missing server
+    /// is an operator error the caller should see immediately.
+    pub fn connect(
+        addr: &str,
+        worker: usize,
+        socket_bytes: Arc<AtomicU64>,
+    ) -> Result<Self, TransportError> {
+        let stream = TcpStream::connect(addr)?;
+        // One small frame per RPC: Nagle would serialize the whole run
+        // onto 40ms ACK-delay ticks.
+        stream.set_nodelay(true)?;
+        Ok(TcpTransport { stream, worker, socket_bytes, buf: Vec::new() })
+    }
+
+    /// Send `Init`, (re)configuring the hosted server for this run.
+    pub fn init(
+        &mut self,
+        shards: usize,
+        workers: usize,
+        policy: StalenessPolicy,
+        segments: &[(usize, usize)],
+    ) -> Result<(), TransportError> {
+        let req =
+            Request::Init { shards, workers, policy, segments: segments.to_vec() };
+        match self.rpc(&req)? {
+            Reply::Ok => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// One synchronous RPC from an already-encoded frame payload:
+    /// frame out, frame in, meter both directions.
+    fn exchange(&mut self, msg: Vec<u8>) -> Result<Reply, TransportError> {
+        let sent = wire::write_frame(&mut self.stream, &msg)?;
+        let received = wire::read_frame(&mut self.stream, &mut self.buf)?;
+        self.socket_bytes.fetch_add(sent + received, Ordering::Relaxed);
+        match wire::decode_reply(&self.buf)? {
+            Reply::Err { shutdown: true, .. } => Err(TransportError::Shutdown),
+            Reply::Err { shutdown: false, message } => Err(TransportError::Remote(message)),
+            reply => Ok(reply),
+        }
+    }
+
+    fn rpc(&mut self, req: &Request) -> Result<Reply, TransportError> {
+        self.exchange(wire::encode_request(req))
+    }
+}
+
+fn unexpected(reply: &Reply) -> TransportError {
+    TransportError::Protocol(format!("unexpected reply kind: {reply:?}"))
+}
+
+impl Transport for TcpTransport {
+    fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
+        match self.exchange(wire::encode_pull(round, spec))? {
+            Reply::Pull { gap, waited, ranges, cells } => {
+                Ok(PullReply { ranges, cells, gap, waited })
+            }
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
+        match self.exchange(wire::encode_flush(self.worker, round, deltas))? {
+            Reply::Ok => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn publish(
+        &mut self,
+        entries: &[(usize, f64)],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        match self.exchange(wire::encode_publish(version, entries))? {
+            Reply::Ok => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn publish_range(
+        &mut self,
+        start: usize,
+        values: &[f64],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        match self.exchange(wire::encode_publish_range(version, start, values))? {
+            Reply::Ok => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
+        match self.rpc(&Request::Advance { applied })? {
+            Reply::Ok => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn stats(&mut self) -> Result<StatsSnapshot, TransportError> {
+        match self.rpc(&Request::Stats)? {
+            Reply::Stats(s) => Ok(s),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn shutdown_clock(&mut self) -> Result<(), TransportError> {
+        match self.rpc(&Request::ShutdownClock)? {
+            Reply::Ok => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+}
+
+// ---- server ------------------------------------------------------------
+
+struct ServerState {
+    /// The hosted server; `None` until the first `Init` arrives.
+    server: Option<Arc<ParameterServer>>,
+}
+
+struct ServerShared {
+    state: Mutex<ServerState>,
+    /// Signaled on `Init` (and on stop) so early worker connections can
+    /// park until the coordinator has configured the run.
+    installed: Condvar,
+    stop: AtomicBool,
+    /// Clones of every *live* connection keyed by connection id, so
+    /// `stop` can force-close them. Entries are pruned when their
+    /// handler exits — a long-lived server must not leak one fd per
+    /// connection it ever served.
+    conns: Mutex<std::collections::HashMap<u64, TcpStream>>,
+    /// Monotonic connection-id source.
+    next_conn_id: AtomicU64,
+}
+
+/// A listening parameter-server host. `bind` spawns the accept loop;
+/// the process-level entry point (`strads ps-server`) then parks on
+/// [`PsTcpServer::run`], while tests drive [`PsTcpServer::stop`].
+pub struct PsTcpServer {
+    local_addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl PsTcpServer {
+    /// Bind `addr` (use port 0 for an ephemeral test port) and start
+    /// accepting connections.
+    pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("ps-server bind {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(ServerShared {
+            state: Mutex::new(ServerState { server: None }),
+            installed: Condvar::new(),
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(std::collections::HashMap::new()),
+            next_conn_id: AtomicU64::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(PsTcpServer { local_addr, shared, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Serve until the process dies (the `strads ps-server` loop).
+    pub fn run(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Tear the server down: wake gate waiters, close every live
+    /// connection (clients see a clean I/O error, never a hang), and
+    /// join the accept loop. Used by tests and the kill-path suite.
+    pub fn stop(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(server) = self.shared.state.lock().expect("state lock").server.as_ref() {
+            server.clock().shutdown();
+        }
+        self.shared.installed.notify_all();
+        for (_, conn) in self.shared.conns.lock().expect("conns lock").drain() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            shared.conns.lock().expect("conns lock").insert(conn_id, clone);
+        }
+        let conn_shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            handle_conn(&conn_shared, stream);
+            // Prune our clone so a long-lived server never accumulates
+            // fds for connections that already hung up.
+            conn_shared.conns.lock().expect("conns lock").remove(&conn_id);
+        });
+    }
+}
+
+/// Block until an `Init` has installed a server (or the host stops).
+fn wait_server(shared: &ServerShared) -> Option<Arc<ParameterServer>> {
+    let mut state = shared.state.lock().expect("state lock");
+    loop {
+        if let Some(server) = state.server.as_ref() {
+            return Some(Arc::clone(server));
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        state = shared.installed.wait(state).expect("state lock");
+    }
+}
+
+fn handle_conn(shared: &ServerShared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let mut buf = Vec::new();
+    loop {
+        // A read error here is the client going away — not a fault.
+        if wire::read_frame(&mut stream, &mut buf).is_err() {
+            return;
+        }
+        let reply = match wire::decode_request(&buf) {
+            Ok(req) => dispatch(shared, req),
+            Err(e) => Reply::Err { shutdown: false, message: e.0 },
+        };
+        let msg = wire::encode_reply(&reply);
+        if wire::write_frame(&mut stream, &msg).is_err() {
+            return;
+        }
+    }
+}
+
+fn dispatch(shared: &ServerShared, req: Request) -> Reply {
+    // Init is the one request served without a hosted server; the
+    // rebinding keeps `req` whole for the second match below.
+    let req = match req {
+        Request::Init { shards, workers, policy, segments } => {
+            let server =
+                Arc::new(ParameterServer::with_segments(shards, workers, policy, &segments));
+            // Replace any previous run's server: back-to-back runs (the
+            // staleness sweep) each re-Init the same host process.
+            // Waking the replaced clock frees any connection thread a
+            // crashed client left parked at the old gate.
+            let old = shared.state.lock().expect("state lock").server.replace(server);
+            if let Some(old) = old {
+                old.clock().shutdown();
+            }
+            shared.installed.notify_all();
+            return Reply::Ok;
+        }
+        other => other,
+    };
+    let Some(server) = wait_server(shared) else {
+        return Reply::Err { shutdown: true, message: "ps-server stopping".into() };
+    };
+    match req {
+        Request::Init { .. } => unreachable!("handled above"),
+        Request::Pull { round, spec } => match server.serve_pull(&spec, round) {
+            Ok((pulled, gap, waited)) => {
+                Reply::Pull { gap, waited, ranges: pulled.ranges, cells: pulled.cells }
+            }
+            Err(ClockShutdown) => {
+                Reply::Err { shutdown: true, message: "clock shutdown".into() }
+            }
+        },
+        Request::Flush { worker, round, deltas } => {
+            if worker >= server.clock().num_workers() {
+                return Reply::Err {
+                    shutdown: false,
+                    message: format!(
+                        "flush from worker {worker}, but the run was initialized with {}",
+                        server.clock().num_workers()
+                    ),
+                };
+            }
+            server.serve_flush(worker, &deltas, round);
+            Reply::Ok
+        }
+        Request::Publish { version, entries } => {
+            server.serve_publish(&entries, version);
+            Reply::Ok
+        }
+        Request::PublishRange { version, start, values } => {
+            server.store().publish_range(start, &values, version);
+            Reply::Ok
+        }
+        Request::Advance { applied } => {
+            server.clock().advance_applied(applied);
+            Reply::Ok
+        }
+        Request::Stats => Reply::Stats(server.stats_snapshot()),
+        Request::ShutdownClock => {
+            server.clock().shutdown();
+            Reply::Ok
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loopback() -> (PsTcpServer, String) {
+        let server = PsTcpServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        (server, addr)
+    }
+
+    #[test]
+    fn tcp_roundtrip_init_seed_pull_flush_stats() {
+        let (host, addr) = loopback();
+        let bytes = Arc::new(AtomicU64::new(0));
+        let mut coord = TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes)).unwrap();
+        coord.init(4, 1, StalenessPolicy::Bounded(0), &[(0, 4)]).unwrap();
+        coord.publish_range(0, &[1.0, 2.0, 3.0, 4.0], 0).unwrap();
+
+        let mut worker = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+        let reply = worker.pull(&PullSpec::from_ranges(vec![(1, 2)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[2.0f32, 3.0]);
+        assert_eq!(reply.gap, 0);
+        worker.flush(&[(0, 0.5), (3, -1.0)], 0).unwrap();
+        coord.advance_applied(1).unwrap();
+
+        let stats = coord.stats().unwrap();
+        assert_eq!((stats.pulls, stats.flushes), (1, 1));
+        assert!(stats.bytes_pulled > 0);
+        assert!(bytes.load(Ordering::Relaxed) > 0, "socket traffic must be metered");
+        host.stop();
+    }
+
+    #[test]
+    fn flush_with_bogus_worker_id_is_rejected_not_a_crash() {
+        let (host, addr) = loopback();
+        let bytes = Arc::new(AtomicU64::new(0));
+        let mut coord = TcpTransport::connect(&addr, 7, bytes).unwrap();
+        coord.init(2, 2, StalenessPolicy::Async, &[]).unwrap();
+        let err = coord.flush(&[(0, 1.0)], 0).unwrap_err();
+        assert!(matches!(err, TransportError::Remote(_)), "{err}");
+        // the connection survives the rejected request
+        assert!(coord.stats().is_ok());
+        host.stop();
+    }
+
+    #[test]
+    fn stopping_the_host_surfaces_clean_errors() {
+        let (host, addr) = loopback();
+        let mut coord =
+            TcpTransport::connect(&addr, 0, Arc::new(AtomicU64::new(0))).unwrap();
+        coord.init(2, 1, StalenessPolicy::Bounded(0), &[]).unwrap();
+        host.stop();
+        let err = coord.stats().unwrap_err();
+        assert!(matches!(err, TransportError::Io(_)), "want io error, got {err}");
+    }
+}

@@ -1,0 +1,680 @@
+//! The length-prefixed binary wire protocol the TCP transport speaks —
+//! the *normative* spec lives in `docs/ARCHITECTURE.md §Wire protocol`;
+//! this module is its executable form, and the round-trip property
+//! tests in `tests/ps_transport.rs` pin the two against each other.
+//!
+//! Every message is one **frame**: a little-endian `u32` payload length
+//! followed by the payload, whose first byte is the opcode. Requests
+//! and replies share the framing; a connection is a strict synchronous
+//! RPC stream (one request, one reply, in order). All integers are
+//! little-endian; floats are IEEE-754 little-endian bit patterns, so
+//! the wire is bitwise lossless — an f32 range slab crosses as exactly
+//! `4 * len` value bytes (the 4 B/cell accounting the pull meter uses
+//! is literal here), and f64 cells/deltas as exact 8-byte images.
+
+use crate::ps::clock::StalenessPolicy;
+use crate::ps::shard::{Cell, PullSpec, RangePull};
+use crate::ps::StatsSnapshot;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Protocol revision carried in every `Init`; the server refuses a
+/// mismatch instead of misparsing traffic. Bump on any layout change.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Frames above this are corruption, not data (guards allocation).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Request opcodes (first payload byte, client -> server).
+pub mod op {
+    pub const INIT: u8 = 0x01;
+    pub const PULL: u8 = 0x02;
+    pub const FLUSH: u8 = 0x03;
+    pub const PUBLISH: u8 = 0x04;
+    pub const PUBLISH_RANGE: u8 = 0x05;
+    pub const ADVANCE: u8 = 0x06;
+    pub const STATS: u8 = 0x07;
+    pub const SHUTDOWN_CLOCK: u8 = 0x08;
+    /// Reply opcodes (server -> client).
+    pub const REPLY_OK: u8 = 0x80;
+    pub const REPLY_PULL: u8 = 0x81;
+    pub const REPLY_STATS: u8 = 0x82;
+    pub const REPLY_ERR: u8 = 0x7f;
+}
+
+/// A decoded client -> server message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Configure (or reset) the hosted server: the first message a
+    /// coordinator sends. A fresh `Init` replaces any previous server
+    /// instance, so back-to-back runs (e.g. the staleness sweep) reuse
+    /// one `ps-server` process.
+    Init {
+        shards: usize,
+        workers: usize,
+        policy: StalenessPolicy,
+        segments: Vec<(usize, usize)>,
+    },
+    /// SSP-gated read of a [`PullSpec`]; blocks server-side until the
+    /// applied clock admits `round`.
+    Pull { round: u64, spec: PullSpec },
+    /// A worker's coalesced end-of-round delta batch + clock tick.
+    Flush { worker: usize, round: u64, deltas: Vec<(usize, f64)> },
+    /// Coordinator republish of derived state (metered as republish
+    /// traffic server-side).
+    Publish { version: u64, entries: Vec<(usize, f64)> },
+    /// Contiguous overwrite-publish (the round-0 seed path; unmetered,
+    /// matching the in-process seeding semantics).
+    PublishRange { version: u64, start: usize, values: Vec<f64> },
+    /// Advance the server's applied clock (ungates workers).
+    Advance { applied: u64 },
+    /// Read a [`StatsSnapshot`] of every server meter.
+    Stats,
+    /// Wake every SSP gate waiter for run teardown. The server process
+    /// stays up (a later `Init` starts the next run).
+    ShutdownClock,
+}
+
+/// A decoded server -> client message.
+#[derive(Debug)]
+pub enum Reply {
+    Ok,
+    /// Pull result: ranges in request order (f32 images + epoch
+    /// version), then scattered cells in request-key order.
+    Pull { gap: u64, waited: bool, ranges: Vec<RangePull>, cells: Vec<Cell> },
+    Stats(StatsSnapshot),
+    /// Request failed. `shutdown` distinguishes the clean teardown path
+    /// (gate waiters woken) from real errors.
+    Err { shutdown: bool, message: String },
+}
+
+/// Malformed wire traffic (truncated frame, bad opcode, trailing
+/// bytes). Carried up as `TransportError::Protocol`.
+#[derive(Debug, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "wire protocol error: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---- framing ----------------------------------------------------------
+
+/// Write one frame (`u32` LE length + payload) and flush. Returns the
+/// total bytes put on the socket — the real-traffic meter's input.
+/// Refuses out-of-range payloads *before* any bytes hit the wire: a
+/// silently wrapped `u32` length (possible for a >= 4 GiB seed of a
+/// huge model) would desynchronize the whole stream.
+pub fn write_frame<W: Write>(w: &mut W, msg: &[u8]) -> std::io::Result<u64> {
+    if msg.is_empty() || msg.len() > MAX_FRAME as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame payload of {} bytes is out of range (1..={MAX_FRAME})", msg.len()),
+        ));
+    }
+    w.write_all(&(msg.len() as u32).to_le_bytes())?;
+    w.write_all(msg)?;
+    w.flush()?;
+    Ok(4 + msg.len() as u64)
+}
+
+/// Read one frame into `buf` (resized to the payload). Returns the
+/// total bytes taken off the socket.
+pub fn read_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> std::io::Result<u64> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes);
+    if len == 0 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    buf.resize(len as usize, 0);
+    r.read_exact(buf)?;
+    Ok(4 + len as u64)
+}
+
+// ---- primitive writers -------------------------------------------------
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+// ---- primitive reader --------------------------------------------------
+
+/// Checked sequential reader over one frame payload. Every accessor
+/// fails (instead of panicking) on truncation, and [`Reader::finish`]
+/// rejects trailing bytes, so a corrupt frame can never be half-read.
+struct Reader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() < n {
+            return Err(WireError(format!(
+                "truncated frame: wanted {n} more bytes, have {}",
+                self.buf.len()
+            )));
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("take(2)")))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("take(4)")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("take(8)")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("take(8)")))
+    }
+
+    /// A `u32` element count followed by elements of `elem_bytes` each:
+    /// validates the count against the remaining payload *before* any
+    /// allocation, so a hostile count cannot OOM the peer.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.remaining() {
+            return Err(WireError(format!(
+                "count {n} x {elem_bytes}B exceeds the {}B left in the frame",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.buf.is_empty() {
+            Ok(())
+        } else {
+            Err(WireError(format!("{} trailing bytes after message", self.buf.len())))
+        }
+    }
+}
+
+// ---- requests ----------------------------------------------------------
+
+fn put_pairs(b: &mut Vec<u8>, pairs: &[(usize, f64)]) {
+    put_u32(b, pairs.len() as u32);
+    for &(key, value) in pairs {
+        put_u64(b, key as u64);
+        put_f64(b, value);
+    }
+}
+
+fn read_pairs(r: &mut Reader) -> Result<Vec<(usize, f64)>, WireError> {
+    let n = r.count(16)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push((r.u64()? as usize, r.f64()?));
+    }
+    Ok(out)
+}
+
+// Borrowed fast-path encoders: the client encodes straight from the
+// slices it already holds — no owned `Request` (and no payload clone)
+// is ever materialized on the per-round hot path. `encode_request`
+// delegates here, so the owned enum exists only for the decode side
+// and tests.
+
+/// Encode a `Pull` straight from a borrowed spec.
+pub fn encode_pull(round: u64, spec: &PullSpec) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.push(op::PULL);
+    put_u64(&mut b, round);
+    put_u32(&mut b, spec.ranges.len() as u32);
+    for &(start, len) in &spec.ranges {
+        put_u64(&mut b, start as u64);
+        put_u64(&mut b, len as u64);
+    }
+    put_u32(&mut b, spec.keys.len() as u32);
+    for &key in &spec.keys {
+        put_u64(&mut b, key as u64);
+    }
+    b
+}
+
+/// Encode a `Flush` straight from the worker's coalesced batch.
+pub fn encode_flush(worker: usize, round: u64, deltas: &[(usize, f64)]) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.push(op::FLUSH);
+    put_u32(&mut b, worker as u32);
+    put_u64(&mut b, round);
+    put_pairs(&mut b, deltas);
+    b
+}
+
+/// Encode a `Publish` straight from the coordinator's entry list.
+pub fn encode_publish(version: u64, entries: &[(usize, f64)]) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.push(op::PUBLISH);
+    put_u64(&mut b, version);
+    put_pairs(&mut b, entries);
+    b
+}
+
+/// Encode a `PublishRange` straight from the seed/state slice.
+pub fn encode_publish_range(version: u64, start: usize, values: &[f64]) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.push(op::PUBLISH_RANGE);
+    put_u64(&mut b, version);
+    put_u64(&mut b, start as u64);
+    put_u32(&mut b, values.len() as u32);
+    for &v in values {
+        put_f64(&mut b, v);
+    }
+    b
+}
+
+/// Encode a request into one frame payload (opcode + body).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    match req {
+        Request::Init { shards, workers, policy, segments } => {
+            let mut b = Vec::new();
+            b.push(op::INIT);
+            put_u16(&mut b, PROTO_VERSION);
+            put_u32(&mut b, *shards as u32);
+            put_u32(&mut b, *workers as u32);
+            match policy {
+                StalenessPolicy::Bounded(s) => {
+                    b.push(0);
+                    put_u64(&mut b, *s);
+                }
+                StalenessPolicy::Async => {
+                    b.push(1);
+                    put_u64(&mut b, 0);
+                }
+            }
+            put_u32(&mut b, segments.len() as u32);
+            for &(start, len) in segments {
+                put_u64(&mut b, start as u64);
+                put_u64(&mut b, len as u64);
+            }
+            b
+        }
+        Request::Pull { round, spec } => encode_pull(*round, spec),
+        Request::Flush { worker, round, deltas } => encode_flush(*worker, *round, deltas),
+        Request::Publish { version, entries } => encode_publish(*version, entries),
+        Request::PublishRange { version, start, values } => {
+            encode_publish_range(*version, *start, values)
+        }
+        Request::Advance { applied } => {
+            let mut b = Vec::new();
+            b.push(op::ADVANCE);
+            put_u64(&mut b, *applied);
+            b
+        }
+        Request::Stats => vec![op::STATS],
+        Request::ShutdownClock => vec![op::SHUTDOWN_CLOCK],
+    }
+}
+
+/// Decode one frame payload into a [`Request`].
+pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
+    let mut r = Reader::new(buf);
+    let opcode = r.u8()?;
+    let req = match opcode {
+        op::INIT => {
+            let proto = r.u16()?;
+            if proto != PROTO_VERSION {
+                return Err(WireError(format!(
+                    "protocol version mismatch: peer speaks v{proto}, this server v{PROTO_VERSION}"
+                )));
+            }
+            let shards = r.u32()? as usize;
+            let workers = r.u32()? as usize;
+            let policy = match (r.u8()?, r.u64()?) {
+                (0, s) => StalenessPolicy::Bounded(s),
+                (1, _) => StalenessPolicy::Async,
+                (tag, _) => return Err(WireError(format!("unknown policy tag {tag}"))),
+            };
+            let nseg = r.count(16)?;
+            let mut segments = Vec::with_capacity(nseg);
+            for _ in 0..nseg {
+                segments.push((r.u64()? as usize, r.u64()? as usize));
+            }
+            Request::Init { shards, workers, policy, segments }
+        }
+        op::PULL => {
+            let round = r.u64()?;
+            let nranges = r.count(16)?;
+            let mut ranges = Vec::with_capacity(nranges);
+            for _ in 0..nranges {
+                ranges.push((r.u64()? as usize, r.u64()? as usize));
+            }
+            let nkeys = r.count(8)?;
+            let mut keys = Vec::with_capacity(nkeys);
+            for _ in 0..nkeys {
+                keys.push(r.u64()? as usize);
+            }
+            Request::Pull { round, spec: PullSpec { ranges, keys } }
+        }
+        op::FLUSH => {
+            let worker = r.u32()? as usize;
+            let round = r.u64()?;
+            let deltas = read_pairs(&mut r)?;
+            Request::Flush { worker, round, deltas }
+        }
+        op::PUBLISH => {
+            let version = r.u64()?;
+            let entries = read_pairs(&mut r)?;
+            Request::Publish { version, entries }
+        }
+        op::PUBLISH_RANGE => {
+            let version = r.u64()?;
+            let start = r.u64()? as usize;
+            let n = r.count(8)?;
+            let mut values = Vec::with_capacity(n);
+            for _ in 0..n {
+                values.push(r.f64()?);
+            }
+            Request::PublishRange { version, start, values }
+        }
+        op::ADVANCE => Request::Advance { applied: r.u64()? },
+        op::STATS => Request::Stats,
+        op::SHUTDOWN_CLOCK => Request::ShutdownClock,
+        other => return Err(WireError(format!("unknown request opcode {other:#04x}"))),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+// ---- replies -----------------------------------------------------------
+
+/// Encode a reply into one frame payload. Range images are written as
+/// raw f32 little-endian bytes straight off the (possibly shared) epoch
+/// slab — 4 bytes per cell on the wire, exactly what the pull meter
+/// charges.
+pub fn encode_reply(reply: &Reply) -> Vec<u8> {
+    let mut b = Vec::new();
+    match reply {
+        Reply::Ok => b.push(op::REPLY_OK),
+        Reply::Pull { gap, waited, ranges, cells } => {
+            b.push(op::REPLY_PULL);
+            put_u64(&mut b, *gap);
+            b.push(u8::from(*waited));
+            put_u32(&mut b, ranges.len() as u32);
+            for range in ranges {
+                put_u64(&mut b, range.start() as u64);
+                put_u64(&mut b, range.version());
+                let values = range.values();
+                put_u32(&mut b, values.len() as u32);
+                for &v in values {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            put_u32(&mut b, cells.len() as u32);
+            for cell in cells {
+                put_u64(&mut b, cell.version);
+                put_f64(&mut b, cell.value);
+            }
+        }
+        Reply::Stats(s) => {
+            b.push(op::REPLY_STATS);
+            for v in [
+                s.bytes_flushed,
+                s.bytes_republished,
+                s.bytes_pulled,
+                s.cells_pulled,
+                s.snapshot_clones,
+                s.flushes,
+                s.pulls,
+                s.stale_gap_sum,
+                s.max_stale_gap,
+                s.gate_waits,
+                s.hash_probes,
+                s.cow_clones,
+            ] {
+                put_u64(&mut b, v);
+            }
+        }
+        Reply::Err { shutdown, message } => {
+            b.push(op::REPLY_ERR);
+            b.push(u8::from(*shutdown));
+            b.extend_from_slice(message.as_bytes());
+        }
+    }
+    b
+}
+
+/// Decode one frame payload into a [`Reply`]. Pulled ranges come back
+/// as owned f32 images ([`RangePull::owned`]) — bitwise identical to
+/// the server's epoch slab, since f32 crosses the wire as its exact bit
+/// pattern.
+pub fn decode_reply(buf: &[u8]) -> Result<Reply, WireError> {
+    let mut r = Reader::new(buf);
+    let opcode = r.u8()?;
+    let reply = match opcode {
+        op::REPLY_OK => Reply::Ok,
+        op::REPLY_PULL => {
+            let gap = r.u64()?;
+            let waited = r.u8()? != 0;
+            let nranges = r.count(20)?;
+            let mut ranges = Vec::with_capacity(nranges);
+            for _ in 0..nranges {
+                let start = r.u64()? as usize;
+                let version = r.u64()?;
+                let len = r.count(4)?;
+                let bytes = r.take(len * 4)?;
+                let values = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+                    .collect();
+                ranges.push(RangePull::owned(start, version, values));
+            }
+            let ncells = r.count(16)?;
+            let mut cells = Vec::with_capacity(ncells);
+            for _ in 0..ncells {
+                cells.push(Cell { version: r.u64()?, value: r.f64()? });
+            }
+            Reply::Pull { gap, waited, ranges, cells }
+        }
+        op::REPLY_STATS => Reply::Stats(StatsSnapshot {
+            bytes_flushed: r.u64()?,
+            bytes_republished: r.u64()?,
+            bytes_pulled: r.u64()?,
+            cells_pulled: r.u64()?,
+            snapshot_clones: r.u64()?,
+            flushes: r.u64()?,
+            pulls: r.u64()?,
+            stale_gap_sum: r.u64()?,
+            max_stale_gap: r.u64()?,
+            gate_waits: r.u64()?,
+            hash_probes: r.u64()?,
+            cow_clones: r.u64()?,
+        }),
+        op::REPLY_ERR => {
+            let shutdown = r.u8()? != 0;
+            let raw = r.take(r.remaining())?;
+            let message = String::from_utf8_lossy(raw).into_owned();
+            Reply::Err { shutdown, message }
+        }
+        other => return Err(WireError(format!("unknown reply opcode {other:#04x}"))),
+    };
+    r.finish()?;
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_all_opcodes() {
+        let reqs = vec![
+            Request::Init {
+                shards: 8,
+                workers: 4,
+                policy: StalenessPolicy::Bounded(2),
+                segments: vec![(0, 100), (200, 50)],
+            },
+            Request::Init {
+                shards: 1,
+                workers: 1,
+                policy: StalenessPolicy::Async,
+                segments: vec![],
+            },
+            Request::Pull {
+                round: 7,
+                spec: PullSpec { ranges: vec![(0, 10), (64, 3)], keys: vec![999, 3] },
+            },
+            Request::Flush { worker: 3, round: 9, deltas: vec![(5, -0.25), (0, 1e300)] },
+            Request::Publish { version: 4, entries: vec![(1, f64::MIN_POSITIVE)] },
+            Request::PublishRange { version: 1, start: 16, values: vec![0.5, -0.5, 0.0] },
+            Request::Advance { applied: u64::MAX },
+            Request::Stats,
+            Request::ShutdownClock,
+        ];
+        for req in reqs {
+            let encoded = encode_request(&req);
+            assert_eq!(decode_request(&encoded).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn pull_reply_roundtrip_is_bitwise() {
+        let reply = Reply::Pull {
+            gap: 3,
+            waited: true,
+            ranges: vec![
+                RangePull::owned(5, 9, vec![1.5f32, -0.0, f32::MIN_POSITIVE]),
+                RangePull::owned(100, 0, vec![]),
+            ],
+            cells: vec![Cell { version: 2, value: -1e-300 }],
+        };
+        let decoded = decode_reply(&encode_reply(&reply)).unwrap();
+        let Reply::Pull { gap, waited, ranges, cells } = decoded else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!((gap, waited), (3, true));
+        assert_eq!(ranges.len(), 2);
+        assert_eq!(ranges[0].start(), 5);
+        assert_eq!(ranges[0].version(), 9);
+        // bitwise, not just approximate: -0.0 must survive
+        let bits: Vec<u32> = ranges[0].values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, vec![1.5f32.to_bits(), (-0.0f32).to_bits(), f32::MIN_POSITIVE.to_bits()]);
+        assert_eq!(ranges[1].len(), 0);
+        assert_eq!(cells, vec![Cell { version: 2, value: -1e-300 }]);
+    }
+
+    #[test]
+    fn stats_and_err_roundtrip() {
+        let snap = StatsSnapshot {
+            bytes_flushed: 1,
+            bytes_republished: 2,
+            bytes_pulled: 3,
+            cells_pulled: 4,
+            snapshot_clones: 5,
+            flushes: 6,
+            pulls: 7,
+            stale_gap_sum: 8,
+            max_stale_gap: 9,
+            gate_waits: 10,
+            hash_probes: 11,
+            cow_clones: 12,
+        };
+        let Reply::Stats(back) = decode_reply(&encode_reply(&Reply::Stats(snap))).unwrap()
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(back, snap);
+
+        let err = Reply::Err { shutdown: true, message: "clock shutdown".into() };
+        let Reply::Err { shutdown, message } = decode_reply(&encode_reply(&err)).unwrap()
+        else {
+            panic!("wrong reply kind");
+        };
+        assert!(shutdown);
+        assert_eq!(message, "clock shutdown");
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_panicked() {
+        // truncated
+        let mut good = encode_request(&Request::Pull {
+            round: 1,
+            spec: PullSpec::from_keys(vec![1, 2, 3]),
+        });
+        good.truncate(good.len() - 3);
+        assert!(decode_request(&good).is_err());
+        // trailing garbage
+        let mut padded = encode_request(&Request::Stats);
+        padded.push(0xAB);
+        assert!(decode_request(&padded).is_err());
+        // bogus opcode
+        assert!(decode_request(&[0x55]).is_err());
+        assert!(decode_reply(&[0x55]).is_err());
+        // hostile count: claims 2^31 entries in a 16-byte frame
+        let mut hostile = vec![op::FLUSH];
+        hostile.extend_from_slice(&3u32.to_le_bytes());
+        hostile.extend_from_slice(&0u64.to_le_bytes());
+        hostile.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        assert!(decode_request(&hostile).is_err());
+        // version mismatch refused
+        let mut init = encode_request(&Request::Init {
+            shards: 1,
+            workers: 1,
+            policy: StalenessPolicy::Bounded(0),
+            segments: vec![],
+        });
+        init[1] = 0xFF; // clobber the proto version
+        let err = decode_request(&init).unwrap_err();
+        assert!(err.0.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn framing_roundtrip_and_bad_length() {
+        let msg = encode_request(&Request::Advance { applied: 42 });
+        let mut pipe = Vec::new();
+        let written = write_frame(&mut pipe, &msg).unwrap();
+        assert_eq!(written as usize, 4 + msg.len());
+        let mut buf = Vec::new();
+        let read = read_frame(&mut &pipe[..], &mut buf).unwrap();
+        assert_eq!(read, written);
+        assert_eq!(buf, msg);
+        // zero-length and oversized frames are invalid data, on both
+        // the read and the write side
+        let zero = 0u32.to_le_bytes();
+        assert!(read_frame(&mut &zero[..], &mut buf).is_err());
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        assert!(read_frame(&mut &huge[..], &mut buf).is_err());
+        assert!(write_frame(&mut Vec::new(), &[]).is_err());
+    }
+}

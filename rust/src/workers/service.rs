@@ -1,7 +1,12 @@
 //! The distributed execution loop: a coordinator thread driving any
 //! [`ModelProblem`] over real worker threads through the sharded
 //! parameter server (`ps::`) and the sharded pipelined scheduler
-//! service (`sched_service::`).
+//! service (`sched_service::`). All parameter-server traffic routes
+//! through the run's configured transport (`[ps] transport`, see
+//! `ps::transport`): in-process shared memory by default, or TCP to a
+//! `strads ps-server` process — the loop below is identical either
+//! way, and `DistributedReport::socket_bytes` records the real bytes a
+//! networked run moved next to the modeled `net_bytes` meter.
 //!
 //! Per round the coordinator obtains a plan — the problem's own round
 //! structure if it has one, otherwise the configured scheduler
@@ -55,12 +60,11 @@ use crate::coordinator::balance::imbalance;
 use crate::coordinator::priority::PriorityKind;
 use crate::metrics::{Trace, TracePoint};
 use crate::problem::ModelProblem;
-use crate::ps::{wire_bytes_for, ParameterServer, PsClient, StalenessPolicy};
+use crate::ps::{PsClient, PsConnection, StalenessPolicy};
 use crate::sched_service::{
     measured_imbalance, Dispatcher, PlannerSet, ProblemDeps, SchedService,
 };
 use std::collections::BTreeMap;
-use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
@@ -103,6 +107,16 @@ struct FlushMsg {
     compute_sec: f64,
     deltas: Vec<(usize, f64)>,
     stale_gap: u64,
+}
+
+/// What a worker thread reports back to the coordinator.
+enum WorkerMsg {
+    Flush(FlushMsg),
+    /// The worker's transport failed mid-run (a real fault, not the
+    /// clean end-of-run shutdown). Without this poison message the
+    /// coordinator would wait forever for a flush that can never come
+    /// — the other workers keep the channel alive.
+    Failed { worker: usize, error: String },
 }
 
 /// Per-round reassembly buffer on the coordinator.
@@ -225,6 +239,13 @@ pub struct DistributedReport {
     /// Whether the pipelined scheduler service planned this run (false
     /// = inline fallback).
     pub sched_service_used: bool,
+    /// Real bytes moved through transport sockets (frame headers
+    /// included) — 0 for the in-process transport. Compare against the
+    /// modeled `net_bytes`: this is the observable the TCP transport
+    /// turns the wire meter into.
+    pub socket_bytes: u64,
+    /// Which transport carried the run (`inproc` | `tcp`).
+    pub transport: &'static str,
 }
 
 /// Run up to `rounds` rounds of `problem` on `cfg.workers` real worker
@@ -244,15 +265,20 @@ pub fn run_distributed(
         .ps_kernel()
         .ok_or_else(|| anyhow::anyhow!("problem does not provide a parameter-server kernel"))?;
 
-    // Register the problem's contiguous key ranges as dense segments
-    // (unless disabled) and seed the server with the full state.
+    // Establish the run's connection to its parameter server over the
+    // configured transport — in-process (the server is built here) or
+    // TCP to a `strads ps-server` process (the server is initialized
+    // remotely) — register the problem's contiguous key ranges as dense
+    // segments (unless disabled), and seed the full state.
     let segments =
         if cfg.ps.dense_segments { problem.ps_dense_segments() } else { Vec::new() };
-    let server = Arc::new(ParameterServer::with_segments(cfg.ps.shards, p, policy, &segments));
-    server.store().publish_dense(&problem.ps_state(), 0);
+    let mut conn = PsConnection::establish(&cfg.ps, p, &segments)?;
+    conn.coord().publish_range(0, &problem.ps_state(), 0)?;
 
     // Worker threads: private work queue in, shared flush channel out.
-    let (flush_tx, flush_rx) = mpsc::channel::<FlushMsg>();
+    // Each worker gets its own transport link, minted here so a
+    // connection failure surfaces before any thread spawns.
+    let (flush_tx, flush_rx) = mpsc::channel::<WorkerMsg>();
     let mut work_txs = Vec::with_capacity(p);
     let mut handles = Vec::with_capacity(p);
     for worker in 0..p {
@@ -260,12 +286,26 @@ pub fn run_distributed(
         work_txs.push(tx);
         let flush_tx = flush_tx.clone();
         let kernel = Arc::clone(&kernel);
-        let mut client = PsClient::new(Arc::clone(&server), worker);
+        let mut client = PsClient::over(conn.worker_transport(worker)?, worker);
         handles.push(std::thread::spawn(move || {
+            // A shutdown error is the clean end-of-run signal (break
+            // silently); any other transport error is a fault the
+            // coordinator must hear about, or it would wait forever
+            // for this worker's flush.
+            let fail = |worker: usize, e: crate::ps::TransportError| {
+                if !e.is_shutdown() {
+                    let _ = flush_tx
+                        .send(WorkerMsg::Failed { worker, error: e.to_string() });
+                }
+            };
             while let Ok(item) = rx.recv() {
                 let spec = kernel.pull_spec(&item.vars, item.round);
-                let Ok((snap, stale_gap, _waited)) = client.pull(spec, item.round) else {
-                    break; // shutdown while gated
+                let (snap, stale_gap, _waited) = match client.pull(spec, item.round) {
+                    Ok(pulled) => pulled,
+                    Err(e) => {
+                        fail(item.worker, e);
+                        break;
+                    }
                 };
                 // Compute clock starts once the snapshot is in hand:
                 // gate wait is staleness discipline, not service time.
@@ -276,7 +316,13 @@ pub fn run_distributed(
                 // flush, or a peer's) with a snapshot it is done with.
                 drop(snap);
                 client.push(&proposals);
-                let deltas = client.flush_clock(item.round);
+                let deltas = match client.flush_clock(item.round) {
+                    Ok(deltas) => deltas,
+                    Err(e) => {
+                        fail(item.worker, e);
+                        break;
+                    }
+                };
                 let msg = FlushMsg {
                     round: item.round,
                     block_idx: item.block_idx,
@@ -287,7 +333,7 @@ pub fn run_distributed(
                     deltas,
                     stale_gap,
                 };
-                if flush_tx.send(msg).is_err() {
+                if flush_tx.send(WorkerMsg::Flush(msg)).is_err() {
                     break;
                 }
             }
@@ -398,7 +444,12 @@ pub fn run_distributed(
         }
 
         // Collect one flush, then apply every now-complete round in order.
-        let msg = flush_rx.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?;
+        let msg = match flush_rx.recv().map_err(|_| anyhow::anyhow!("workers hung up"))? {
+            WorkerMsg::Flush(msg) => msg,
+            WorkerMsg::Failed { worker, error } => {
+                anyhow::bail!("worker {worker} lost its parameter-server link: {error}")
+            }
+        };
         dispatcher.complete(msg.worker, msg.work, msg.est_sec, msg.compute_sec);
         pending.get_mut(&msg.round).expect("flush for unplanned round").store(msg);
         while pending.get(&applied).map(RoundBuf::complete).unwrap_or(false) {
@@ -430,13 +481,11 @@ pub fn run_distributed(
                 cfg.ps.republish_tol > 0.0 && (applied + 1) % FULL_RESYNC_EVERY == 0;
             let republish = problem.ps_republish(cfg.ps.republish_tol, full_resync);
             if !republish.is_empty() {
-                server
-                    .stats()
-                    .bytes_republished
-                    .fetch_add(wire_bytes_for(republish.len()), Ordering::Relaxed);
-                server.store().publish(&republish, applied + 1);
+                // Metered as republish traffic server-side (the
+                // transport carries it to wherever the store lives).
+                conn.coord().publish(&republish, applied + 1)?;
             }
-            server.clock().advance_applied(applied + 1);
+            conn.coord().advance_applied(applied + 1)?;
 
             if (applied as usize) % cfg.engine.record_every == 0 {
                 trace.push(TracePoint {
@@ -449,7 +498,7 @@ pub fn run_distributed(
                     active_vars: problem.active_vars(),
                     imbalance: round_imbalance,
                     staleness: round_staleness,
-                    net_bytes: server.stats().net_bytes(),
+                    net_bytes: conn.coord().stats()?.net_bytes(),
                     sched_wait: round_sched_wait,
                 });
             }
@@ -459,6 +508,7 @@ pub fn run_distributed(
 
     // Final exact objective, then shut the workers down.
     let obj = problem.objective();
+    let final_stats = conn.coord().stats()?;
     trace.push(TracePoint {
         round: applied as usize,
         vtime: wall.elapsed().as_secs_f64() - sched_wait_cum,
@@ -466,8 +516,8 @@ pub fn run_distributed(
         objective: obj,
         active_vars: problem.active_vars(),
         imbalance: trace.points.last().map(|pt| pt.imbalance).unwrap_or(1.0),
-        staleness: server.stats().mean_staleness(),
-        net_bytes: server.stats().net_bytes(),
+        staleness: final_stats.mean_staleness(),
+        net_bytes: final_stats.net_bytes(),
         sched_wait: 0.0,
     });
     // One accumulator serves both the report and the vtime exclusion,
@@ -479,28 +529,31 @@ pub fn run_distributed(
     };
     drop(planner); // join the shard threads before the workers
     drop(work_txs);
-    server.clock().shutdown();
+    conn.coord().shutdown_clock()?;
     for h in handles {
         let _ = h.join();
     }
-    let stats = server.stats();
+    // Joined workers can no longer flush/pull: this snapshot is final.
+    let stats = conn.coord().stats()?;
     Ok(DistributedReport {
         trace,
         rounds: applied as usize,
         deltas_applied,
-        bytes_flushed: stats.bytes_flushed.load(Ordering::Relaxed),
-        bytes_republished: stats.bytes_republished.load(Ordering::Relaxed),
-        gate_waits: stats.gate_waits.load(Ordering::Relaxed),
+        bytes_flushed: stats.bytes_flushed,
+        bytes_republished: stats.bytes_republished,
+        gate_waits: stats.gate_waits,
         mean_staleness: stats.mean_staleness(),
-        max_stale_gap: stats.max_stale_gap.load(Ordering::Relaxed),
-        hash_probes: server.store().hash_probes(),
-        pull_bytes: stats.bytes_pulled.load(Ordering::Relaxed),
-        cells_pulled: stats.cells_pulled.load(Ordering::Relaxed),
-        snapshot_clones: stats.snapshot_clones.load(Ordering::Relaxed),
-        cow_clones: server.store().cow_clones(),
+        max_stale_gap: stats.max_stale_gap,
+        hash_probes: stats.hash_probes,
+        pull_bytes: stats.bytes_pulled,
+        cells_pulled: stats.cells_pulled,
+        snapshot_clones: stats.snapshot_clones,
+        cow_clones: stats.cow_clones,
         sched_wait_total,
         plan_queue_depth,
         sched_service_used: service_used,
+        socket_bytes: conn.socket_bytes(),
+        transport: cfg.ps.transport.name(),
     })
 }
 

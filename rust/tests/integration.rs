@@ -150,6 +150,8 @@ fn config_presets_load_and_apply() {
     assert_eq!(cfg.ps.staleness, 2);
     assert_eq!(cfg.ps.republish_tol, 1e-8);
     assert!(cfg.ps.dense_segments && cfg.ps.pipeline);
+    assert_eq!(cfg.ps.transport, strads::ps::TransportKind::InProc);
+    assert_eq!(cfg.ps.addr, "127.0.0.1:37021");
 }
 
 #[test]

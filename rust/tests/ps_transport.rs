@@ -1,0 +1,262 @@
+//! Transport-parity suite for the parameter-server wire: the same
+//! distributed runs over the in-process transport and over TCP to a
+//! loopback-hosted server must be *bitwise* identical at staleness 0
+//! (the f32/f64 wire is lossless by construction), the error paths must
+//! surface cleanly when the server dies (no hangs), and the binary
+//! protocol must round-trip arbitrary messages exactly.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use strads::config::RunConfig;
+use strads::data::lasso_synth::{self, LassoSynthSpec};
+use strads::data::mf_powerlaw::{self, MfSynthSpec};
+use strads::lasso::NativeLasso;
+use strads::mf::DistMf;
+use strads::ps::transport::tcp::TcpTransport;
+use strads::ps::transport::wire::{
+    decode_reply, decode_request, encode_reply, encode_request, Reply, Request,
+};
+use strads::ps::transport::{Transport, TransportError};
+use strads::ps::{Cell, PsTcpServer, PullSpec, RangePull, StalenessPolicy, TransportKind};
+use strads::util::Rng;
+use strads::workers::{run_distributed, DistributedReport};
+
+/// A fresh loopback server on an ephemeral port.
+fn loopback_host() -> (PsTcpServer, String) {
+    let host = PsTcpServer::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = host.local_addr().to_string();
+    (host, addr)
+}
+
+fn lasso_cfg(workers: usize) -> RunConfig {
+    let mut cfg = RunConfig { workers, lambda: 1e-3, ..Default::default() };
+    cfg.sap.shards = 2;
+    cfg
+}
+
+fn run_lasso(cfg: &RunConfig, rounds: usize, seed: u64) -> (DistributedReport, Vec<f64>) {
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), seed);
+    let mut problem = NativeLasso::new(&data, cfg.lambda);
+    let report = run_distributed(&mut problem, cfg, rounds, "tiny").unwrap();
+    (report, problem.beta().to_vec())
+}
+
+#[test]
+fn lasso_staleness0_bitwise_identical_across_transports() {
+    // The acceptance pin: a staleness-0 Lasso run over TCP (separate
+    // server, loopback socket) reproduces the in-process run bit for
+    // bit — same final objective, same beta bits. The f32 range slabs
+    // and f64 cells cross the wire as exact little-endian images, so
+    // any divergence would mean the transport corrupted state.
+    let rounds = 120;
+    let inproc_cfg = lasso_cfg(4);
+    assert_eq!(inproc_cfg.ps.transport, TransportKind::InProc);
+    let (inproc, inproc_beta) = run_lasso(&inproc_cfg, rounds, 42);
+
+    let (host, addr) = loopback_host();
+    let mut tcp_cfg = lasso_cfg(4);
+    tcp_cfg.ps.transport = TransportKind::Tcp;
+    tcp_cfg.ps.addr = addr;
+    let (tcp, tcp_beta) = run_lasso(&tcp_cfg, rounds, 42);
+    host.stop();
+
+    assert_eq!(
+        inproc.trace.final_objective(),
+        tcp.trace.final_objective(),
+        "staleness-0 trajectories must be bitwise identical across transports"
+    );
+    for (j, (a, b)) in inproc_beta.iter().zip(&tcp_beta).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "beta[{j}] diverged across transports: {a} vs {b}"
+        );
+    }
+    // The modeled wire meters agree too (same serve path server-side)...
+    assert_eq!(inproc.pull_bytes, tcp.pull_bytes);
+    assert_eq!(inproc.bytes_flushed, tcp.bytes_flushed);
+    assert_eq!(inproc.bytes_republished, tcp.bytes_republished);
+    // ...but only the TCP run moved real socket traffic, and at least
+    // the modeled payload's worth of it (frames add headers on top).
+    assert_eq!(inproc.socket_bytes, 0, "in-process must not touch sockets");
+    assert_eq!((inproc.transport, tcp.transport), ("inproc", "tcp"));
+    assert!(
+        tcp.socket_bytes > tcp.pull_bytes,
+        "real socket bytes ({}) must exceed the modeled pull payload ({})",
+        tcp.socket_bytes,
+        tcp.pull_bytes
+    );
+}
+
+#[test]
+fn mf_staleness0_bitwise_identical_across_transports() {
+    // Same pin for the second problem family: CCD++ MF rank sweeps,
+    // whose canonical state is f32 on both ends of the wire.
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 31);
+    let run = |cfg: &RunConfig| {
+        let mut problem = DistMf::new(&data.a, 4, 0.05, 32);
+        let rounds = problem.rounds_for_iters(3);
+        run_distributed(&mut problem, cfg, rounds, "tiny").unwrap()
+    };
+    let inproc_cfg = RunConfig { workers: 4, ..Default::default() };
+    let inproc = run(&inproc_cfg);
+
+    let (host, addr) = loopback_host();
+    let mut tcp_cfg = RunConfig { workers: 4, ..Default::default() };
+    tcp_cfg.ps.transport = TransportKind::Tcp;
+    tcp_cfg.ps.addr = addr;
+    let tcp = run(&tcp_cfg);
+    host.stop();
+
+    assert_eq!(
+        inproc.trace.final_objective().to_bits(),
+        tcp.trace.final_objective().to_bits(),
+        "MF objectives must match bitwise: {} vs {}",
+        inproc.trace.final_objective(),
+        tcp.trace.final_objective()
+    );
+    assert_eq!(inproc.rounds, tcp.rounds);
+    assert!(tcp.socket_bytes > 0);
+}
+
+#[test]
+fn killed_server_surfaces_clean_errors_not_hangs() {
+    // Client-level: a live connection whose server dies mid-run must
+    // error out of every call — including a pull *blocked at the SSP
+    // gate* — rather than hang.
+    let (host, addr) = loopback_host();
+    let bytes = Arc::new(AtomicU64::new(0));
+    let mut coord = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+    coord.init(4, 1, StalenessPolicy::Bounded(0), &[(0, 8)]).unwrap();
+    coord.publish_range(0, &[0.0; 8], 0).unwrap();
+
+    // This pull is 5 rounds ahead of the applied clock under a bound of
+    // 0: it parks at the server-side gate until the kill releases it.
+    let gated = {
+        let mut worker = TcpTransport::connect(&addr, 0, bytes).unwrap();
+        std::thread::spawn(move || worker.pull(&PullSpec::from_ranges(vec![(0, 8)]), 5))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    host.stop();
+    let err = gated.join().expect("no panic").unwrap_err();
+    assert!(
+        matches!(err, TransportError::Io(_) | TransportError::Shutdown),
+        "gated pull must fail cleanly, got {err}"
+    );
+    assert!(coord.stats().is_err(), "the dead server cannot serve stats");
+
+    // Run-level: a run pointed at an address nobody serves fails fast
+    // with a connection error instead of spawning workers.
+    let dead_addr = {
+        let (host, addr) = loopback_host();
+        host.stop();
+        addr
+    };
+    let mut cfg = lasso_cfg(2);
+    cfg.ps.transport = TransportKind::Tcp;
+    cfg.ps.addr = dead_addr;
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 7);
+    let mut problem = NativeLasso::new(&data, cfg.lambda);
+    let err = run_distributed(&mut problem, &cfg, 10, "tiny").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("transport") || msg.contains("refused"), "unhelpful error: {msg}");
+}
+
+/// Comparable image of a pulled range (f32 bits, so -0.0 != 0.0 and
+/// NaN payloads count).
+fn range_image(r: &RangePull) -> (usize, u64, Vec<u32>) {
+    (r.start(), r.version(), r.values().iter().map(|v| v.to_bits()).collect())
+}
+
+#[test]
+fn wire_protocol_roundtrips_random_messages() {
+    // Property test: 200 seeded-random requests and pull replies must
+    // survive encode -> decode exactly. Values are drawn to include
+    // negatives, zeros, subnormals and huge magnitudes.
+    fn rand_f64(rng: &mut Rng) -> f64 {
+        match rng.below(5) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => (rng.f64() - 0.5) * 1e300,
+            3 => f64::MIN_POSITIVE * rng.f64(),
+            _ => rng.normal(),
+        }
+    }
+    let mut rng = Rng::new(0xD15C0);
+    for case in 0..200 {
+        // -- request: a random pull spec --
+        let nranges = rng.below(4);
+        let ranges: Vec<(usize, usize)> =
+            (0..nranges).map(|_| (rng.below(1 << 20), rng.below(64))).collect();
+        let keys: Vec<usize> = (0..rng.below(8)).map(|_| rng.below(1 << 30)).collect();
+        let req = Request::Pull {
+            round: rng.next_u64(),
+            spec: PullSpec { ranges: ranges.clone(), keys },
+        };
+        let decoded = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(decoded, req, "case {case}");
+
+        // -- request: a random delta batch --
+        let deltas: Vec<(usize, f64)> =
+            (0..rng.below(16)).map(|_| (rng.below(1 << 24), rand_f64(&mut rng))).collect();
+        let req = Request::Flush { worker: rng.below(64), round: rng.next_u64(), deltas };
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req, "case {case}");
+
+        // -- reply: a random pull result --
+        let reply_ranges: Vec<RangePull> = ranges
+            .iter()
+            .map(|&(start, len)| {
+                let values: Vec<f32> =
+                    (0..len).map(|_| rand_f64(&mut rng) as f32).collect();
+                RangePull::owned(start, rng.next_u64(), values)
+            })
+            .collect();
+        let cells: Vec<Cell> = (0..rng.below(8))
+            .map(|_| Cell { version: rng.next_u64(), value: rand_f64(&mut rng) })
+            .collect();
+        let reply = Reply::Pull {
+            gap: rng.next_u64(),
+            waited: rng.below(2) == 1,
+            ranges: reply_ranges,
+            cells,
+        };
+        let decoded = decode_reply(&encode_reply(&reply)).unwrap();
+        let (Reply::Pull { gap, waited, ranges: dr, cells: dc },
+             Reply::Pull { gap: g0, waited: w0, ranges: or, cells: oc }) = (decoded, reply)
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!((gap, waited), (g0, w0), "case {case}");
+        let dr: Vec<_> = dr.iter().map(range_image).collect();
+        let or: Vec<_> = or.iter().map(range_image).collect();
+        assert_eq!(dr, or, "case {case}: range images must round-trip bitwise");
+        let bits = |cs: &[Cell]| -> Vec<(u64, u64)> {
+            cs.iter().map(|c| (c.version, c.value.to_bits())).collect()
+        };
+        assert_eq!(bits(&dc), bits(&oc), "case {case}: cells must round-trip bitwise");
+    }
+}
+
+#[test]
+fn one_server_process_hosts_back_to_back_runs() {
+    // The staleness sweep reuses a single ps-server for every setting:
+    // each run re-Inits the host. Two consecutive runs with different
+    // staleness policies must both complete and stay correct.
+    let (host, addr) = loopback_host();
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 9);
+    let mut last_objective = None;
+    for setting in ["0", "2"] {
+        let mut cfg = lasso_cfg(3);
+        cfg.ps.transport = TransportKind::Tcp;
+        cfg.ps.addr = addr.clone();
+        cfg.ps.set_staleness_arg(setting).unwrap();
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report = run_distributed(&mut problem, &cfg, 60, "tiny").unwrap();
+        assert_eq!(report.rounds, 60, "staleness={setting} stopped early");
+        let first = report.trace.points.first().unwrap().objective;
+        let last = report.trace.final_objective();
+        assert!(last < first, "staleness={setting}: {first} -> {last}");
+        last_objective = Some(last);
+    }
+    assert!(last_objective.is_some());
+    host.stop();
+}
