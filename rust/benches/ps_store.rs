@@ -99,7 +99,13 @@ fn main() {
     // range (n f32 cells -> raw LE bytes) each way. The encoded frame
     // is ~4 bytes/cell — the 4 B/cell pull accounting made literal.
     let pulled = dense.read_spec(&spec);
-    let reply = Reply::Pull { gap: 0, waited: false, ranges: pulled.ranges, cells: pulled.cells };
+    let reply = Reply::Pull {
+        gap: 0,
+        waited: false,
+        gate_us: 0,
+        ranges: pulled.ranges,
+        cells: pulled.cells,
+    };
     let encoded = encode_reply(&reply);
     let (med, min, max) = time_fn(3, 50, || {
         std::hint::black_box(encode_reply(&reply));

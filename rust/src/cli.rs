@@ -53,6 +53,16 @@
 //!   moved, next to the modeled `net_bytes` meter.
 //! * `--ps-addr host:port` — where that `ps-server` listens (also the
 //!   default bind address for `strads ps-server --addr`).
+//! * `--obs-level 0|1|2` — the observability level (`[obs] level`):
+//!   `0` = off, `1` (default) = the lock-free metrics registry (what
+//!   `DistributedReport::obs_metrics` and `strads ps-stats` read),
+//!   `2` = registry + per-phase span tracing. Obs settings are
+//!   side-channel only: staleness-0 trajectories are bitwise identical
+//!   at every level (pinned by `tests/obs.rs`).
+//! * `--trace-events path.jsonl` — where span events go, one JSON
+//!   object per line in the chrome://tracing event format (phases:
+//!   pull, gate, compute, flush on worker tids; plan, apply, republish
+//!   on the coordinator tid). Implies `--obs-level 2`.
 
 use std::collections::BTreeMap;
 

@@ -200,6 +200,36 @@ impl PsConfig {
     }
 }
 
+/// Observability parameters (`obs::` — the metrics registry, span
+/// tracing, and the ps-server self-report). All of it is side-channel
+/// only: obs settings never change a run's arithmetic (staleness-0
+/// trajectories are bitwise identical at every level, pinned by test).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// 0 = off, 1 = metrics registry only (the default), 2 = metrics +
+    /// per-phase span tracing into `events_path`.
+    pub level: usize,
+    /// Where span events go as JSONL (chrome://tracing loadable);
+    /// empty = don't write events even at level 2. `--trace-events`
+    /// sets this and raises the level to at least 2.
+    pub events_path: String,
+    /// `strads ps-server` self-report period in seconds (0 = off).
+    pub report_secs: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { level: 1, events_path: String::new(), report_secs: 0 }
+    }
+}
+
+impl ObsConfig {
+    /// Whether span events should be recorded and flushed.
+    pub fn tracing(&self) -> bool {
+        self.level >= 2 && !self.events_path.is_empty()
+    }
+}
+
 /// Virtual-cluster cost model (see `sim::` for the formula and
 /// DESIGN.md §2 for why the time axis is simulated).
 #[derive(Clone, Debug, PartialEq)]
@@ -234,6 +264,7 @@ pub struct RunConfig {
     pub cost: CostModelConfig,
     pub ps: PsConfig,
     pub sched: SchedConfig,
+    pub obs: ObsConfig,
     /// Worker (core) count P.
     pub workers: usize,
     /// Regularization λ.
@@ -248,6 +279,7 @@ impl Default for RunConfig {
             cost: CostModelConfig::default(),
             ps: PsConfig::default(),
             sched: SchedConfig::default(),
+            obs: ObsConfig::default(),
             workers: 16,
             lambda: 5e-4,
         }
@@ -301,6 +333,9 @@ impl RunConfig {
             "sched.shards",
             "sched.pipeline_depth",
             "sched.service",
+            "obs.level",
+            "obs.events_path",
+            "obs.report_secs",
         ];
         for k in conf.keys() {
             anyhow::ensure!(KNOWN.contains(&k), "unknown config key: {k}");
@@ -318,6 +353,7 @@ impl RunConfig {
             "ps.shards" => c.ps.shards,
             "sched.shards" => c.sched.shards,
             "sched.pipeline_depth" => c.sched.pipeline_depth,
+            "obs.level" => c.obs.level,
         );
         if let Some(v) = conf.get("sched.scheduler") {
             c.sched.kind = crate::schedulers::SchedKind::parse(v)?;
@@ -340,6 +376,12 @@ impl RunConfig {
         if let Some(v) = conf.get("ps.addr") {
             c.ps.addr = v.to_string();
         }
+        if let Some(v) = conf.get("obs.events_path") {
+            c.obs.events_path = v.to_string();
+        }
+        if let Some(v) = conf.get_u64("obs.report_secs").map_err(anyhow::Error::msg)? {
+            c.obs.report_secs = v;
+        }
         load!(conf, c, f64:
             "lambda" => c.lambda,
             "ps.republish_tol" => c.ps.republish_tol,
@@ -361,7 +403,7 @@ impl RunConfig {
     /// Serialize back to the preset format.
     pub fn to_conf_string(&self) -> String {
         format!(
-            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n",
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n\n[obs]\nlevel = {}\nevents_path = \"{}\"\nreport_secs = {}\n",
             self.workers,
             self.lambda,
             self.sap.p_prime_factor,
@@ -390,6 +432,9 @@ impl RunConfig {
             self.sched.shards,
             self.sched.pipeline_depth,
             usize::from(self.sched.service),
+            self.obs.level,
+            self.obs.events_path,
+            self.obs.report_secs,
         )
     }
 
@@ -412,6 +457,10 @@ impl RunConfig {
         anyhow::ensure!(
             !self.ps.addr.is_empty(),
             "ps.addr must be a host:port (required by the tcp transport)"
+        );
+        anyhow::ensure!(
+            self.obs.level <= 2,
+            "obs.level must be 0 (off), 1 (metrics), or 2 (metrics + tracing)"
         );
         Ok(())
     }
@@ -534,6 +583,30 @@ mod tests {
         assert!(RunConfig::from_kvconf(&bad).is_err());
         // bogus policy is rejected
         let bad = KvConf::parse("[sched]\nscheduler = bogus\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        let conf = KvConf::parse(
+            "[obs]\nlevel = 2\nevents_path = \"results/events.jsonl\"\nreport_secs = 5\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.obs.level, 2);
+        assert_eq!(c.obs.events_path, "results/events.jsonl");
+        assert_eq!(c.obs.report_secs, 5);
+        assert!(c.obs.tracing());
+        // defaults: metrics on, no tracing, no self-report
+        let d = ObsConfig::default();
+        assert_eq!((d.level, d.report_secs), (1, 0));
+        assert!(!d.tracing(), "level 1 must not trace");
+        assert!(
+            !ObsConfig { level: 2, ..Default::default() }.tracing(),
+            "tracing needs a path"
+        );
+        // levels past 2 are typos
+        let bad = KvConf::parse("[obs]\nlevel = 3\n").unwrap();
         assert!(RunConfig::from_kvconf(&bad).is_err());
     }
 

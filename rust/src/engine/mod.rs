@@ -52,6 +52,7 @@ pub fn run_rounds(
                     staleness: 0.0,
                     net_bytes: 0,
                     sched_wait: sched_secs,
+                    gate_waits: 0,
                 });
                 return;
             }
@@ -74,6 +75,7 @@ pub fn run_rounds(
                 staleness: 0.0,
                 net_bytes: 0,
                 sched_wait: sched_secs,
+                gate_waits: 0,
             });
 
             // Automatic stopping condition (paper §5.1: "a minimum
@@ -101,6 +103,7 @@ pub fn run_rounds(
             staleness: 0.0,
             net_bytes: 0,
             sched_wait: 0.0,
+            gate_waits: 0,
         });
     }
 }

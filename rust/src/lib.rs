@@ -11,8 +11,9 @@
 //!   server with bounded-staleness clocks behind a pluggable
 //!   in-process/TCP transport ([`ps`], `strads ps-server`), the worker
 //!   pool that runs any [`problem::ModelProblem`] over it ([`workers`]), the
-//!   virtual cluster simulator ([`sim`]), data generators ([`data`])
-//!   and the experiment drivers.
+//!   virtual cluster simulator ([`sim`]), data generators ([`data`]),
+//!   the experiment drivers, and the unified observability layer
+//!   ([`obs`]: metrics registry, span tracing, live introspection).
 //! * **L2/L1 (python/, build-time only)** — JAX update graphs calling
 //!   Pallas kernels, AOT-lowered to HLO text by `make artifacts`.
 //! * **[`runtime`]** — loads the HLO artifacts through the PJRT C API
@@ -49,6 +50,7 @@ pub mod lasso;
 pub mod linalg;
 pub mod metrics;
 pub mod mf;
+pub mod obs;
 pub mod problem;
 pub mod ps;
 pub mod runtime;

@@ -13,6 +13,8 @@
 //!                                #   --ps-transport inproc|tcp
 //! strads ps-server ...           # host the parameter server in its own
 //!                                #   process (the tcp transport's far end)
+//! strads ps-stats ...            # live registry snapshot from a running
+//!                                #   ps-server (the ObsStats introspection op)
 //! strads staleness-sweep ...     # fresh-vs-stale convergence curves
 //! strads calibrate               # fit the cost model to this host
 //! strads artifacts-info          # inspect the AOT artifact store
@@ -33,7 +35,7 @@ use strads::mf::{run_mf, ArtifactMf, DistMf, MfPartition, NativeMf};
 use strads::runtime::{default_artifacts_dir, ArtifactStore, LassoExes, MfExes};
 use strads::workers::run_distributed;
 
-const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|distributed|ps-server|staleness-sweep|calibrate|artifacts-info> [flags]
+const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|distributed|ps-server|ps-stats|staleness-sweep|calibrate|artifacts-info> [flags]
   global: --config <preset.conf>  --out <dir>  --seed <u64>
   fig1:        --workers N --rounds N
   fig4:        --rounds N
@@ -56,13 +58,21 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --ps-transport inproc|tcp (carriage to the parameter server;
                                           tcp talks to a ps-server process)
                --ps-addr host:port (where that ps-server listens)
+               --obs-level 0|1|2 (0 = off, 1 = metrics registry [default],
+                                  2 = metrics + per-phase span tracing)
+               --trace-events path.jsonl (write span events as chrome://tracing
+                                          JSONL; implies --obs-level 2)
   ps-server:   --addr host:port (default from [ps] addr; port 0 = ephemeral)
+               --report-secs N (print an [obs] digest line every N seconds)
                hosts the sharded store + SSP clock; serves any number of
                back-to-back runs (each run re-inits it); stop with SIGTERM
+  ps-stats:    --addr host:port  print a live registry snapshot (metrics,
+               per-segment versions, clock state) from a running ps-server
   staleness-sweep: --dataset tiny|adlike|wide --workers N --rounds N --lambda F
                --scheduler dynamic|static|random --sched-shards N
                --republish-tol F --dense-segments 0|1 --pipeline 0|1
                --ps-transport inproc|tcp --ps-addr host:port
+               --obs-level 0|1|2 --trace-events path.jsonl
                (runs staleness 0, 2, 8, async through the parameter server;
                 writes staleness_sweep.csv + BENCH_ps.json to --out)";
 
@@ -196,6 +206,7 @@ fn run() -> anyhow::Result<()> {
                 args.usize_or("sched-pipeline-depth", cfg.sched.pipeline_depth)?;
             cfg.sched.service =
                 args.usize_or("sched-service", usize::from(cfg.sched.service))? != 0;
+            apply_obs_flags(&args, &mut cfg)?;
             args.finish()?;
             cfg.validate()?;
             let report = match problem_kind.as_str() {
@@ -261,6 +272,7 @@ fn run() -> anyhow::Result<()> {
             }
             cfg.sched.shards = args.usize_or("sched-shards", cfg.sched.shards)?;
             let rounds = args.usize_or("rounds", 300)?;
+            apply_obs_flags(&args, &mut cfg)?;
             args.finish()?;
             cfg.validate()?;
             let csv = out_dir.join("staleness_sweep.csv");
@@ -281,11 +293,21 @@ fn run() -> anyhow::Result<()> {
         }
         "ps-server" => {
             let addr = args.str_or("addr", &cfg.ps.addr);
+            let report_secs = args.u64_or("report-secs", cfg.obs.report_secs)?;
             args.finish()?;
             let server = strads::ps::PsTcpServer::bind(&addr)?;
             println!("ps-server listening on {}", server.local_addr());
             println!("  (problem-agnostic: each run's coordinator re-inits it; kill to stop)");
+            if report_secs > 0 {
+                server.spawn_reporter(report_secs);
+            }
             server.run();
+        }
+        "ps-stats" => {
+            let addr = args.str_or("addr", &cfg.ps.addr);
+            args.finish()?;
+            let snap = strads::ps::fetch_obs_stats(&addr)?;
+            print!("{}", snap.render());
         }
         "calibrate" => {
             args.finish()?;
@@ -308,6 +330,28 @@ fn run() -> anyhow::Result<()> {
         }
         "help" | "--help" | "-h" => println!("{USAGE}"),
         other => anyhow::bail!("unknown subcommand {other}"),
+    }
+    Ok(())
+}
+
+/// `--obs-level` / `--trace-events` for the distributed subcommands.
+/// `--trace-events` names the JSONL output and implies span tracing
+/// (level >= 2); the file is removed first so one invocation's timeline
+/// never appends onto a previous run's (a staleness sweep's settings DO
+/// share it — each run within the invocation appends).
+fn apply_obs_flags(args: &Args, cfg: &mut RunConfig) -> anyhow::Result<()> {
+    cfg.obs.level = args.usize_or("obs-level", cfg.obs.level)?;
+    if let Some(path) = args.opt_str("trace-events") {
+        cfg.obs.events_path = path;
+        cfg.obs.level = cfg.obs.level.max(2);
+    }
+    if cfg.obs.tracing() {
+        if let Some(dir) = std::path::Path::new(&cfg.obs.events_path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let _ = std::fs::remove_file(&cfg.obs.events_path);
     }
     Ok(())
 }

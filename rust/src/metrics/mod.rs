@@ -29,6 +29,10 @@ pub struct TracePoint {
     /// exists to hide. `vtime` excludes it on the distributed path, so
     /// compute and scheduling time are separable in the trace.
     pub sched_wait: f64,
+    /// Cumulative pulls that had to block at the SSP gate when this
+    /// point was recorded — the per-round view of the run-level
+    /// `gate_waits` aggregate; 0 on the simulator paths.
+    pub gate_waits: u64,
 }
 
 /// A full run trace plus identifying metadata.
@@ -68,6 +72,10 @@ impl Trace {
         self.points.iter().find(|p| p.objective <= threshold).map(|p| p.vtime)
     }
 
+    /// The CSV column set `append_csv` emits — one name per per-row
+    /// field, in row order (pinned against the row format by test).
+    pub const CSV_HEADER: &'static str = "scheduler,dataset,workers,round,vtime,wtime,objective,active_vars,imbalance,staleness,net_bytes,sched_wait,gate_waits";
+
     /// Append as CSV (with header if the file is new/empty).
     pub fn append_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
@@ -76,15 +84,12 @@ impl Trace {
         let new = !path.exists() || std::fs::metadata(path)?.len() == 0;
         let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
         if new {
-            writeln!(
-                f,
-                "scheduler,dataset,workers,round,vtime,wtime,objective,active_vars,imbalance,staleness,net_bytes,sched_wait"
-            )?;
+            writeln!(f, "{}", Self::CSV_HEADER)?;
         }
         for p in &self.points {
             writeln!(
                 f,
-                "{},{},{},{},{:.6},{:.6},{:.8e},{},{:.4},{:.4},{},{:.6}",
+                "{},{},{},{},{:.6},{:.6},{:.8e},{},{:.4},{:.4},{},{:.6},{}",
                 self.scheduler,
                 self.dataset,
                 self.workers,
@@ -96,22 +101,28 @@ impl Trace {
                 p.imbalance,
                 p.staleness,
                 p.net_bytes,
-                p.sched_wait
+                p.sched_wait,
+                p.gate_waits
             )?;
         }
         Ok(())
     }
 
-    /// One-line summary for terminal output.
+    /// One-line summary for terminal output, ending with the run's
+    /// final staleness / wire-byte / scheduling-stall observations.
     pub fn summary(&self) -> String {
+        let last = self.points.last();
         format!(
-            "{:<10} {:<12} P={:<4} rounds={:<6} vtime={:>9.3}s obj={:.6e}",
+            "{:<10} {:<12} P={:<4} rounds={:<6} vtime={:>9.3}s obj={:.6e} stale={:.2} net={}B sched_wait={:.3}s",
             self.scheduler,
             self.dataset,
             self.workers,
-            self.points.last().map(|p| p.round).unwrap_or(0),
+            last.map(|p| p.round).unwrap_or(0),
             self.final_vtime(),
-            self.final_objective()
+            self.final_objective(),
+            last.map(|p| p.staleness).unwrap_or(0.0),
+            last.map(|p| p.net_bytes).unwrap_or(0),
+            self.points.iter().map(|p| p.sched_wait).sum::<f64>(),
         )
     }
 }
@@ -133,6 +144,7 @@ mod tests {
                 staleness: 0.0,
                 net_bytes: 0,
                 sched_wait: 0.0,
+                gate_waits: 0,
             });
         }
         t
@@ -158,5 +170,40 @@ mod tests {
         assert_eq!(lines.len(), 4); // header + 3 rows
         assert!(lines[0].starts_with("scheduler,"));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csv_header_columns_match_row_fields() {
+        // A header/row drift here silently corrupts every downstream
+        // plot, so the column counts are pinned against each other.
+        let dir = std::env::temp_dir().join("strads_test_csv_header");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("t.csv");
+        mk(&[3.0]).append_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let header = lines.next().unwrap();
+        let row = lines.next().unwrap();
+        assert_eq!(header, Trace::CSV_HEADER);
+        assert_eq!(
+            header.split(',').count(),
+            row.split(',').count(),
+            "header {header:?} vs row {row:?}"
+        );
+        assert!(header.ends_with(",gate_waits"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn summary_reports_staleness_net_bytes_and_sched_wait() {
+        let mut t = mk(&[3.0, 2.0]);
+        t.points[0].sched_wait = 0.25;
+        t.points[1].sched_wait = 0.5;
+        t.points[1].staleness = 1.5;
+        t.points[1].net_bytes = 4096;
+        let s = t.summary();
+        assert!(s.contains("stale=1.50"), "{s}");
+        assert!(s.contains("net=4096B"), "{s}");
+        assert!(s.contains("sched_wait=0.750s"), "{s}");
     }
 }

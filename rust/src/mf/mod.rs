@@ -115,6 +115,7 @@ pub fn run_mf(
                 staleness: 0.0,
                 net_bytes: 0,
                 sched_wait: 0.0,
+                gate_waits: 0,
             });
         }
     }

@@ -1,0 +1,648 @@
+//! Unified observability: a low-overhead metrics registry (atomic
+//! counters, gauges, and fixed-bucket latency histograms registered by
+//! name), bounded structured span tracing (chrome://tracing-loadable
+//! JSONL), and the snapshot type the live `ObsStats` wire opcode and
+//! `strads ps-stats` serve.
+//!
+//! The contract that makes this layer safe to leave on: **observability
+//! never feeds computation**. Recording is relaxed atomic adds and
+//! buffered event pushes; no arithmetic, RNG draw, or apply order ever
+//! reads a metric back, so obs-on vs obs-off staleness-0 runs stay
+//! bitwise identical (pinned by `tests/obs.rs`).
+//!
+//! Registry names in use across the crate:
+//!
+//! | name                  | kind      | recorded by                         |
+//! |-----------------------|-----------|-------------------------------------|
+//! | `ps.pulls`            | counter   | `ParameterServer::serve_pull`       |
+//! | `ps.pull_bytes`       | counter   | modeled wire bytes per pull         |
+//! | `ps.cells_pulled`     | counter   | cells covered per pull              |
+//! | `ps.snapshot_clones`  | counter   | zero-copy epoch views handed out    |
+//! | `ps.flushes`          | counter   | `ParameterServer::serve_flush`      |
+//! | `ps.bytes_flushed`    | counter   | modeled wire bytes per flush        |
+//! | `ps.bytes_republished`| counter   | modeled wire bytes per republish    |
+//! | `ps.stale_gap_sum`    | counter   | sum of admitted staleness gaps      |
+//! | `ps.max_stale_gap`    | counter   | watermark of the largest gap        |
+//! | `ps.gate_waits`       | counter   | pulls that blocked on the SSP gate  |
+//! | `gate.wait_us`        | histogram | SSP clock gate block time           |
+//! | `sched.plan_wait_us`  | histogram | coordinator `pop_plan` block time   |
+//! | `net.socket_bytes`    | gauge     | transport bytes moved (0 in-proc)   |
+//! | `store.hash_probes`   | counter   | hashed-path probes (snapshot view)  |
+//! | `store.cow_clones`    | counter   | copy-on-publish clones (snapshot)   |
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Version tag carried by every [`ObsSnapshot`] (and its wire form), so
+/// the introspection surface can evolve independently of the protocol.
+pub const OBS_SNAPSHOT_VERSION: u16 = 1;
+
+/// Relaxed atomic counter. `set`/`raise` exist for meters that mirror
+/// externally computed values (seeding in tests, watermarks).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Raise to at least `v` (the watermark update).
+    #[inline]
+    pub fn raise(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram: `bounds` are inclusive upper bounds in
+/// strictly increasing order, with an implicit overflow bucket after
+/// the last. Recording is three relaxed atomic adds — cheap enough to
+/// leave on the pull gate and plan-pop hot paths unconditionally.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[u64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Microsecond latency bounds spanning 1µs .. 10s — the default for
+    /// every `*_us` histogram in the crate.
+    pub fn us_bounds() -> &'static [u64] {
+        &[1, 10, 100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000]
+    }
+
+    /// Record one observation: it lands in the first bucket whose bound
+    /// is ≥ `v`, or the overflow bucket.
+    pub fn record(&self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> MetricValue {
+        MetricValue::Histogram {
+            bounds: self.bounds.clone(),
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time reading of one metric (what snapshots carry over the
+/// wire and what tests compare).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(u64),
+    Histogram { bounds: Vec<u64>, counts: Vec<u64>, sum: u64, count: u64 },
+}
+
+impl MetricValue {
+    /// Scalar reading for counters and gauges; a histogram's total
+    /// observation count.
+    pub fn as_u64(&self) -> u64 {
+        match self {
+            MetricValue::Counter(v) | MetricValue::Gauge(v) => *v,
+            MetricValue::Histogram { count, .. } => *count,
+        }
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn value(&self) -> MetricValue {
+        match self {
+            Metric::Counter(c) => MetricValue::Counter(c.get()),
+            Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+            Metric::Histogram(h) => h.value(),
+        }
+    }
+}
+
+/// Name → metric registry. Accessors get-or-create: callers clone the
+/// `Arc` once at setup and record lock-free afterwards; the registry
+/// lock is only taken at registration and snapshot time.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().expect("registry lock poisoned");
+        let metric = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())));
+        match metric {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().expect("registry lock poisoned");
+        let metric =
+            m.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())));
+        match metric {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create a histogram. `bounds` only applies on first
+    /// registration; later callers receive the existing instance.
+    pub fn histogram(&self, name: &str, bounds: &[u64]) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().expect("registry lock poisoned");
+        let metric = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))));
+        match metric {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Point-in-time reading of every registered metric, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, MetricValue)> {
+        let m = self.metrics.lock().expect("registry lock poisoned");
+        m.iter().map(|(name, metric)| (name.clone(), metric.value())).collect()
+    }
+}
+
+/// The SSP clock's gate state as seen by introspection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClockView {
+    /// Rounds fully applied at the server.
+    pub applied: u64,
+    /// The staleness bound; `None` = fully asynchronous (no gate).
+    pub staleness_bound: Option<u64>,
+    /// Per-worker flush clocks.
+    pub worker_clocks: Vec<u64>,
+}
+
+/// What the `ObsStats` opcode serves and `strads ps-stats` renders: the
+/// registry reading plus the store/clock state that lives outside it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsSnapshot {
+    pub version: u16,
+    /// Sorted `(name, value)` registry reading.
+    pub metrics: Vec<(String, MetricValue)>,
+    /// Registered dense segments as `(start, len, epoch_version)`.
+    pub segments: Vec<(usize, usize, u64)>,
+    pub clock: Option<ClockView>,
+}
+
+impl ObsSnapshot {
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.metrics.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// Human-readable `name = value` dump — the `strads ps-stats`
+    /// output; CI greps these lines for liveness.
+    pub fn render(&self) -> String {
+        let mut out = format!("obs snapshot v{}\n", self.version);
+        for (name, v) in &self.metrics {
+            match v {
+                MetricValue::Counter(n) => out.push_str(&format!("{name} = {n}\n")),
+                MetricValue::Gauge(n) => out.push_str(&format!("{name} = {n}\n")),
+                MetricValue::Histogram { bounds, counts, sum, count } => {
+                    let mut buckets = Vec::new();
+                    for (i, c) in counts.iter().enumerate() {
+                        if *c == 0 {
+                            continue;
+                        }
+                        match bounds.get(i) {
+                            Some(b) => buckets.push(format!("<={b}:{c}")),
+                            None => buckets.push(format!("inf:{c}")),
+                        }
+                    }
+                    out.push_str(&format!(
+                        "{name} = count={count} sum={sum} buckets=[{}]\n",
+                        buckets.join(" ")
+                    ));
+                }
+            }
+        }
+        for (i, (start, len, version)) in self.segments.iter().enumerate() {
+            out.push_str(&format!(
+                "segment[{i}] = start={start} len={len} version={version}\n"
+            ));
+        }
+        if let Some(clock) = &self.clock {
+            let bound = match clock.staleness_bound {
+                Some(s) => s.to_string(),
+                None => "async".to_string(),
+            };
+            out.push_str(&format!("clock.applied = {}\n", clock.applied));
+            out.push_str(&format!("clock.bound = {bound}\n"));
+            out.push_str(&format!("clock.workers = {:?}\n", clock.worker_clocks));
+        }
+        out
+    }
+}
+
+/// The seven phases a distributed round decomposes into. Workers emit
+/// the first four; the coordinator emits the last three.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Pull,
+    Gate,
+    Compute,
+    Flush,
+    Plan,
+    Apply,
+    Republish,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 7] = [
+        Phase::Pull,
+        Phase::Gate,
+        Phase::Compute,
+        Phase::Flush,
+        Phase::Plan,
+        Phase::Apply,
+        Phase::Republish,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Pull => "pull",
+            Phase::Gate => "gate",
+            Phase::Compute => "compute",
+            Phase::Flush => "flush",
+            Phase::Plan => "plan",
+            Phase::Apply => "apply",
+            Phase::Republish => "republish",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// One completed span: `phase` ran for `dur_us` starting at `start_us`
+/// (microseconds on the sink's time axis) on thread `worker` during
+/// `round`. The coordinator uses `worker = P` (one past the last worker
+/// id) as its own lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub phase: Phase,
+    pub round: u64,
+    pub worker: usize,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanEvent {
+    /// One compact chrome://tracing "complete" event (`"ph":"X"`), the
+    /// JSONL line format `--trace-events` files hold.
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{},\"dur\":{},\
+             \"args\":{{\"round\":{}}}}}",
+            self.phase.name(),
+            self.worker,
+            self.start_us,
+            self.dur_us,
+            self.round
+        )
+    }
+
+    /// Parse one event back out of its JSON form (the schema round-trip
+    /// direction tests and tooling use).
+    pub fn from_json(j: &Json) -> Option<SpanEvent> {
+        let phase = Phase::parse(j.get("name")?.as_str()?)?;
+        let worker = j.get("tid")?.as_usize()?;
+        let start_us = j.get("ts")?.as_f64()? as u64;
+        let dur_us = j.get("dur")?.as_f64()? as u64;
+        let round = j.get("args")?.get("round")?.as_f64()? as u64;
+        Some(SpanEvent { phase, round, worker, start_us, dur_us })
+    }
+}
+
+#[derive(Default)]
+struct SinkInner {
+    ring: VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+/// Bounded ring of span events shared by every thread in a run. The cap
+/// bounds memory for arbitrarily long runs: when full, the oldest event
+/// is evicted (and counted) rather than blocking a recorder.
+pub struct EventSink {
+    epoch: Instant,
+    cap: usize,
+    inner: Mutex<SinkInner>,
+}
+
+impl EventSink {
+    pub const DEFAULT_CAP: usize = 65_536;
+
+    pub fn new(cap: usize) -> Self {
+        EventSink { epoch: Instant::now(), cap: cap.max(1), inner: Mutex::default() }
+    }
+
+    /// Microseconds since this sink was created — the shared time axis
+    /// every recorded span uses.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn record(&self, ev: SpanEvent) {
+        let mut inner = self.inner.lock().expect("event sink lock poisoned");
+        if inner.ring.len() == self.cap {
+            inner.ring.pop_front();
+            inner.dropped += 1;
+        }
+        inner.ring.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("event sink lock poisoned").ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().expect("event sink lock poisoned").dropped
+    }
+
+    /// Drain the ring into JSONL text, oldest first.
+    pub fn drain_jsonl(&self) -> String {
+        let mut inner = self.inner.lock().expect("event sink lock poisoned");
+        let mut out = String::with_capacity(inner.ring.len() * 96);
+        for ev in inner.ring.drain(..) {
+            out.push_str(&ev.to_json_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Drain the ring and append it to `path` as JSONL; returns the
+    /// number of events written. Appending lets several runs (e.g. the
+    /// four staleness-sweep settings) share one trace file.
+    pub fn flush_jsonl(&self, path: &std::path::Path) -> std::io::Result<usize> {
+        use std::io::Write;
+        let text = self.drain_jsonl();
+        if text.is_empty() {
+            return Ok(0);
+        }
+        let n = text.lines().count();
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(text.as_bytes())?;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.add(3);
+        c.inc();
+        assert_eq!(c.get(), 4);
+        c.raise(2); // below current: no-op
+        assert_eq!(c.get(), 4);
+        c.raise(10);
+        assert_eq!(c.get(), 10);
+        c.set(7);
+        assert_eq!(c.get(), 7);
+        let g = Gauge::new();
+        g.set(42);
+        assert_eq!(g.get(), 42);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        let h = Histogram::new(&[10, 100, 1000]);
+        // At a bound → that bucket; one past → the next; past the last
+        // bound → overflow. Zero lands in the first bucket.
+        for v in [0, 10, 11, 100, 101, 1000, 1001, u64::MAX] {
+            h.record(v);
+        }
+        let MetricValue::Histogram { bounds, counts, sum: _, count } = h.value() else {
+            panic!("histogram value kind");
+        };
+        assert_eq!(bounds, vec![10, 100, 1000]);
+        assert_eq!(counts, vec![2, 2, 2, 2], "≤10, ≤100, ≤1000, overflow");
+        assert_eq!(count, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn histogram_rejects_unsorted_bounds() {
+        let _ = Histogram::new(&[10, 10]);
+    }
+
+    #[test]
+    fn registry_get_or_create_returns_same_instance() {
+        let reg = Registry::new();
+        let a = reg.counter("ps.pulls");
+        let b = reg.counter("ps.pulls");
+        a.add(5);
+        assert_eq!(b.get(), 5, "same underlying counter");
+        let h = reg.histogram("gate.wait_us", Histogram::us_bounds());
+        h.record(3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        // BTreeMap ordering: sorted by name.
+        assert_eq!(snap[0].0, "gate.wait_us");
+        assert_eq!(snap[1].0, "ps.pulls");
+        assert_eq!(snap[1].1, MetricValue::Counter(5));
+        assert_eq!(snap[0].1.as_u64(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn registry_rejects_kind_change() {
+        let reg = Registry::new();
+        let _ = reg.counter("x");
+        let _ = reg.gauge("x");
+    }
+
+    #[test]
+    fn snapshot_render_and_lookup() {
+        let reg = Registry::new();
+        reg.counter("ps.pulls").add(12);
+        reg.gauge("net.socket_bytes").set(99);
+        reg.histogram("gate.wait_us", &[10, 100]).record(5);
+        let snap = ObsSnapshot {
+            version: OBS_SNAPSHOT_VERSION,
+            metrics: reg.snapshot(),
+            segments: vec![(0, 64, 7)],
+            clock: Some(ClockView {
+                applied: 3,
+                staleness_bound: Some(2),
+                worker_clocks: vec![4, 3],
+            }),
+        };
+        assert_eq!(snap.get("ps.pulls"), Some(&MetricValue::Counter(12)));
+        assert_eq!(snap.get("missing"), None);
+        let text = snap.render();
+        assert!(text.contains("ps.pulls = 12"), "{text}");
+        assert!(text.contains("net.socket_bytes = 99"), "{text}");
+        assert!(text.contains("gate.wait_us = count=1 sum=5 buckets=[<=10:1]"), "{text}");
+        assert!(text.contains("segment[0] = start=0 len=64 version=7"), "{text}");
+        assert!(text.contains("clock.bound = 2"), "{text}");
+        assert!(text.contains("clock.workers = [4, 3]"), "{text}");
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let sink = EventSink::new(2);
+        for round in 0..5u64 {
+            sink.record(SpanEvent {
+                phase: Phase::Pull,
+                round,
+                worker: 0,
+                start_us: round,
+                dur_us: 1,
+            });
+        }
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.dropped(), 3);
+        let text = sink.drain_jsonl();
+        let rounds: Vec<u64> = text
+            .lines()
+            .map(|l| {
+                let j = Json::parse(l).unwrap();
+                j.get("args").unwrap().get("round").unwrap().as_f64().unwrap() as u64
+            })
+            .collect();
+        assert_eq!(rounds, vec![3, 4], "oldest events evicted first");
+        assert!(sink.is_empty(), "drain empties the ring");
+    }
+
+    #[test]
+    fn seeded_event_jsonl_roundtrip() {
+        // Deterministic LCG so the schema round-trip covers a spread of
+        // field values (bounded to 50 bits: the parser goes through f64).
+        let mut state = 0x243F6A8885A308D3u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 14
+        };
+        for i in 0..200 {
+            let ev = SpanEvent {
+                phase: Phase::ALL[i % Phase::ALL.len()],
+                round: next(),
+                worker: (next() % 4096) as usize,
+                start_us: next(),
+                dur_us: next(),
+            };
+            let line = ev.to_json_line();
+            let parsed = Json::parse(&line).unwrap_or_else(|e| panic!("line {line}: {e}"));
+            assert_eq!(parsed.get("ph").unwrap().as_str(), Some("X"));
+            let back = SpanEvent::from_json(&parsed).expect("schema round-trip");
+            assert_eq!(back, ev);
+        }
+    }
+
+    #[test]
+    fn flush_appends_jsonl_to_file() {
+        let sink = EventSink::new(EventSink::DEFAULT_CAP);
+        let path = std::env::temp_dir()
+            .join(format!("strads_obs_flush_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        sink.record(SpanEvent {
+            phase: Phase::Plan,
+            round: 1,
+            worker: 8,
+            start_us: 10,
+            dur_us: 2,
+        });
+        assert_eq!(sink.flush_jsonl(&path).unwrap(), 1);
+        sink.record(SpanEvent {
+            phase: Phase::Apply,
+            round: 2,
+            worker: 8,
+            start_us: 20,
+            dur_us: 3,
+        });
+        assert_eq!(sink.flush_jsonl(&path).unwrap(), 1, "second flush appends");
+        assert_eq!(sink.flush_jsonl(&path).unwrap(), 0, "empty ring writes nothing");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let phases: Vec<String> = text
+            .lines()
+            .map(|l| {
+                Json::parse(l).unwrap().get("name").unwrap().as_str().unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(phases, vec!["plan", "apply"]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -184,6 +184,16 @@ pub trait PsKernel: Send + Sync {
     fn propose(&self, snap: &PsSnapshot, vars: &[usize], round: u64) -> Vec<(usize, f64)>;
 }
 
+/// What the server observed while admitting one pull: the staleness
+/// gap at admission, whether the SSP gate parked the caller at all, and
+/// for how long (server-measured microseconds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PullMeta {
+    pub gap: u64,
+    pub waited: bool,
+    pub gate_us: u64,
+}
+
 /// One worker's handle onto the parameter server, over any transport.
 pub struct PsClient {
     transport: Box<dyn Transport>,
@@ -207,17 +217,18 @@ impl PsClient {
 
     /// SSP-gated pull: blocks until the applied state is within the
     /// server's staleness bound of `round`, then reads the spec.
-    /// Returns the snapshot plus `(staleness_gap, had_to_wait)`. The
-    /// gate wait (and all metering) happens server-side, so a networked
-    /// worker blocks inside the RPC exactly where an in-process one
-    /// blocks on the condvar.
+    /// Returns the snapshot plus the gate observation ([`PullMeta`]).
+    /// The gate wait (and all metering) happens server-side, so a
+    /// networked worker blocks inside the RPC exactly where an
+    /// in-process one blocks on the condvar.
     pub fn pull(
         &mut self,
         spec: PullSpec,
         round: u64,
-    ) -> Result<(PsSnapshot, u64, bool), TransportError> {
+    ) -> Result<(PsSnapshot, PullMeta), TransportError> {
         let reply = self.transport.pull(&spec, round)?;
-        Ok((PsSnapshot::from_pull(reply.ranges, spec.keys, reply.cells), reply.gap, reply.waited))
+        let meta = PullMeta { gap: reply.gap, waited: reply.waited, gate_us: reply.gate_us };
+        Ok((PsSnapshot::from_pull(reply.ranges, spec.keys, reply.cells), meta))
     }
 
     /// Accumulate deltas into the local batch (coalescing duplicates).
@@ -244,7 +255,6 @@ impl PsClient {
 mod tests {
     use super::*;
     use crate::ps::StalenessPolicy;
-    use std::sync::atomic::Ordering;
 
     #[test]
     fn snapshot_positional_and_keyed_access_agree() {
@@ -309,9 +319,8 @@ mod tests {
         server.store().publish_dense(&[1.0, 2.0, 3.0], 0);
         let mut client = PsClient::new(Arc::clone(&server), 0);
 
-        let (snap, gap, waited) =
-            client.pull(PullSpec::from_keys(vec![0, 1, 2]), 0).unwrap();
-        assert_eq!((gap, waited), (0, false));
+        let (snap, meta) = client.pull(PullSpec::from_keys(vec![0, 1, 2]), 0).unwrap();
+        assert_eq!((meta.gap, meta.waited), (0, false));
         assert_eq!(snap.get(0), Some(1.0));
         assert_eq!(snap.get(2), Some(3.0));
 
@@ -320,7 +329,7 @@ mod tests {
         assert_eq!(flushed, vec![(1, 1.0), (2, -1.0)]);
         assert_eq!(server.store().read(&[1])[0].value, 3.0);
         assert_eq!(server.store().read(&[1])[0].version, 1);
-        assert_eq!(server.stats().bytes_flushed.load(Ordering::Relaxed), 32);
+        assert_eq!(server.stats().bytes_flushed.get(), 32);
         assert_eq!(server.clock().min_worker_clock(), 1);
     }
 
@@ -335,16 +344,15 @@ mod tests {
         let values: Vec<f64> = (0..6).map(|i| i as f64 * 2.0).collect();
         server.store().publish_dense(&values, 0);
         let mut client = PsClient::new(Arc::clone(&server), 0);
-        let (snap, _, _) =
-            client.pull(PullSpec::from_ranges(vec![(2, 3)]), 0).unwrap();
+        let (snap, _) = client.pull(PullSpec::from_ranges(vec![(2, 3)]), 0).unwrap();
         assert_eq!(snap.range_f32(0, 3), &[4.0f32, 6.0, 8.0]);
         assert_eq!(snap.get(4), Some(8.0));
         assert_eq!(server.store().hash_probes(), 0, "dense pull must not hash");
         let stats = server.stats();
-        assert_eq!(stats.snapshot_clones.load(Ordering::Relaxed), 1);
-        assert_eq!(stats.cells_pulled.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.snapshot_clones.get(), 1);
+        assert_eq!(stats.cells_pulled.get(), 3);
         // 3 f32 cells + one epoch version
-        assert_eq!(stats.bytes_pulled.load(Ordering::Relaxed), 8 + 4 * 3);
+        assert_eq!(stats.bytes_pulled.get(), 8 + 4 * 3);
     }
 
     #[test]
@@ -352,19 +360,19 @@ mod tests {
         let server = Arc::new(ParameterServer::new(2, 1, StalenessPolicy::Bounded(2)));
         let mut client = PsClient::new(Arc::clone(&server), 0);
         // applied = 0: rounds 0..=2 admitted without waiting
-        let (_, gap, waited) = client.pull(PullSpec::from_keys(vec![0]), 2).unwrap();
-        assert_eq!((gap, waited), (2, false));
+        let (_, meta) = client.pull(PullSpec::from_keys(vec![0]), 2).unwrap();
+        assert_eq!((meta.gap, meta.waited), (2, false));
         // round 3 would be 3 stale -> blocks until the server advances
         let t = {
             let server = Arc::clone(&server);
             std::thread::spawn(move || {
                 let mut client = PsClient::new(server, 0);
-                client.pull(PullSpec::from_keys(vec![0]), 3).map(|(_, gap, _waited)| gap)
+                client.pull(PullSpec::from_keys(vec![0]), 3).map(|(_, meta)| meta.gap)
             })
         };
         std::thread::sleep(std::time::Duration::from_millis(10));
         server.clock().advance_applied(1);
         assert_eq!(t.join().unwrap().unwrap(), 2);
-        assert_eq!(server.stats().max_stale_gap.load(Ordering::Relaxed), 2);
+        assert_eq!(server.stats().max_stale_gap.get(), 2);
     }
 }

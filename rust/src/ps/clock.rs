@@ -137,6 +137,12 @@ impl ClockTable {
         self.state.lock().expect("clock lock poisoned").worker_clocks.len()
     }
 
+    /// Copy of every worker clock (introspection: `strads ps-stats`
+    /// shows who the laggard is, not just how far behind it is).
+    pub fn worker_clocks(&self) -> Vec<u64> {
+        self.state.lock().expect("clock lock poisoned").worker_clocks.clone()
+    }
+
     /// Slowest worker clock (diagnostics; the laggard that SSP protects).
     pub fn min_worker_clock(&self) -> u64 {
         let state = self.state.lock().expect("clock lock poisoned");

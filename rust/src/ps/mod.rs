@@ -65,64 +65,87 @@ pub mod shard;
 pub mod transport;
 
 pub use batch::{wire_bytes_for, BYTES_PER_ENTRY, DeltaBatch};
-pub use client::{PsClient, PsKernel, PsSnapshot};
+pub use client::{PsClient, PsKernel, PsSnapshot, PullMeta};
 pub use clock::{ClockShutdown, ClockTable, StalenessPolicy};
 pub use shard::{Cell, PullSpec, RangePull, ShardedStore, SpecPull};
 pub use transport::{
-    PsConnection, PsTcpServer, Transport, TransportError, TransportKind,
+    fetch_obs_stats, PsConnection, PsTcpServer, Transport, TransportError, TransportKind,
 };
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::{
+    ClockView, Counter, Histogram, ObsSnapshot, Registry, OBS_SNAPSHOT_VERSION,
+};
+use std::sync::Arc;
 
-/// Cross-thread run counters (all monotonic).
+/// Cross-thread run counters (all monotonic). Every field is an
+/// [`obs::Counter`](crate::obs::Counter) registered by name in the
+/// server's metrics [`Registry`], so the `DistributedReport` /
+/// `BENCH_ps.json` fields and the live `ps-stats` snapshot are two
+/// views over the same atomics.
 #[derive(Debug, Default)]
 pub struct PsStats {
     /// Coalesced delta bytes flushed through the server by workers.
-    pub bytes_flushed: AtomicU64,
+    pub bytes_flushed: Arc<Counter>,
     /// Derived-state bytes republished by the coordinator (tolerance-
     /// gated sparse republish + periodic full re-syncs).
-    pub bytes_republished: AtomicU64,
+    pub bytes_republished: Arc<Counter>,
     /// Pull bytes served to workers: 4 bytes/cell + one 8-byte epoch
     /// version for shared f32 ranges, 16-byte cells for everything
     /// else (see `SpecPull::wire_bytes`).
-    pub bytes_pulled: AtomicU64,
+    pub bytes_pulled: Arc<Counter>,
     /// Total cells covered by pulls (range members + scattered keys);
     /// `16 * cells_pulled` is what the per-cell wire format this
     /// design replaced would have moved.
-    pub cells_pulled: AtomicU64,
+    pub cells_pulled: Arc<Counter>,
     /// Range pulls served as zero-copy shared epoch views (an `Arc`
     /// clone instead of a cell copy).
-    pub snapshot_clones: AtomicU64,
+    pub snapshot_clones: Arc<Counter>,
     /// Number of flush batches.
-    pub flushes: AtomicU64,
+    pub flushes: Arc<Counter>,
     /// Number of pulls served.
-    pub pulls: AtomicU64,
+    pub pulls: Arc<Counter>,
     /// Sum over pulls of the observed staleness gap (rounds behind).
-    pub stale_gap_sum: AtomicU64,
+    pub stale_gap_sum: Arc<Counter>,
     /// Largest staleness gap any pull ever observed (must stay within
     /// the SSP bound — the concurrency tests pin this).
-    pub max_stale_gap: AtomicU64,
+    pub max_stale_gap: Arc<Counter>,
     /// Pulls that had to block at the SSP gate.
-    pub gate_waits: AtomicU64,
+    pub gate_waits: Arc<Counter>,
 }
 
 impl PsStats {
+    /// Build the stats block with every counter registered by its
+    /// `ps.*` name in `reg` (the server constructor path; `Default`
+    /// keeps standalone unregistered counters for unit tests).
+    pub fn registered(reg: &Registry) -> Self {
+        PsStats {
+            bytes_flushed: reg.counter("ps.bytes_flushed"),
+            bytes_republished: reg.counter("ps.bytes_republished"),
+            bytes_pulled: reg.counter("ps.pull_bytes"),
+            cells_pulled: reg.counter("ps.cells_pulled"),
+            snapshot_clones: reg.counter("ps.snapshot_clones"),
+            flushes: reg.counter("ps.flushes"),
+            pulls: reg.counter("ps.pulls"),
+            stale_gap_sum: reg.counter("ps.stale_gap_sum"),
+            max_stale_gap: reg.counter("ps.max_stale_gap"),
+            gate_waits: reg.counter("ps.gate_waits"),
+        }
+    }
+
     /// Mean staleness gap over all pulls so far.
     pub fn mean_staleness(&self) -> f64 {
-        let pulls = self.pulls.load(Ordering::Relaxed);
+        let pulls = self.pulls.get();
         if pulls == 0 {
             0.0
         } else {
-            self.stale_gap_sum.load(Ordering::Relaxed) as f64 / pulls as f64
+            self.stale_gap_sum.get() as f64 / pulls as f64
         }
     }
 
     /// Total wire traffic: worker flushes + coordinator republishes +
     /// worker pulls (the dominant term in the pull-heavy STRADS loop).
     pub fn net_bytes(&self) -> u64 {
-        self.bytes_flushed.load(Ordering::Relaxed)
-            + self.bytes_republished.load(Ordering::Relaxed)
-            + self.bytes_pulled.load(Ordering::Relaxed)
+        self.bytes_flushed.get() + self.bytes_republished.get() + self.bytes_pulled.get()
     }
 }
 
@@ -164,13 +187,17 @@ impl StatsSnapshot {
     }
 }
 
-/// The server: sharded store + clock table + policy + stats. Shared
-/// across worker threads behind an `Arc`.
+/// The server: sharded store + clock table + policy + stats + metrics
+/// registry. Shared across worker threads behind an `Arc`. The
+/// registry is per-server (a TCP `Init` replaces the server, so every
+/// run starts from zeroed meters).
 pub struct ParameterServer {
     store: ShardedStore,
     clock: ClockTable,
     policy: StalenessPolicy,
     stats: PsStats,
+    registry: Registry,
+    gate_wait_us: Arc<Histogram>,
 }
 
 impl ParameterServer {
@@ -187,11 +214,16 @@ impl ParameterServer {
         policy: StalenessPolicy,
         segments: &[(usize, usize)],
     ) -> Self {
+        let registry = Registry::new();
+        let stats = PsStats::registered(&registry);
+        let gate_wait_us = registry.histogram("gate.wait_us", Histogram::us_bounds());
         ParameterServer {
             store: ShardedStore::with_segments(shards, segments),
             clock: ClockTable::new(workers),
             policy,
-            stats: PsStats::default(),
+            stats,
+            registry,
+            gate_wait_us,
         }
     }
 
@@ -213,34 +245,40 @@ impl ParameterServer {
 
     /// Serve one SSP-gated pull: block until `round` is admitted, read
     /// the spec, meter the traffic. Returns the pulled data plus the
-    /// observed `(staleness_gap, had_to_wait)`. This is the *single*
-    /// server-side pull path — the in-process transport and the TCP
-    /// server's request handler both call it, which is what keeps the
-    /// two transports observationally identical.
+    /// observed `(staleness_gap, had_to_wait, gate_wait_us)`. The gate
+    /// time is measured unconditionally (two `Instant` reads around the
+    /// wait; it never feeds computation, so obs-on/off parity holds by
+    /// construction). This is the *single* server-side pull path — the
+    /// in-process transport and the TCP server's request handler both
+    /// call it, which is what keeps the two transports observationally
+    /// identical.
     pub fn serve_pull(
         &self,
         spec: &PullSpec,
         round: u64,
-    ) -> Result<(SpecPull, u64, bool), ClockShutdown> {
+    ) -> Result<(SpecPull, u64, bool, u64), ClockShutdown> {
+        let gate_start = std::time::Instant::now();
         let (gap, waited) = self.clock.wait_admit(round, self.policy)?;
-        self.stats.pulls.fetch_add(1, Ordering::Relaxed);
-        self.stats.stale_gap_sum.fetch_add(gap, Ordering::Relaxed);
-        self.stats.max_stale_gap.fetch_max(gap, Ordering::Relaxed);
+        let gate_us = gate_start.elapsed().as_micros() as u64;
+        self.gate_wait_us.record(gate_us);
+        self.stats.pulls.inc();
+        self.stats.stale_gap_sum.add(gap);
+        self.stats.max_stale_gap.raise(gap);
         if waited {
-            self.stats.gate_waits.fetch_add(1, Ordering::Relaxed);
+            self.stats.gate_waits.inc();
         }
         let pulled = self.store.read_spec(spec);
-        self.stats.bytes_pulled.fetch_add(pulled.wire_bytes(), Ordering::Relaxed);
-        self.stats.cells_pulled.fetch_add(pulled.total_cells() as u64, Ordering::Relaxed);
-        self.stats.snapshot_clones.fetch_add(pulled.shared_ranges() as u64, Ordering::Relaxed);
-        Ok((pulled, gap, waited))
+        self.stats.bytes_pulled.add(pulled.wire_bytes());
+        self.stats.cells_pulled.add(pulled.total_cells() as u64);
+        self.stats.snapshot_clones.add(pulled.shared_ranges() as u64);
+        Ok((pulled, gap, waited, gate_us))
     }
 
     /// Serve one worker flush: meter it, apply the coalesced deltas at
     /// version `round + 1`, tick the worker's clock.
     pub fn serve_flush(&self, worker: usize, deltas: &[(usize, f64)], round: u64) {
-        self.stats.bytes_flushed.fetch_add(wire_bytes_for(deltas.len()), Ordering::Relaxed);
-        self.stats.flushes.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_flushed.add(wire_bytes_for(deltas.len()));
+        self.stats.flushes.inc();
         self.store.add_deltas(deltas, round + 1);
         self.clock.record_flush(worker, round);
     }
@@ -248,7 +286,7 @@ impl ParameterServer {
     /// Serve one coordinator republish: meter it as republish traffic,
     /// then overwrite-publish the entries.
     pub fn serve_publish(&self, entries: &[(usize, f64)], version: u64) {
-        self.stats.bytes_republished.fetch_add(wire_bytes_for(entries.len()), Ordering::Relaxed);
+        self.stats.bytes_republished.add(wire_bytes_for(entries.len()));
         self.store.publish(entries, version);
     }
 
@@ -256,18 +294,46 @@ impl ParameterServer {
     /// wire-crossable [`StatsSnapshot`].
     pub fn stats_snapshot(&self) -> StatsSnapshot {
         StatsSnapshot {
-            bytes_flushed: self.stats.bytes_flushed.load(Ordering::Relaxed),
-            bytes_republished: self.stats.bytes_republished.load(Ordering::Relaxed),
-            bytes_pulled: self.stats.bytes_pulled.load(Ordering::Relaxed),
-            cells_pulled: self.stats.cells_pulled.load(Ordering::Relaxed),
-            snapshot_clones: self.stats.snapshot_clones.load(Ordering::Relaxed),
-            flushes: self.stats.flushes.load(Ordering::Relaxed),
-            pulls: self.stats.pulls.load(Ordering::Relaxed),
-            stale_gap_sum: self.stats.stale_gap_sum.load(Ordering::Relaxed),
-            max_stale_gap: self.stats.max_stale_gap.load(Ordering::Relaxed),
-            gate_waits: self.stats.gate_waits.load(Ordering::Relaxed),
+            bytes_flushed: self.stats.bytes_flushed.get(),
+            bytes_republished: self.stats.bytes_republished.get(),
+            bytes_pulled: self.stats.bytes_pulled.get(),
+            cells_pulled: self.stats.cells_pulled.get(),
+            snapshot_clones: self.stats.snapshot_clones.get(),
+            flushes: self.stats.flushes.get(),
+            pulls: self.stats.pulls.get(),
+            stale_gap_sum: self.stats.stale_gap_sum.get(),
+            max_stale_gap: self.stats.max_stale_gap.get(),
+            gate_waits: self.stats.gate_waits.get(),
             hash_probes: self.store.hash_probes(),
             cow_clones: self.store.cow_clones(),
+        }
+    }
+
+    /// Full introspection snapshot: the registry reading plus the
+    /// store counters that live outside it, per-segment epoch versions,
+    /// and the SSP clock gate state. This is what the `ObsStats` wire
+    /// opcode and `strads ps-stats` serve.
+    pub fn obs_snapshot(&self) -> ObsSnapshot {
+        use crate::obs::MetricValue;
+        let mut metrics = self.registry.snapshot();
+        metrics.push((
+            "store.cow_clones".to_string(),
+            MetricValue::Counter(self.store.cow_clones()),
+        ));
+        metrics.push((
+            "store.hash_probes".to_string(),
+            MetricValue::Counter(self.store.hash_probes()),
+        ));
+        metrics.sort_by(|a, b| a.0.cmp(&b.0));
+        ObsSnapshot {
+            version: OBS_SNAPSHOT_VERSION,
+            metrics,
+            segments: self.store.segment_versions(),
+            clock: Some(ClockView {
+                applied: self.clock.applied(),
+                staleness_bound: self.policy.bound(),
+                worker_clocks: self.clock.worker_clocks(),
+            }),
         }
     }
 }
@@ -280,18 +346,42 @@ mod tests {
     fn stats_mean_staleness() {
         let stats = PsStats::default();
         assert_eq!(stats.mean_staleness(), 0.0);
-        stats.pulls.store(4, Ordering::Relaxed);
-        stats.stale_gap_sum.store(6, Ordering::Relaxed);
+        stats.pulls.set(4);
+        stats.stale_gap_sum.set(6);
         assert_eq!(stats.mean_staleness(), 1.5);
     }
 
     #[test]
     fn stats_net_bytes_sums_flush_republish_and_pull() {
         let stats = PsStats::default();
-        stats.bytes_flushed.store(100, Ordering::Relaxed);
-        stats.bytes_republished.store(40, Ordering::Relaxed);
-        stats.bytes_pulled.store(7, Ordering::Relaxed);
+        stats.bytes_flushed.set(100);
+        stats.bytes_republished.set(40);
+        stats.bytes_pulled.set(7);
         assert_eq!(stats.net_bytes(), 147);
+    }
+
+    #[test]
+    fn obs_snapshot_views_the_same_counters_as_stats() {
+        use crate::obs::MetricValue;
+        let server =
+            ParameterServer::with_segments(2, 2, StalenessPolicy::Bounded(0), &[(0, 8)]);
+        server.store().publish_dense(&[1.0; 8], 0);
+        let (_, gap, waited, _gate_us) =
+            server.serve_pull(&PullSpec::from_ranges(vec![(0, 8)]), 0).unwrap();
+        assert_eq!((gap, waited), (0, false));
+        let snap = server.obs_snapshot();
+        assert_eq!(snap.get("ps.pulls"), Some(&MetricValue::Counter(1)));
+        assert_eq!(
+            snap.get("ps.pull_bytes").unwrap().as_u64(),
+            server.stats_snapshot().bytes_pulled,
+            "report field and registry are views over the same atomic"
+        );
+        assert_eq!(snap.get("gate.wait_us").unwrap().as_u64(), 1, "one gate observation");
+        assert_eq!(snap.segments, vec![(0, 8, 0)]);
+        let clock = snap.clock.as_ref().unwrap();
+        assert_eq!(clock.staleness_bound, Some(0));
+        assert_eq!(clock.worker_clocks, vec![0, 0]);
+        assert!(snap.get("store.hash_probes").is_some());
     }
 
     #[test]

@@ -293,6 +293,19 @@ impl ShardedStore {
         self.segments.iter().map(|s| (s.start, s.len)).collect()
     }
 
+    /// Registered dense segments with their current epoch versions,
+    /// `(start, len, epoch_version)` — the per-shard freshness view
+    /// that `strads ps-stats` introspection reports.
+    pub fn segment_versions(&self) -> Vec<(usize, usize, u64)> {
+        self.segments
+            .iter()
+            .map(|s| {
+                let epoch = s.epoch.read().expect("epoch lock poisoned");
+                (s.start, s.len, epoch.version)
+            })
+            .collect()
+    }
+
     /// Cumulative hashed-path probe count (reads and writes that went
     /// through a hash map). Dense-segment accesses never count here.
     pub fn hash_probes(&self) -> u64 {
@@ -730,6 +743,7 @@ mod tests {
         assert_eq!(cells[2], Cell { version: 6, value: 41.0 });
         assert_eq!(cells[3], Cell { version: 6, value: 9.0 });
         assert_eq!(store.hash_probes(), 0);
+        assert_eq!(store.segment_versions(), vec![(5, 10, 6)]);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! serialization.
 
 use super::{PullReply, Transport, TransportError};
+use crate::obs::ObsSnapshot;
 use crate::ps::shard::PullSpec;
 use crate::ps::{ParameterServer, StatsSnapshot};
 use std::sync::Arc;
@@ -32,9 +33,9 @@ impl InProcTransport {
 
 impl Transport for InProcTransport {
     fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
-        let (pulled, gap, waited) =
+        let (pulled, gap, waited, gate_us) =
             self.server.serve_pull(spec, round).map_err(|_| TransportError::Shutdown)?;
-        Ok(PullReply { ranges: pulled.ranges, cells: pulled.cells, gap, waited })
+        Ok(PullReply { ranges: pulled.ranges, cells: pulled.cells, gap, waited, gate_us })
     }
 
     fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
@@ -68,6 +69,10 @@ impl Transport for InProcTransport {
 
     fn stats(&mut self) -> Result<StatsSnapshot, TransportError> {
         Ok(self.server.stats_snapshot())
+    }
+
+    fn obs_stats(&mut self) -> Result<ObsSnapshot, TransportError> {
+        Ok(self.server.obs_snapshot())
     }
 
     fn shutdown_clock(&mut self) -> Result<(), TransportError> {

@@ -31,6 +31,7 @@ pub use inproc::InProcTransport;
 pub use tcp::{PsTcpServer, TcpTransport};
 
 use crate::config::PsConfig;
+use crate::obs::ObsSnapshot;
 use crate::ps::shard::{Cell, PullSpec, RangePull};
 use crate::ps::{ParameterServer, StatsSnapshot};
 use std::fmt;
@@ -121,6 +122,10 @@ pub struct PullReply {
     pub cells: Vec<Cell>,
     pub gap: u64,
     pub waited: bool,
+    /// Time this pull spent blocked at the server-side SSP gate, in
+    /// microseconds (0 when admitted immediately). Measured on the
+    /// server so remote runs see the true gate cost, not RTT.
+    pub gate_us: u64,
 }
 
 /// One endpoint's view of the parameter server. Worker clients use
@@ -154,6 +159,10 @@ pub trait Transport: Send {
 
     /// Snapshot every server-side meter.
     fn stats(&mut self) -> Result<StatsSnapshot, TransportError>;
+
+    /// Full introspection snapshot: the server's metrics registry plus
+    /// per-segment versions and SSP clock state (`strads ps-stats`).
+    fn obs_stats(&mut self) -> Result<ObsSnapshot, TransportError>;
 
     /// Wake every SSP gate waiter for run teardown (the server itself
     /// stays alive — over TCP, ready for the next `Init`).
@@ -253,6 +262,15 @@ impl PsConnection {
     }
 }
 
+/// One-shot introspection fetch for `strads ps-stats`: open a fresh
+/// link to a running `ps-server` and ask it for its registry snapshot.
+/// Works against an idle (pre-`Init`) server too — that case comes back
+/// as [`TransportError::Remote`] with a message saying so.
+pub fn fetch_obs_stats(addr: &str) -> Result<ObsSnapshot, TransportError> {
+    let mut link = TcpTransport::connect(addr, COORDINATOR_ID, Arc::new(AtomicU64::new(0)))?;
+    link.obs_stats()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,6 +302,9 @@ mod tests {
         assert_eq!(stats.flushes, 1);
         assert!(stats.bytes_republished > 0, "publish must meter");
         assert_eq!(conn.socket_bytes(), 0, "in-process moves no socket bytes");
+
+        let snap = conn.coord().obs_stats().unwrap();
+        assert_eq!(snap.get("ps.pulls").unwrap().as_u64(), 1, "registry views the same pull");
 
         conn.coord().shutdown_clock().unwrap();
         let err = w0.pull(&PullSpec::from_keys(vec![0]), 100).unwrap_err();

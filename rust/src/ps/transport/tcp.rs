@@ -18,6 +18,7 @@
 
 use super::wire::{self, Reply, Request};
 use super::{PullReply, Transport, TransportError};
+use crate::obs::ObsSnapshot;
 use crate::ps::clock::{ClockShutdown, StalenessPolicy};
 use crate::ps::shard::PullSpec;
 use crate::ps::{ParameterServer, StatsSnapshot};
@@ -94,8 +95,8 @@ fn unexpected(reply: &Reply) -> TransportError {
 impl Transport for TcpTransport {
     fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
         match self.exchange(wire::encode_pull(round, spec))? {
-            Reply::Pull { gap, waited, ranges, cells } => {
-                Ok(PullReply { ranges, cells, gap, waited })
+            Reply::Pull { gap, waited, gate_us, ranges, cells } => {
+                Ok(PullReply { ranges, cells, gap, waited, gate_us })
             }
             other => Err(unexpected(&other)),
         }
@@ -141,6 +142,13 @@ impl Transport for TcpTransport {
     fn stats(&mut self) -> Result<StatsSnapshot, TransportError> {
         match self.rpc(&Request::Stats)? {
             Reply::Stats(s) => Ok(s),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn obs_stats(&mut self) -> Result<ObsSnapshot, TransportError> {
+        match self.rpc(&Request::ObsStats)? {
+            Reply::ObsStats(snap) => Ok(snap),
             other => Err(unexpected(&other)),
         }
     }
@@ -205,6 +213,41 @@ impl PsTcpServer {
 
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// Start the periodic self-report (`[obs] report_secs` /
+    /// `--report-secs`): a detached thread that prints a one-line
+    /// registry digest to stderr every `secs` seconds. It polls the
+    /// stop flag once a second so `stop()` never blocks on it, and it
+    /// says so (idle) while no run has initialized the server.
+    pub fn spawn_reporter(&self, secs: u64) {
+        let secs = secs.max(1);
+        let shared = Arc::clone(&self.shared);
+        std::thread::spawn(move || loop {
+            for _ in 0..secs {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_secs(1));
+            }
+            let server = shared.state.lock().expect("state lock").server.as_ref().cloned();
+            match server {
+                Some(server) => {
+                    let snap = server.obs_snapshot();
+                    let metric = |name: &str| snap.get(name).map(|v| v.as_u64()).unwrap_or(0);
+                    let applied = snap.clock.as_ref().map(|c| c.applied).unwrap_or(0);
+                    eprintln!(
+                        "[obs] applied={} pulls={} pull_bytes={} flushes={} gate_waits={}",
+                        applied,
+                        metric("ps.pulls"),
+                        metric("ps.pull_bytes"),
+                        metric("ps.flushes"),
+                        metric("ps.gate_waits"),
+                    );
+                }
+                None => eprintln!("[obs] idle (no run initialized)"),
+            }
+        });
     }
 
     /// Serve until the process dies (the `strads ps-server` loop).
@@ -290,7 +333,19 @@ fn handle_conn(shared: &ServerShared, mut stream: TcpStream) {
 fn dispatch(shared: &ServerShared, req: Request) -> Reply {
     // Init is the one request served without a hosted server; the
     // rebinding keeps `req` whole for the second match below.
+    // ObsStats is the other: `strads ps-stats` must be able to probe an
+    // idle server without parking at the installed-condvar, so a
+    // pre-Init probe gets a non-shutdown error, not a hang.
     let req = match req {
+        Request::ObsStats => {
+            return match shared.state.lock().expect("state lock").server.as_ref() {
+                Some(server) => Reply::ObsStats(server.obs_snapshot()),
+                None => Reply::Err {
+                    shutdown: false,
+                    message: "no run has initialized this server yet".into(),
+                },
+            };
+        }
         Request::Init { shards, workers, policy, segments } => {
             let server =
                 Arc::new(ParameterServer::with_segments(shards, workers, policy, &segments));
@@ -313,9 +368,13 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
     match req {
         Request::Init { .. } => unreachable!("handled above"),
         Request::Pull { round, spec } => match server.serve_pull(&spec, round) {
-            Ok((pulled, gap, waited)) => {
-                Reply::Pull { gap, waited, ranges: pulled.ranges, cells: pulled.cells }
-            }
+            Ok((pulled, gap, waited, gate_us)) => Reply::Pull {
+                gap,
+                waited,
+                gate_us,
+                ranges: pulled.ranges,
+                cells: pulled.cells,
+            },
             Err(ClockShutdown) => {
                 Reply::Err { shutdown: true, message: "clock shutdown".into() }
             }
@@ -346,6 +405,7 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
             Reply::Ok
         }
         Request::Stats => Reply::Stats(server.stats_snapshot()),
+        Request::ObsStats => unreachable!("handled above"),
         Request::ShutdownClock => {
             server.clock().shutdown();
             Reply::Ok
@@ -382,6 +442,23 @@ mod tests {
         assert_eq!((stats.pulls, stats.flushes), (1, 1));
         assert!(stats.bytes_pulled > 0);
         assert!(bytes.load(Ordering::Relaxed) > 0, "socket traffic must be metered");
+
+        let snap = coord.obs_stats().unwrap();
+        assert_eq!(snap.get("ps.pulls").unwrap().as_u64(), 1);
+        assert_eq!(snap.get("ps.pull_bytes").unwrap().as_u64(), stats.bytes_pulled);
+        assert_eq!(snap.segments, vec![(0, 4, 1)], "the round-0 flush bumped the epoch");
+        let clock = snap.clock.as_ref().expect("hosted server exposes its clock");
+        assert_eq!(clock.applied, 1);
+        assert_eq!(clock.staleness_bound, Some(0));
+        assert_eq!(clock.worker_clocks, vec![1], "worker 0 flushed round 0");
+        host.stop();
+    }
+
+    #[test]
+    fn obs_stats_probe_of_an_idle_server_errors_instead_of_parking() {
+        let (host, addr) = loopback();
+        let err = super::super::fetch_obs_stats(&addr).unwrap_err();
+        assert!(matches!(err, TransportError::Remote(_)), "want remote error, got {err}");
         host.stop();
     }
 

@@ -12,6 +12,7 @@
 //! `4 * len` value bytes (the 4 B/cell accounting the pull meter uses
 //! is literal here), and f64 cells/deltas as exact 8-byte images.
 
+use crate::obs::{ClockView, MetricValue, ObsSnapshot};
 use crate::ps::clock::StalenessPolicy;
 use crate::ps::shard::{Cell, PullSpec, RangePull};
 use crate::ps::StatsSnapshot;
@@ -20,7 +21,9 @@ use std::io::{Read, Write};
 
 /// Protocol revision carried in every `Init`; the server refuses a
 /// mismatch instead of misparsing traffic. Bump on any layout change.
-pub const PROTO_VERSION: u16 = 1;
+/// v2: `PullOk` carries the gate wait time and the `ObsStats` /
+/// `ObsStatsOk` introspection opcodes exist.
+pub const PROTO_VERSION: u16 = 2;
 
 /// Frames above this are corruption, not data (guards allocation).
 pub const MAX_FRAME: u32 = 1 << 30;
@@ -35,10 +38,12 @@ pub mod op {
     pub const ADVANCE: u8 = 0x06;
     pub const STATS: u8 = 0x07;
     pub const SHUTDOWN_CLOCK: u8 = 0x08;
+    pub const OBS_STATS: u8 = 0x09;
     /// Reply opcodes (server -> client).
     pub const REPLY_OK: u8 = 0x80;
     pub const REPLY_PULL: u8 = 0x81;
     pub const REPLY_STATS: u8 = 0x82;
+    pub const REPLY_OBS_STATS: u8 = 0x83;
     pub const REPLY_ERR: u8 = 0x7f;
 }
 
@@ -73,6 +78,11 @@ pub enum Request {
     /// Wake every SSP gate waiter for run teardown. The server process
     /// stays up (a later `Init` starts the next run).
     ShutdownClock,
+    /// Read a full [`ObsSnapshot`] (registry + segments + clock gate
+    /// state). Unlike every other request, a server answers this even
+    /// before any `Init` arrived (with a non-shutdown `Err`), so
+    /// `strads ps-stats` can probe an idle server without parking.
+    ObsStats,
 }
 
 /// A decoded server -> client message.
@@ -80,9 +90,11 @@ pub enum Request {
 pub enum Reply {
     Ok,
     /// Pull result: ranges in request order (f32 images + epoch
-    /// version), then scattered cells in request-key order.
-    Pull { gap: u64, waited: bool, ranges: Vec<RangePull>, cells: Vec<Cell> },
+    /// version), then scattered cells in request-key order. `gate_us`
+    /// is how long the pull blocked at the SSP gate server-side.
+    Pull { gap: u64, waited: bool, gate_us: u64, ranges: Vec<RangePull>, cells: Vec<Cell> },
     Stats(StatsSnapshot),
+    ObsStats(ObsSnapshot),
     /// Request failed. `shutdown` distinguishes the clean teardown path
     /// (gate waiters woken) from real errors.
     Err { shutdown: bool, message: String },
@@ -343,6 +355,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         }
         Request::Stats => vec![op::STATS],
         Request::ShutdownClock => vec![op::SHUTDOWN_CLOCK],
+        Request::ObsStats => vec![op::OBS_STATS],
     }
 }
 
@@ -410,6 +423,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
         op::ADVANCE => Request::Advance { applied: r.u64()? },
         op::STATS => Request::Stats,
         op::SHUTDOWN_CLOCK => Request::ShutdownClock,
+        op::OBS_STATS => Request::ObsStats,
         other => return Err(WireError(format!("unknown request opcode {other:#04x}"))),
     };
     r.finish()?;
@@ -426,10 +440,11 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
     let mut b = Vec::new();
     match reply {
         Reply::Ok => b.push(op::REPLY_OK),
-        Reply::Pull { gap, waited, ranges, cells } => {
+        Reply::Pull { gap, waited, gate_us, ranges, cells } => {
             b.push(op::REPLY_PULL);
             put_u64(&mut b, *gap);
             b.push(u8::from(*waited));
+            put_u64(&mut b, *gate_us);
             put_u32(&mut b, ranges.len() as u32);
             for range in ranges {
                 put_u64(&mut b, range.start() as u64);
@@ -465,6 +480,65 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
                 put_u64(&mut b, v);
             }
         }
+        Reply::ObsStats(snap) => {
+            b.push(op::REPLY_OBS_STATS);
+            put_u16(&mut b, snap.version);
+            put_u32(&mut b, snap.metrics.len() as u32);
+            for (name, value) in &snap.metrics {
+                put_u16(&mut b, name.len() as u16);
+                b.extend_from_slice(name.as_bytes());
+                match value {
+                    MetricValue::Counter(v) => {
+                        b.push(0);
+                        put_u64(&mut b, *v);
+                    }
+                    MetricValue::Gauge(v) => {
+                        b.push(1);
+                        put_u64(&mut b, *v);
+                    }
+                    MetricValue::Histogram { bounds, counts, sum, count } => {
+                        b.push(2);
+                        put_u32(&mut b, bounds.len() as u32);
+                        for &bound in bounds {
+                            put_u64(&mut b, bound);
+                        }
+                        debug_assert_eq!(counts.len(), bounds.len() + 1);
+                        for &c in counts {
+                            put_u64(&mut b, c);
+                        }
+                        put_u64(&mut b, *sum);
+                        put_u64(&mut b, *count);
+                    }
+                }
+            }
+            put_u32(&mut b, snap.segments.len() as u32);
+            for &(start, len, version) in &snap.segments {
+                put_u64(&mut b, start as u64);
+                put_u64(&mut b, len as u64);
+                put_u64(&mut b, version);
+            }
+            match &snap.clock {
+                None => b.push(0),
+                Some(clock) => {
+                    b.push(1);
+                    match clock.staleness_bound {
+                        Some(s) => {
+                            b.push(0);
+                            put_u64(&mut b, s);
+                        }
+                        None => {
+                            b.push(1);
+                            put_u64(&mut b, 0);
+                        }
+                    }
+                    put_u64(&mut b, clock.applied);
+                    put_u32(&mut b, clock.worker_clocks.len() as u32);
+                    for &c in &clock.worker_clocks {
+                        put_u64(&mut b, c);
+                    }
+                }
+            }
+        }
         Reply::Err { shutdown, message } => {
             b.push(op::REPLY_ERR);
             b.push(u8::from(*shutdown));
@@ -486,6 +560,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<Reply, WireError> {
         op::REPLY_PULL => {
             let gap = r.u64()?;
             let waited = r.u8()? != 0;
+            let gate_us = r.u64()?;
             let nranges = r.count(20)?;
             let mut ranges = Vec::with_capacity(nranges);
             for _ in 0..nranges {
@@ -504,7 +579,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<Reply, WireError> {
             for _ in 0..ncells {
                 cells.push(Cell { version: r.u64()?, value: r.f64()? });
             }
-            Reply::Pull { gap, waited, ranges, cells }
+            Reply::Pull { gap, waited, gate_us, ranges, cells }
         }
         op::REPLY_STATS => Reply::Stats(StatsSnapshot {
             bytes_flushed: r.u64()?,
@@ -520,6 +595,61 @@ pub fn decode_reply(buf: &[u8]) -> Result<Reply, WireError> {
             hash_probes: r.u64()?,
             cow_clones: r.u64()?,
         }),
+        op::REPLY_OBS_STATS => {
+            let version = r.u16()?;
+            // Minimum metric footprint: name_len (2) + kind (1) + one
+            // u64 (8) — the hostile-count guard's element size.
+            let nmetrics = r.count(11)?;
+            let mut metrics = Vec::with_capacity(nmetrics);
+            for _ in 0..nmetrics {
+                let name_len = r.u16()? as usize;
+                let name = String::from_utf8_lossy(r.take(name_len)?).into_owned();
+                let value = match r.u8()? {
+                    0 => MetricValue::Counter(r.u64()?),
+                    1 => MetricValue::Gauge(r.u64()?),
+                    2 => {
+                        let nbounds = r.count(8)?;
+                        let mut bounds = Vec::with_capacity(nbounds);
+                        for _ in 0..nbounds {
+                            bounds.push(r.u64()?);
+                        }
+                        let mut counts = Vec::with_capacity(nbounds + 1);
+                        for _ in 0..nbounds + 1 {
+                            counts.push(r.u64()?);
+                        }
+                        MetricValue::Histogram { bounds, counts, sum: r.u64()?, count: r.u64()? }
+                    }
+                    tag => return Err(WireError(format!("unknown metric kind {tag}"))),
+                };
+                metrics.push((name, value));
+            }
+            let nseg = r.count(24)?;
+            let mut segments = Vec::with_capacity(nseg);
+            for _ in 0..nseg {
+                segments.push((r.u64()? as usize, r.u64()? as usize, r.u64()?));
+            }
+            let clock = match r.u8()? {
+                0 => None,
+                1 => {
+                    let staleness_bound = match (r.u8()?, r.u64()?) {
+                        (0, s) => Some(s),
+                        (1, _) => None,
+                        (tag, _) => {
+                            return Err(WireError(format!("unknown policy tag {tag}")))
+                        }
+                    };
+                    let applied = r.u64()?;
+                    let nworkers = r.count(8)?;
+                    let mut worker_clocks = Vec::with_capacity(nworkers);
+                    for _ in 0..nworkers {
+                        worker_clocks.push(r.u64()?);
+                    }
+                    Some(ClockView { applied, staleness_bound, worker_clocks })
+                }
+                tag => return Err(WireError(format!("unknown clock presence tag {tag}"))),
+            };
+            Reply::ObsStats(ObsSnapshot { version, metrics, segments, clock })
+        }
         op::REPLY_ERR => {
             let shutdown = r.u8()? != 0;
             let raw = r.take(r.remaining())?;
@@ -561,6 +691,7 @@ mod tests {
             Request::Advance { applied: u64::MAX },
             Request::Stats,
             Request::ShutdownClock,
+            Request::ObsStats,
         ];
         for req in reqs {
             let encoded = encode_request(&req);
@@ -573,6 +704,7 @@ mod tests {
         let reply = Reply::Pull {
             gap: 3,
             waited: true,
+            gate_us: 1234,
             ranges: vec![
                 RangePull::owned(5, 9, vec![1.5f32, -0.0, f32::MIN_POSITIVE]),
                 RangePull::owned(100, 0, vec![]),
@@ -580,10 +712,10 @@ mod tests {
             cells: vec![Cell { version: 2, value: -1e-300 }],
         };
         let decoded = decode_reply(&encode_reply(&reply)).unwrap();
-        let Reply::Pull { gap, waited, ranges, cells } = decoded else {
+        let Reply::Pull { gap, waited, gate_us, ranges, cells } = decoded else {
             panic!("wrong reply kind");
         };
-        assert_eq!((gap, waited), (3, true));
+        assert_eq!((gap, waited, gate_us), (3, true, 1234));
         assert_eq!(ranges.len(), 2);
         assert_eq!(ranges[0].start(), 5);
         assert_eq!(ranges[0].version(), 9);
@@ -623,6 +755,63 @@ mod tests {
         };
         assert!(shutdown);
         assert_eq!(message, "clock shutdown");
+    }
+
+    #[test]
+    fn obs_snapshot_roundtrip_covers_every_metric_kind() {
+        let snap = ObsSnapshot {
+            version: 1,
+            metrics: vec![
+                (
+                    "gate.wait_us".to_string(),
+                    MetricValue::Histogram {
+                        bounds: vec![10, 100, 1000],
+                        counts: vec![1, 2, 3, 4],
+                        sum: 999,
+                        count: 10,
+                    },
+                ),
+                ("net.socket_bytes".to_string(), MetricValue::Gauge(7)),
+                ("ps.pulls".to_string(), MetricValue::Counter(42)),
+            ],
+            segments: vec![(0, 128, 5), (256, 64, 0)],
+            clock: Some(ClockView {
+                applied: 9,
+                staleness_bound: Some(2),
+                worker_clocks: vec![10, 9, 11],
+            }),
+        };
+        let Reply::ObsStats(back) =
+            decode_reply(&encode_reply(&Reply::ObsStats(snap.clone()))).unwrap()
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(back, snap);
+
+        // async clock and clock-less snapshots also round-trip
+        let bare = ObsSnapshot {
+            version: 1,
+            metrics: vec![],
+            segments: vec![],
+            clock: Some(ClockView {
+                applied: 0,
+                staleness_bound: None,
+                worker_clocks: vec![],
+            }),
+        };
+        let Reply::ObsStats(back) =
+            decode_reply(&encode_reply(&Reply::ObsStats(bare.clone()))).unwrap()
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(back, bare);
+        let none = ObsSnapshot { version: 1, metrics: vec![], segments: vec![], clock: None };
+        let Reply::ObsStats(back) =
+            decode_reply(&encode_reply(&Reply::ObsStats(none.clone()))).unwrap()
+        else {
+            panic!("wrong reply kind");
+        };
+        assert_eq!(back, none);
     }
 
     #[test]

@@ -59,6 +59,7 @@ use crate::config::RunConfig;
 use crate::coordinator::balance::imbalance;
 use crate::coordinator::priority::PriorityKind;
 use crate::metrics::{Trace, TracePoint};
+use crate::obs::{EventSink, Histogram, MetricValue, Phase, Registry, SpanEvent};
 use crate::problem::ModelProblem;
 use crate::ps::{PsClient, PsConnection, StalenessPolicy};
 use crate::sched_service::{
@@ -107,6 +108,9 @@ struct FlushMsg {
     compute_sec: f64,
     deltas: Vec<(usize, f64)>,
     stale_gap: u64,
+    /// Whether this block's pull had to block at the SSP gate (the
+    /// per-round `gate_waits` trace column counts these).
+    waited: bool,
 }
 
 /// What a worker thread reports back to the coordinator.
@@ -132,6 +136,8 @@ struct RoundBuf {
     /// Seconds the coordinator was blocked obtaining this round's plan.
     sched_wait: f64,
     stale_gap_sum: u64,
+    /// Pulls in this round that had to block at the SSP gate.
+    gate_waits: u64,
 }
 
 impl RoundBuf {
@@ -144,6 +150,7 @@ impl RoundBuf {
             problem_planned,
             sched_wait,
             stale_gap_sum: 0,
+            gate_waits: 0,
         }
     }
 
@@ -152,6 +159,7 @@ impl RoundBuf {
         self.parts[msg.block_idx] = Some(msg.deltas);
         self.received += 1;
         self.stale_gap_sum += msg.stale_gap;
+        self.gate_waits += u64::from(msg.waited);
         self.timings.push((msg.worker, msg.compute_sec));
     }
 
@@ -246,6 +254,12 @@ pub struct DistributedReport {
     pub socket_bytes: u64,
     /// Which transport carried the run (`inproc` | `tcp`).
     pub transport: &'static str,
+    /// Full registry snapshot at teardown — the server's metrics (via
+    /// the `ObsStats` RPC, so a TCP run exercises the same introspection
+    /// path `strads ps-stats` uses) plus the coordinator-side metrics
+    /// (`sched.plan_wait_us`, `net.socket_bytes`). Empty at
+    /// `obs.level = 0`.
+    pub obs_metrics: Vec<(String, MetricValue)>,
 }
 
 /// Run up to `rounds` rounds of `problem` on `cfg.workers` real worker
@@ -275,6 +289,18 @@ pub fn run_distributed(
     let mut conn = PsConnection::establish(&cfg.ps, p, &segments)?;
     conn.coord().publish_range(0, &problem.ps_state(), 0)?;
 
+    // Observability is side-channel only: the coordinator registry and
+    // the (optional) span sink absorb observations that never feed back
+    // into planning, dispatch, or arithmetic — the obs-level parity
+    // test pins staleness-0 trajectories bitwise across levels.
+    let registry = Registry::new();
+    let plan_wait_us = registry.histogram("sched.plan_wait_us", Histogram::us_bounds());
+    let events = if cfg.obs.tracing() {
+        Some(Arc::new(EventSink::new(EventSink::DEFAULT_CAP)))
+    } else {
+        None
+    };
+
     // Worker threads: private work queue in, shared flush channel out.
     // Each worker gets its own transport link, minted here so a
     // connection failure surfaces before any thread spawns.
@@ -286,6 +312,7 @@ pub fn run_distributed(
         work_txs.push(tx);
         let flush_tx = flush_tx.clone();
         let kernel = Arc::clone(&kernel);
+        let events = events.clone();
         let mut client = PsClient::over(conn.worker_transport(worker)?, worker);
         handles.push(std::thread::spawn(move || {
             // A shutdown error is the clean end-of-run signal (break
@@ -300,21 +327,55 @@ pub fn run_distributed(
             };
             while let Ok(item) = rx.recv() {
                 let spec = kernel.pull_spec(&item.vars, item.round);
-                let (snap, stale_gap, _waited) = match client.pull(spec, item.round) {
+                let pull_start = events.as_ref().map(|s| s.now_us());
+                let (snap, meta) = match client.pull(spec, item.round) {
                     Ok(pulled) => pulled,
                     Err(e) => {
                         fail(item.worker, e);
                         break;
                     }
                 };
+                if let (Some(sink), Some(start)) = (events.as_ref(), pull_start) {
+                    // One RPC interval, split into the server-measured
+                    // gate wait and the transfer that followed. The
+                    // gate span is emitted even at 0µs so a staleness-0
+                    // timeline still carries every phase.
+                    let total = sink.now_us().saturating_sub(start);
+                    let gate = meta.gate_us.min(total);
+                    sink.record(SpanEvent {
+                        phase: Phase::Gate,
+                        round: item.round,
+                        worker: item.worker,
+                        start_us: start,
+                        dur_us: gate,
+                    });
+                    sink.record(SpanEvent {
+                        phase: Phase::Pull,
+                        round: item.round,
+                        worker: item.worker,
+                        start_us: start + gate,
+                        dur_us: total - gate,
+                    });
+                }
                 // Compute clock starts once the snapshot is in hand:
                 // gate wait is staleness discipline, not service time.
                 let compute_start = Instant::now();
+                let compute_start_us = events.as_ref().map(|s| s.now_us());
                 let proposals = kernel.propose(&snap, &item.vars, item.round);
                 // Release the epoch views before flushing: a worker
                 // must never force copy-on-publish clones (its own
                 // flush, or a peer's) with a snapshot it is done with.
                 drop(snap);
+                if let (Some(sink), Some(start)) = (events.as_ref(), compute_start_us) {
+                    sink.record(SpanEvent {
+                        phase: Phase::Compute,
+                        round: item.round,
+                        worker: item.worker,
+                        start_us: start,
+                        dur_us: sink.now_us().saturating_sub(start),
+                    });
+                }
+                let flush_start_us = events.as_ref().map(|s| s.now_us());
                 client.push(&proposals);
                 let deltas = match client.flush_clock(item.round) {
                     Ok(deltas) => deltas,
@@ -323,6 +384,15 @@ pub fn run_distributed(
                         break;
                     }
                 };
+                if let (Some(sink), Some(start)) = (events.as_ref(), flush_start_us) {
+                    sink.record(SpanEvent {
+                        phase: Phase::Flush,
+                        round: item.round,
+                        worker: item.worker,
+                        start_us: start,
+                        dur_us: sink.now_us().saturating_sub(start),
+                    });
+                }
                 let msg = FlushMsg {
                     round: item.round,
                     block_idx: item.block_idx,
@@ -331,7 +401,8 @@ pub fn run_distributed(
                     est_sec: item.est_sec,
                     compute_sec: compute_start.elapsed().as_secs_f64(),
                     deltas,
-                    stale_gap,
+                    stale_gap: meta.gap,
+                    waited: meta.waited,
                 };
                 if flush_tx.send(WorkerMsg::Flush(msg)).is_err() {
                     break;
@@ -395,6 +466,7 @@ pub fn run_distributed(
     let mut trace = Trace::new(&format!("dist-{}", policy.label()), dataset, p);
     let mut deltas_applied = 0usize;
     let mut sched_wait_cum = 0.0f64;
+    let mut gate_waits_cum = 0u64;
     let wall = Instant::now();
 
     loop {
@@ -420,6 +492,21 @@ pub fn run_distributed(
                 break;
             }
             sched_wait_cum += sched_wait;
+            plan_wait_us.record((sched_wait * 1e6) as u64);
+            if let Some(sink) = events.as_ref() {
+                // The plan span's duration IS the measured sched_wait,
+                // so the timeline cross-checks against the trace column
+                // by construction.
+                let dur = (sched_wait * 1e6) as u64;
+                let now = sink.now_us();
+                sink.record(SpanEvent {
+                    phase: Phase::Plan,
+                    round: planned,
+                    worker: p,
+                    start_us: now.saturating_sub(dur),
+                    dur_us: dur,
+                });
+            }
             pending.insert(
                 planned,
                 RoundBuf::new(blocks.len(), imbalance(&blocks), problem_planned, sched_wait),
@@ -458,8 +545,10 @@ pub fn run_distributed(
             let round_staleness = buf.mean_staleness();
             let round_sched_wait = buf.sched_wait;
             let problem_planned = buf.problem_planned;
+            gate_waits_cum += buf.gate_waits;
             let ordered = buf.into_ordered();
             deltas_applied += ordered.len();
+            let apply_start_us = events.as_ref().map(|s| s.now_us());
             let mut result = problem.apply_deltas(&ordered);
             if !problem_planned {
                 // SAP step 4: feed measured progress back to whichever
@@ -474,11 +563,21 @@ pub fn run_distributed(
                     Planner::Inline(set) => set.observe(&result),
                 }
             }
+            if let (Some(sink), Some(start)) = (events.as_ref(), apply_start_us) {
+                sink.record(SpanEvent {
+                    phase: Phase::Apply,
+                    round: applied,
+                    worker: p,
+                    start_us: start,
+                    dur_us: sink.now_us().saturating_sub(start),
+                });
+            }
             // Periodic full re-syncs only matter when a positive
             // tolerance admits drift; tol <= 0 republishes are already
             // exact (0 = bitwise incremental, < 0 = full every round).
             let full_resync =
                 cfg.ps.republish_tol > 0.0 && (applied + 1) % FULL_RESYNC_EVERY == 0;
+            let republish_start_us = events.as_ref().map(|s| s.now_us());
             let republish = problem.ps_republish(cfg.ps.republish_tol, full_resync);
             if !republish.is_empty() {
                 // Metered as republish traffic server-side (the
@@ -486,6 +585,18 @@ pub fn run_distributed(
                 conn.coord().publish(&republish, applied + 1)?;
             }
             conn.coord().advance_applied(applied + 1)?;
+            if let (Some(sink), Some(start)) = (events.as_ref(), republish_start_us) {
+                // Recorded even for skipped republishes (dur ≈ the
+                // tolerance scan + clock advance) so the phase always
+                // appears in the timeline.
+                sink.record(SpanEvent {
+                    phase: Phase::Republish,
+                    round: applied,
+                    worker: p,
+                    start_us: start,
+                    dur_us: sink.now_us().saturating_sub(start),
+                });
+            }
 
             if (applied as usize) % cfg.engine.record_every == 0 {
                 trace.push(TracePoint {
@@ -500,6 +611,7 @@ pub fn run_distributed(
                     staleness: round_staleness,
                     net_bytes: conn.coord().stats()?.net_bytes(),
                     sched_wait: round_sched_wait,
+                    gate_waits: gate_waits_cum,
                 });
             }
             applied += 1;
@@ -519,6 +631,7 @@ pub fn run_distributed(
         staleness: final_stats.mean_staleness(),
         net_bytes: final_stats.net_bytes(),
         sched_wait: 0.0,
+        gate_waits: final_stats.gate_waits,
     });
     // One accumulator serves both the report and the vtime exclusion,
     // so the two can never desynchronize.
@@ -535,6 +648,27 @@ pub fn run_distributed(
     }
     // Joined workers can no longer flush/pull: this snapshot is final.
     let stats = conn.coord().stats()?;
+    let obs_metrics = if cfg.obs.level > 0 {
+        // The same RPC `strads ps-stats` issues — every obs-enabled run
+        // exercises the introspection path over its own transport —
+        // merged with the coordinator-side registry.
+        registry.gauge("net.socket_bytes").set(conn.socket_bytes());
+        let mut metrics = conn.coord().obs_stats()?.metrics;
+        metrics.extend(registry.snapshot());
+        metrics.sort_by(|a, b| a.0.cmp(&b.0));
+        metrics
+    } else {
+        Vec::new()
+    };
+    if let Some(sink) = events.as_ref() {
+        let written = sink.flush_jsonl(std::path::Path::new(&cfg.obs.events_path))?;
+        if sink.dropped() > 0 {
+            eprintln!(
+                "[obs] event ring overflowed: kept {written} spans, dropped {}",
+                sink.dropped()
+            );
+        }
+    }
     Ok(DistributedReport {
         trace,
         rounds: applied as usize,
@@ -554,6 +688,7 @@ pub fn run_distributed(
         sched_service_used: service_used,
         socket_bytes: conn.socket_bytes(),
         transport: cfg.ps.transport.name(),
+        obs_metrics,
     })
 }
 
@@ -673,6 +808,37 @@ mod tests {
         }
         let cfg = RunConfig::default();
         assert!(run_distributed(&mut NoPs, &cfg, 10, "none").is_err());
+    }
+
+    #[test]
+    fn obs_metrics_view_the_run_without_changing_it() {
+        let data = generate(&LassoSynthSpec::tiny(), 26);
+        let mut cfg = RunConfig { workers: 2, lambda: 1e-3, ..Default::default() };
+        cfg.sap.shards = 2;
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report = run_distributed(&mut problem, &cfg, 30, "tiny").unwrap();
+        let get = |name: &str| {
+            report.obs_metrics.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_u64())
+        };
+        assert!(get("ps.pulls").unwrap() > 0);
+        assert_eq!(get("ps.pull_bytes").unwrap(), report.pull_bytes);
+        assert!(get("sched.plan_wait_us").unwrap() > 0, "one sample per planned round");
+        assert!(get("net.socket_bytes").is_some());
+        assert!(get("gate.wait_us").is_some());
+        // staleness 0 without pipelining never parks a pull
+        let last = report.trace.points.last().unwrap();
+        assert_eq!(last.gate_waits, report.gate_waits);
+
+        let mut cfg0 = cfg.clone();
+        cfg0.obs.level = 0;
+        let mut problem0 = NativeLasso::new(&data, cfg0.lambda);
+        let off = run_distributed(&mut problem0, &cfg0, 30, "tiny").unwrap();
+        assert!(off.obs_metrics.is_empty(), "level 0 must collect nothing");
+        assert_eq!(
+            off.trace.final_objective(),
+            report.trace.final_objective(),
+            "obs level must be observationally invisible"
+        );
     }
 
     #[test]

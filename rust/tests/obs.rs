@@ -1,0 +1,151 @@
+//! Observability-contract suite: the obs layer must be *free*. A
+//! staleness-0 run with the metrics registry and span tracing fully on
+//! (level 2 + an events file) must be bitwise identical — every trace
+//! point's objective, bit for bit — to the same run with observability
+//! fully off (level 0). The layer only observes: counters are atomics
+//! the meters already incremented, gate timing never feeds arithmetic,
+//! and span events go to a side-channel ring. Also pins the event-file
+//! schema: every line is valid JSON in the chrome://tracing event
+//! format, all seven phases appear, and the plan-phase durations sum to
+//! the report's `sched_wait_total`.
+
+use std::path::PathBuf;
+use strads::config::RunConfig;
+use strads::data::lasso_synth::{self, LassoSynthSpec};
+use strads::data::mf_powerlaw::{self, MfSynthSpec};
+use strads::lasso::NativeLasso;
+use strads::mf::DistMf;
+use strads::obs::{Phase, SpanEvent};
+use strads::util::Json;
+use strads::workers::{run_distributed, DistributedReport};
+
+/// A fresh path for a per-test events file (removed up front so the
+/// append-mode flush starts from empty).
+fn events_path(tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("strads_obs_{}_{}.jsonl", tag, std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+fn obj_bits(report: &DistributedReport) -> Vec<u64> {
+    report.trace.points.iter().map(|p| p.objective.to_bits()).collect()
+}
+
+/// Parse the events file back into spans, asserting every line is valid
+/// JSON with the full span schema.
+fn load_spans(path: &PathBuf) -> Vec<SpanEvent> {
+    let text = std::fs::read_to_string(path).expect("events file written");
+    text.lines()
+        .map(|line| {
+            let j = Json::parse(line).expect("every event line is valid JSON");
+            SpanEvent::from_json(&j).expect("every event line carries the span schema")
+        })
+        .collect()
+}
+
+#[test]
+fn lasso_staleness0_is_bitwise_identical_with_obs_on_and_off() {
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 42);
+    let rounds = 80;
+    let run = |cfg: &RunConfig| {
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report = run_distributed(&mut problem, cfg, rounds, "tiny").unwrap();
+        (report, problem.beta().to_vec())
+    };
+
+    let path = events_path("lasso");
+    let mut on = RunConfig { workers: 4, lambda: 1e-3, ..Default::default() };
+    on.sap.shards = 2;
+    on.obs.level = 2;
+    on.obs.events_path = path.to_string_lossy().into_owned();
+    let mut off = on.clone();
+    off.obs.level = 0;
+    off.obs.events_path.clear();
+
+    let (r_on, beta_on) = run(&on);
+    let (r_off, beta_off) = run(&off);
+
+    // The acceptance pin: full observability changes *nothing*.
+    assert_eq!(obj_bits(&r_on), obj_bits(&r_off), "objective trajectory must be bitwise equal");
+    for (j, (a, b)) in beta_on.iter().zip(&beta_off).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{j}] diverged under observation: {a} vs {b}");
+    }
+    assert_eq!(r_on.pull_bytes, r_off.pull_bytes);
+    assert_eq!(r_on.gate_waits, r_off.gate_waits);
+
+    // Level 2 exposes the registry through the report; level 0 is empty.
+    assert!(!r_on.obs_metrics.is_empty(), "obs-on report must carry the registry snapshot");
+    assert!(r_off.obs_metrics.is_empty(), "obs-off report must carry no metrics");
+    let metric = |name: &str| {
+        r_on.obs_metrics
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("registry must export {name}"))
+            .1
+            .as_u64()
+    };
+    assert!(metric("ps.pulls") > 0);
+    assert_eq!(metric("ps.pull_bytes"), r_on.pull_bytes, "report fields are registry views");
+
+    // The trace file: valid JSONL, all seven phases, and the timeline's
+    // plan lane cross-checks the report's scheduler-wait accumulator.
+    let spans = load_spans(&path);
+    for phase in Phase::ALL {
+        assert!(
+            spans.iter().any(|s| s.phase == phase),
+            "phase {:?} missing from the timeline",
+            phase
+        );
+    }
+    let plan_secs: f64 =
+        spans.iter().filter(|s| s.phase == Phase::Plan).map(|s| s.dur_us as f64 / 1e6).sum();
+    // Each span duration truncates to whole microseconds, so the sum
+    // undershoots by at most one microsecond per planned round.
+    let tol = rounds as f64 * 1e-6 + 1e-9;
+    assert!(
+        (r_on.sched_wait_total - plan_secs) <= tol && plan_secs <= r_on.sched_wait_total + tol,
+        "plan spans sum to {plan_secs}s but the report says {}s",
+        r_on.sched_wait_total
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn mf_staleness0_is_bitwise_identical_with_obs_on_and_off() {
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 31);
+    let run = |cfg: &RunConfig| {
+        let mut problem = DistMf::new(&data.a, 4, 0.05, 32);
+        let rounds = problem.rounds_for_iters(3);
+        run_distributed(&mut problem, cfg, rounds, "tiny").unwrap()
+    };
+
+    let path = events_path("mf");
+    let mut on = RunConfig { workers: 4, ..Default::default() };
+    on.obs.level = 2;
+    on.obs.events_path = path.to_string_lossy().into_owned();
+    let mut off = on.clone();
+    off.obs.level = 0;
+    off.obs.events_path.clear();
+
+    let r_on = run(&on);
+    let r_off = run(&off);
+
+    assert_eq!(
+        r_on.trace.final_objective().to_bits(),
+        r_off.trace.final_objective().to_bits(),
+        "MF objective must be bitwise equal under observation: {} vs {}",
+        r_on.trace.final_objective(),
+        r_off.trace.final_objective()
+    );
+    assert_eq!(obj_bits(&r_on), obj_bits(&r_off));
+    assert_eq!(r_on.rounds, r_off.rounds);
+    assert!(!r_on.obs_metrics.is_empty());
+    assert!(r_off.obs_metrics.is_empty());
+
+    // MF timelines carry the same seven-phase schema.
+    let spans = load_spans(&path);
+    assert!(spans.iter().any(|s| s.phase == Phase::Compute));
+    assert!(spans.iter().any(|s| s.phase == Phase::Apply));
+    let _ = std::fs::remove_file(&path);
+}

@@ -216,16 +216,18 @@ fn wire_protocol_roundtrips_random_messages() {
         let reply = Reply::Pull {
             gap: rng.next_u64(),
             waited: rng.below(2) == 1,
+            gate_us: rng.next_u64(),
             ranges: reply_ranges,
             cells,
         };
         let decoded = decode_reply(&encode_reply(&reply)).unwrap();
-        let (Reply::Pull { gap, waited, ranges: dr, cells: dc },
-             Reply::Pull { gap: g0, waited: w0, ranges: or, cells: oc }) = (decoded, reply)
+        let (Reply::Pull { gap, waited, gate_us, ranges: dr, cells: dc },
+             Reply::Pull { gap: g0, waited: w0, gate_us: u0, ranges: or, cells: oc }) =
+            (decoded, reply)
         else {
             panic!("wrong reply kind");
         };
-        assert_eq!((gap, waited), (g0, w0), "case {case}");
+        assert_eq!((gap, waited, gate_us), (g0, w0, u0), "case {case}");
         let dr: Vec<_> = dr.iter().map(range_image).collect();
         let or: Vec<_> = or.iter().map(range_image).collect();
         assert_eq!(dr, or, "case {case}: range images must round-trip bitwise");
