@@ -160,6 +160,25 @@ pub struct PsConfig {
     pub transport: crate::ps::TransportKind,
     /// `host:port` of the `ps-server` process (`tcp` transport only).
     pub addr: String,
+    /// Reconnect-and-retry attempts per RPC after a transport I/O fault
+    /// (`tcp` only). 0 = fail fast, the pre-retry behaviour. Retried
+    /// operations are exactly-once: re-`Init` reattaches by session id
+    /// and retried flushes are deduped by seq, so staleness-0 runs stay
+    /// bitwise identical under faults.
+    pub retry_max: usize,
+    /// First retry backoff sleep in milliseconds; doubles per attempt
+    /// (capped at 2s) with deterministic jitter.
+    pub retry_backoff_ms: u64,
+    /// Deterministic fault-injection schedule for the retry harness
+    /// (testing only; empty = no faults). Format:
+    /// `seed=S,drop=P,err=P,delay=P,delay_ms=D,every=N,ops=pull|flush`.
+    pub fault_plan: String,
+    /// `strads ps-server` only: directory for periodic checkpoints of
+    /// the hosted run (empty = checkpointing off). On restart the
+    /// server restores the run from it before accepting connections.
+    pub checkpoint_dir: String,
+    /// Checkpoint every K applied-clock advances (ps-server only).
+    pub checkpoint_every: u64,
 }
 
 impl Default for PsConfig {
@@ -173,6 +192,11 @@ impl Default for PsConfig {
             pipeline: true,
             transport: crate::ps::TransportKind::InProc,
             addr: "127.0.0.1:37021".to_string(),
+            retry_max: 0,
+            retry_backoff_ms: 50,
+            fault_plan: String::new(),
+            checkpoint_dir: String::new(),
+            checkpoint_every: 16,
         }
     }
 }
@@ -329,6 +353,11 @@ impl RunConfig {
             "ps.pipeline",
             "ps.transport",
             "ps.addr",
+            "ps.retry_max",
+            "ps.retry_backoff_ms",
+            "ps.fault_plan",
+            "ps.checkpoint_dir",
+            "ps.checkpoint_every",
             "sched.scheduler",
             "sched.shards",
             "sched.pipeline_depth",
@@ -351,6 +380,7 @@ impl RunConfig {
             "engine.max_rounds" => c.engine.max_rounds,
             "ps.staleness" => c.ps.staleness,
             "ps.shards" => c.ps.shards,
+            "ps.retry_max" => c.ps.retry_max,
             "sched.shards" => c.sched.shards,
             "sched.pipeline_depth" => c.sched.pipeline_depth,
             "obs.level" => c.obs.level,
@@ -375,6 +405,18 @@ impl RunConfig {
         }
         if let Some(v) = conf.get("ps.addr") {
             c.ps.addr = v.to_string();
+        }
+        if let Some(v) = conf.get_u64("ps.retry_backoff_ms").map_err(anyhow::Error::msg)? {
+            c.ps.retry_backoff_ms = v;
+        }
+        if let Some(v) = conf.get("ps.fault_plan") {
+            c.ps.fault_plan = v.to_string();
+        }
+        if let Some(v) = conf.get("ps.checkpoint_dir") {
+            c.ps.checkpoint_dir = v.to_string();
+        }
+        if let Some(v) = conf.get_u64("ps.checkpoint_every").map_err(anyhow::Error::msg)? {
+            c.ps.checkpoint_every = v;
         }
         if let Some(v) = conf.get("obs.events_path") {
             c.obs.events_path = v.to_string();
@@ -403,7 +445,7 @@ impl RunConfig {
     /// Serialize back to the preset format.
     pub fn to_conf_string(&self) -> String {
         format!(
-            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n\n[obs]\nlevel = {}\nevents_path = \"{}\"\nreport_secs = {}\n",
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\nretry_max = {}\nretry_backoff_ms = {}\nfault_plan = \"{}\"\ncheckpoint_dir = \"{}\"\ncheckpoint_every = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n\n[obs]\nlevel = {}\nevents_path = \"{}\"\nreport_secs = {}\n",
             self.workers,
             self.lambda,
             self.sap.p_prime_factor,
@@ -428,6 +470,11 @@ impl RunConfig {
             usize::from(self.ps.pipeline),
             self.ps.transport.name(),
             self.ps.addr,
+            self.ps.retry_max,
+            self.ps.retry_backoff_ms,
+            self.ps.fault_plan,
+            self.ps.checkpoint_dir,
+            self.ps.checkpoint_every,
             self.sched.kind.name(),
             self.sched.shards,
             self.sched.pipeline_depth,
@@ -457,6 +504,10 @@ impl RunConfig {
         anyhow::ensure!(
             !self.ps.addr.is_empty(),
             "ps.addr must be a host:port (required by the tcp transport)"
+        );
+        anyhow::ensure!(
+            self.ps.checkpoint_every >= 1,
+            "ps.checkpoint_every must be >= 1 (ticks between checkpoints)"
         );
         anyhow::ensure!(
             self.obs.level <= 2,
@@ -553,6 +604,28 @@ mod tests {
         let bad = KvConf::parse("[ps]\ntransport = smoke-signals\n").unwrap();
         assert!(RunConfig::from_kvconf(&bad).is_err());
         let bad = KvConf::parse("[ps]\naddr = \"\"\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+    }
+
+    #[test]
+    fn ps_fault_tolerance_keys_parse() {
+        let conf = KvConf::parse(
+            "[ps]\nretry_max = 5\nretry_backoff_ms = 10\nfault_plan = \"seed=1,drop=0.1\"\ncheckpoint_dir = \"results/ckpt\"\ncheckpoint_every = 4\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.ps.retry_max, 5);
+        assert_eq!(c.ps.retry_backoff_ms, 10);
+        assert_eq!(c.ps.fault_plan, "seed=1,drop=0.1");
+        assert_eq!(c.ps.checkpoint_dir, "results/ckpt");
+        assert_eq!(c.ps.checkpoint_every, 4);
+        // defaults: fail fast, no faults, no checkpoints
+        let d = PsConfig::default();
+        assert_eq!(d.retry_max, 0, "retry must be opt-in (fail-fast default)");
+        assert!(d.fault_plan.is_empty() && d.checkpoint_dir.is_empty());
+        assert_eq!((d.retry_backoff_ms, d.checkpoint_every), (50, 16));
+        // checkpoint_every = 0 would divide by zero in the cadence check
+        let bad = KvConf::parse("[ps]\ncheckpoint_every = 0\n").unwrap();
         assert!(RunConfig::from_kvconf(&bad).is_err());
     }
 

@@ -220,7 +220,7 @@ pub fn staleness_sweep(
              \"cow_clones\": {}, \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
              \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
              \"sched_wait_total\": {:.6e}, \"plan_queue_depth\": {:.2}, \
-             \"final_objective\": {:.8e}}}",
+             \"reconnects\": {}, \"final_objective\": {:.8e}}}",
             setting,
             report.rounds,
             report.bytes_flushed,
@@ -238,6 +238,7 @@ pub fn staleness_sweep(
             sec_per_round,
             report.sched_wait_total,
             report.plan_queue_depth,
+            report.reconnects,
             report.trace.final_objective()
         ));
         if let Some(p) = out_csv {

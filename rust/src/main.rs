@@ -58,12 +58,21 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --ps-transport inproc|tcp (carriage to the parameter server;
                                           tcp talks to a ps-server process)
                --ps-addr host:port (where that ps-server listens)
+               --retry-max N (tcp: reconnect-and-retry attempts per RPC after
+                              an I/O fault; 0 [default] = fail fast)
+               --retry-backoff-ms N (first backoff; doubles per attempt, 2s cap)
+               --fault-plan spec (deterministic fault injection for testing:
+                                  seed=S,drop=P,err=P,delay=P,delay_ms=D,
+                                  every=N,ops=pull|flush)
                --obs-level 0|1|2 (0 = off, 1 = metrics registry [default],
                                   2 = metrics + per-phase span tracing)
                --trace-events path.jsonl (write span events as chrome://tracing
                                           JSONL; implies --obs-level 2)
   ps-server:   --addr host:port (default from [ps] addr; port 0 = ephemeral)
                --report-secs N (print an [obs] digest line every N seconds)
+               --checkpoint-dir dir (periodically checkpoint the hosted run
+                                     there, and restore from it on restart)
+               --checkpoint-every K (clock advances between checkpoints)
                hosts the sharded store + SSP clock; serves any number of
                back-to-back runs (each run re-inits it); stop with SIGTERM
   ps-stats:    --addr host:port  print a live registry snapshot (metrics,
@@ -72,6 +81,7 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --scheduler dynamic|static|random --sched-shards N
                --republish-tol F --dense-segments 0|1 --pipeline 0|1
                --ps-transport inproc|tcp --ps-addr host:port
+               --retry-max N --retry-backoff-ms N --fault-plan spec
                --obs-level 0|1|2 --trace-events path.jsonl
                (runs staleness 0, 2, 8, async through the parameter server;
                 writes staleness_sweep.csv + BENCH_ps.json to --out)";
@@ -198,6 +208,10 @@ fn run() -> anyhow::Result<()> {
                 cfg.ps.transport = strads::ps::TransportKind::parse(&kind)?;
             }
             cfg.ps.addr = args.str_or("ps-addr", &cfg.ps.addr);
+            cfg.ps.retry_max = args.usize_or("retry-max", cfg.ps.retry_max)?;
+            cfg.ps.retry_backoff_ms =
+                args.u64_or("retry-backoff-ms", cfg.ps.retry_backoff_ms)?;
+            cfg.ps.fault_plan = args.str_or("fault-plan", &cfg.ps.fault_plan);
             if let Some(kind) = args.opt_str("scheduler") {
                 cfg.sched.kind = SchedKind::parse(&kind)?;
             }
@@ -267,6 +281,10 @@ fn run() -> anyhow::Result<()> {
                 cfg.ps.transport = strads::ps::TransportKind::parse(&kind)?;
             }
             cfg.ps.addr = args.str_or("ps-addr", &cfg.ps.addr);
+            cfg.ps.retry_max = args.usize_or("retry-max", cfg.ps.retry_max)?;
+            cfg.ps.retry_backoff_ms =
+                args.u64_or("retry-backoff-ms", cfg.ps.retry_backoff_ms)?;
+            cfg.ps.fault_plan = args.str_or("fault-plan", &cfg.ps.fault_plan);
             if let Some(kind) = args.opt_str("scheduler") {
                 cfg.sched.kind = SchedKind::parse(&kind)?;
             }
@@ -294,10 +312,23 @@ fn run() -> anyhow::Result<()> {
         "ps-server" => {
             let addr = args.str_or("addr", &cfg.ps.addr);
             let report_secs = args.u64_or("report-secs", cfg.obs.report_secs)?;
+            let ckpt_dir = args.str_or("checkpoint-dir", &cfg.ps.checkpoint_dir);
+            let ckpt_every = args.u64_or("checkpoint-every", cfg.ps.checkpoint_every)?;
             args.finish()?;
-            let server = strads::ps::PsTcpServer::bind(&addr)?;
+            anyhow::ensure!(ckpt_every >= 1, "--checkpoint-every must be >= 1");
+            let ckpt = (!ckpt_dir.is_empty()).then(|| strads::ps::CheckpointConfig {
+                dir: PathBuf::from(&ckpt_dir),
+                every: ckpt_every,
+            });
+            let server = strads::ps::PsTcpServer::bind_with(&addr, ckpt)?;
             println!("ps-server listening on {}", server.local_addr());
             println!("  (problem-agnostic: each run's coordinator re-inits it; kill to stop)");
+            if !ckpt_dir.is_empty() {
+                println!(
+                    "  (checkpointing to {ckpt_dir} every {ckpt_every} clock advances; \
+                     restores from it on restart)"
+                );
+            }
             if report_secs > 0 {
                 server.spawn_reporter(report_secs);
             }

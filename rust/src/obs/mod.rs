@@ -27,6 +27,10 @@
 //! | `gate.wait_us`        | histogram | SSP clock gate block time           |
 //! | `sched.plan_wait_us`  | histogram | coordinator `pop_plan` block time   |
 //! | `net.socket_bytes`    | gauge     | transport bytes moved (0 in-proc)   |
+//! | `net.reconnects`      | counter   | retry-wrapper reconnects (all links)|
+//! | `net.retry_backoff_us`| counter   | total retry backoff slept, µs       |
+//! | `ckpt.writes`         | counter   | ps-server checkpoints written       |
+//! | `ckpt.bytes`          | counter   | ps-server checkpoint bytes written  |
 //! | `store.hash_probes`   | counter   | hashed-path probes (snapshot view)  |
 //! | `store.cow_clones`    | counter   | copy-on-publish clones (snapshot)   |
 

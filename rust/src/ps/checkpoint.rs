@@ -1,0 +1,327 @@
+//! Server-side checkpoint/restore: the durability rung of the fault-
+//! tolerance ladder (ROADMAP; the format spec lives in
+//! `docs/ARCHITECTURE.md §Fault tolerance`).
+//!
+//! A checkpoint is one consistent image of everything a run would lose
+//! if the `ps-server` process died: the dense segments' epoch slabs
+//! (raw little-endian f32 — bit-exact by construction), the hashed
+//! cells, the SSP clock vector, and the per-worker flush-dedup seqs.
+//! Immutable epochs make the capture nearly free — cloning each
+//! segment's `Arc` under its read lock *is* the snapshot; serialization
+//! happens afterwards with no server lock held.
+//!
+//! Writes are crash-safe: the image goes to `ps.ckpt.tmp` and is
+//! `rename`d over `ps.ckpt`, so a reader only ever sees a complete
+//! file. The TCP server writes one every `checkpoint_every` clock
+//! ticks and at graceful stop; on bind it restores `ps.ckpt` (if
+//! present) so reconnecting clients resume the run where the clock
+//! left off.
+
+use super::clock::StalenessPolicy;
+use super::shard::Cell;
+use super::ParameterServer;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Leading bytes of every checkpoint file.
+pub const CKPT_MAGIC: &[u8; 8] = b"STRADSCK";
+/// Bump on any layout change; a reader refuses other versions.
+pub const CKPT_VERSION: u32 = 1;
+/// The checkpoint file name inside `--checkpoint-dir`.
+pub const CKPT_FILE: &str = "ps.ckpt";
+
+/// Where and how often the TCP server checkpoints.
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Directory holding `ps.ckpt` (created if missing).
+    pub dir: std::path::PathBuf,
+    /// Write every N `Advance` clock ticks (>= 1).
+    pub every: u64,
+}
+
+/// A captured, not-yet-serialized checkpoint: `Arc` views of the epoch
+/// slabs plus plain copies of the small state. Capture is cheap and
+/// consistent; [`CheckpointImage::write_to`] does the actual I/O.
+pub struct CheckpointImage {
+    session: u64,
+    shards: usize,
+    workers: usize,
+    policy: StalenessPolicy,
+    applied: u64,
+    worker_clocks: Vec<u64>,
+    flush_seqs: Vec<u64>,
+    /// `(start, epoch_version, slab)` per dense segment.
+    segments: Vec<(usize, u64, Arc<Vec<f32>>)>,
+    /// Hashed cells, sorted by key (deterministic bytes).
+    cells: Vec<(usize, Cell)>,
+}
+
+/// What [`read_checkpoint`] rebuilds: a server primed with the saved
+/// store + clock, plus the session and flush seqs the TCP host needs
+/// to reattach reconnecting clients without double-applying flushes.
+pub struct Restored {
+    pub server: ParameterServer,
+    pub session: u64,
+    pub flush_seqs: Vec<u64>,
+}
+
+impl CheckpointImage {
+    /// Snapshot `server` (plus the transport-layer `session` and
+    /// `flush_seqs`). The epoch `Arc` clones make the segment images
+    /// immutable from here on, so the caller can serialize without any
+    /// server lock held. The caller is responsible for pairing this
+    /// with the flush path (the TCP host captures under its state
+    /// mutex) so `flush_seqs` and the applied deltas agree.
+    pub fn capture(server: &ParameterServer, session: u64, flush_seqs: &[u64]) -> Self {
+        CheckpointImage {
+            session,
+            shards: server.store().num_shards(),
+            workers: server.clock().num_workers(),
+            policy: server.policy(),
+            applied: server.clock().applied(),
+            worker_clocks: server.clock().worker_clocks(),
+            flush_seqs: flush_seqs.to_vec(),
+            segments: server.store().segment_epochs(),
+            cells: server.store().hashed_cells(),
+        }
+    }
+
+    /// Serialize to `dir/ps.ckpt` via write-temp-then-rename (a reader
+    /// never sees a torn file). Returns the bytes written.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<u64> {
+        std::fs::create_dir_all(dir)?;
+        let bytes = self.to_bytes();
+        let tmp = dir.join(format!("{CKPT_FILE}.tmp"));
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, dir.join(CKPT_FILE))?;
+        Ok(bytes.len() as u64)
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let slab_bytes: usize = self.segments.iter().map(|(_, _, s)| 24 + 4 * s.len()).sum();
+        let mut b = Vec::with_capacity(64 + 16 * self.workers + slab_bytes + 24 * self.cells.len());
+        b.extend_from_slice(CKPT_MAGIC);
+        b.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        b.extend_from_slice(&self.session.to_le_bytes());
+        b.extend_from_slice(&(self.shards as u32).to_le_bytes());
+        b.extend_from_slice(&(self.workers as u32).to_le_bytes());
+        match self.policy {
+            StalenessPolicy::Bounded(s) => {
+                b.push(0);
+                b.extend_from_slice(&s.to_le_bytes());
+            }
+            StalenessPolicy::Async => {
+                b.push(1);
+                b.extend_from_slice(&0u64.to_le_bytes());
+            }
+        }
+        b.extend_from_slice(&self.applied.to_le_bytes());
+        debug_assert_eq!(self.worker_clocks.len(), self.workers);
+        debug_assert_eq!(self.flush_seqs.len(), self.workers);
+        for &c in &self.worker_clocks {
+            b.extend_from_slice(&c.to_le_bytes());
+        }
+        for &s in &self.flush_seqs {
+            b.extend_from_slice(&s.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.segments.len() as u32).to_le_bytes());
+        for (start, version, slab) in &self.segments {
+            b.extend_from_slice(&(*start as u64).to_le_bytes());
+            b.extend_from_slice(&(slab.len() as u64).to_le_bytes());
+            b.extend_from_slice(&version.to_le_bytes());
+            for &v in slab.iter() {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        b.extend_from_slice(&(self.cells.len() as u32).to_le_bytes());
+        for &(key, cell) in &self.cells {
+            b.extend_from_slice(&(key as u64).to_le_bytes());
+            b.extend_from_slice(&cell.version.to_le_bytes());
+            b.extend_from_slice(&cell.value.to_le_bytes());
+        }
+        b
+    }
+}
+
+/// Checked sequential reader over the checkpoint bytes (same posture
+/// as the wire decoder: truncation is an error, never a panic).
+struct Rd<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.buf.len() >= n, "truncated checkpoint: wanted {n} more bytes");
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("take(4)")))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("take(8)")))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("take(8)")))
+    }
+
+    /// A count whose elements occupy at least `elem_bytes` each —
+    /// validated against the remaining bytes before any allocation.
+    fn count(&mut self, n: usize, elem_bytes: usize) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            n.saturating_mul(elem_bytes) <= self.buf.len(),
+            "checkpoint count {n} x {elem_bytes}B exceeds the {}B left",
+            self.buf.len()
+        );
+        Ok(n)
+    }
+}
+
+/// Restore `dir/ps.ckpt` into a fresh [`ParameterServer`]. `Ok(None)`
+/// when no checkpoint exists (a cold start); a corrupt or wrong-version
+/// file is an error rather than silent data loss.
+pub fn read_checkpoint(dir: &Path) -> anyhow::Result<Option<Restored>> {
+    let path = dir.join(CKPT_FILE);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let mut r = Rd { buf: &bytes };
+    anyhow::ensure!(r.take(8)? == CKPT_MAGIC, "{} is not a checkpoint file", path.display());
+    let version = r.u32()?;
+    anyhow::ensure!(
+        version == CKPT_VERSION,
+        "checkpoint version {version} unsupported (this build reads v{CKPT_VERSION})"
+    );
+    let session = r.u64()?;
+    let shards = r.u32()? as usize;
+    let workers = r.u32()? as usize;
+    let policy = match (r.u8()?, r.u64()?) {
+        (0, s) => StalenessPolicy::Bounded(s),
+        (1, _) => StalenessPolicy::Async,
+        (tag, _) => anyhow::bail!("unknown policy tag {tag} in checkpoint"),
+    };
+    let applied = r.u64()?;
+    let nworkers = r.count(workers, 16)?;
+    let mut worker_clocks = Vec::with_capacity(nworkers);
+    for _ in 0..nworkers {
+        worker_clocks.push(r.u64()?);
+    }
+    let mut flush_seqs = Vec::with_capacity(nworkers);
+    for _ in 0..nworkers {
+        flush_seqs.push(r.u64()?);
+    }
+    let nseg = r.u32()? as usize;
+    let nseg = r.count(nseg, 24)?;
+    let mut segments = Vec::with_capacity(nseg);
+    for _ in 0..nseg {
+        let start = r.u64()? as usize;
+        let len = r.u64()? as usize;
+        let len = r.count(len, 4)?;
+        let version = r.u64()?;
+        let values: Vec<f32> = r
+            .take(len * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+            .collect();
+        segments.push((start, version, values));
+    }
+    let server = ParameterServer::with_segments(
+        shards,
+        workers,
+        policy,
+        &segments.iter().map(|(s, _, v)| (*s, v.len())).collect::<Vec<_>>(),
+    );
+    for (start, version, values) in segments {
+        anyhow::ensure!(
+            server.store().restore_segment(start, values, version),
+            "checkpoint segment at key {start} does not fit the rebuilt store"
+        );
+    }
+    let ncells = r.u32()? as usize;
+    let ncells = r.count(ncells, 24)?;
+    let mut cells = Vec::with_capacity(ncells);
+    for _ in 0..ncells {
+        cells.push((r.u64()? as usize, Cell { version: r.u64()?, value: r.f64()? }));
+    }
+    server.store().restore_cells(&cells);
+    server.clock().restore(&worker_clocks, applied);
+    anyhow::ensure!(r.buf.is_empty(), "{} trailing bytes after checkpoint", r.buf.len());
+    Ok(Some(Restored { server, session, flush_seqs }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::shard::PullSpec;
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("strads_ckpt_rt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(read_checkpoint(&dir).unwrap().is_none(), "no file = cold start");
+
+        let server =
+            ParameterServer::with_segments(4, 3, StalenessPolicy::Bounded(2), &[(0, 6), (10, 2)]);
+        server.store().publish_dense(&[0.1, -0.0, 3.5e-7, 4.0, -5.5, 6.25], 3);
+        server.store().publish(&[(100, 1e-300), (50, -2.5)], 4);
+        server.clock().record_flush(0, 4);
+        server.clock().record_flush(2, 3);
+        server.clock().advance_applied(4);
+        let image = CheckpointImage::capture(&server, 77, &[5, 4, 4]);
+        let bytes = image.write_to(&dir).unwrap();
+        assert!(bytes > 0);
+
+        let restored = read_checkpoint(&dir).unwrap().expect("checkpoint present");
+        assert_eq!(restored.session, 77);
+        assert_eq!(restored.flush_seqs, vec![5, 4, 4]);
+        assert_eq!(restored.server.policy(), StalenessPolicy::Bounded(2));
+        assert_eq!(restored.server.store().num_shards(), 4);
+        assert_eq!(restored.server.clock().applied(), 4);
+        assert_eq!(restored.server.clock().worker_clocks(), vec![5, 0, 4]);
+        // bitwise store equality: segment images and hashed cells
+        let spec = PullSpec { ranges: vec![(0, 6), (10, 2)], keys: vec![50, 100] };
+        let (orig, back) =
+            (server.store().read_spec(&spec), restored.server.store().read_spec(&spec));
+        for (a, b) in orig.ranges.iter().zip(&back.ranges) {
+            let bits = |r: &crate::ps::RangePull| {
+                r.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(bits(a), bits(b));
+            assert_eq!(a.version(), b.version());
+        }
+        assert_eq!(orig.cells, back.cells);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_checkpoints_are_refused() {
+        let dir = std::env::temp_dir().join(format!("strads_ckpt_bad_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(CKPT_FILE), b"not a checkpoint").unwrap();
+        assert!(read_checkpoint(&dir).is_err(), "bad magic must error, not restore");
+
+        let server = ParameterServer::with_segments(1, 1, StalenessPolicy::Bounded(0), &[(0, 4)]);
+        let image = CheckpointImage::capture(&server, 1, &[0]);
+        image.write_to(&dir).unwrap();
+        let mut bytes = std::fs::read(dir.join(CKPT_FILE)).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(dir.join(CKPT_FILE), &bytes).unwrap();
+        assert!(read_checkpoint(&dir).is_err(), "truncation must error");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -149,6 +149,22 @@ impl ClockTable {
         state.worker_clocks.iter().copied().min().unwrap_or(0)
     }
 
+    /// Checkpoint restore: overwrite the table with a saved clock
+    /// vector + applied count, then wake any waiters so they re-check
+    /// admission against the restored state.
+    pub fn restore(&self, worker_clocks: &[u64], applied: u64) {
+        let mut state = self.state.lock().expect("clock lock poisoned");
+        assert_eq!(
+            state.worker_clocks.len(),
+            worker_clocks.len(),
+            "restore with a different worker count"
+        );
+        state.worker_clocks.copy_from_slice(worker_clocks);
+        state.applied = applied;
+        drop(state);
+        self.advanced.notify_all();
+    }
+
     /// Wake every gate waiter for teardown.
     pub fn shutdown(&self) {
         let mut state = self.state.lock().expect("clock lock poisoned");
@@ -216,6 +232,18 @@ mod tests {
         assert_eq!(table.min_worker_clock(), 0, "worker 2 has not flushed");
         table.record_flush(2, 0);
         assert_eq!(table.min_worker_clock(), 1);
+    }
+
+    #[test]
+    fn restore_resumes_where_the_checkpoint_left_off() {
+        let table = ClockTable::new(3);
+        table.restore(&[5, 4, 6], 4);
+        assert_eq!(table.applied(), 4);
+        assert_eq!(table.worker_clocks(), vec![5, 4, 6]);
+        assert_eq!(table.min_worker_clock(), 4);
+        // a pull for round 4 at staleness 0 is admitted immediately
+        let (gap, waited) = table.wait_admit(4, StalenessPolicy::Bounded(0)).unwrap();
+        assert_eq!((gap, waited), (0, false));
     }
 
     #[test]

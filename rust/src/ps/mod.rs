@@ -59,15 +59,18 @@
 //! worker threads lives in `workers::service`.
 
 pub mod batch;
+pub mod checkpoint;
 pub mod client;
 pub mod clock;
 pub mod shard;
 pub mod transport;
 
 pub use batch::{wire_bytes_for, BYTES_PER_ENTRY, DeltaBatch};
+pub use checkpoint::{read_checkpoint, CheckpointConfig, CheckpointImage};
 pub use client::{PsClient, PsKernel, PsSnapshot, PullMeta};
 pub use clock::{ClockShutdown, ClockTable, StalenessPolicy};
 pub use shard::{Cell, PullSpec, RangePull, ShardedStore, SpecPull};
+pub use transport::retry::{FaultPlan, RetryConfig};
 pub use transport::{
     fetch_obs_stats, PsConnection, PsTcpServer, Transport, TransportError, TransportKind,
 };
@@ -241,6 +244,12 @@ impl ParameterServer {
 
     pub fn stats(&self) -> &PsStats {
         &self.stats
+    }
+
+    /// The server's metrics registry — the checkpoint writer hooks its
+    /// `ckpt.*` counters in here so `ps-stats` sees them live.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     /// Serve one SSP-gated pull: block until `round` is admitted, read

@@ -306,6 +306,69 @@ impl ShardedStore {
             .collect()
     }
 
+    /// Checkpoint export: every segment's current epoch as `(start,
+    /// epoch_version, slab)`. Cloning the `Arc` under the read lock is
+    /// the whole capture — immutable epochs make the snapshot consistent
+    /// and free, and the raw f32 image is bit-exact by construction.
+    pub fn segment_epochs(&self) -> Vec<(usize, u64, Arc<Vec<f32>>)> {
+        self.segments
+            .iter()
+            .map(|s| {
+                let epoch = s.epoch.read().expect("epoch lock poisoned");
+                (s.start, epoch.version, Arc::clone(&epoch.values))
+            })
+            .collect()
+    }
+
+    /// Checkpoint export: every hashed cell as `(key, cell)`, sorted by
+    /// key so the serialized bytes are deterministic.
+    pub fn hashed_cells(&self) -> Vec<(usize, Cell)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let map = shard.read().expect("shard lock poisoned");
+            out.extend(map.iter().map(|(&k, &c)| (k, c)));
+        }
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+
+    /// Checkpoint restore: install a saved epoch image into the segment
+    /// starting at `start`. Returns false (and changes nothing) if no
+    /// registered segment matches the image's start and length — the
+    /// checkpoint came from a differently-shaped run.
+    pub fn restore_segment(&self, start: usize, values: Vec<f32>, version: u64) -> bool {
+        match self.segments.iter().find(|s| s.start == start) {
+            Some(seg) if seg.len == values.len() => {
+                let mut epoch = seg.epoch.write().expect("epoch lock poisoned");
+                *epoch = Epoch { values: Arc::new(values), version };
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Checkpoint restore: reinstall saved hashed cells, preserving
+    /// their versions. Cells that now route to a dense segment (the
+    /// segment layout changed) land in the slab instead.
+    pub fn restore_cells(&self, cells: &[(usize, Cell)]) {
+        for &(key, cell) in cells {
+            match self.locate(key) {
+                Slot::Hashed { shard } => {
+                    self.hash_probes.fetch_add(1, Ordering::Relaxed);
+                    let mut map = self.shards[shard].write().expect("shard lock poisoned");
+                    map.insert(key, cell);
+                }
+                Slot::Dense { seg, off } => {
+                    let mut epoch =
+                        self.segments[seg].epoch.write().expect("epoch lock poisoned");
+                    let slab = self.cow_values(&mut epoch);
+                    slab[off] = cell.value as f32;
+                    epoch.version = epoch.version.max(cell.version);
+                }
+            }
+        }
+    }
+
     /// Cumulative hashed-path probe count (reads and writes that went
     /// through a hash map). Dense-segment accesses never count here.
     pub fn hash_probes(&self) -> u64 {
@@ -837,5 +900,29 @@ mod tests {
     #[should_panic(expected = "overlap")]
     fn overlapping_segments_rejected() {
         let _ = ShardedStore::with_segments(2, &[(0, 10), (5, 10)]);
+    }
+
+    #[test]
+    fn epoch_export_restore_is_bit_exact() {
+        let store = ShardedStore::with_segments(4, &[(0, 8)]);
+        store.publish_dense(&[0.1, -0.0, 3.5e-7, 4.0, 5.0, 6.0, 7.0, 8.0], 3);
+        store.publish(&[(100, 1e-300), (50, -2.5)], 4);
+        let epochs = store.segment_epochs();
+        let cells = store.hashed_cells();
+        assert_eq!(cells.iter().map(|&(k, _)| k).collect::<Vec<_>>(), vec![50, 100]);
+        let fresh = ShardedStore::with_segments(4, &[(0, 8)]);
+        for (start, version, slab) in epochs {
+            assert!(fresh.restore_segment(start, slab.to_vec(), version));
+        }
+        fresh.restore_cells(&cells);
+        // bitwise: the f32 image and every hashed cell survive intact
+        let (orig, back) = (store.read_range(0, 8), fresh.read_range(0, 8));
+        let bits = |r: &RangePull| r.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&orig), bits(&back));
+        assert_eq!(back.version(), 3);
+        assert_eq!(fresh.read(&[50, 100]), store.read(&[50, 100]));
+        // shape mismatch is refused, not corrupted
+        assert!(!fresh.restore_segment(0, vec![0.0; 4], 1));
+        assert!(!fresh.restore_segment(3, vec![0.0; 8], 1));
     }
 }

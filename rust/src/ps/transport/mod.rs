@@ -24,10 +24,12 @@
 //! SSP gate, so links are never shared between workers.
 
 pub mod inproc;
+pub mod retry;
 pub mod tcp;
 pub mod wire;
 
 pub use inproc::InProcTransport;
+pub use retry::{FaultPlan, InitShape, RetryConfig, RetryTransport};
 pub use tcp::{PsTcpServer, TcpTransport};
 
 use crate::config::PsConfig;
@@ -178,6 +180,26 @@ pub const COORDINATOR_ID: usize = u32::MAX as usize;
 enum Minter {
     InProc(Arc<ParameterServer>),
     Tcp(String),
+    /// TCP with the reconnecting retry wrapper (`[ps] retry_max` > 0 or
+    /// a fault plan): every link shares the run's session id, retry
+    /// knobs, and fault plan, plus the run-wide retry meters.
+    Retry {
+        addr: String,
+        session: u64,
+        shape: InitShape,
+        retry: RetryConfig,
+        plan: Option<Arc<FaultPlan>>,
+    },
+}
+
+/// Session ids distinguish "this run reconnecting" from "a new run" at
+/// the server's `Init` handler. `pid << 32 | counter` is unique across
+/// processes on one host and across back-to-back runs in one process —
+/// no wall clock or OS randomness, so runs stay reproducible.
+fn mint_session() -> u64 {
+    static SESSION_COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = SESSION_COUNTER.fetch_add(1, Ordering::Relaxed) + 1;
+    ((std::process::id() as u64) << 32) | (n & 0xffff_ffff)
 }
 
 /// A run's connection to its parameter server: the coordinator link
@@ -188,6 +210,11 @@ pub struct PsConnection {
     coord: Box<dyn Transport>,
     minter: Minter,
     socket_bytes: Arc<AtomicU64>,
+    /// Successful reconnects across every link (0 without the retry
+    /// wrapper) — surfaced as `net.reconnects`.
+    reconnects: Arc<AtomicU64>,
+    /// Total backoff sleep across every link, µs — `net.retry_backoff_us`.
+    retry_backoff_us: Arc<AtomicU64>,
 }
 
 impl PsConnection {
@@ -202,6 +229,8 @@ impl PsConnection {
         segments: &[(usize, usize)],
     ) -> Result<Self, TransportError> {
         let socket_bytes = Arc::new(AtomicU64::new(0));
+        let reconnects = Arc::new(AtomicU64::new(0));
+        let retry_backoff_us = Arc::new(AtomicU64::new(0));
         match cfg.transport {
             TransportKind::InProc => {
                 let server = Arc::new(ParameterServer::with_segments(
@@ -214,19 +243,68 @@ impl PsConnection {
                     coord: Box::new(InProcTransport::new(Arc::clone(&server), COORDINATOR_ID)),
                     minter: Minter::InProc(server),
                     socket_bytes,
+                    reconnects,
+                    retry_backoff_us,
                 })
             }
             TransportKind::Tcp => {
+                let session = mint_session();
+                // The retry wrapper engages when retries are enabled OR
+                // a fault plan is set (injected faults without retries
+                // would just kill the run).
+                if cfg.retry_max > 0 || !cfg.fault_plan.is_empty() {
+                    let plan = if cfg.fault_plan.is_empty() {
+                        None
+                    } else {
+                        Some(Arc::new(FaultPlan::parse(&cfg.fault_plan).map_err(|e| {
+                            TransportError::Protocol(format!("bad [ps] fault_plan: {e}"))
+                        })?))
+                    };
+                    let retry =
+                        RetryConfig { max: cfg.retry_max, backoff_ms: cfg.retry_backoff_ms };
+                    let shape = InitShape {
+                        shards: cfg.shards,
+                        workers,
+                        policy: cfg.policy(),
+                        segments: segments.to_vec(),
+                    };
+                    let coord = RetryTransport::establish(
+                        &cfg.addr,
+                        COORDINATOR_ID,
+                        session,
+                        shape.clone(),
+                        retry,
+                        plan.clone(),
+                        Arc::clone(&socket_bytes),
+                        Arc::clone(&reconnects),
+                        Arc::clone(&retry_backoff_us),
+                    )?;
+                    return Ok(PsConnection {
+                        coord: Box::new(coord),
+                        minter: Minter::Retry {
+                            addr: cfg.addr.clone(),
+                            session,
+                            shape,
+                            retry,
+                            plan,
+                        },
+                        socket_bytes,
+                        reconnects,
+                        retry_backoff_us,
+                    });
+                }
                 let mut coord = TcpTransport::connect(
                     &cfg.addr,
                     COORDINATOR_ID,
                     Arc::clone(&socket_bytes),
                 )?;
-                coord.init(cfg.shards, workers, cfg.policy(), segments)?;
+                coord.init(session, cfg.shards, workers, cfg.policy(), segments)?;
                 Ok(PsConnection {
                     coord: Box::new(coord),
                     minter: Minter::Tcp(cfg.addr.clone()),
                     socket_bytes,
+                    reconnects,
+                    retry_backoff_us,
                 })
             }
         }
@@ -245,6 +323,19 @@ impl PsConnection {
                 worker,
                 Arc::clone(&self.socket_bytes),
             )?)),
+            Minter::Retry { addr, session, shape, retry, plan } => {
+                Ok(Box::new(RetryTransport::establish(
+                    addr,
+                    worker,
+                    *session,
+                    shape.clone(),
+                    *retry,
+                    plan.clone(),
+                    Arc::clone(&self.socket_bytes),
+                    Arc::clone(&self.reconnects),
+                    Arc::clone(&self.retry_backoff_us),
+                )?))
+            }
         }
     }
 
@@ -259,6 +350,17 @@ impl PsConnection {
     /// modeled `net_bytes` meter.
     pub fn socket_bytes(&self) -> u64 {
         self.socket_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Successful reconnects across every link this connection minted
+    /// (0 unless the retry wrapper is engaged).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Total retry backoff slept across every link, in microseconds.
+    pub fn retry_backoff_us(&self) -> u64 {
+        self.retry_backoff_us.load(Ordering::Relaxed)
     }
 }
 

@@ -1,0 +1,763 @@
+//! Client-side fault tolerance: [`RetryTransport`] wraps the TCP link
+//! with reconnect + capped exponential backoff, and
+//! [`FaultInjectTransport`] is the deterministic fault harness that
+//! proves every retry path in CI instead of by luck.
+//!
+//! The retry contract is *semantic invisibility*: a transient socket
+//! fault must not change what the run computes. That holds because
+//! every RPC is idempotent once the proto-v3 pieces are in place —
+//! re-`Init` with the run's session id reattaches instead of zeroing
+//! the server, a retried `Flush` reuses its per-worker seq so the
+//! server applies it at most once, `Publish`/`PublishRange` overwrite,
+//! and `Advance` is a monotonic max. Staleness-0 runs under injected
+//! faults are therefore bitwise identical to fault-free runs (pinned
+//! by `tests/ps_faults.rs`).
+//!
+//! Error classification: only [`TransportError::Io`] is retriable (the
+//! carriage failed; the request may or may not have been processed).
+//! `Protocol`/`Remote` mean the peer answered and said no — retrying
+//! cannot help — and `Shutdown` is the clean end-of-run signal, never
+//! retried. Backoff sleeps affect wall-clock only, never arithmetic,
+//! so determinism is untouched.
+
+use super::tcp::TcpTransport;
+use super::{PullReply, Transport, TransportError};
+use crate::obs::ObsSnapshot;
+use crate::ps::clock::StalenessPolicy;
+use crate::ps::shard::PullSpec;
+use crate::ps::StatsSnapshot;
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Retry/backoff knobs (`[ps] retry_max` / `retry_backoff_ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryConfig {
+    /// Reconnect-and-retry attempts per operation (0 = fail fast, the
+    /// pre-retry behaviour).
+    pub max: usize,
+    /// First backoff sleep; doubles per attempt up to
+    /// [`BACKOFF_CAP_MS`], jittered to 50–100% of the nominal value.
+    pub backoff_ms: u64,
+}
+
+/// Ceiling on one backoff sleep.
+pub const BACKOFF_CAP_MS: u64 = 2_000;
+
+/// Which RPC an injected fault may target (`ops=` in a fault plan).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Pull,
+    Flush,
+    Publish,
+    PublishRange,
+    Advance,
+    Stats,
+    ObsStats,
+    ShutdownClock,
+}
+
+impl Op {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "pull" => Op::Pull,
+            "flush" => Op::Flush,
+            "publish" => Op::Publish,
+            "publish_range" => Op::PublishRange,
+            "advance" => Op::Advance,
+            "stats" => Op::Stats,
+            "obs_stats" => Op::ObsStats,
+            "shutdown_clock" => Op::ShutdownClock,
+            other => anyhow::bail!(
+                "unknown op {other} (pull|flush|publish|publish_range|advance|stats|\
+                 obs_stats|shutdown_clock)"
+            ),
+        })
+    }
+}
+
+/// What an injected fault does to the RPC it hits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fault {
+    /// Fail *before* sending: the server never saw the request. Retry
+    /// reconnects — this is what drives `net.reconnects` in tests.
+    Drop,
+    /// Perform the RPC, then report an I/O error anyway — the "reply
+    /// lost on the wire" case that exercises server-side idempotence
+    /// (a retried flush must not double-apply).
+    ErrAfter,
+    /// Sleep `delay_ms`, then proceed normally.
+    Delay,
+}
+
+/// A deterministic fault schedule, parsed from `[ps] fault_plan` /
+/// `--fault-plan`. Comma-separated `key=value` pairs:
+///
+/// ```text
+/// seed=42,drop=0.05,err=0.02,delay=0.1,delay_ms=3,ops=pull|flush
+/// seed=7,every=50,drop=1,ops=flush
+/// ```
+///
+/// `drop`/`err`/`delay` are per-RPC probabilities drawn from a seeded
+/// RNG (one draw per matching RPC; cumulative thresholds, so they must
+/// sum to <= 1). `every=N` switches to a deterministic schedule — every
+/// Nth matching RPC gets the highest-priority enabled kind (drop > err
+/// > delay). `ops` restricts which RPCs can fault (`|`-separated;
+/// unset = all). Each link's schedule is seeded `seed ^ worker_id` and
+/// persists across reconnects.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    drop_p: f64,
+    err_p: f64,
+    delay_p: f64,
+    delay_ms: u64,
+    every: u64,
+    /// Empty = every op is eligible.
+    ops: Vec<Op>,
+}
+
+impl FaultPlan {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut plan = FaultPlan {
+            seed: 0,
+            drop_p: 0.0,
+            err_p: 0.0,
+            delay_p: 0.0,
+            delay_ms: 1,
+            every: 0,
+            ops: Vec::new(),
+        };
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault plan entry {part} is not key=value"))?;
+            let prob = |v: &str| -> anyhow::Result<f64> {
+                let p: f64 = v.parse()?;
+                anyhow::ensure!((0.0..=1.0).contains(&p), "probability {p} outside [0, 1]");
+                Ok(p)
+            };
+            match key {
+                "seed" => plan.seed = value.parse()?,
+                "drop" => plan.drop_p = prob(value)?,
+                "err" => plan.err_p = prob(value)?,
+                "delay" => plan.delay_p = prob(value)?,
+                "delay_ms" => plan.delay_ms = value.parse()?,
+                "every" => plan.every = value.parse()?,
+                "ops" => {
+                    plan.ops = value
+                        .split('|')
+                        .map(str::trim)
+                        .filter(|p| !p.is_empty())
+                        .map(Op::parse)
+                        .collect::<anyhow::Result<_>>()?;
+                }
+                other => anyhow::bail!(
+                    "unknown fault plan key {other} (seed|drop|err|delay|delay_ms|every|ops)"
+                ),
+            }
+        }
+        anyhow::ensure!(
+            plan.drop_p + plan.err_p + plan.delay_p <= 1.0 + 1e-9,
+            "drop + err + delay probabilities exceed 1"
+        );
+        Ok(plan)
+    }
+
+    fn applies(&self, op: Op) -> bool {
+        self.ops.is_empty() || self.ops.contains(&op)
+    }
+
+    /// The kind an `every=N` schedule injects: highest-priority kind
+    /// with a nonzero probability knob (the knobs double as enables),
+    /// defaulting to `Drop`.
+    fn primary(&self) -> Fault {
+        if self.drop_p > 0.0 {
+            Fault::Drop
+        } else if self.err_p > 0.0 {
+            Fault::ErrAfter
+        } else if self.delay_p > 0.0 {
+            Fault::Delay
+        } else {
+            Fault::Drop
+        }
+    }
+}
+
+/// Per-link fault progress: the matching-RPC index and the seeded RNG.
+/// Lives in an `Arc<Mutex<_>>` shared with the link's retry wrapper so
+/// the schedule continues across reconnects instead of restarting.
+pub struct FaultState {
+    rpc_index: u64,
+    rng: Rng,
+}
+
+impl FaultState {
+    fn new(seed: u64) -> Self {
+        FaultState { rpc_index: 0, rng: Rng::new(seed) }
+    }
+}
+
+fn injected_io(message: &str) -> TransportError {
+    TransportError::Io(std::io::Error::new(std::io::ErrorKind::ConnectionReset, message))
+}
+
+/// Wraps any [`Transport`] and injects the plan's faults. Stacks
+/// *below* [`RetryTransport`] so injected I/O errors exercise the real
+/// reconnect path.
+pub struct FaultInjectTransport {
+    inner: Box<dyn Transport>,
+    plan: Arc<FaultPlan>,
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl FaultInjectTransport {
+    /// Wrap `inner` with a fresh schedule for `worker` (seeded
+    /// `plan.seed ^ worker`).
+    pub fn new(inner: Box<dyn Transport>, plan: Arc<FaultPlan>, worker: usize) -> Self {
+        let state = Arc::new(Mutex::new(FaultState::new(plan.seed ^ worker as u64)));
+        FaultInjectTransport { inner, plan, state }
+    }
+
+    /// Wrap `inner` continuing an existing schedule (the reconnect
+    /// path: the new socket keeps the old link's fault position).
+    pub fn with_state(
+        inner: Box<dyn Transport>,
+        plan: Arc<FaultPlan>,
+        state: Arc<Mutex<FaultState>>,
+    ) -> Self {
+        FaultInjectTransport { inner, plan, state }
+    }
+
+    /// Handle to the schedule state, for re-wrapping after reconnect.
+    pub fn state(&self) -> Arc<Mutex<FaultState>> {
+        Arc::clone(&self.state)
+    }
+
+    /// Decide this RPC's fate. Only plan-matching ops consume schedule
+    /// positions/draws, so `every=N` means every Nth *matching* RPC.
+    fn decide(&mut self, op: Op) -> Option<Fault> {
+        if !self.plan.applies(op) {
+            return None;
+        }
+        let mut st = self.state.lock().expect("fault state lock");
+        st.rpc_index += 1;
+        if self.plan.every > 0 {
+            return (st.rpc_index % self.plan.every == 0).then(|| self.plan.primary());
+        }
+        let r = st.rng.f64();
+        if r < self.plan.drop_p {
+            Some(Fault::Drop)
+        } else if r < self.plan.drop_p + self.plan.err_p {
+            Some(Fault::ErrAfter)
+        } else if r < self.plan.drop_p + self.plan.err_p + self.plan.delay_p {
+            Some(Fault::Delay)
+        } else {
+            None
+        }
+    }
+
+    fn run<T>(
+        &mut self,
+        op: Op,
+        exec: impl FnOnce(&mut dyn Transport) -> Result<T, TransportError>,
+    ) -> Result<T, TransportError> {
+        match self.decide(op) {
+            Some(Fault::Drop) => {
+                Err(injected_io("fault injection: dropped before send"))
+            }
+            Some(Fault::ErrAfter) => {
+                exec(self.inner.as_mut())?;
+                Err(injected_io("fault injection: reply lost after delivery"))
+            }
+            Some(Fault::Delay) => {
+                std::thread::sleep(std::time::Duration::from_millis(self.plan.delay_ms));
+                exec(self.inner.as_mut())
+            }
+            None => exec(self.inner.as_mut()),
+        }
+    }
+}
+
+impl Transport for FaultInjectTransport {
+    fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
+        self.run(Op::Pull, |t| t.pull(spec, round))
+    }
+
+    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
+        self.run(Op::Flush, |t| t.flush(deltas, round))
+    }
+
+    fn publish(
+        &mut self,
+        entries: &[(usize, f64)],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.run(Op::Publish, |t| t.publish(entries, version))
+    }
+
+    fn publish_range(
+        &mut self,
+        start: usize,
+        values: &[f64],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.run(Op::PublishRange, |t| t.publish_range(start, values, version))
+    }
+
+    fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
+        self.run(Op::Advance, |t| t.advance_applied(applied))
+    }
+
+    fn stats(&mut self) -> Result<StatsSnapshot, TransportError> {
+        self.run(Op::Stats, |t| t.stats())
+    }
+
+    fn obs_stats(&mut self) -> Result<ObsSnapshot, TransportError> {
+        self.run(Op::ObsStats, |t| t.obs_stats())
+    }
+
+    fn shutdown_clock(&mut self) -> Result<(), TransportError> {
+        self.run(Op::ShutdownClock, |t| t.shutdown_clock())
+    }
+}
+
+/// Everything a reconnect must replay to rejoin its run: the `Init`
+/// shape (validated by the server against the hosted run) plus the
+/// session that makes the re-`Init` idempotent.
+#[derive(Clone, Debug)]
+pub struct InitShape {
+    pub shards: usize,
+    pub workers: usize,
+    pub policy: StalenessPolicy,
+    pub segments: Vec<(usize, usize)>,
+}
+
+/// The reconnecting TCP link: runs each operation against an inner
+/// [`TcpTransport`] (optionally fault-wrapped) and, on a retriable
+/// error, reconnects with capped exponential backoff + jitter, replays
+/// the `Init` handshake (same session — the server reattaches) and the
+/// last clock advance, then retries the operation.
+pub struct RetryTransport {
+    addr: String,
+    worker: usize,
+    session: u64,
+    shape: InitShape,
+    cfg: RetryConfig,
+    socket_bytes: Arc<AtomicU64>,
+    /// This link's monotonic flush seq, shared with every inner
+    /// `TcpTransport` it ever mints so seqs survive reconnects.
+    flush_seq: Arc<AtomicU64>,
+    plan: Option<(Arc<FaultPlan>, Arc<Mutex<FaultState>>)>,
+    /// `None` between a failure and the next (re)connect.
+    inner: Option<Box<dyn Transport>>,
+    /// Replayed after re-`Init`: a server restored from a checkpoint
+    /// may hold an older applied clock, and without the replay the SSP
+    /// gate would park every worker forever.
+    last_advance: Option<u64>,
+    /// Backoff jitter only — never feeds arithmetic.
+    rng: Rng,
+    /// Shared run-wide meters (`net.reconnects`, `net.retry_backoff_us`).
+    reconnects: Arc<AtomicU64>,
+    backoff_us: Arc<AtomicU64>,
+}
+
+/// The shared backoff arithmetic: sleep `backoff_ms * 2^(attempt-1)`
+/// capped at [`BACKOFF_CAP_MS`], jittered to 50–100% by `rng`, metering
+/// the slept microseconds into `meter`.
+fn backoff_sleep(cfg: &RetryConfig, rng: &mut Rng, meter: &AtomicU64, attempt: usize) {
+    let shift = (attempt.saturating_sub(1)).min(20) as u32;
+    let nominal = cfg.backoff_ms.saturating_mul(1u64 << shift).min(BACKOFF_CAP_MS);
+    let us = (nominal as f64 * 1000.0 * (0.5 + 0.5 * rng.f64())) as u64;
+    meter.fetch_add(us, Ordering::Relaxed);
+    std::thread::sleep(std::time::Duration::from_micros(us));
+}
+
+impl RetryTransport {
+    /// Connect + `Init` for `worker`. The initial connect retries I/O
+    /// failures under the same backoff budget as a reconnect (a worker
+    /// may come up while the server is mid-restart); with `cfg.max`
+    /// of 0 it fails fast, matching [`TcpTransport::connect`]'s
+    /// posture. Connect attempts are not counted as reconnects — that
+    /// meter records re-established links only.
+    #[allow(clippy::too_many_arguments)]
+    pub fn establish(
+        addr: &str,
+        worker: usize,
+        session: u64,
+        shape: InitShape,
+        cfg: RetryConfig,
+        plan: Option<Arc<FaultPlan>>,
+        socket_bytes: Arc<AtomicU64>,
+        reconnects: Arc<AtomicU64>,
+        backoff_us: Arc<AtomicU64>,
+    ) -> Result<Self, TransportError> {
+        let flush_seq = Arc::new(AtomicU64::new(0));
+        // Jitter decorrelates concurrent reconnect storms; seeding from
+        // (session, worker) keeps runs reproducible.
+        let mut rng = Rng::new(session ^ (worker as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let mut attempt = 0usize;
+        let link = loop {
+            let connected = TcpTransport::connect_with(
+                addr,
+                worker,
+                Arc::clone(&socket_bytes),
+                Arc::clone(&flush_seq),
+            )
+            .and_then(|mut link| {
+                link.init(session, shape.shards, shape.workers, shape.policy, &shape.segments)?;
+                Ok(link)
+            });
+            match connected {
+                Ok(link) => break link,
+                Err(e) if Self::retriable(&e) && attempt < cfg.max => {
+                    attempt += 1;
+                    backoff_sleep(&cfg, &mut rng, &backoff_us, attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        let plan = plan.map(|p| {
+            let state = Arc::new(Mutex::new(FaultState::new(p.seed ^ worker as u64)));
+            (p, state)
+        });
+        let inner: Box<dyn Transport> = match &plan {
+            Some((p, state)) => Box::new(FaultInjectTransport::with_state(
+                Box::new(link),
+                Arc::clone(p),
+                Arc::clone(state),
+            )),
+            None => Box::new(link),
+        };
+        Ok(RetryTransport {
+            addr: addr.to_string(),
+            worker,
+            session,
+            shape,
+            cfg,
+            socket_bytes,
+            flush_seq,
+            plan,
+            inner: Some(inner),
+            last_advance: None,
+            rng,
+            reconnects,
+            backoff_us,
+        })
+    }
+
+    /// Only carriage failures are worth retrying: the peer may never
+    /// have seen the request. Everything else is an answer.
+    fn retriable(e: &TransportError) -> bool {
+        matches!(e, TransportError::Io(_))
+    }
+
+    /// Sleep `backoff_ms * 2^(attempt-1)` capped at [`BACKOFF_CAP_MS`],
+    /// jittered to 50–100%, and meter the slept time.
+    fn backoff(&mut self, attempt: usize) {
+        backoff_sleep(&self.cfg, &mut self.rng, &self.backoff_us, attempt);
+    }
+
+    /// Fresh socket + idempotent re-`Init` (same session — the live
+    /// server validates the shape and reattaches; a restarted blank
+    /// server installs fresh zeroed state instead, see the module docs
+    /// caveat) + replay of the last clock advance, re-wrapped with the
+    /// link's persistent fault schedule.
+    fn reconnect(&mut self) -> Result<(), TransportError> {
+        let mut link = TcpTransport::connect_with(
+            &self.addr,
+            self.worker,
+            Arc::clone(&self.socket_bytes),
+            Arc::clone(&self.flush_seq),
+        )?;
+        link.init(
+            self.session,
+            self.shape.shards,
+            self.shape.workers,
+            self.shape.policy,
+            &self.shape.segments,
+        )?;
+        if let Some(applied) = self.last_advance {
+            link.advance_applied(applied)?;
+        }
+        let inner: Box<dyn Transport> = match &self.plan {
+            Some((p, state)) => Box::new(FaultInjectTransport::with_state(
+                Box::new(link),
+                Arc::clone(p),
+                Arc::clone(state),
+            )),
+            None => Box::new(link),
+        };
+        self.inner = Some(inner);
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn with_retry<T>(
+        &mut self,
+        mut op: impl FnMut(&mut dyn Transport) -> Result<T, TransportError>,
+    ) -> Result<T, TransportError> {
+        let mut attempt = 0usize;
+        loop {
+            if self.inner.is_none() {
+                match self.reconnect() {
+                    Ok(()) => {}
+                    Err(e) if Self::retriable(&e) && attempt < self.cfg.max => {
+                        attempt += 1;
+                        self.backoff(attempt);
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            let link = self.inner.as_mut().expect("link present after reconnect");
+            match op(link.as_mut()) {
+                Ok(v) => return Ok(v),
+                Err(e) if Self::retriable(&e) => {
+                    // The socket is suspect either way; reconnect on
+                    // the next attempt (or leave it down on give-up).
+                    self.inner = None;
+                    if attempt >= self.cfg.max {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.backoff(attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Transport for RetryTransport {
+    fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
+        self.with_retry(|t| t.pull(spec, round))
+    }
+
+    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
+        // Every attempt of this flush must carry the SAME seq: rewind
+        // the shared counter to its pre-attempt value so the inner
+        // transport re-mints it, and the server's dedup can recognize
+        // a retry whose first delivery actually landed.
+        let seq = Arc::clone(&self.flush_seq);
+        let base = seq.load(Ordering::SeqCst);
+        self.with_retry(move |t| {
+            seq.store(base, Ordering::SeqCst);
+            t.flush(deltas, round)
+        })
+    }
+
+    fn publish(
+        &mut self,
+        entries: &[(usize, f64)],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.with_retry(|t| t.publish(entries, version))
+    }
+
+    fn publish_range(
+        &mut self,
+        start: usize,
+        values: &[f64],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.with_retry(|t| t.publish_range(start, values, version))
+    }
+
+    fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
+        self.with_retry(|t| t.advance_applied(applied))?;
+        self.last_advance = Some(applied);
+        Ok(())
+    }
+
+    fn stats(&mut self) -> Result<StatsSnapshot, TransportError> {
+        self.with_retry(|t| t.stats())
+    }
+
+    fn obs_stats(&mut self) -> Result<ObsSnapshot, TransportError> {
+        self.with_retry(|t| t.obs_stats())
+    }
+
+    fn shutdown_clock(&mut self) -> Result<(), TransportError> {
+        self.with_retry(|t| t.shutdown_clock())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::transport::tcp::PsTcpServer;
+    use crate::ps::transport::COORDINATOR_ID;
+
+    #[test]
+    fn fault_plan_parses_and_rejects_garbage() {
+        let plan = FaultPlan::parse("seed=42,drop=0.1,err=0.05,delay_ms=3,ops=pull|flush").unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.delay_ms, 3);
+        assert!(plan.applies(Op::Pull) && plan.applies(Op::Flush));
+        assert!(!plan.applies(Op::Stats));
+        assert_eq!(plan.primary(), Fault::Drop);
+
+        let every = FaultPlan::parse("seed=7,every=50,err=1,ops=flush").unwrap();
+        assert_eq!(every.every, 50);
+        assert_eq!(every.primary(), Fault::ErrAfter);
+
+        let all = FaultPlan::parse("drop=0.5").unwrap();
+        assert!(all.applies(Op::ShutdownClock), "no ops filter = every op");
+
+        assert!(FaultPlan::parse("drop=1.5").is_err(), "probability > 1");
+        assert!(FaultPlan::parse("drop=0.6,err=0.6").is_err(), "probs sum > 1");
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("seed").is_err(), "not key=value");
+        assert!(FaultPlan::parse("ops=carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_and_filtered() {
+        let plan = Arc::new(FaultPlan::parse("seed=9,drop=0.3,err=0.2,ops=pull").unwrap());
+        // Two harnesses over the same plan+worker produce the same
+        // fault sequence; non-matching ops consume nothing.
+        let mut a = FaultInjectTransport::new(Box::new(NullTransport), Arc::clone(&plan), 3);
+        let mut b = FaultInjectTransport::new(Box::new(NullTransport), Arc::clone(&plan), 3);
+        let seq_a: Vec<_> = (0..64)
+            .map(|i| {
+                if i % 4 == 0 {
+                    assert_eq!(a.decide(Op::Stats), None, "filtered op never faults");
+                }
+                a.decide(Op::Pull)
+            })
+            .collect();
+        let seq_b: Vec<_> = (0..64).map(|_| b.decide(Op::Pull)).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.iter().any(|f| f.is_some()), "some fault fires in 64 draws");
+        // every=N is exactly periodic over matching RPCs
+        let every = Arc::new(FaultPlan::parse("every=3,drop=1,ops=pull").unwrap());
+        let mut c = FaultInjectTransport::new(Box::new(NullTransport), every, 0);
+        let fired: Vec<bool> = (0..9).map(|_| c.decide(Op::Pull).is_some()).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, true, false, false, true]);
+    }
+
+    /// Inert transport for schedule-only tests.
+    struct NullTransport;
+
+    impl Transport for NullTransport {
+        fn pull(&mut self, _: &PullSpec, _: u64) -> Result<PullReply, TransportError> {
+            Ok(PullReply { ranges: vec![], cells: vec![], gap: 0, waited: false, gate_us: 0 })
+        }
+        fn flush(&mut self, _: &[(usize, f64)], _: u64) -> Result<(), TransportError> {
+            Ok(())
+        }
+        fn publish(&mut self, _: &[(usize, f64)], _: u64) -> Result<(), TransportError> {
+            Ok(())
+        }
+        fn publish_range(&mut self, _: usize, _: &[f64], _: u64) -> Result<(), TransportError> {
+            Ok(())
+        }
+        fn advance_applied(&mut self, _: u64) -> Result<(), TransportError> {
+            Ok(())
+        }
+        fn stats(&mut self) -> Result<StatsSnapshot, TransportError> {
+            Ok(StatsSnapshot::default())
+        }
+        fn obs_stats(&mut self) -> Result<ObsSnapshot, TransportError> {
+            Err(TransportError::Remote("null".into()))
+        }
+        fn shutdown_clock(&mut self) -> Result<(), TransportError> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn dropped_rpcs_reconnect_and_lost_replies_never_double_apply() {
+        let host = PsTcpServer::bind("127.0.0.1:0").unwrap();
+        let addr = host.local_addr().to_string();
+        let shape = InitShape {
+            shards: 2,
+            workers: 1,
+            policy: StalenessPolicy::Bounded(0),
+            segments: vec![(0, 4)],
+        };
+        let cfg = RetryConfig { max: 4, backoff_ms: 1 };
+        let reconnects = Arc::new(AtomicU64::new(0));
+        let backoff_us = Arc::new(AtomicU64::new(0));
+        let mut coord = RetryTransport::establish(
+            &addr,
+            COORDINATOR_ID,
+            7001,
+            shape.clone(),
+            cfg,
+            None,
+            Arc::new(AtomicU64::new(0)),
+            Arc::clone(&reconnects),
+            Arc::clone(&backoff_us),
+        )
+        .unwrap();
+        coord.publish_range(0, &[1.0, 2.0, 3.0, 4.0], 0).unwrap();
+
+        // Worker link: drop every 2nd pull-or-flush before sending, so
+        // each faulted RPC forces a real reconnect + re-Init.
+        let plan = Arc::new(FaultPlan::parse("every=2,drop=1,ops=pull|flush").unwrap());
+        let mut worker = RetryTransport::establish(
+            &addr,
+            0,
+            7001,
+            shape,
+            cfg,
+            Some(plan),
+            Arc::new(AtomicU64::new(0)),
+            Arc::clone(&reconnects),
+            Arc::clone(&backoff_us),
+        )
+        .unwrap();
+        let reply = worker.pull(&PullSpec::from_ranges(vec![(0, 4)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[1.0f32, 2.0, 3.0, 4.0]);
+        // pull #1 passed, flush is matching-RPC #2 -> dropped once,
+        // retried over a fresh link with the same seq
+        worker.flush(&[(0, 0.5)], 0).unwrap();
+        assert!(reconnects.load(Ordering::Relaxed) >= 1, "drop faults must reconnect");
+        assert!(backoff_us.load(Ordering::Relaxed) > 0, "reconnects must meter backoff");
+
+        let stats = coord.stats().unwrap();
+        assert_eq!(stats.flushes, 1, "the dropped flush was applied exactly once");
+        host.stop();
+    }
+
+    #[test]
+    fn err_after_faults_exercise_flush_dedup() {
+        let host = PsTcpServer::bind("127.0.0.1:0").unwrap();
+        let addr = host.local_addr().to_string();
+        let shape = InitShape {
+            shards: 2,
+            workers: 1,
+            policy: StalenessPolicy::Async,
+            segments: vec![(0, 2)],
+        };
+        let cfg = RetryConfig { max: 4, backoff_ms: 1 };
+        let zeros = || Arc::new(AtomicU64::new(0));
+        let mut coord = RetryTransport::establish(
+            &addr, COORDINATOR_ID, 7002, shape.clone(), cfg, None, zeros(), zeros(), zeros(),
+        )
+        .unwrap();
+        // err=1 on flush: every flush IS delivered, then its reply is
+        // "lost" — the retry resends the same seq and the server must
+        // dedup it, or the deltas double-apply.
+        let plan = Arc::new(FaultPlan::parse("every=2,err=1,ops=flush").unwrap());
+        let mut worker = RetryTransport::establish(
+            &addr, 0, 7002, shape, cfg, Some(plan), zeros(), zeros(), zeros(),
+        )
+        .unwrap();
+        worker.flush(&[(0, 1.0)], 0).unwrap(); // passes clean
+        worker.flush(&[(0, 1.0)], 1).unwrap(); // delivered, reply lost, resent
+        worker.flush(&[(0, 1.0)], 2).unwrap(); // passes clean
+        worker.flush(&[(0, 1.0)], 3).unwrap(); // delivered, reply lost, resent
+        let reply = worker.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
+        assert_eq!(
+            reply.ranges[0].values()[0],
+            4.0f32,
+            "4 flushes of +1.0 must land exactly once each"
+        );
+        let stats = coord.stats().unwrap();
+        assert_eq!(stats.flushes, 4, "deduped retries never re-apply");
+        host.stop();
+    }
+}

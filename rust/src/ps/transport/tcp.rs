@@ -5,7 +5,12 @@
 //! coordinator sends `Init` (shape: shards, workers, policy, dense
 //! segments) and then seeds state with `PublishRange`, so one server
 //! process serves any `ModelProblem` and any number of back-to-back
-//! runs (each `Init` replaces the previous server instance).
+//! runs (each `Init` replaces the previous server instance). Proto v3
+//! adds fault tolerance on top: an `Init` whose nonzero session id
+//! matches the hosted run *reattaches* instead of replacing (the
+//! retry wrapper's idempotent re-handshake), `Flush` carries a
+//! per-worker seq the server dedups, and `bind_with` can periodically
+//! checkpoint the hosted run and restore it on restart.
 //!
 //! Threading: one OS thread per connection. This is deliberate — a
 //! worker's pull legitimately *blocks* at the server-side SSP gate
@@ -19,6 +24,7 @@
 use super::wire::{self, Reply, Request};
 use super::{PullReply, Transport, TransportError};
 use crate::obs::ObsSnapshot;
+use crate::ps::checkpoint::{read_checkpoint, CheckpointConfig, CheckpointImage};
 use crate::ps::clock::{ClockShutdown, StalenessPolicy};
 use crate::ps::shard::PullSpec;
 use crate::ps::{ParameterServer, StatsSnapshot};
@@ -35,6 +41,11 @@ pub struct TcpTransport {
     stream: TcpStream,
     worker: usize,
     socket_bytes: Arc<AtomicU64>,
+    /// This worker's monotonic flush seq (proto v3 dedup key). Shared
+    /// via [`TcpTransport::connect_with`] so a retry wrapper's
+    /// replacement sockets continue the same sequence — a retried
+    /// flush rewinds the counter and re-mints the *same* seq.
+    flush_seq: Arc<AtomicU64>,
     /// Reusable receive buffer (frames overwrite it).
     buf: Vec<u8>,
 }
@@ -47,23 +58,37 @@ impl TcpTransport {
         worker: usize,
         socket_bytes: Arc<AtomicU64>,
     ) -> Result<Self, TransportError> {
+        Self::connect_with(addr, worker, socket_bytes, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// [`TcpTransport::connect`] with a caller-owned flush-seq counter,
+    /// so a reconnecting wrapper keeps one sequence across sockets.
+    pub fn connect_with(
+        addr: &str,
+        worker: usize,
+        socket_bytes: Arc<AtomicU64>,
+        flush_seq: Arc<AtomicU64>,
+    ) -> Result<Self, TransportError> {
         let stream = TcpStream::connect(addr)?;
         // One small frame per RPC: Nagle would serialize the whole run
         // onto 40ms ACK-delay ticks.
         stream.set_nodelay(true)?;
-        Ok(TcpTransport { stream, worker, socket_bytes, buf: Vec::new() })
+        Ok(TcpTransport { stream, worker, socket_bytes, flush_seq, buf: Vec::new() })
     }
 
-    /// Send `Init`, (re)configuring the hosted server for this run.
+    /// Send `Init`, (re)configuring the hosted server for this run. A
+    /// nonzero `session` matching the hosted run reattaches to it
+    /// (idempotent re-`Init` after a reconnect) instead of replacing.
     pub fn init(
         &mut self,
+        session: u64,
         shards: usize,
         workers: usize,
         policy: StalenessPolicy,
         segments: &[(usize, usize)],
     ) -> Result<(), TransportError> {
         let req =
-            Request::Init { shards, workers, policy, segments: segments.to_vec() };
+            Request::Init { session, shards, workers, policy, segments: segments.to_vec() };
         match self.rpc(&req)? {
             Reply::Ok => Ok(()),
             other => Err(unexpected(&other)),
@@ -103,7 +128,8 @@ impl Transport for TcpTransport {
     }
 
     fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
-        match self.exchange(wire::encode_flush(self.worker, round, deltas))? {
+        let seq = self.flush_seq.fetch_add(1, Ordering::SeqCst) + 1;
+        match self.exchange(wire::encode_flush(self.worker, round, seq, deltas))? {
             Reply::Ok => Ok(()),
             other => Err(unexpected(&other)),
         }
@@ -164,12 +190,25 @@ impl Transport for TcpTransport {
 // ---- server ------------------------------------------------------------
 
 struct ServerState {
-    /// The hosted server; `None` until the first `Init` arrives.
+    /// The hosted server; `None` until the first `Init` arrives (or a
+    /// checkpoint restore pre-installs one at bind time).
     server: Option<Arc<ParameterServer>>,
+    /// The hosted run's session id (0 = pre-session run): the key that
+    /// lets a reconnecting client's re-`Init` reattach.
+    session: u64,
+    /// Highest flush seq applied per worker — the dedup ledger that
+    /// makes retried flushes exactly-once. Guarded by the same lock as
+    /// the apply (see the `Flush` arm), and checkpointed with the run.
+    flush_seqs: Vec<u64>,
+    /// Applied-clock advances served for this run (periodic-checkpoint
+    /// cadence counter).
+    clock_ticks: u64,
 }
 
 struct ServerShared {
     state: Mutex<ServerState>,
+    /// Checkpointing, when enabled (`--checkpoint-dir`).
+    ckpt: Option<CheckpointConfig>,
     /// Signaled on `Init` (and on stop) so early worker connections can
     /// park until the coordinator has configured the run.
     installed: Condvar,
@@ -196,11 +235,45 @@ impl PsTcpServer {
     /// Bind `addr` (use port 0 for an ephemeral test port) and start
     /// accepting connections.
     pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        Self::bind_with(addr, None)
+    }
+
+    /// [`PsTcpServer::bind`] with checkpointing: the hosted run is
+    /// dumped to `ckpt.dir` every `ckpt.every` applied-clock advances
+    /// and on graceful [`PsTcpServer::stop`], and if the directory
+    /// already holds a checkpoint the run is restored from it *before*
+    /// the first connection is accepted — reconnecting clients
+    /// re-`Init` with their session id and reattach where they left
+    /// off (no re-zeroed epochs, no rewound clock).
+    pub fn bind_with(addr: &str, ckpt: Option<CheckpointConfig>) -> anyhow::Result<Self> {
+        let restored = match ckpt.as_ref() {
+            Some(cfg) => read_checkpoint(&cfg.dir)?,
+            None => None,
+        };
+        let state = match restored {
+            Some(r) => {
+                eprintln!(
+                    "[ckpt] restored session {} (applied clock {})",
+                    r.session,
+                    r.server.clock().applied()
+                );
+                ServerState {
+                    server: Some(Arc::new(r.server)),
+                    session: r.session,
+                    flush_seqs: r.flush_seqs,
+                    clock_ticks: 0,
+                }
+            }
+            None => {
+                ServerState { server: None, session: 0, flush_seqs: Vec::new(), clock_ticks: 0 }
+            }
+        };
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("ps-server bind {addr}: {e}"))?;
         let local_addr = listener.local_addr()?;
         let shared = Arc::new(ServerShared {
-            state: Mutex::new(ServerState { server: None }),
+            state: Mutex::new(state),
+            ckpt,
             installed: Condvar::new(),
             stop: AtomicBool::new(false),
             conns: Mutex::new(std::collections::HashMap::new()),
@@ -262,13 +335,22 @@ impl PsTcpServer {
     /// join the accept loop. Used by tests and the kill-path suite.
     pub fn stop(mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
+        // Final checkpoint while the state is still consistent. Hard
+        // kills (SIGKILL) are covered by the periodic writes instead —
+        // there is no dependency-free way to catch a signal here.
+        checkpoint_now(&self.shared);
+        // Close the sockets *before* shutting the clock: clients (and
+        // handlers parked at the SSP gate) then observe an Io error —
+        // the same retriable failure a crash produces — rather than a
+        // fatal shutdown reply. A retry-wrapped client can therefore
+        // ride out a graceful stop + restart exactly like a kill.
+        for (_, conn) in self.shared.conns.lock().expect("conns lock").drain() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
         if let Some(server) = self.shared.state.lock().expect("state lock").server.as_ref() {
             server.clock().shutdown();
         }
         self.shared.installed.notify_all();
-        for (_, conn) in self.shared.conns.lock().expect("conns lock").drain() {
-            let _ = conn.shutdown(Shutdown::Both);
-        }
         // Unblock the accept loop with a throwaway connection.
         let _ = TcpStream::connect(self.local_addr);
         if let Some(h) = self.accept.take() {
@@ -346,14 +428,43 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                 },
             };
         }
-        Request::Init { shards, workers, policy, segments } => {
+        Request::Init { session, shards, workers, policy, segments } => {
+            let mut state = shared.state.lock().expect("state lock");
+            if let Some(hosted) = state.server.as_ref() {
+                if session != 0 && session == state.session {
+                    // Reattach: a retrying client re-sends Init after a
+                    // reconnect while its run is still hosted (or was
+                    // just restored from a checkpoint). Replacing here
+                    // would zero the very state the client is trying to
+                    // rejoin, so validate the shape and keep the run.
+                    let same_shape = hosted.clock().num_workers() == workers
+                        && hosted.store().num_shards() == shards
+                        && hosted.policy() == policy
+                        && hosted.store().segments() == segments;
+                    return if same_shape {
+                        Reply::Ok
+                    } else {
+                        Reply::Err {
+                            shutdown: false,
+                            message: format!(
+                                "re-Init for session {session} does not match the hosted \
+                                 run's shape"
+                            ),
+                        }
+                    };
+                }
+            }
             let server =
                 Arc::new(ParameterServer::with_segments(shards, workers, policy, &segments));
             // Replace any previous run's server: back-to-back runs (the
             // staleness sweep) each re-Init the same host process.
             // Waking the replaced clock frees any connection thread a
             // crashed client left parked at the old gate.
-            let old = shared.state.lock().expect("state lock").server.replace(server);
+            state.session = session;
+            state.flush_seqs = vec![0; workers];
+            state.clock_ticks = 0;
+            let old = state.server.replace(server);
+            drop(state);
             if let Some(old) = old {
                 old.clock().shutdown();
             }
@@ -379,7 +490,7 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                 Reply::Err { shutdown: true, message: "clock shutdown".into() }
             }
         },
-        Request::Flush { worker, round, deltas } => {
+        Request::Flush { worker, round, seq, deltas } => {
             if worker >= server.clock().num_workers() {
                 return Reply::Err {
                     shutdown: false,
@@ -388,6 +499,28 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                         server.clock().num_workers()
                     ),
                 };
+            }
+            // Dedup ledger check AND apply under one lock: if they were
+            // separate, a duplicate racing the original could pass the
+            // check before the original recorded its seq, and the
+            // deltas would land twice. (This serializes flushes — they
+            // are one small RPC per worker-round, so the lock is cheap
+            // next to the wire hop.)
+            let mut state = shared.state.lock().expect("state lock");
+            if !state.server.as_ref().is_some_and(|s| Arc::ptr_eq(s, &server)) {
+                // A new run re-Init'd between wait_server and here; the
+                // old run's flush has nowhere valid to land.
+                return Reply::Err { shutdown: true, message: "the run was re-initialized".into() };
+            }
+            if seq != 0 {
+                let last = &mut state.flush_seqs[worker];
+                if seq <= *last {
+                    // Retried flush whose first delivery landed: the
+                    // reply was lost, not the request. Ack, don't
+                    // re-apply.
+                    return Reply::Ok;
+                }
+                *last = seq;
             }
             server.serve_flush(worker, &deltas, round);
             Reply::Ok
@@ -402,6 +535,7 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
         }
         Request::Advance { applied } => {
             server.clock().advance_applied(applied);
+            maybe_checkpoint(shared, &server);
             Reply::Ok
         }
         Request::Stats => Reply::Stats(server.stats_snapshot()),
@@ -410,6 +544,54 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
             server.clock().shutdown();
             Reply::Ok
         }
+    }
+}
+
+/// Periodic checkpoint driver, called on every applied-clock advance:
+/// every `every`-th tick captures a consistent image (under the state
+/// lock, so no flush can interleave between the slab capture and the
+/// seq-ledger capture) and writes it outside the lock.
+fn maybe_checkpoint(shared: &ServerShared, server: &Arc<ParameterServer>) {
+    let Some(cfg) = shared.ckpt.as_ref() else { return };
+    let image = {
+        let mut state = shared.state.lock().expect("state lock");
+        if !state.server.as_ref().is_some_and(|s| Arc::ptr_eq(s, server)) {
+            return;
+        }
+        state.clock_ticks += 1;
+        if state.clock_ticks % cfg.every != 0 {
+            return;
+        }
+        CheckpointImage::capture(server, state.session, &state.flush_seqs)
+    };
+    write_image(server, &image, cfg);
+}
+
+/// Final checkpoint on graceful stop, so a restart resumes from the
+/// exact teardown state rather than the last periodic write.
+fn checkpoint_now(shared: &ServerShared) {
+    let Some(cfg) = shared.ckpt.as_ref() else { return };
+    let captured = {
+        let state = shared.state.lock().expect("state lock");
+        state.server.as_ref().map(|server| {
+            (Arc::clone(server), CheckpointImage::capture(server, state.session, &state.flush_seqs))
+        })
+    };
+    if let Some((server, image)) = captured {
+        write_image(&server, &image, cfg);
+    }
+}
+
+fn write_image(server: &ParameterServer, image: &CheckpointImage, cfg: &CheckpointConfig) {
+    match image.write_to(&cfg.dir) {
+        Ok(bytes) => {
+            server.registry().counter("ckpt.writes").inc();
+            server.registry().counter("ckpt.bytes").add(bytes);
+        }
+        // A failed write must never take down the serving path; the
+        // previous checkpoint (if any) is still intact on disk thanks
+        // to the write-then-rename protocol.
+        Err(e) => eprintln!("[ckpt] write failed: {e}"),
     }
 }
 
@@ -427,8 +609,10 @@ mod tests {
     fn tcp_roundtrip_init_seed_pull_flush_stats() {
         let (host, addr) = loopback();
         let bytes = Arc::new(AtomicU64::new(0));
-        let mut coord = TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes)).unwrap();
-        coord.init(4, 1, StalenessPolicy::Bounded(0), &[(0, 4)]).unwrap();
+        let mut coord =
+            TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
+                .unwrap();
+        coord.init(1, 4, 1, StalenessPolicy::Bounded(0), &[(0, 4)]).unwrap();
         coord.publish_range(0, &[1.0, 2.0, 3.0, 4.0], 0).unwrap();
 
         let mut worker = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
@@ -467,7 +651,7 @@ mod tests {
         let (host, addr) = loopback();
         let bytes = Arc::new(AtomicU64::new(0));
         let mut coord = TcpTransport::connect(&addr, 7, bytes).unwrap();
-        coord.init(2, 2, StalenessPolicy::Async, &[]).unwrap();
+        coord.init(2, 2, 2, StalenessPolicy::Async, &[]).unwrap();
         let err = coord.flush(&[(0, 1.0)], 0).unwrap_err();
         assert!(matches!(err, TransportError::Remote(_)), "{err}");
         // the connection survives the rejected request
@@ -480,9 +664,100 @@ mod tests {
         let (host, addr) = loopback();
         let mut coord =
             TcpTransport::connect(&addr, 0, Arc::new(AtomicU64::new(0))).unwrap();
-        coord.init(2, 1, StalenessPolicy::Bounded(0), &[]).unwrap();
+        coord.init(3, 2, 1, StalenessPolicy::Bounded(0), &[]).unwrap();
         host.stop();
         let err = coord.stats().unwrap_err();
         assert!(matches!(err, TransportError::Io(_)), "want io error, got {err}");
+    }
+
+    #[test]
+    fn re_init_with_the_runs_session_reattaches_instead_of_zeroing() {
+        let (host, addr) = loopback();
+        let bytes = Arc::new(AtomicU64::new(0));
+        let mut coord =
+            TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
+                .unwrap();
+        coord.init(41, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)]).unwrap();
+        coord.publish_range(0, &[5.0, 6.0], 0).unwrap();
+        coord.advance_applied(3).unwrap();
+
+        // Same session: reattach — published state and clock survive.
+        let mut again = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+        again.init(41, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)]).unwrap();
+        let reply = again.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[5.0f32, 6.0]);
+
+        // Reattach with a different shape is rejected without killing
+        // the hosted run.
+        let err = again.init(41, 2, 2, StalenessPolicy::Bounded(0), &[(0, 2)]).unwrap_err();
+        assert!(matches!(err, TransportError::Remote(_)), "{err}");
+        assert!(again.stats().is_ok(), "the run survives a rejected reattach");
+
+        // A different session is a new run: state is replaced.
+        let mut fresh =
+            TcpTransport::connect(&addr, super::super::COORDINATOR_ID, bytes).unwrap();
+        fresh.init(99, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)]).unwrap();
+        let reply = fresh.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[0.0f32, 0.0], "new session starts blank");
+        host.stop();
+    }
+
+    #[test]
+    fn duplicate_flush_seqs_are_applied_exactly_once() {
+        let (host, addr) = loopback();
+        let bytes = Arc::new(AtomicU64::new(0));
+        let mut coord =
+            TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
+                .unwrap();
+        coord.init(5, 2, 1, StalenessPolicy::Async, &[(0, 2)]).unwrap();
+
+        // Two sockets for the same worker, each minting seqs from 1 —
+        // exactly what a reconnect-and-resend looks like on the wire.
+        let mut first = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+        let mut resend = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+        first.flush(&[(0, 1.0)], 0).unwrap(); // seq 1: applied
+        resend.flush(&[(0, 1.0)], 0).unwrap(); // seq 1 again: deduped
+        resend.flush(&[(0, 1.0)], 1).unwrap(); // seq 2: applied
+        let reply = first.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values()[0], 2.0f32, "duplicate seq must not re-apply");
+        let stats = coord.stats().unwrap();
+        assert_eq!(stats.flushes, 2, "the deduped flush never reached the store");
+        host.stop();
+    }
+
+    #[test]
+    fn stop_checkpoints_and_bind_with_restores_the_run() {
+        let dir = std::env::temp_dir().join(format!("strads_tcp_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = CheckpointConfig { dir: dir.clone(), every: 1_000_000 };
+        let host = PsTcpServer::bind_with("127.0.0.1:0", Some(ckpt.clone())).unwrap();
+        let addr = host.local_addr().to_string();
+        let bytes = Arc::new(AtomicU64::new(0));
+        let mut coord =
+            TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
+                .unwrap();
+        coord.init(61, 2, 1, StalenessPolicy::Bounded(1), &[(0, 3)]).unwrap();
+        coord.publish_range(0, &[1.5, 2.5, 3.5], 0).unwrap();
+        let mut worker = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+        worker.flush(&[(1, 0.25)], 0).unwrap();
+        coord.advance_applied(2).unwrap();
+        host.stop(); // graceful stop writes the final checkpoint
+
+        let host2 = PsTcpServer::bind_with("127.0.0.1:0", Some(ckpt)).unwrap();
+        let addr2 = host2.local_addr().to_string();
+        let mut back = TcpTransport::connect(&addr2, 0, Arc::clone(&bytes)).unwrap();
+        // Reattach with the original session: restored slabs + clock,
+        // not a re-zeroed run.
+        back.init(61, 2, 1, StalenessPolicy::Bounded(1), &[(0, 3)]).unwrap();
+        let reply = back.pull(&PullSpec::from_ranges(vec![(0, 3)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[1.5f32, 2.75, 3.5]);
+        // The dedup ledger survives the restart: a resend of the
+        // pre-kill flush (seq 1) must still be dropped.
+        let mut dup = TcpTransport::connect(&addr2, 0, bytes).unwrap();
+        dup.flush(&[(1, 0.25)], 0).unwrap();
+        let reply = dup.pull(&PullSpec::from_ranges(vec![(1, 1)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[2.75f32], "restored ledger deduped the resend");
+        host2.stop();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

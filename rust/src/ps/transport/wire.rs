@@ -23,7 +23,10 @@ use std::io::{Read, Write};
 /// mismatch instead of misparsing traffic. Bump on any layout change.
 /// v2: `PullOk` carries the gate wait time and the `ObsStats` /
 /// `ObsStatsOk` introspection opcodes exist.
-pub const PROTO_VERSION: u16 = 2;
+/// v3: `Init` carries a session id so a reconnecting client's
+/// re-`Init` is idempotent, and `Flush` carries a per-worker monotonic
+/// seq so a retried flush is applied exactly once.
+pub const PROTO_VERSION: u16 = 3;
 
 /// Frames above this are corruption, not data (guards allocation).
 pub const MAX_FRAME: u32 = 1 << 30;
@@ -51,10 +54,14 @@ pub mod op {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Configure (or reset) the hosted server: the first message a
-    /// coordinator sends. A fresh `Init` replaces any previous server
-    /// instance, so back-to-back runs (e.g. the staleness sweep) reuse
-    /// one `ps-server` process.
+    /// coordinator sends. An `Init` whose nonzero `session` matches the
+    /// hosted run's session *reattaches* (idempotent — the live store
+    /// and clock are kept, so a reconnecting client resumes its run);
+    /// any other `Init` replaces the previous server instance, so
+    /// back-to-back runs (e.g. the staleness sweep) reuse one
+    /// `ps-server` process.
     Init {
+        session: u64,
         shards: usize,
         workers: usize,
         policy: StalenessPolicy,
@@ -64,7 +71,10 @@ pub enum Request {
     /// applied clock admits `round`.
     Pull { round: u64, spec: PullSpec },
     /// A worker's coalesced end-of-round delta batch + clock tick.
-    Flush { worker: usize, round: u64, deltas: Vec<(usize, f64)> },
+    /// `seq` is the worker's monotonic flush counter (1-based; 0 = no
+    /// dedup): the server applies each seq at most once, so a flush
+    /// retried after a lost reply never double-applies its deltas.
+    Flush { worker: usize, round: u64, seq: u64, deltas: Vec<(usize, f64)> },
     /// Coordinator republish of derived state (metered as republish
     /// traffic server-side).
     Publish { version: u64, entries: Vec<(usize, f64)> },
@@ -284,11 +294,12 @@ pub fn encode_pull(round: u64, spec: &PullSpec) -> Vec<u8> {
 }
 
 /// Encode a `Flush` straight from the worker's coalesced batch.
-pub fn encode_flush(worker: usize, round: u64, deltas: &[(usize, f64)]) -> Vec<u8> {
+pub fn encode_flush(worker: usize, round: u64, seq: u64, deltas: &[(usize, f64)]) -> Vec<u8> {
     let mut b = Vec::new();
     b.push(op::FLUSH);
     put_u32(&mut b, worker as u32);
     put_u64(&mut b, round);
+    put_u64(&mut b, seq);
     put_pairs(&mut b, deltas);
     b
 }
@@ -318,10 +329,11 @@ pub fn encode_publish_range(version: u64, start: usize, values: &[f64]) -> Vec<u
 /// Encode a request into one frame payload (opcode + body).
 pub fn encode_request(req: &Request) -> Vec<u8> {
     match req {
-        Request::Init { shards, workers, policy, segments } => {
+        Request::Init { session, shards, workers, policy, segments } => {
             let mut b = Vec::new();
             b.push(op::INIT);
             put_u16(&mut b, PROTO_VERSION);
+            put_u64(&mut b, *session);
             put_u32(&mut b, *shards as u32);
             put_u32(&mut b, *workers as u32);
             match policy {
@@ -342,7 +354,9 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             b
         }
         Request::Pull { round, spec } => encode_pull(*round, spec),
-        Request::Flush { worker, round, deltas } => encode_flush(*worker, *round, deltas),
+        Request::Flush { worker, round, seq, deltas } => {
+            encode_flush(*worker, *round, *seq, deltas)
+        }
         Request::Publish { version, entries } => encode_publish(*version, entries),
         Request::PublishRange { version, start, values } => {
             encode_publish_range(*version, *start, values)
@@ -371,6 +385,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
                     "protocol version mismatch: peer speaks v{proto}, this server v{PROTO_VERSION}"
                 )));
             }
+            let session = r.u64()?;
             let shards = r.u32()? as usize;
             let workers = r.u32()? as usize;
             let policy = match (r.u8()?, r.u64()?) {
@@ -383,7 +398,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
             for _ in 0..nseg {
                 segments.push((r.u64()? as usize, r.u64()? as usize));
             }
-            Request::Init { shards, workers, policy, segments }
+            Request::Init { session, shards, workers, policy, segments }
         }
         op::PULL => {
             let round = r.u64()?;
@@ -402,8 +417,9 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
         op::FLUSH => {
             let worker = r.u32()? as usize;
             let round = r.u64()?;
+            let seq = r.u64()?;
             let deltas = read_pairs(&mut r)?;
-            Request::Flush { worker, round, deltas }
+            Request::Flush { worker, round, seq, deltas }
         }
         op::PUBLISH => {
             let version = r.u64()?;
@@ -670,12 +686,14 @@ mod tests {
     fn request_roundtrip_all_opcodes() {
         let reqs = vec![
             Request::Init {
+                session: 0xDEAD_BEEF_0000_0001,
                 shards: 8,
                 workers: 4,
                 policy: StalenessPolicy::Bounded(2),
                 segments: vec![(0, 100), (200, 50)],
             },
             Request::Init {
+                session: 0,
                 shards: 1,
                 workers: 1,
                 policy: StalenessPolicy::Async,
@@ -685,7 +703,12 @@ mod tests {
                 round: 7,
                 spec: PullSpec { ranges: vec![(0, 10), (64, 3)], keys: vec![999, 3] },
             },
-            Request::Flush { worker: 3, round: 9, deltas: vec![(5, -0.25), (0, 1e300)] },
+            Request::Flush {
+                worker: 3,
+                round: 9,
+                seq: 17,
+                deltas: vec![(5, -0.25), (0, 1e300)],
+            },
             Request::Publish { version: 4, entries: vec![(1, f64::MIN_POSITIVE)] },
             Request::PublishRange { version: 1, start: 16, values: vec![0.5, -0.5, 0.0] },
             Request::Advance { applied: u64::MAX },
@@ -830,14 +853,16 @@ mod tests {
         // bogus opcode
         assert!(decode_request(&[0x55]).is_err());
         assert!(decode_reply(&[0x55]).is_err());
-        // hostile count: claims 2^31 entries in a 16-byte frame
+        // hostile count: claims 2^31 entries in a tiny frame
         let mut hostile = vec![op::FLUSH];
-        hostile.extend_from_slice(&3u32.to_le_bytes());
-        hostile.extend_from_slice(&0u64.to_le_bytes());
+        hostile.extend_from_slice(&3u32.to_le_bytes()); // worker
+        hostile.extend_from_slice(&0u64.to_le_bytes()); // round
+        hostile.extend_from_slice(&1u64.to_le_bytes()); // seq
         hostile.extend_from_slice(&0x8000_0000u32.to_le_bytes());
         assert!(decode_request(&hostile).is_err());
         // version mismatch refused
         let mut init = encode_request(&Request::Init {
+            session: 1,
             shards: 1,
             workers: 1,
             policy: StalenessPolicy::Bounded(0),
@@ -865,5 +890,12 @@ mod tests {
         let huge = (MAX_FRAME + 1).to_le_bytes();
         assert!(read_frame(&mut &huge[..], &mut buf).is_err());
         assert!(write_frame(&mut Vec::new(), &[]).is_err());
+        // mid-stream EOF: the header promises more payload than the
+        // stream holds — a clean Io error, never a hang or panic
+        let mut eof = Vec::new();
+        write_frame(&mut eof, &msg).unwrap();
+        eof.truncate(eof.len() - 2);
+        let err = read_frame(&mut &eof[..], &mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
     }
 }

@@ -252,6 +252,11 @@ pub struct DistributedReport {
     /// modeled `net_bytes`: this is the observable the TCP transport
     /// turns the wire meter into.
     pub socket_bytes: u64,
+    /// Successful transport reconnects across every link (0 unless
+    /// `[ps] retry_max` engaged the retry wrapper and a fault hit).
+    pub reconnects: u64,
+    /// Total retry backoff slept across every link, in microseconds.
+    pub retry_backoff_us: u64,
     /// Which transport carried the run (`inproc` | `tcp`).
     pub transport: &'static str,
     /// Full registry snapshot at teardown — the server's metrics (via
@@ -653,6 +658,8 @@ pub fn run_distributed(
         // exercises the introspection path over its own transport —
         // merged with the coordinator-side registry.
         registry.gauge("net.socket_bytes").set(conn.socket_bytes());
+        registry.counter("net.reconnects").set(conn.reconnects());
+        registry.counter("net.retry_backoff_us").set(conn.retry_backoff_us());
         let mut metrics = conn.coord().obs_stats()?.metrics;
         metrics.extend(registry.snapshot());
         metrics.sort_by(|a, b| a.0.cmp(&b.0));
@@ -687,6 +694,8 @@ pub fn run_distributed(
         plan_queue_depth,
         sched_service_used: service_used,
         socket_bytes: conn.socket_bytes(),
+        reconnects: conn.reconnects(),
+        retry_backoff_us: conn.retry_backoff_us(),
         transport: cfg.ps.transport.name(),
         obs_metrics,
     })

@@ -152,6 +152,13 @@ fn config_presets_load_and_apply() {
     assert!(cfg.ps.dense_segments && cfg.ps.pipeline);
     assert_eq!(cfg.ps.transport, strads::ps::TransportKind::InProc);
     assert_eq!(cfg.ps.addr, "127.0.0.1:37021");
+    // ...including the fault-tolerance knobs (documented at defaults:
+    // retries off, fault injection off, checkpointing off)
+    assert_eq!(cfg.ps.retry_max, 0);
+    assert_eq!(cfg.ps.retry_backoff_ms, 50);
+    assert_eq!(cfg.ps.fault_plan, "");
+    assert_eq!(cfg.ps.checkpoint_dir, "");
+    assert_eq!(cfg.ps.checkpoint_every, 16);
 }
 
 #[test]

@@ -1,0 +1,298 @@
+//! Fault-tolerance suite for the parameter-server wire: seeded fault
+//! injection (dropped RPCs, lost replies, delays) rides under the
+//! retry/backoff wrapper and must be *semantically invisible* — a
+//! staleness-0 run under a random fault schedule converges bitwise
+//! identical to the fault-free run, because every RPC is idempotent
+//! under retry (re-`Init` reattaches by session, `Flush` is deduped by
+//! seq, publishes overwrite, `Advance` is a monotonic max). Also pins
+//! the crash path end to end: a server stopped mid-run and restarted
+//! from its checkpoint is rejoined by the retrying workers and the run
+//! completes, and hostile bytes on a live socket yield clean error
+//! replies without taking the server down.
+
+use std::io::{Read, Write};
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use strads::config::RunConfig;
+use strads::data::lasso_synth::{self, LassoSynthSpec};
+use strads::data::mf_powerlaw::{self, MfSynthSpec};
+use strads::lasso::NativeLasso;
+use strads::mf::DistMf;
+use strads::ps::transport::tcp::TcpTransport;
+use strads::ps::transport::wire::{self, Reply};
+use strads::ps::{CheckpointConfig, PsTcpServer, PullSpec, StalenessPolicy, TransportKind};
+use strads::workers::{run_distributed, DistributedReport};
+
+/// A fresh loopback server on an ephemeral port.
+fn loopback_host() -> (PsTcpServer, String) {
+    let host = PsTcpServer::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = host.local_addr().to_string();
+    (host, addr)
+}
+
+/// A TCP run config pointed at `addr`, with the PR's fault knobs off
+/// (callers flip them on per test).
+fn tcp_cfg(workers: usize, addr: &str) -> RunConfig {
+    let mut cfg = RunConfig { workers, lambda: 1e-3, ..Default::default() };
+    cfg.sap.shards = 2;
+    cfg.ps.transport = TransportKind::Tcp;
+    cfg.ps.addr = addr.to_string();
+    cfg
+}
+
+fn run_lasso(cfg: &RunConfig, rounds: usize, seed: u64) -> (DistributedReport, Vec<f64>) {
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), seed);
+    let mut problem = NativeLasso::new(&data, cfg.lambda);
+    let report = run_distributed(&mut problem, cfg, rounds, "tiny").unwrap();
+    (report, problem.beta().to_vec())
+}
+
+fn obj_bits(report: &DistributedReport) -> Vec<u64> {
+    report.trace.points.iter().map(|p| p.objective.to_bits()).collect()
+}
+
+#[test]
+fn lasso_staleness0_random_faults_are_bitwise_invisible() {
+    // The acceptance pin: a seeded schedule of drops (connection lost
+    // before send), lost replies (delivered, then the ack vanishes)
+    // and delays over the pull/flush traffic changes *nothing* — the
+    // objective trajectory and final beta are bit-for-bit the
+    // fault-free run's. ~12% of the ~1000 matching RPCs fault, so the
+    // run provably reconnected and replayed.
+    let rounds = 120;
+    let (host, addr) = loopback_host();
+    let (clean, clean_beta) = run_lasso(&tcp_cfg(4, &addr), rounds, 42);
+    host.stop();
+
+    let (host, addr) = loopback_host();
+    let mut cfg = tcp_cfg(4, &addr);
+    cfg.ps.retry_max = 6;
+    cfg.ps.retry_backoff_ms = 1;
+    cfg.ps.fault_plan =
+        "seed=11,drop=0.05,err=0.03,delay=0.04,delay_ms=1,ops=pull|flush".to_string();
+    let (faulted, faulted_beta) = run_lasso(&cfg, rounds, 42);
+    host.stop();
+
+    assert!(faulted.reconnects > 0, "the fault plan must have forced reconnects");
+    assert!(faulted.retry_backoff_us > 0, "reconnects must have metered backoff sleep");
+    assert_eq!(clean.reconnects, 0, "the clean run must not retry anything");
+    assert_eq!(
+        obj_bits(&clean),
+        obj_bits(&faulted),
+        "fault-injected staleness-0 trajectory must be bitwise identical"
+    );
+    assert_eq!(clean.rounds, faulted.rounds);
+    for (j, (a, b)) in clean_beta.iter().zip(&faulted_beta).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "beta[{j}] diverged under fault injection: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn mf_staleness0_random_faults_are_bitwise_invisible() {
+    // Same pin for the second problem family (CCD++ MF): the f32
+    // factor slabs cross a faulty wire and still land bit-exact.
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 31);
+    let run = |cfg: &RunConfig| {
+        let mut problem = DistMf::new(&data.a, 4, 0.05, 32);
+        let rounds = problem.rounds_for_iters(3);
+        run_distributed(&mut problem, cfg, rounds, "tiny").unwrap()
+    };
+
+    let (host, addr) = loopback_host();
+    let mut clean_cfg = RunConfig { workers: 4, ..Default::default() };
+    clean_cfg.ps.transport = TransportKind::Tcp;
+    clean_cfg.ps.addr = addr;
+    let clean = run(&clean_cfg);
+    host.stop();
+
+    let (host, addr) = loopback_host();
+    let mut cfg = RunConfig { workers: 4, ..Default::default() };
+    cfg.ps.transport = TransportKind::Tcp;
+    cfg.ps.addr = addr;
+    cfg.ps.retry_max = 6;
+    cfg.ps.retry_backoff_ms = 1;
+    cfg.ps.fault_plan = "seed=23,drop=0.08,err=0.04,ops=pull|flush".to_string();
+    let faulted = run(&cfg);
+    host.stop();
+
+    assert!(faulted.reconnects > 0, "the fault plan must have forced reconnects");
+    assert_eq!(
+        clean.trace.final_objective().to_bits(),
+        faulted.trace.final_objective().to_bits(),
+        "MF objective must survive fault injection bitwise: {} vs {}",
+        clean.trace.final_objective(),
+        faulted.trace.final_objective()
+    );
+    assert_eq!(obj_bits(&clean), obj_bits(&faulted));
+    assert_eq!(clean.rounds, faulted.rounds);
+}
+
+#[test]
+fn every_nth_rpc_faults_at_staleness_2_still_converge() {
+    // Deterministic stress: every 7th pull/flush on every link is
+    // dropped, under a staleness bound of 2. The run must ride out the
+    // churn (~14% of its RPCs reconnect) and still make progress.
+    let (host, addr) = loopback_host();
+    let mut cfg = tcp_cfg(3, &addr);
+    cfg.ps.set_staleness_arg("2").unwrap();
+    cfg.ps.retry_max = 8;
+    cfg.ps.retry_backoff_ms = 1;
+    cfg.ps.fault_plan = "seed=5,every=7,drop=1,ops=pull|flush".to_string();
+    let (report, _) = run_lasso(&cfg, 120, 9);
+    host.stop();
+
+    assert_eq!(report.rounds, 120, "the faulted run must not stop early");
+    assert!(report.reconnects > 0);
+    let first = report.trace.points.first().unwrap().objective;
+    let last = report.trace.final_objective();
+    assert!(last < first, "no progress under faults: {first} -> {last}");
+}
+
+#[test]
+fn obs_on_and_off_stay_bitwise_identical_with_retries() {
+    // PR-6's freeness contract extended to the retry path: full
+    // observability over a fault-injected run changes nothing, and the
+    // registry's view of the new counters matches the report's.
+    let rounds = 80;
+    let run = |level: usize| {
+        let (host, addr) = loopback_host();
+        let mut cfg = tcp_cfg(4, &addr);
+        cfg.obs.level = level;
+        cfg.ps.retry_max = 6;
+        cfg.ps.retry_backoff_ms = 1;
+        cfg.ps.fault_plan = "seed=29,drop=0.04,err=0.04,ops=pull|flush".to_string();
+        let out = run_lasso(&cfg, rounds, 7);
+        host.stop();
+        out
+    };
+    let (r_on, beta_on) = run(2);
+    let (r_off, beta_off) = run(0);
+
+    assert_eq!(obj_bits(&r_on), obj_bits(&r_off), "observation must stay free under faults");
+    for (j, (a, b)) in beta_on.iter().zip(&beta_off).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{j}] diverged under observation: {a} vs {b}");
+    }
+    assert!(r_on.reconnects > 0 && r_off.reconnects > 0);
+    assert_eq!(r_on.reconnects, r_off.reconnects, "the fault schedule is seeded, not timed");
+
+    // The fault-tolerance counters surface through the registry.
+    assert!(r_off.obs_metrics.is_empty());
+    let metric = |name: &str| {
+        r_on.obs_metrics
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("registry must export {name}"))
+            .1
+            .as_u64()
+    };
+    assert_eq!(metric("net.reconnects"), r_on.reconnects);
+    assert_eq!(metric("net.retry_backoff_us"), r_on.retry_backoff_us);
+    assert!(r_on.retry_backoff_us > 0);
+}
+
+#[test]
+fn server_restart_mid_run_resumes_from_checkpoint_and_converges() {
+    // The crash pin, run-level: stop the checkpointing server while a
+    // retry-wrapped run is mid-flight (clients see the same Io errors
+    // a SIGKILL produces), restart it from the checkpoint on the same
+    // address, and the workers reconnect, reattach their session, and
+    // finish every round — landing within tolerance of the
+    // uninterrupted run. A re-zeroed clock would deadlock the SSP gate
+    // and a re-zeroed model would blow up the objective, so finishing
+    // close to baseline pins both restores.
+    let rounds = 1500;
+    let (host, addr) = loopback_host();
+    let (baseline, _) = run_lasso(&tcp_cfg(3, &addr), rounds, 17);
+    host.stop();
+
+    let dir = std::env::temp_dir().join(format!("strads_faults_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let ckpt = CheckpointConfig { dir: dir.clone(), every: 2 };
+    let host = PsTcpServer::bind_with("127.0.0.1:0", Some(ckpt.clone())).unwrap();
+    let addr = host.local_addr().to_string();
+    let mut cfg = tcp_cfg(3, &addr);
+    cfg.ps.retry_max = 40;
+    cfg.ps.retry_backoff_ms = 10;
+    let runner = std::thread::spawn(move || run_lasso(&cfg, rounds, 17));
+
+    // Wait for the run to produce its first checkpoint (proof it is
+    // underway), let it advance a little further, then pull the rug.
+    let ckpt_file = dir.join("ps.ckpt");
+    let begin = std::time::Instant::now();
+    while !ckpt_file.exists() {
+        assert!(
+            begin.elapsed() < std::time::Duration::from_secs(30),
+            "the run never produced a checkpoint"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    host.stop();
+    let host2 = PsTcpServer::bind_with(&addr, Some(ckpt)).expect("rebind the crashed address");
+
+    let (report, _) = runner.join().expect("the interrupted run must not panic");
+    host2.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert_eq!(report.rounds, rounds, "the interrupted run must complete every round");
+    assert!(report.reconnects > 0, "the restart must have forced reconnects");
+    let base = baseline.trace.final_objective();
+    let got = report.trace.final_objective();
+    assert!(
+        ((got - base) / base).abs() < 0.05,
+        "restored run must land near the uninterrupted objective: {got} vs {base}"
+    );
+    let first = report.trace.points.first().unwrap().objective;
+    assert!(got < first, "no progress across the restart: {first} -> {got}");
+}
+
+#[test]
+fn hostile_frames_get_clean_errors_and_leave_the_server_serving() {
+    // Server-side hardening: garbage on a live socket must produce a
+    // clean error reply (decode failures) or a dropped connection
+    // (framing violations) — never a hang, a panic, or a poisoned
+    // server. A healthy client keeps working throughout.
+    let (host, addr) = loopback_host();
+    let bytes = Arc::new(AtomicU64::new(0));
+    let mut coord = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+    coord.init(9, 1, 1, StalenessPolicy::Bounded(0), &[(0, 4)]).unwrap();
+    coord.publish_range(0, &[1.0, 2.0, 3.0, 4.0], 0).unwrap();
+
+    // Unknown opcode inside a well-formed frame: a clean, non-fatal
+    // error reply on the same connection.
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    wire::write_frame(&mut raw, &[0x55]).unwrap();
+    let mut buf = Vec::new();
+    wire::read_frame(&mut raw, &mut buf).unwrap();
+    match wire::decode_reply(&buf).unwrap() {
+        Reply::Err { shutdown, message } => {
+            assert!(!shutdown, "a bad frame must not read as a shutdown");
+            assert!(message.contains("opcode"), "unhelpful error: {message}");
+        }
+        other => panic!("hostile frame must yield Reply::Err, got {other:?}"),
+    }
+
+    // Oversized length prefix: the server drops the connection.
+    raw.write_all(&(wire::MAX_FRAME + 1).to_le_bytes()).unwrap();
+    let mut probe = [0u8; 16];
+    assert!(
+        matches!(raw.read(&mut probe), Ok(0) | Err(_)),
+        "the server must close a connection that violates framing"
+    );
+
+    // Mid-stream EOF: promise a payload, send a sliver, vanish. The
+    // handler must just reap the connection.
+    let mut eof = std::net::TcpStream::connect(&addr).unwrap();
+    eof.write_all(&64u32.to_le_bytes()).unwrap();
+    eof.write_all(&[1, 2, 3]).unwrap();
+    drop(eof);
+
+    // Through it all the server keeps serving the real run.
+    let reply = coord.pull(&PullSpec::from_ranges(vec![(0, 4)]), 0).unwrap();
+    assert_eq!(reply.ranges[0].values(), &[1.0f32, 2.0, 3.0, 4.0]);
+    assert!(coord.stats().unwrap().pulls >= 1);
+    host.stop();
+}

@@ -126,7 +126,7 @@ fn killed_server_surfaces_clean_errors_not_hangs() {
     let (host, addr) = loopback_host();
     let bytes = Arc::new(AtomicU64::new(0));
     let mut coord = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
-    coord.init(4, 1, StalenessPolicy::Bounded(0), &[(0, 8)]).unwrap();
+    coord.init(1, 4, 1, StalenessPolicy::Bounded(0), &[(0, 8)]).unwrap();
     coord.publish_range(0, &[0.0; 8], 0).unwrap();
 
     // This pull is 5 rounds ahead of the applied clock under a bound of
@@ -198,7 +198,12 @@ fn wire_protocol_roundtrips_random_messages() {
         // -- request: a random delta batch --
         let deltas: Vec<(usize, f64)> =
             (0..rng.below(16)).map(|_| (rng.below(1 << 24), rand_f64(&mut rng))).collect();
-        let req = Request::Flush { worker: rng.below(64), round: rng.next_u64(), deltas };
+        let req = Request::Flush {
+            worker: rng.below(64),
+            round: rng.next_u64(),
+            seq: rng.next_u64(),
+            deltas,
+        };
         assert_eq!(decode_request(&encode_request(&req)).unwrap(), req, "case {case}");
 
         // -- reply: a random pull result --
