@@ -179,6 +179,27 @@ pub struct PsConfig {
     pub checkpoint_dir: String,
     /// Checkpoint every K applied-clock advances (ps-server only).
     pub checkpoint_every: u64,
+    /// Versioned checkpoint images kept on disk (`ps-<applied>.ckpt`
+    /// hard links next to the always-newest `ps.ckpt`); older images
+    /// are pruned. Must be >= 1.
+    pub checkpoint_keep: usize,
+    /// Elastic membership: the coordinator supervises workers with
+    /// per-dispatched-block leases, reassigns the blocks of dead or
+    /// wedged workers to live ones, and admits mid-run joiners. With a
+    /// fixed fleet (nobody dies or joins) results are bitwise identical
+    /// to elastic = 0 — supervision is pure observation until a
+    /// membership event fires. Implied on when `worker_kill_plan` is
+    /// set.
+    pub elastic: bool,
+    /// Deterministic membership-chaos schedule (testing; empty = none).
+    /// Format: `seed=S,kill=W@R,kill=@R,join=@R` — kill worker W (or a
+    /// seeded victim) when round R dispatches, or admit a new worker.
+    pub worker_kill_plan: String,
+    /// Lease duration per dispatched block, in milliseconds: a block
+    /// with no flush after this long is presumed stuck and reassigned
+    /// to another live worker (elastic mode only). The server's flush
+    /// ledger keeps late duplicates from double-applying.
+    pub lease_ms: u64,
 }
 
 impl Default for PsConfig {
@@ -197,11 +218,20 @@ impl Default for PsConfig {
             fault_plan: String::new(),
             checkpoint_dir: String::new(),
             checkpoint_every: 16,
+            checkpoint_keep: 2,
+            elastic: false,
+            worker_kill_plan: String::new(),
+            lease_ms: 30_000,
         }
     }
 }
 
 impl PsConfig {
+    /// Whether the run supervises membership: opted in explicitly or
+    /// implied by a chaos schedule.
+    pub fn elastic_enabled(&self) -> bool {
+        self.elastic || !self.worker_kill_plan.is_empty()
+    }
     /// The clock policy this config selects.
     pub fn policy(&self) -> crate::ps::StalenessPolicy {
         if self.asynchronous {
@@ -358,6 +388,10 @@ impl RunConfig {
             "ps.fault_plan",
             "ps.checkpoint_dir",
             "ps.checkpoint_every",
+            "ps.checkpoint_keep",
+            "ps.elastic",
+            "ps.worker_kill_plan",
+            "ps.lease_ms",
             "sched.scheduler",
             "sched.shards",
             "sched.pipeline_depth",
@@ -418,6 +452,18 @@ impl RunConfig {
         if let Some(v) = conf.get_u64("ps.checkpoint_every").map_err(anyhow::Error::msg)? {
             c.ps.checkpoint_every = v;
         }
+        if let Some(v) = conf.get_usize("ps.checkpoint_keep").map_err(anyhow::Error::msg)? {
+            c.ps.checkpoint_keep = v;
+        }
+        if let Some(v) = conf.get_usize("ps.elastic").map_err(anyhow::Error::msg)? {
+            c.ps.elastic = v != 0;
+        }
+        if let Some(v) = conf.get("ps.worker_kill_plan") {
+            c.ps.worker_kill_plan = v.to_string();
+        }
+        if let Some(v) = conf.get_u64("ps.lease_ms").map_err(anyhow::Error::msg)? {
+            c.ps.lease_ms = v;
+        }
         if let Some(v) = conf.get("obs.events_path") {
             c.obs.events_path = v.to_string();
         }
@@ -445,7 +491,7 @@ impl RunConfig {
     /// Serialize back to the preset format.
     pub fn to_conf_string(&self) -> String {
         format!(
-            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\nretry_max = {}\nretry_backoff_ms = {}\nfault_plan = \"{}\"\ncheckpoint_dir = \"{}\"\ncheckpoint_every = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n\n[obs]\nlevel = {}\nevents_path = \"{}\"\nreport_secs = {}\n",
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\nretry_max = {}\nretry_backoff_ms = {}\nfault_plan = \"{}\"\ncheckpoint_dir = \"{}\"\ncheckpoint_every = {}\ncheckpoint_keep = {}\nelastic = {}\nworker_kill_plan = \"{}\"\nlease_ms = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n\n[obs]\nlevel = {}\nevents_path = \"{}\"\nreport_secs = {}\n",
             self.workers,
             self.lambda,
             self.sap.p_prime_factor,
@@ -475,6 +521,10 @@ impl RunConfig {
             self.ps.fault_plan,
             self.ps.checkpoint_dir,
             self.ps.checkpoint_every,
+            self.ps.checkpoint_keep,
+            usize::from(self.ps.elastic),
+            self.ps.worker_kill_plan,
+            self.ps.lease_ms,
             self.sched.kind.name(),
             self.sched.shards,
             self.sched.pipeline_depth,
@@ -509,6 +559,18 @@ impl RunConfig {
             self.ps.checkpoint_every >= 1,
             "ps.checkpoint_every must be >= 1 (ticks between checkpoints)"
         );
+        anyhow::ensure!(
+            self.ps.checkpoint_keep >= 1,
+            "ps.checkpoint_keep must be >= 1 (the newest image is always kept)"
+        );
+        anyhow::ensure!(
+            self.ps.lease_ms >= 1,
+            "ps.lease_ms must be >= 1 (a zero lease reassigns every block instantly)"
+        );
+        if !self.ps.worker_kill_plan.is_empty() {
+            crate::workers::KillPlan::parse(&self.ps.worker_kill_plan)
+                .map_err(|e| anyhow::anyhow!("bad [ps] worker_kill_plan: {e}"))?;
+        }
         anyhow::ensure!(
             self.obs.level <= 2,
             "obs.level must be 0 (off), 1 (metrics), or 2 (metrics + tracing)"
@@ -626,6 +688,35 @@ mod tests {
         assert_eq!((d.retry_backoff_ms, d.checkpoint_every), (50, 16));
         // checkpoint_every = 0 would divide by zero in the cadence check
         let bad = KvConf::parse("[ps]\ncheckpoint_every = 0\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+    }
+
+    #[test]
+    fn ps_elastic_keys_parse() {
+        let conf = KvConf::parse(
+            "[ps]\nelastic = 1\nworker_kill_plan = \"seed=7,kill=@3\"\nlease_ms = 500\ncheckpoint_keep = 4\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert!(c.ps.elastic && c.ps.elastic_enabled());
+        assert_eq!(c.ps.worker_kill_plan, "seed=7,kill=@3");
+        assert_eq!(c.ps.lease_ms, 500);
+        assert_eq!(c.ps.checkpoint_keep, 4);
+        // defaults: supervision off, no chaos, 30s leases, keep 2 images
+        let d = PsConfig::default();
+        assert!(!d.elastic && !d.elastic_enabled(), "elasticity must be opt-in");
+        assert!(d.worker_kill_plan.is_empty());
+        assert_eq!((d.lease_ms, d.checkpoint_keep), (30_000, 2));
+        // a kill plan implies supervision even without elastic = 1
+        let implied =
+            PsConfig { worker_kill_plan: "kill=0@1".into(), ..Default::default() };
+        assert!(implied.elastic_enabled());
+        // the plan grammar is validated at config load, not mid-run
+        let bad = KvConf::parse("[ps]\nworker_kill_plan = \"kill=zero@1\"\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+        let bad = KvConf::parse("[ps]\nlease_ms = 0\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+        let bad = KvConf::parse("[ps]\ncheckpoint_keep = 0\n").unwrap();
         assert!(RunConfig::from_kvconf(&bad).is_err());
     }
 

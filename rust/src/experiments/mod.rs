@@ -220,7 +220,9 @@ pub fn staleness_sweep(
              \"cow_clones\": {}, \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
              \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
              \"sched_wait_total\": {:.6e}, \"plan_queue_depth\": {:.2}, \
-             \"reconnects\": {}, \"final_objective\": {:.8e}}}",
+             \"reconnects\": {}, \"sup.heartbeats\": {}, \"sup.leases_expired\": {}, \
+             \"sup.reassigns\": {}, \"sup.workers_live\": {}, \
+             \"final_objective\": {:.8e}}}",
             setting,
             report.rounds,
             report.bytes_flushed,
@@ -239,6 +241,10 @@ pub fn staleness_sweep(
             report.sched_wait_total,
             report.plan_queue_depth,
             report.reconnects,
+            report.sup_heartbeats,
+            report.sup_leases_expired,
+            report.sup_reassigns,
+            report.sup_workers_live,
             report.trace.final_objective()
         ));
         if let Some(p) = out_csv {

@@ -68,11 +68,18 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                                   2 = metrics + per-phase span tracing)
                --trace-events path.jsonl (write span events as chrome://tracing
                                           JSONL; implies --obs-level 2)
+               --elastic 0|1 (supervise workers: per-block leases, death
+                              detection, reassignment, mid-run join/leave)
+               --worker-kill-plan spec (deterministic membership chaos, implies
+                                        --elastic: seed=S,kill=W@R,kill=@R,
+                                        join=@R — fires when round R dispatches)
+               --lease-ms N (block lease before a holder is presumed dead)
   ps-server:   --addr host:port (default from [ps] addr; port 0 = ephemeral)
                --report-secs N (print an [obs] digest line every N seconds)
                --checkpoint-dir dir (periodically checkpoint the hosted run
                                      there, and restore from it on restart)
                --checkpoint-every K (clock advances between checkpoints)
+               --checkpoint-keep N (versioned images retained; default 2)
                hosts the sharded store + SSP clock; serves any number of
                back-to-back runs (each run re-inits it); stop with SIGTERM
   ps-stats:    --addr host:port  print a live registry snapshot (metrics,
@@ -82,6 +89,7 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --republish-tol F --dense-segments 0|1 --pipeline 0|1
                --ps-transport inproc|tcp --ps-addr host:port
                --retry-max N --retry-backoff-ms N --fault-plan spec
+               --elastic 0|1 --worker-kill-plan spec --lease-ms N
                --obs-level 0|1|2 --trace-events path.jsonl
                (runs staleness 0, 2, 8, async through the parameter server;
                 writes staleness_sweep.csv + BENCH_ps.json to --out)";
@@ -212,6 +220,10 @@ fn run() -> anyhow::Result<()> {
             cfg.ps.retry_backoff_ms =
                 args.u64_or("retry-backoff-ms", cfg.ps.retry_backoff_ms)?;
             cfg.ps.fault_plan = args.str_or("fault-plan", &cfg.ps.fault_plan);
+            cfg.ps.elastic = args.usize_or("elastic", usize::from(cfg.ps.elastic))? != 0;
+            cfg.ps.worker_kill_plan =
+                args.str_or("worker-kill-plan", &cfg.ps.worker_kill_plan);
+            cfg.ps.lease_ms = args.u64_or("lease-ms", cfg.ps.lease_ms)?;
             if let Some(kind) = args.opt_str("scheduler") {
                 cfg.sched.kind = SchedKind::parse(&kind)?;
             }
@@ -268,6 +280,15 @@ fn run() -> anyhow::Result<()> {
                 report.plan_queue_depth,
                 report.sched_service_used
             );
+            if cfg.ps.elastic_enabled() {
+                println!(
+                    "sup: heartbeats={} leases_expired={} reassigns={} workers_live={}",
+                    report.sup_heartbeats,
+                    report.sup_leases_expired,
+                    report.sup_reassigns,
+                    report.sup_workers_live
+                );
+            }
         }
         "staleness-sweep" => {
             let dataset = args.str_or("dataset", "tiny");
@@ -285,6 +306,10 @@ fn run() -> anyhow::Result<()> {
             cfg.ps.retry_backoff_ms =
                 args.u64_or("retry-backoff-ms", cfg.ps.retry_backoff_ms)?;
             cfg.ps.fault_plan = args.str_or("fault-plan", &cfg.ps.fault_plan);
+            cfg.ps.elastic = args.usize_or("elastic", usize::from(cfg.ps.elastic))? != 0;
+            cfg.ps.worker_kill_plan =
+                args.str_or("worker-kill-plan", &cfg.ps.worker_kill_plan);
+            cfg.ps.lease_ms = args.u64_or("lease-ms", cfg.ps.lease_ms)?;
             if let Some(kind) = args.opt_str("scheduler") {
                 cfg.sched.kind = SchedKind::parse(&kind)?;
             }
@@ -314,11 +339,14 @@ fn run() -> anyhow::Result<()> {
             let report_secs = args.u64_or("report-secs", cfg.obs.report_secs)?;
             let ckpt_dir = args.str_or("checkpoint-dir", &cfg.ps.checkpoint_dir);
             let ckpt_every = args.u64_or("checkpoint-every", cfg.ps.checkpoint_every)?;
+            let ckpt_keep = args.usize_or("checkpoint-keep", cfg.ps.checkpoint_keep)?;
             args.finish()?;
             anyhow::ensure!(ckpt_every >= 1, "--checkpoint-every must be >= 1");
+            anyhow::ensure!(ckpt_keep >= 1, "--checkpoint-keep must be >= 1");
             let ckpt = (!ckpt_dir.is_empty()).then(|| strads::ps::CheckpointConfig {
                 dir: PathBuf::from(&ckpt_dir),
                 every: ckpt_every,
+                keep: ckpt_keep,
             });
             let server = strads::ps::PsTcpServer::bind_with(&addr, ckpt)?;
             println!("ps-server listening on {}", server.local_addr());

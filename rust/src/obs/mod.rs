@@ -19,6 +19,7 @@
 //! | `ps.cells_pulled`     | counter   | cells covered per pull              |
 //! | `ps.snapshot_clones`  | counter   | zero-copy epoch views handed out    |
 //! | `ps.flushes`          | counter   | `ParameterServer::serve_flush`      |
+//! | `ps.flushes_dropped`  | counter   | fenced / duplicate / zombie flushes |
 //! | `ps.bytes_flushed`    | counter   | modeled wire bytes per flush        |
 //! | `ps.bytes_republished`| counter   | modeled wire bytes per republish    |
 //! | `ps.stale_gap_sum`    | counter   | sum of admitted staleness gaps      |
@@ -31,6 +32,10 @@
 //! | `net.retry_backoff_us`| counter   | total retry backoff slept, µs       |
 //! | `ckpt.writes`         | counter   | ps-server checkpoints written       |
 //! | `ckpt.bytes`          | counter   | ps-server checkpoint bytes written  |
+//! | `sup.heartbeats`      | counter   | worker flushes seen by the supervisor|
+//! | `sup.leases_expired`  | counter   | dispatched-block leases that timed out|
+//! | `sup.reassigns`       | counter   | blocks re-dispatched to live workers|
+//! | `sup.workers_live`    | gauge     | current live worker census          |
 //! | `store.hash_probes`   | counter   | hashed-path probes (snapshot view)  |
 //! | `store.cow_clones`    | counter   | copy-on-publish clones (snapshot)   |
 

@@ -10,12 +10,17 @@
 //! segment's `Arc` under its read lock *is* the snapshot; serialization
 //! happens afterwards with no server lock held.
 //!
-//! Writes are crash-safe: the image goes to `ps.ckpt.tmp` and is
-//! `rename`d over `ps.ckpt`, so a reader only ever sees a complete
-//! file. The TCP server writes one every `checkpoint_every` clock
-//! ticks and at graceful stop; on bind it restores `ps.ckpt` (if
-//! present) so reconnecting clients resume the run where the clock
-//! left off.
+//! Writes are crash-safe **and durable**: the image goes to
+//! `ps.ckpt.tmp`, is fsynced, `rename`d over `ps.ckpt`, and then the
+//! *directory* is fsynced too — without the directory sync a power cut
+//! can lose the rename itself, leaving the previous (or no) checkpoint
+//! behind a file the process already reported written. Each write also
+//! hard-links a versioned image `ps-<applied>.ckpt` and prunes to the
+//! newest `checkpoint_keep` of those, so one corrupted latest image
+//! does not erase the whole durability ladder. The TCP server writes
+//! one every `checkpoint_every` clock ticks and at graceful stop; on
+//! bind it restores `ps.ckpt` (if present) so reconnecting clients
+//! resume the run where the clock left off.
 
 use super::clock::StalenessPolicy;
 use super::shard::Cell;
@@ -26,9 +31,13 @@ use std::sync::Arc;
 
 /// Leading bytes of every checkpoint file.
 pub const CKPT_MAGIC: &[u8; 8] = b"STRADSCK";
-/// Bump on any layout change; a reader refuses other versions.
-pub const CKPT_VERSION: u32 = 1;
-/// The checkpoint file name inside `--checkpoint-dir`.
+/// Bump on any layout change; a reader refuses newer versions. v2
+/// added the membership (live) bitmap after the flush seqs; v1 files
+/// are still read (their whole census is presumed live).
+pub const CKPT_VERSION: u32 = 2;
+/// The checkpoint file name inside `--checkpoint-dir` (always the
+/// newest image; versioned `ps-<applied>.ckpt` hard links sit beside
+/// it, pruned to `checkpoint_keep`).
 pub const CKPT_FILE: &str = "ps.ckpt";
 
 /// Where and how often the TCP server checkpoints.
@@ -38,6 +47,8 @@ pub struct CheckpointConfig {
     pub dir: std::path::PathBuf,
     /// Write every N `Advance` clock ticks (>= 1).
     pub every: u64,
+    /// Versioned images retained besides `ps.ckpt` (>= 1).
+    pub keep: usize,
 }
 
 /// A captured, not-yet-serialized checkpoint: `Arc` views of the epoch
@@ -50,6 +61,10 @@ pub struct CheckpointImage {
     policy: StalenessPolicy,
     applied: u64,
     worker_clocks: Vec<u64>,
+    /// Membership bitmap, parallel to `worker_clocks` (v2+): retired
+    /// workers must stay retired across a restore, or the rebuilt gate
+    /// would park every survivor on a clock that died before the crash.
+    live: Vec<bool>,
     flush_seqs: Vec<u64>,
     /// `(start, epoch_version, slab)` per dense segment.
     segments: Vec<(usize, u64, Arc<Vec<f32>>)>,
@@ -81,23 +96,39 @@ impl CheckpointImage {
             policy: server.policy(),
             applied: server.clock().applied(),
             worker_clocks: server.clock().worker_clocks(),
+            live: server.clock().live_flags(),
             flush_seqs: flush_seqs.to_vec(),
             segments: server.store().segment_epochs(),
             cells: server.store().hashed_cells(),
         }
     }
 
-    /// Serialize to `dir/ps.ckpt` via write-temp-then-rename (a reader
-    /// never sees a torn file). Returns the bytes written.
-    pub fn write_to(&self, dir: &Path) -> std::io::Result<u64> {
+    /// Serialize to `dir/ps.ckpt` via write-temp-fsync-rename, fsync
+    /// the directory (the rename itself is not durable until the
+    /// directory entry is), hard-link the versioned `ps-<applied>.ckpt`
+    /// beside it, and prune versioned images beyond the newest `keep`.
+    /// Returns the bytes written.
+    pub fn write_to(&self, dir: &Path, keep: usize) -> std::io::Result<u64> {
         std::fs::create_dir_all(dir)?;
         let bytes = self.to_bytes();
         let tmp = dir.join(format!("{CKPT_FILE}.tmp"));
+        let latest = dir.join(CKPT_FILE);
         let mut f = std::fs::File::create(&tmp)?;
         f.write_all(&bytes)?;
         f.sync_all()?;
         drop(f);
-        std::fs::rename(&tmp, dir.join(CKPT_FILE))?;
+        std::fs::rename(&tmp, &latest)?;
+        // The versioned image shares the inode just made durable; two
+        // checkpoints at the same applied tick overwrite (remove first:
+        // hard_link refuses to replace).
+        let versioned = dir.join(format!("ps-{:020}.ckpt", self.applied));
+        let _ = std::fs::remove_file(&versioned);
+        std::fs::hard_link(&latest, &versioned)?;
+        // Directory fsync covers the rename, the new link, and (below)
+        // the prunes — one sync at the end would leave a window where
+        // the rename is reported durable but is not, so sync here first.
+        std::fs::File::open(dir)?.sync_all()?;
+        prune_versioned(dir, keep.max(1))?;
         Ok(bytes.len() as u64)
     }
 
@@ -121,9 +152,13 @@ impl CheckpointImage {
         }
         b.extend_from_slice(&self.applied.to_le_bytes());
         debug_assert_eq!(self.worker_clocks.len(), self.workers);
+        debug_assert_eq!(self.live.len(), self.workers);
         debug_assert_eq!(self.flush_seqs.len(), self.workers);
         for &c in &self.worker_clocks {
             b.extend_from_slice(&c.to_le_bytes());
+        }
+        for &l in &self.live {
+            b.push(u8::from(l));
         }
         for &s in &self.flush_seqs {
             b.extend_from_slice(&s.to_le_bytes());
@@ -203,8 +238,8 @@ pub fn read_checkpoint(dir: &Path) -> anyhow::Result<Option<Restored>> {
     anyhow::ensure!(r.take(8)? == CKPT_MAGIC, "{} is not a checkpoint file", path.display());
     let version = r.u32()?;
     anyhow::ensure!(
-        version == CKPT_VERSION,
-        "checkpoint version {version} unsupported (this build reads v{CKPT_VERSION})"
+        version >= 1 && version <= CKPT_VERSION,
+        "checkpoint version {version} unsupported (this build reads v1..=v{CKPT_VERSION})"
     );
     let session = r.u64()?;
     let shards = r.u32()? as usize;
@@ -220,6 +255,12 @@ pub fn read_checkpoint(dir: &Path) -> anyhow::Result<Option<Restored>> {
     for _ in 0..nworkers {
         worker_clocks.push(r.u64()?);
     }
+    // v1 predates elastic membership: its whole census is live.
+    let live = if version >= 2 {
+        r.take(nworkers)?.iter().map(|&b| b != 0).collect()
+    } else {
+        vec![true; nworkers]
+    };
     let mut flush_seqs = Vec::with_capacity(nworkers);
     for _ in 0..nworkers {
         flush_seqs.push(r.u64()?);
@@ -258,9 +299,31 @@ pub fn read_checkpoint(dir: &Path) -> anyhow::Result<Option<Restored>> {
         cells.push((r.u64()? as usize, Cell { version: r.u64()?, value: r.f64()? }));
     }
     server.store().restore_cells(&cells);
-    server.clock().restore(&worker_clocks, applied);
+    server.clock().restore(&worker_clocks, &live, applied);
     anyhow::ensure!(r.buf.is_empty(), "{} trailing bytes after checkpoint", r.buf.len());
     Ok(Some(Restored { server, session, flush_seqs }))
+}
+
+/// Delete versioned `ps-*.ckpt` images beyond the newest `keep`.
+/// `ps.ckpt` itself (the newest image's other name) is never touched.
+/// Zero-padded applied counts make the lexical order the numeric one.
+fn prune_versioned(dir: &Path, keep: usize) -> std::io::Result<()> {
+    let mut versioned: Vec<std::path::PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("ps-") && n.ends_with(".ckpt"))
+                .unwrap_or(false)
+        })
+        .collect();
+    versioned.sort();
+    let excess = versioned.len().saturating_sub(keep);
+    for old in &versioned[..excess] {
+        std::fs::remove_file(old)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -281,8 +344,11 @@ mod tests {
         server.clock().record_flush(0, 4);
         server.clock().record_flush(2, 3);
         server.clock().advance_applied(4);
+        // Membership must survive the roundtrip: a worker retired
+        // before the crash has to stay retired after the restore.
+        server.clock().retire(1);
         let image = CheckpointImage::capture(&server, 77, &[5, 4, 4]);
-        let bytes = image.write_to(&dir).unwrap();
+        let bytes = image.write_to(&dir, 2).unwrap();
         assert!(bytes > 0);
 
         let restored = read_checkpoint(&dir).unwrap().expect("checkpoint present");
@@ -292,6 +358,7 @@ mod tests {
         assert_eq!(restored.server.store().num_shards(), 4);
         assert_eq!(restored.server.clock().applied(), 4);
         assert_eq!(restored.server.clock().worker_clocks(), vec![5, 0, 4]);
+        assert_eq!(restored.server.clock().live_flags(), vec![true, false, true]);
         // bitwise store equality: segment images and hashed cells
         let spec = PullSpec { ranges: vec![(0, 6), (10, 2)], keys: vec![50, 100] };
         let (orig, back) =
@@ -317,11 +384,75 @@ mod tests {
 
         let server = ParameterServer::with_segments(1, 1, StalenessPolicy::Bounded(0), &[(0, 4)]);
         let image = CheckpointImage::capture(&server, 1, &[0]);
-        image.write_to(&dir).unwrap();
+        image.write_to(&dir, 2).unwrap();
         let mut bytes = std::fs::read(dir.join(CKPT_FILE)).unwrap();
         bytes.truncate(bytes.len() - 3);
         std::fs::write(dir.join(CKPT_FILE), &bytes).unwrap();
         assert!(read_checkpoint(&dir).is_err(), "truncation must error");
+
+        // A future version must be refused, not half-read.
+        let mut future = image.to_bytes();
+        future[8..12].copy_from_slice(&(CKPT_VERSION + 1).to_le_bytes());
+        std::fs::write(dir.join(CKPT_FILE), &future).unwrap();
+        assert!(read_checkpoint(&dir).is_err(), "future version must error");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v1_checkpoints_without_membership_still_restore() {
+        let dir = std::env::temp_dir().join(format!("strads_ckpt_v1_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let server = ParameterServer::with_segments(2, 3, StalenessPolicy::Bounded(1), &[(0, 4)]);
+        server.clock().advance_applied(2);
+        let mut bytes = CheckpointImage::capture(&server, 9, &[1, 2, 3]).to_bytes();
+        // Rewrite the v2 image as v1: stamp the version and splice out
+        // the live bitmap (one byte per worker, right after the clocks).
+        bytes[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let live_at = 8 + 4 + 8 + 4 + 4 + 1 + 8 + 8 + 8 * 3;
+        bytes.drain(live_at..live_at + 3);
+        std::fs::write(dir.join(CKPT_FILE), &bytes).unwrap();
+
+        let restored = read_checkpoint(&dir).unwrap().expect("v1 readable");
+        assert_eq!(restored.session, 9);
+        assert_eq!(restored.flush_seqs, vec![1, 2, 3]);
+        assert_eq!(
+            restored.server.clock().live_flags(),
+            vec![true, true, true],
+            "a pre-elastic census is presumed fully live"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn versioned_images_are_pruned_to_keep() {
+        let dir = std::env::temp_dir().join(format!("strads_ckpt_keep_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server = ParameterServer::with_segments(1, 1, StalenessPolicy::Bounded(0), &[(0, 2)]);
+        for tick in 1..=5u64 {
+            server.clock().advance_applied(tick);
+            CheckpointImage::capture(&server, 1, &[0]).write_to(&dir, 2).unwrap();
+        }
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        names.sort();
+        assert_eq!(
+            names,
+            vec![
+                format!("ps-{:020}.ckpt", 4),
+                format!("ps-{:020}.ckpt", 5),
+                CKPT_FILE.to_string(),
+            ],
+            "only the newest keep=2 versioned images (plus ps.ckpt) survive"
+        );
+        // ps.ckpt always restores to the newest image.
+        let restored = read_checkpoint(&dir).unwrap().expect("present");
+        assert_eq!(restored.server.clock().applied(), 5);
+        // Overwriting the same applied tick is fine (restart at a tick).
+        CheckpointImage::capture(&server, 1, &[0]).write_to(&dir, 2).unwrap();
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -237,13 +237,20 @@ impl PsClient {
     }
 
     /// End-of-round clock: flush the coalesced batch to the server
-    /// (versioned at `round + 1`), tick this worker's clock, and return
-    /// the flushed batch (the coordinator applies the same deltas to
-    /// the canonical model).
-    pub fn flush_clock(&mut self, round: u64) -> Result<Vec<(usize, f64)>, TransportError> {
+    /// (versioned at `round + 1`) for scheduling block `block`, tick
+    /// this worker's clock, and return the flushed batch plus the
+    /// server's verdict. `applied == false` means the server dropped
+    /// the batch — another worker's copy of the reassigned block
+    /// already landed, or this worker has been retired — and the
+    /// coordinator must NOT fold the deltas into the canonical model.
+    pub fn flush_clock(
+        &mut self,
+        round: u64,
+        block: u64,
+    ) -> Result<(Vec<(usize, f64)>, bool), TransportError> {
         let deltas = self.batch.drain();
-        self.transport.flush(&deltas, round)?;
-        Ok(deltas)
+        let applied = self.transport.flush(&deltas, round, block)?;
+        Ok((deltas, applied))
     }
 
     pub fn worker(&self) -> usize {
@@ -325,7 +332,8 @@ mod tests {
         assert_eq!(snap.get(2), Some(3.0));
 
         client.push(&[(1, 0.5), (1, 0.5), (2, -1.0)]);
-        let flushed = client.flush_clock(0).unwrap();
+        let (flushed, applied) = client.flush_clock(0, 0).unwrap();
+        assert!(applied, "a unique (round, block) flush must apply");
         assert_eq!(flushed, vec![(1, 1.0), (2, -1.0)]);
         assert_eq!(server.store().read(&[1])[0].value, 3.0);
         assert_eq!(server.store().read(&[1])[0].version, 1);

@@ -52,6 +52,11 @@ pub struct ClockShutdown;
 struct ClockState {
     /// Per-worker clocks: rounds flushed by each worker so far.
     worker_clocks: Vec<u64>,
+    /// Membership: `live[w]` is false once worker `w` has been retired
+    /// (left, or was declared dead by the supervisor). Entries are
+    /// never removed — ids stay stable — only flipped, so a retired
+    /// worker's slot can also be revived by an idempotent re-join.
+    live: Vec<bool>,
     /// Rounds fully applied (and republished) by the server.
     applied: u64,
     /// Set at teardown so gate waiters wake up and exit.
@@ -71,6 +76,7 @@ impl ClockTable {
         ClockTable {
             state: Mutex::new(ClockState {
                 worker_clocks: vec![0; workers],
+                live: vec![true; workers],
                 applied: 0,
                 shutdown: false,
             }),
@@ -88,35 +94,108 @@ impl ClockTable {
         }
     }
 
-    /// Block until a pull for worker-round `round` is admitted under
-    /// `policy`. Returns `(staleness_gap, had_to_wait)` where the gap is
-    /// `round - applied` observed at admission.
+    /// Block until a pull by `worker` for worker-round `round` is
+    /// admitted under `policy`. Returns `(staleness_gap, had_to_wait)`
+    /// where the gap is `round - applied` observed at admission. A
+    /// worker that has been retired — including one already parked at
+    /// the gate when [`ClockTable::retire`] lands — wakes with
+    /// `Err(ClockShutdown)` instead of being admitted: the dead never
+    /// hold nor take the gate. Ids outside the table (the coordinator
+    /// link's diagnostic id) are always treated as live.
     pub fn wait_admit(
         &self,
+        worker: usize,
         round: u64,
         policy: StalenessPolicy,
     ) -> Result<(u64, bool), ClockShutdown> {
+        let retired =
+            |state: &ClockState| worker < state.live.len() && !state.live[worker];
         let mut state = self.state.lock().expect("clock lock poisoned");
         let mut waited = false;
         while !Self::admitted(round, state.applied, policy) {
-            if state.shutdown {
+            if state.shutdown || retired(&state) {
                 return Err(ClockShutdown);
             }
             waited = true;
             state = self.advanced.wait(state).expect("clock lock poisoned");
         }
-        if state.shutdown {
+        if state.shutdown || retired(&state) {
             return Err(ClockShutdown);
         }
         Ok((round.saturating_sub(state.applied), waited))
     }
 
     /// Record that `worker` flushed its round-`round` updates (the
-    /// worker's clock tick).
+    /// worker's clock tick). Ids outside the table are ignored (the
+    /// coordinator link never flushes; remote ids are bounds-checked
+    /// before they get here).
     pub fn record_flush(&self, worker: usize, round: u64) {
         let mut state = self.state.lock().expect("clock lock poisoned");
+        if let Some(clock) = state.worker_clocks.get_mut(worker) {
+            *clock = (*clock).max(round + 1);
+        }
+    }
+
+    /// Membership: admit worker `worker` (idempotent — a replayed Join
+    /// is a no-op). The table grows to cover the id if needed; the
+    /// joiner's clock enters at the current frontier (`applied`), so
+    /// under any staleness bound its very first pull is gate-legal and
+    /// it never drags the diagnostic min-clock below the frontier.
+    pub fn join(&self, worker: usize) {
+        let mut state = self.state.lock().expect("clock lock poisoned");
+        if worker >= state.worker_clocks.len() {
+            let frontier = state.applied;
+            state.worker_clocks.resize(worker + 1, frontier);
+            state.live.resize(worker + 1, true);
+        }
+        state.live[worker] = true;
+        let frontier = state.applied;
         let clock = &mut state.worker_clocks[worker];
-        *clock = (*clock).max(round + 1);
+        *clock = (*clock).max(frontier);
+        drop(state);
+        // wake waiters so anyone re-checking membership sees the join
+        self.advanced.notify_all();
+    }
+
+    /// Membership: retire worker `worker` (left the run, or declared
+    /// dead by the supervisor). Idempotent; returns true when this call
+    /// flipped a live worker to retired. Wakes every gate waiter so a
+    /// parked retired worker exits instead of sleeping forever, and the
+    /// gate never parks *on* the dead — admission only reads `applied`,
+    /// which the coordinator keeps advancing without the leaver.
+    pub fn retire(&self, worker: usize) -> bool {
+        let mut state = self.state.lock().expect("clock lock poisoned");
+        let flipped = match state.live.get_mut(worker) {
+            Some(live) if *live => {
+                *live = false;
+                true
+            }
+            _ => false,
+        };
+        drop(state);
+        if flipped {
+            self.advanced.notify_all();
+        }
+        flipped
+    }
+
+    /// Is `worker` a live member? Ids outside the table report false
+    /// (they were never admitted).
+    pub fn is_live(&self, worker: usize) -> bool {
+        let state = self.state.lock().expect("clock lock poisoned");
+        state.live.get(worker).copied().unwrap_or(false)
+    }
+
+    /// How many members are currently live.
+    pub fn live_workers(&self) -> usize {
+        let state = self.state.lock().expect("clock lock poisoned");
+        state.live.iter().filter(|l| **l).count()
+    }
+
+    /// Copy of the membership flags (checkpointing; parallel to
+    /// [`ClockTable::worker_clocks`]).
+    pub fn live_flags(&self) -> Vec<bool> {
+        self.state.lock().expect("clock lock poisoned").live.clone()
     }
 
     /// Server side: rounds `0..applied` are now applied and republished.
@@ -143,23 +222,36 @@ impl ClockTable {
         self.state.lock().expect("clock lock poisoned").worker_clocks.clone()
     }
 
-    /// Slowest worker clock (diagnostics; the laggard that SSP protects).
+    /// Slowest *live* worker clock (diagnostics; the laggard that SSP
+    /// protects). Retired workers stop counting the moment they leave —
+    /// a dead laggard must not make the fleet look stalled.
     pub fn min_worker_clock(&self) -> u64 {
         let state = self.state.lock().expect("clock lock poisoned");
-        state.worker_clocks.iter().copied().min().unwrap_or(0)
+        state
+            .worker_clocks
+            .iter()
+            .zip(state.live.iter())
+            .filter(|(_, live)| **live)
+            .map(|(c, _)| *c)
+            .min()
+            .unwrap_or(0)
     }
 
     /// Checkpoint restore: overwrite the table with a saved clock
-    /// vector + applied count, then wake any waiters so they re-check
-    /// admission against the restored state.
-    pub fn restore(&self, worker_clocks: &[u64], applied: u64) {
+    /// vector + membership + applied count, then wake any waiters so
+    /// they re-check admission against the restored state. The saved
+    /// census may be larger than the table was built for (workers
+    /// joined before the checkpoint) — the table grows to match; it
+    /// must never be smaller.
+    pub fn restore(&self, worker_clocks: &[u64], live: &[bool], applied: u64) {
+        assert_eq!(worker_clocks.len(), live.len(), "clock/membership length mismatch");
         let mut state = self.state.lock().expect("clock lock poisoned");
-        assert_eq!(
-            state.worker_clocks.len(),
-            worker_clocks.len(),
-            "restore with a different worker count"
+        assert!(
+            worker_clocks.len() >= state.worker_clocks.len(),
+            "restore with a smaller worker count"
         );
-        state.worker_clocks.copy_from_slice(worker_clocks);
+        state.worker_clocks = worker_clocks.to_vec();
+        state.live = live.to_vec();
         state.applied = applied;
         drop(state);
         self.advanced.notify_all();
@@ -200,7 +292,7 @@ mod tests {
         let table = Arc::new(ClockTable::new(1));
         let waiter = {
             let table = Arc::clone(&table);
-            std::thread::spawn(move || table.wait_admit(2, StalenessPolicy::Bounded(0)))
+            std::thread::spawn(move || table.wait_admit(0, 2, StalenessPolicy::Bounded(0)))
         };
         // Round 2 with bound 0 needs applied >= 2.
         table.advance_applied(1);
@@ -217,11 +309,69 @@ mod tests {
         let table = Arc::new(ClockTable::new(1));
         let waiter = {
             let table = Arc::clone(&table);
-            std::thread::spawn(move || table.wait_admit(100, StalenessPolicy::Bounded(1)))
+            std::thread::spawn(move || table.wait_admit(0, 100, StalenessPolicy::Bounded(1)))
         };
         std::thread::sleep(std::time::Duration::from_millis(10));
         table.shutdown();
         assert_eq!(waiter.join().unwrap(), Err(ClockShutdown));
+    }
+
+    #[test]
+    fn joiner_enters_at_the_frontier_and_is_gate_legal() {
+        let table = ClockTable::new(2);
+        table.record_flush(0, 4);
+        table.record_flush(1, 4);
+        table.advance_applied(5);
+        table.join(2);
+        assert_eq!(table.num_workers(), 3);
+        assert!(table.is_live(2));
+        assert_eq!(table.worker_clocks()[2], 5, "joiner clock starts at the frontier");
+        assert_eq!(table.min_worker_clock(), 5, "joiner does not look like a laggard");
+        // Even at staleness 0 the joiner's first pull (for the current
+        // frontier round) is admitted without waiting.
+        let (gap, waited) = table.wait_admit(2, 5, StalenessPolicy::Bounded(0)).unwrap();
+        assert_eq!((gap, waited), (0, false));
+        // join is idempotent: a replayed Join changes nothing
+        table.join(2);
+        assert_eq!(table.num_workers(), 3);
+        assert_eq!(table.worker_clocks()[2], 5);
+    }
+
+    #[test]
+    fn retire_wakes_a_parked_waiter_and_fences_membership() {
+        let table = Arc::new(ClockTable::new(2));
+        let waiter = {
+            let table = Arc::clone(&table);
+            // round 100 at bound 0 can never be admitted here: parked
+            std::thread::spawn(move || table.wait_admit(1, 100, StalenessPolicy::Bounded(0)))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(table.retire(1), "first retire flips the flag");
+        assert_eq!(waiter.join().unwrap(), Err(ClockShutdown), "parked leaver wakes");
+        assert!(!table.retire(1), "retire is idempotent");
+        assert!(!table.is_live(1));
+        assert_eq!(table.live_workers(), 1);
+        assert_eq!(table.live_flags(), vec![true, false]);
+        // a retired worker is refused at the gate even when admissible
+        table.advance_applied(200);
+        assert_eq!(
+            table.wait_admit(1, 200, StalenessPolicy::Bounded(0)),
+            Err(ClockShutdown)
+        );
+        // ...while the survivor and the out-of-range coordinator id pass
+        assert!(table.wait_admit(0, 200, StalenessPolicy::Bounded(0)).is_ok());
+        assert!(table.wait_admit(usize::MAX, 200, StalenessPolicy::Bounded(0)).is_ok());
+    }
+
+    #[test]
+    fn min_worker_clock_skips_the_retired() {
+        let table = ClockTable::new(3);
+        table.record_flush(0, 9);
+        table.record_flush(2, 7);
+        // worker 1 never flushed; once retired it stops dragging the min
+        assert_eq!(table.min_worker_clock(), 0);
+        table.retire(1);
+        assert_eq!(table.min_worker_clock(), 8);
     }
 
     #[test]
@@ -237,13 +387,18 @@ mod tests {
     #[test]
     fn restore_resumes_where_the_checkpoint_left_off() {
         let table = ClockTable::new(3);
-        table.restore(&[5, 4, 6], 4);
+        table.restore(&[5, 4, 6], &[true, true, true], 4);
         assert_eq!(table.applied(), 4);
         assert_eq!(table.worker_clocks(), vec![5, 4, 6]);
         assert_eq!(table.min_worker_clock(), 4);
         // a pull for round 4 at staleness 0 is admitted immediately
-        let (gap, waited) = table.wait_admit(4, StalenessPolicy::Bounded(0)).unwrap();
+        let (gap, waited) = table.wait_admit(1, 4, StalenessPolicy::Bounded(0)).unwrap();
         assert_eq!((gap, waited), (0, false));
+        // a checkpoint from after a mid-run join grows the table
+        let table = ClockTable::new(2);
+        table.restore(&[5, 4, 6], &[true, false, true], 4);
+        assert_eq!(table.num_workers(), 3);
+        assert!(!table.is_live(1));
     }
 
     #[test]

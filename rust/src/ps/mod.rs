@@ -114,6 +114,10 @@ pub struct PsStats {
     pub max_stale_gap: Arc<Counter>,
     /// Pulls that had to block at the SSP gate.
     pub gate_waits: Arc<Counter>,
+    /// Flush batches refused by the exactly-once guard: late arrivals
+    /// from retired workers (the membership fence) and losers of a
+    /// `(round, block)` reassignment race. 0 in a fixed, healthy fleet.
+    pub flushes_dropped: Arc<Counter>,
 }
 
 impl PsStats {
@@ -132,6 +136,7 @@ impl PsStats {
             stale_gap_sum: reg.counter("ps.stale_gap_sum"),
             max_stale_gap: reg.counter("ps.max_stale_gap"),
             gate_waits: reg.counter("ps.gate_waits"),
+            flushes_dropped: reg.counter("ps.flushes_dropped"),
         }
     }
 
@@ -170,6 +175,7 @@ pub struct StatsSnapshot {
     pub stale_gap_sum: u64,
     pub max_stale_gap: u64,
     pub gate_waits: u64,
+    pub flushes_dropped: u64,
     pub hash_probes: u64,
     pub cow_clones: u64,
 }
@@ -201,6 +207,18 @@ pub struct ParameterServer {
     stats: PsStats,
     registry: Registry,
     gate_wait_us: Arc<Histogram>,
+    /// Exactly-once ledger for elastic reassignment: the set of
+    /// `(round, block)` flushes already applied. When a lease expires
+    /// and a block is re-dispatched, two workers race to flush the same
+    /// `(round, block)`; the first insert wins and the loser is dropped
+    /// — transport-agnostically, under one lock, so the canonical model
+    /// and the PS store can never disagree about the winner. Entries
+    /// for rounds below the applied clock are pruned on advance (a
+    /// flush that old is a zombie and is refused by the round check
+    /// alone). Cross-*restart* replay is not this ledger's job: the
+    /// per-worker flush-seq dedup (PR 7) persists in checkpoints and
+    /// catches it at the TCP layer.
+    flush_ledger: std::sync::Mutex<std::collections::BTreeSet<(u64, u64)>>,
 }
 
 impl ParameterServer {
@@ -227,6 +245,7 @@ impl ParameterServer {
             stats,
             registry,
             gate_wait_us,
+            flush_ledger: std::sync::Mutex::new(std::collections::BTreeSet::new()),
         }
     }
 
@@ -263,11 +282,12 @@ impl ParameterServer {
     /// identical.
     pub fn serve_pull(
         &self,
+        worker: usize,
         spec: &PullSpec,
         round: u64,
     ) -> Result<(SpecPull, u64, bool, u64), ClockShutdown> {
         let gate_start = std::time::Instant::now();
-        let (gap, waited) = self.clock.wait_admit(round, self.policy)?;
+        let (gap, waited) = self.clock.wait_admit(worker, round, self.policy)?;
         let gate_us = gate_start.elapsed().as_micros() as u64;
         self.gate_wait_us.record(gate_us);
         self.stats.pulls.inc();
@@ -283,13 +303,71 @@ impl ParameterServer {
         Ok((pulled, gap, waited, gate_us))
     }
 
-    /// Serve one worker flush: meter it, apply the coalesced deltas at
-    /// version `round + 1`, tick the worker's clock.
-    pub fn serve_flush(&self, worker: usize, deltas: &[(usize, f64)], round: u64) {
+    /// Serve one worker flush for scheduling block `block`: decide
+    /// whether it is the `(round, block)` winner, and if so meter it,
+    /// apply the coalesced deltas at version `round + 1`, and tick the
+    /// worker's clock. Returns the verdict — `true` iff the deltas were
+    /// applied — which rides the flush reply so the coordinator keeps
+    /// its canonical model in lock-step with the store. Dropped (and
+    /// counted in `ps.flushes_dropped`, never applied):
+    /// * flushes from retired workers — the membership fence; a worker
+    ///   declared dead cannot mutate the model afterwards;
+    /// * flushes for rounds the server already applied — zombies from
+    ///   before a reassignment, arriving after their ledger entry was
+    ///   pruned;
+    /// * `(round, block)` pairs already applied — the loser of a
+    ///   reassignment race (the original, slow-but-alive worker still
+    ///   gets its clock ticked: it did finish its round).
+    /// In a fixed healthy fleet every flush is a unique live-worker
+    /// `(round, block)` winner, so this path is behaviorally identical
+    /// to the pre-elastic one — contract 8 in the README.
+    pub fn serve_flush(
+        &self,
+        worker: usize,
+        block: u64,
+        deltas: &[(usize, f64)],
+        round: u64,
+    ) -> bool {
+        if !self.clock.is_live(worker) {
+            self.stats.flushes_dropped.inc();
+            return false;
+        }
+        {
+            let mut ledger = self.flush_ledger.lock().expect("flush ledger poisoned");
+            if round < self.clock.applied() || !ledger.insert((round, block)) {
+                drop(ledger);
+                self.stats.flushes_dropped.inc();
+                self.clock.record_flush(worker, round);
+                return false;
+            }
+        }
         self.stats.bytes_flushed.add(wire_bytes_for(deltas.len()));
         self.stats.flushes.inc();
         self.store.add_deltas(deltas, round + 1);
         self.clock.record_flush(worker, round);
+        true
+    }
+
+    /// Serve a coordinator clock advance: ungate workers, then prune
+    /// ledger entries for rounds that can no longer be legally flushed.
+    pub fn serve_advance(&self, applied: u64) {
+        self.clock.advance_applied(applied);
+        let applied = self.clock.applied();
+        let mut ledger = self.flush_ledger.lock().expect("flush ledger poisoned");
+        *ledger = ledger.split_off(&(applied, 0));
+    }
+
+    /// Membership: admit worker `worker` at the clock frontier
+    /// (idempotent — safe under retried Join RPCs).
+    pub fn serve_join(&self, worker: usize) {
+        self.clock.join(worker);
+    }
+
+    /// Membership: retire worker `worker` (idempotent). Returns true
+    /// when this call flipped a live worker; wakes any parked waiter it
+    /// owned.
+    pub fn serve_leave(&self, worker: usize) -> bool {
+        self.clock.retire(worker)
     }
 
     /// Serve one coordinator republish: meter it as republish traffic,
@@ -313,6 +391,7 @@ impl ParameterServer {
             stale_gap_sum: self.stats.stale_gap_sum.get(),
             max_stale_gap: self.stats.max_stale_gap.get(),
             gate_waits: self.stats.gate_waits.get(),
+            flushes_dropped: self.stats.flushes_dropped.get(),
             hash_probes: self.store.hash_probes(),
             cow_clones: self.store.cow_clones(),
         }
@@ -376,7 +455,7 @@ mod tests {
             ParameterServer::with_segments(2, 2, StalenessPolicy::Bounded(0), &[(0, 8)]);
         server.store().publish_dense(&[1.0; 8], 0);
         let (_, gap, waited, _gate_us) =
-            server.serve_pull(&PullSpec::from_ranges(vec![(0, 8)]), 0).unwrap();
+            server.serve_pull(0, &PullSpec::from_ranges(vec![(0, 8)]), 0).unwrap();
         assert_eq!((gap, waited), (0, false));
         let snap = server.obs_snapshot();
         assert_eq!(snap.get("ps.pulls"), Some(&MetricValue::Counter(1)));
@@ -400,6 +479,45 @@ mod tests {
         assert_eq!(server.policy(), StalenessPolicy::Async);
         server.store().publish_dense(&[1.0], 0);
         assert_eq!(server.store().len(), 1);
+    }
+
+    #[test]
+    fn flush_ledger_applies_a_reassigned_block_exactly_once() {
+        let server = ParameterServer::with_segments(2, 3, StalenessPolicy::Bounded(1), &[(0, 4)]);
+        server.store().publish_dense(&[0.0; 4], 0);
+        // worker 0 was slow; block 7 of round 0 was reassigned to
+        // worker 1, which flushed first and wins
+        assert!(server.serve_flush(1, 7, &[(0, 1.0)], 0), "first flush wins");
+        assert!(!server.serve_flush(0, 7, &[(0, 1.0)], 0), "the late duplicate is dropped");
+        let snap = server.store().read_spec(&PullSpec::from_keys(vec![0]));
+        assert_eq!(snap.cells[0].value, 1.0, "applied exactly once");
+        assert_eq!(server.stats_snapshot().flushes, 1);
+        assert_eq!(server.stats_snapshot().flushes_dropped, 1);
+        // the slow-but-alive loser still ticked its clock
+        assert_eq!(server.clock().worker_clocks()[0], 1);
+        // a different block of the same round is its own ledger entry
+        assert!(server.serve_flush(2, 8, &[(1, 2.0)], 0));
+        // after advance, a zombie for the pruned round is refused
+        server.serve_advance(1);
+        assert!(!server.serve_flush(2, 7, &[(0, 5.0)], 0), "zombie round refused");
+        let snap = server.store().read_spec(&PullSpec::from_keys(vec![0]));
+        assert_eq!(snap.cells[0].value, 1.0);
+    }
+
+    #[test]
+    fn retired_workers_are_fenced_and_joiners_admitted() {
+        let server = ParameterServer::new(2, 2, StalenessPolicy::Bounded(0));
+        server.store().publish_dense(&[0.0; 2], 0);
+        assert!(server.serve_leave(1), "retire flips");
+        assert!(!server.serve_leave(1), "idempotent");
+        assert!(!server.serve_flush(1, 0, &[(0, 9.0)], 0), "fenced after leave");
+        assert_eq!(server.stats_snapshot().flushes_dropped, 1);
+        // a joiner gets a fresh id at the frontier and can flush
+        server.serve_join(2);
+        assert!(server.clock().is_live(2));
+        assert!(server.serve_flush(2, 0, &[(0, 1.5)], 0));
+        let snap = server.store().read_spec(&PullSpec::from_keys(vec![0]));
+        assert_eq!(snap.cells[0].value, 1.5);
     }
 
     #[test]

@@ -33,13 +33,29 @@ impl InProcTransport {
 
 impl Transport for InProcTransport {
     fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
-        let (pulled, gap, waited, gate_us) =
-            self.server.serve_pull(spec, round).map_err(|_| TransportError::Shutdown)?;
+        let (pulled, gap, waited, gate_us) = self
+            .server
+            .serve_pull(self.worker, spec, round)
+            .map_err(|_| TransportError::Shutdown)?;
         Ok(PullReply { ranges: pulled.ranges, cells: pulled.cells, gap, waited, gate_us })
     }
 
-    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
-        self.server.serve_flush(self.worker, deltas, round);
+    fn flush(
+        &mut self,
+        deltas: &[(usize, f64)],
+        round: u64,
+        block: u64,
+    ) -> Result<bool, TransportError> {
+        Ok(self.server.serve_flush(self.worker, block, deltas, round))
+    }
+
+    fn join(&mut self, worker: usize) -> Result<(), TransportError> {
+        self.server.serve_join(worker);
+        Ok(())
+    }
+
+    fn leave(&mut self, worker: usize) -> Result<(), TransportError> {
+        self.server.serve_leave(worker);
         Ok(())
     }
 
@@ -63,7 +79,7 @@ impl Transport for InProcTransport {
     }
 
     fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
-        self.server.clock().advance_applied(applied);
+        self.server.serve_advance(applied);
         Ok(())
     }
 

@@ -139,9 +139,31 @@ pub trait Transport: Send {
     /// the staleness policy admits it.
     fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError>;
 
-    /// Push this worker's coalesced round-`round` delta batch and tick
-    /// its clock.
-    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError>;
+    /// Push this worker's coalesced round-`round` delta batch for
+    /// scheduling block `block` and tick its clock. Returns whether the
+    /// server *applied* the batch: `false` means it was dropped as a
+    /// duplicate of an already-applied `(round, block)` (a reassignment
+    /// race the other copy won), as a zombie from before the applied
+    /// frontier, or because this worker has been retired from the
+    /// census. Either way the worker's clock ticked, so the caller
+    /// proceeds to its next item — it just must not fold a dropped
+    /// batch into any canonical model state.
+    fn flush(
+        &mut self,
+        deltas: &[(usize, f64)],
+        round: u64,
+        block: u64,
+    ) -> Result<bool, TransportError>;
+
+    /// Admit `worker` into the census at the applied frontier
+    /// (idempotent — the coordinator proposes the id, so a retried
+    /// `Join` is a no-op). Coordinator-only.
+    fn join(&mut self, worker: usize) -> Result<(), TransportError>;
+
+    /// Retire `worker` from the census: its clock stops holding the SSP
+    /// gate, its parked pulls wake with `Shutdown`, and its future
+    /// flushes are fenced off. Idempotent. Coordinator-only.
+    fn leave(&mut self, worker: usize) -> Result<(), TransportError>;
 
     /// Coordinator republish of derived state at `version` (metered as
     /// republish traffic).
@@ -397,7 +419,11 @@ mod tests {
         let mut w0 = conn.worker_transport(0).unwrap();
         let reply = w0.pull(&PullSpec::from_ranges(vec![(0, 4)]), 1).unwrap();
         assert_eq!(reply.ranges[0].values(), &[1.0f32, 2.0, 9.0, 4.0]);
-        w0.flush(&[(0, 0.5)], 1).unwrap();
+        assert!(w0.flush(&[(0, 0.5)], 1, 0).unwrap(), "unique flush must apply");
+        assert!(
+            !w0.flush(&[(0, 0.5)], 1, 0).unwrap(),
+            "replaying the same (round, block) must be dropped by the ledger"
+        );
 
         let stats = conn.coord().stats().unwrap();
         assert_eq!(stats.pulls, 1);

@@ -128,10 +128,20 @@ impl FaultPlan {
             every: 0,
             ops: Vec::new(),
         };
+        let mut seen: Vec<String> = Vec::new();
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
             let (key, value) = part
                 .split_once('=')
                 .ok_or_else(|| anyhow::anyhow!("fault plan entry {part} is not key=value"))?;
+            // Duplicate keys are a config error, not last-one-wins: a
+            // plan with two seeds (or two drop rates) almost certainly
+            // means a typo'd sweep, and silently keeping one would make
+            // the "same plan string, same schedule" contract a lie.
+            anyhow::ensure!(
+                !seen.iter().any(|k| k == key),
+                "duplicate fault plan key {key}"
+            );
+            seen.push(key.to_string());
             let prob = |v: &str| -> anyhow::Result<f64> {
                 let p: f64 = v.parse()?;
                 anyhow::ensure!((0.0..=1.0).contains(&p), "probability {p} outside [0, 1]");
@@ -151,6 +161,13 @@ impl FaultPlan {
                         .filter(|p| !p.is_empty())
                         .map(Op::parse)
                         .collect::<anyhow::Result<_>>()?;
+                    // An explicit `ops=` that names nothing reads as
+                    // "fault no ops", but an empty filter means "fault
+                    // every op" internally — refuse the ambiguity.
+                    anyhow::ensure!(
+                        !plan.ops.is_empty(),
+                        "ops= names no operations (omit the key to fault every op)"
+                    );
                 }
                 other => anyhow::bail!(
                     "unknown fault plan key {other} (seed|drop|err|delay|delay_ms|every|ops)"
@@ -284,8 +301,24 @@ impl Transport for FaultInjectTransport {
         self.run(Op::Pull, |t| t.pull(spec, round))
     }
 
-    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
-        self.run(Op::Flush, |t| t.flush(deltas, round))
+    fn flush(
+        &mut self,
+        deltas: &[(usize, f64)],
+        round: u64,
+        block: u64,
+    ) -> Result<bool, TransportError> {
+        self.run(Op::Flush, |t| t.flush(deltas, round, block))
+    }
+
+    // Membership RPCs are control-plane like `Init`: rare, idempotent,
+    // and not part of the fault grammar. A real carriage fault on one
+    // still exercises the retry wrapper above this layer.
+    fn join(&mut self, worker: usize) -> Result<(), TransportError> {
+        self.inner.join(worker)
+    }
+
+    fn leave(&mut self, worker: usize) -> Result<(), TransportError> {
+        self.inner.leave(worker)
     }
 
     fn publish(
@@ -534,17 +567,31 @@ impl Transport for RetryTransport {
         self.with_retry(|t| t.pull(spec, round))
     }
 
-    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
+    fn flush(
+        &mut self,
+        deltas: &[(usize, f64)],
+        round: u64,
+        block: u64,
+    ) -> Result<bool, TransportError> {
         // Every attempt of this flush must carry the SAME seq: rewind
         // the shared counter to its pre-attempt value so the inner
         // transport re-mints it, and the server's dedup can recognize
-        // a retry whose first delivery actually landed.
+        // a retry whose first delivery actually landed (answering with
+        // the verdict the original earned).
         let seq = Arc::clone(&self.flush_seq);
         let base = seq.load(Ordering::SeqCst);
         self.with_retry(move |t| {
             seq.store(base, Ordering::SeqCst);
-            t.flush(deltas, round)
+            t.flush(deltas, round, block)
         })
+    }
+
+    fn join(&mut self, worker: usize) -> Result<(), TransportError> {
+        self.with_retry(|t| t.join(worker))
+    }
+
+    fn leave(&mut self, worker: usize) -> Result<(), TransportError> {
+        self.with_retry(|t| t.leave(worker))
     }
 
     fn publish(
@@ -610,6 +657,69 @@ mod tests {
         assert!(FaultPlan::parse("bogus=1").is_err());
         assert!(FaultPlan::parse("seed").is_err(), "not key=value");
         assert!(FaultPlan::parse("ops=carrier-pigeon").is_err());
+        assert!(FaultPlan::parse("seed=1,seed=2").is_err(), "duplicate key");
+        assert!(FaultPlan::parse("drop=0.1,drop=0.1").is_err(), "duplicate key, same value");
+        assert!(FaultPlan::parse("ops=").is_err(), "empty ops filter is ambiguous");
+        assert!(FaultPlan::parse("ops=|").is_err(), "all-separator ops filter");
+        assert!(FaultPlan::parse("drop=-0.1").is_err(), "negative probability");
+        assert!(FaultPlan::parse("drop=NaN").is_err(), "NaN probability");
+        assert!(FaultPlan::parse("every=yes").is_err(), "non-numeric count");
+        assert!(FaultPlan::parse("seed=-1").is_err(), "negative seed");
+    }
+
+    /// Satellite fuzz pass: no input string may panic the parser, and
+    /// every malformed one must come back as a clean `Err`. The corpus
+    /// is seeded mutations of a valid plan (byte splices from a garbage
+    /// alphabet) plus raw garbage — deterministic, so a failure
+    /// reproduces by seed.
+    #[test]
+    fn fault_plan_parser_survives_fuzzed_garbage() {
+        let alphabet: &[u8] = b"=,|.0123456789abcdefghijklmnopqrstuvwxyz \t-+eE";
+        let valid = "seed=42,drop=0.05,err=0.02,delay=0.1,delay_ms=3,ops=pull|flush";
+        let mut rng = Rng::new(0xfa57_91a9);
+        for _ in 0..2000 {
+            let mut bytes = valid.as_bytes().to_vec();
+            let splices = 1 + (rng.f64() * 6.0) as usize;
+            for _ in 0..splices {
+                let at = (rng.f64() * bytes.len() as f64) as usize % bytes.len();
+                let with = alphabet[(rng.f64() * alphabet.len() as f64) as usize
+                    % alphabet.len()];
+                if rng.f64() < 0.5 {
+                    bytes[at] = with;
+                } else {
+                    bytes.insert(at, with);
+                }
+            }
+            // Must not panic; Ok or Err are both acceptable outcomes.
+            let _ = FaultPlan::parse(&String::from_utf8_lossy(&bytes));
+        }
+        for garbage in [
+            "", ",,,,", "=", "==", "=,=", "seed==1", "ops=pull||", "\u{1F980}=1",
+            "drop=0.1e309", "delay_ms=99999999999999999999", "seed=0x10",
+        ] {
+            // Structurally hostile strings must parse to a clean error
+            // or a valid plan — never a panic. (The empty plan string
+            // is valid: it means "no faults".)
+            let _ = FaultPlan::parse(garbage);
+        }
+    }
+
+    /// Same plan string parsed twice (separately) must produce the same
+    /// fault schedule for the same worker — the reproducibility pin
+    /// that makes `--fault-plan` failures replayable from a log line.
+    #[test]
+    fn same_plan_string_yields_the_same_schedule() {
+        let text = "seed=1234,drop=0.2,err=0.1,delay=0.05,delay_ms=1";
+        let first = Arc::new(FaultPlan::parse(text).unwrap());
+        let second = Arc::new(FaultPlan::parse(text).unwrap());
+        for worker in [0usize, 3, 17] {
+            let mut a = FaultInjectTransport::new(Box::new(NullTransport), Arc::clone(&first), worker);
+            let mut b =
+                FaultInjectTransport::new(Box::new(NullTransport), Arc::clone(&second), worker);
+            let seq_a: Vec<_> = (0..256).map(|_| a.decide(Op::Flush)).collect();
+            let seq_b: Vec<_> = (0..256).map(|_| b.decide(Op::Flush)).collect();
+            assert_eq!(seq_a, seq_b, "worker {worker} schedule must round-trip");
+        }
     }
 
     #[test]
@@ -644,7 +754,13 @@ mod tests {
         fn pull(&mut self, _: &PullSpec, _: u64) -> Result<PullReply, TransportError> {
             Ok(PullReply { ranges: vec![], cells: vec![], gap: 0, waited: false, gate_us: 0 })
         }
-        fn flush(&mut self, _: &[(usize, f64)], _: u64) -> Result<(), TransportError> {
+        fn flush(&mut self, _: &[(usize, f64)], _: u64, _: u64) -> Result<bool, TransportError> {
+            Ok(true)
+        }
+        fn join(&mut self, _: usize) -> Result<(), TransportError> {
+            Ok(())
+        }
+        fn leave(&mut self, _: usize) -> Result<(), TransportError> {
             Ok(())
         }
         fn publish(&mut self, _: &[(usize, f64)], _: u64) -> Result<(), TransportError> {
@@ -713,7 +829,7 @@ mod tests {
         assert_eq!(reply.ranges[0].values(), &[1.0f32, 2.0, 3.0, 4.0]);
         // pull #1 passed, flush is matching-RPC #2 -> dropped once,
         // retried over a fresh link with the same seq
-        worker.flush(&[(0, 0.5)], 0).unwrap();
+        assert!(worker.flush(&[(0, 0.5)], 0, 0).unwrap());
         assert!(reconnects.load(Ordering::Relaxed) >= 1, "drop faults must reconnect");
         assert!(backoff_us.load(Ordering::Relaxed) > 0, "reconnects must meter backoff");
 
@@ -746,10 +862,10 @@ mod tests {
             &addr, 0, 7002, shape, cfg, Some(plan), zeros(), zeros(), zeros(),
         )
         .unwrap();
-        worker.flush(&[(0, 1.0)], 0).unwrap(); // passes clean
-        worker.flush(&[(0, 1.0)], 1).unwrap(); // delivered, reply lost, resent
-        worker.flush(&[(0, 1.0)], 2).unwrap(); // passes clean
-        worker.flush(&[(0, 1.0)], 3).unwrap(); // delivered, reply lost, resent
+        assert!(worker.flush(&[(0, 1.0)], 0, 0).unwrap()); // passes clean
+        assert!(worker.flush(&[(0, 1.0)], 1, 0).unwrap()); // delivered, reply lost, resent
+        assert!(worker.flush(&[(0, 1.0)], 2, 0).unwrap()); // passes clean
+        assert!(worker.flush(&[(0, 1.0)], 3, 0).unwrap()); // delivered, reply lost, resent
         let reply = worker.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
         assert_eq!(
             reply.ranges[0].values()[0],

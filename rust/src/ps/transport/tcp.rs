@@ -87,8 +87,14 @@ impl TcpTransport {
         policy: StalenessPolicy,
         segments: &[(usize, usize)],
     ) -> Result<(), TransportError> {
-        let req =
-            Request::Init { session, shards, workers, policy, segments: segments.to_vec() };
+        let req = Request::Init {
+            worker: self.worker,
+            session,
+            shards,
+            workers,
+            policy,
+            segments: segments.to_vec(),
+        };
         match self.rpc(&req)? {
             Reply::Ok => Ok(()),
             other => Err(unexpected(&other)),
@@ -119,7 +125,7 @@ fn unexpected(reply: &Reply) -> TransportError {
 
 impl Transport for TcpTransport {
     fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
-        match self.exchange(wire::encode_pull(round, spec))? {
+        match self.exchange(wire::encode_pull(self.worker, round, spec))? {
             Reply::Pull { gap, waited, gate_us, ranges, cells } => {
                 Ok(PullReply { ranges, cells, gap, waited, gate_us })
             }
@@ -127,9 +133,28 @@ impl Transport for TcpTransport {
         }
     }
 
-    fn flush(&mut self, deltas: &[(usize, f64)], round: u64) -> Result<(), TransportError> {
+    fn flush(
+        &mut self,
+        deltas: &[(usize, f64)],
+        round: u64,
+        block: u64,
+    ) -> Result<bool, TransportError> {
         let seq = self.flush_seq.fetch_add(1, Ordering::SeqCst) + 1;
-        match self.exchange(wire::encode_flush(self.worker, round, seq, deltas))? {
+        match self.exchange(wire::encode_flush(self.worker, block, round, seq, deltas))? {
+            Reply::Flush { applied } => Ok(applied),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn join(&mut self, worker: usize) -> Result<(), TransportError> {
+        match self.rpc(&Request::Join { worker })? {
+            Reply::Ok => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn leave(&mut self, worker: usize) -> Result<(), TransportError> {
+        match self.rpc(&Request::Leave { worker })? {
             Reply::Ok => Ok(()),
             other => Err(unexpected(&other)),
         }
@@ -199,7 +224,18 @@ struct ServerState {
     /// Highest flush seq applied per worker — the dedup ledger that
     /// makes retried flushes exactly-once. Guarded by the same lock as
     /// the apply (see the `Flush` arm), and checkpointed with the run.
+    /// Grows on `Join` so mid-run joiners get their own sequence slot.
     flush_seqs: Vec<u64>,
+    /// The exactly-once verdict each worker's latest flush earned,
+    /// parallel to `flush_seqs`: a retried duplicate is acked with the
+    /// verdict of its original delivery, so the client can never see
+    /// `applied = true` for deltas the store dropped (or vice versa).
+    flush_verdicts: Vec<bool>,
+    /// Worker ids that have attached (sent a session-matching `Init`)
+    /// to the hosted run. A re-`Init` from an id already here is a
+    /// *reconnect* (counted in the registry's `net.reconnects`); the
+    /// first attach per link is not.
+    attached: std::collections::HashSet<usize>,
     /// Applied-clock advances served for this run (periodic-checkpoint
     /// cadence counter).
     clock_ticks: u64,
@@ -257,16 +293,24 @@ impl PsTcpServer {
                     r.session,
                     r.server.clock().applied()
                 );
+                let verdicts = vec![true; r.flush_seqs.len()];
                 ServerState {
                     server: Some(Arc::new(r.server)),
                     session: r.session,
                     flush_seqs: r.flush_seqs,
+                    flush_verdicts: verdicts,
+                    attached: std::collections::HashSet::new(),
                     clock_ticks: 0,
                 }
             }
-            None => {
-                ServerState { server: None, session: 0, flush_seqs: Vec::new(), clock_ticks: 0 }
-            }
+            None => ServerState {
+                server: None,
+                session: 0,
+                flush_seqs: Vec::new(),
+                flush_verdicts: Vec::new(),
+                attached: std::collections::HashSet::new(),
+                clock_ticks: 0,
+            },
         };
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("ps-server bind {addr}: {e}"))?;
@@ -310,12 +354,15 @@ impl PsTcpServer {
                     let metric = |name: &str| snap.get(name).map(|v| v.as_u64()).unwrap_or(0);
                     let applied = snap.clock.as_ref().map(|c| c.applied).unwrap_or(0);
                     eprintln!(
-                        "[obs] applied={} pulls={} pull_bytes={} flushes={} gate_waits={}",
+                        "[obs] applied={} pulls={} pull_bytes={} flushes={} gate_waits={} \
+                         reconnects={} ckpt_writes={}",
                         applied,
                         metric("ps.pulls"),
                         metric("ps.pull_bytes"),
                         metric("ps.flushes"),
                         metric("ps.gate_waits"),
+                        metric("net.reconnects"),
+                        metric("ckpt.writes"),
                     );
                 }
                 None => eprintln!("[obs] idle (no run initialized)"),
@@ -428,7 +475,7 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                 },
             };
         }
-        Request::Init { session, shards, workers, policy, segments } => {
+        Request::Init { worker, session, shards, workers, policy, segments } => {
             let mut state = shared.state.lock().expect("state lock");
             if let Some(hosted) = state.server.as_ref() {
                 if session != 0 && session == state.session {
@@ -437,31 +484,46 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                     // just restored from a checkpoint). Replacing here
                     // would zero the very state the client is trying to
                     // rejoin, so validate the shape and keep the run.
-                    let same_shape = hosted.clock().num_workers() == workers
+                    // Workers may have *joined* since the client learned
+                    // the shape, so the census check is >=, not ==.
+                    let same_shape = hosted.clock().num_workers() >= workers
                         && hosted.store().num_shards() == shards
                         && hosted.policy() == policy
                         && hosted.store().segments() == segments;
-                    return if same_shape {
-                        Reply::Ok
-                    } else {
-                        Reply::Err {
-                            shutdown: false,
-                            message: format!(
-                                "re-Init for session {session} does not match the hosted \
-                                 run's shape"
-                            ),
+                    if same_shape {
+                        let hosted = Arc::clone(hosted);
+                        let first_attach = state.attached.insert(worker);
+                        drop(state);
+                        if !first_attach {
+                            // This link attached before: a true
+                            // reconnect, visible in `ps-stats` and the
+                            // reporter digest server-side.
+                            hosted.registry().counter("net.reconnects").inc();
                         }
+                        return Reply::Ok;
+                    }
+                    return Reply::Err {
+                        shutdown: false,
+                        message: format!(
+                            "re-Init for session {session} does not match the hosted \
+                             run's shape"
+                        ),
                     };
                 }
             }
             let server =
                 Arc::new(ParameterServer::with_segments(shards, workers, policy, &segments));
+            // Pin the fault-tolerance counters into the fresh registry
+            // so `ps-stats` always lists them, even at zero.
+            server.registry().counter("net.reconnects");
+            server.registry().counter("ckpt.writes");
             // Replace any previous run's server: back-to-back runs (the
             // staleness sweep) each re-Init the same host process.
             // Waking the replaced clock frees any connection thread a
             // crashed client left parked at the old gate.
             state.session = session;
             state.flush_seqs = vec![0; workers];
+            state.attached = std::collections::HashSet::from([worker]);
             state.clock_ticks = 0;
             let old = state.server.replace(server);
             drop(state);
@@ -478,7 +540,7 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
     };
     match req {
         Request::Init { .. } => unreachable!("handled above"),
-        Request::Pull { round, spec } => match server.serve_pull(&spec, round) {
+        Request::Pull { worker, round, spec } => match server.serve_pull(worker, &spec, round) {
             Ok((pulled, gap, waited, gate_us)) => Reply::Pull {
                 gap,
                 waited,
@@ -490,12 +552,12 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                 Reply::Err { shutdown: true, message: "clock shutdown".into() }
             }
         },
-        Request::Flush { worker, round, seq, deltas } => {
+        Request::Flush { worker, block, round, seq, deltas } => {
             if worker >= server.clock().num_workers() {
                 return Reply::Err {
                     shutdown: false,
                     message: format!(
-                        "flush from worker {worker}, but the run was initialized with {}",
+                        "flush from worker {worker}, but the run's census is {}",
                         server.clock().num_workers()
                     ),
                 };
@@ -513,17 +575,25 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                 return Reply::Err { shutdown: true, message: "the run was re-initialized".into() };
             }
             if seq != 0 {
-                let last = &mut state.flush_seqs[worker];
-                if seq <= *last {
-                    // Retried flush whose first delivery landed: the
-                    // reply was lost, not the request. Ack, don't
-                    // re-apply.
-                    return Reply::Ok;
+                // A joiner admitted after Init mints ids past the
+                // Init-time census; its seq slot is created on demand.
+                if state.flush_seqs.len() <= worker {
+                    state.flush_seqs.resize(worker + 1, 0);
+                    state.flush_verdicts.resize(worker + 1, true);
                 }
-                *last = seq;
+                if seq <= state.flush_seqs[worker] {
+                    // Retried flush whose first delivery landed: the
+                    // reply was lost, not the request. Ack with the
+                    // verdict the original earned, don't re-apply.
+                    return Reply::Flush { applied: state.flush_verdicts[worker] };
+                }
+                state.flush_seqs[worker] = seq;
+                let applied = server.serve_flush(worker, block, &deltas, round);
+                state.flush_verdicts[worker] = applied;
+                return Reply::Flush { applied };
             }
-            server.serve_flush(worker, &deltas, round);
-            Reply::Ok
+            let applied = server.serve_flush(worker, block, &deltas, round);
+            Reply::Flush { applied }
         }
         Request::Publish { version, entries } => {
             server.serve_publish(&entries, version);
@@ -534,7 +604,7 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
             Reply::Ok
         }
         Request::Advance { applied } => {
-            server.clock().advance_applied(applied);
+            server.serve_advance(applied);
             maybe_checkpoint(shared, &server);
             Reply::Ok
         }
@@ -542,6 +612,24 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
         Request::ObsStats => unreachable!("handled above"),
         Request::ShutdownClock => {
             server.clock().shutdown();
+            Reply::Ok
+        }
+        Request::Join { worker } => {
+            // Admit at the frontier and mint the seq slot under the
+            // state lock, so a flush racing the join finds both.
+            let mut state = shared.state.lock().expect("state lock");
+            if !state.server.as_ref().is_some_and(|s| Arc::ptr_eq(s, &server)) {
+                return Reply::Err { shutdown: true, message: "the run was re-initialized".into() };
+            }
+            server.serve_join(worker);
+            if state.flush_seqs.len() <= worker {
+                state.flush_seqs.resize(worker + 1, 0);
+                state.flush_verdicts.resize(worker + 1, true);
+            }
+            Reply::Ok
+        }
+        Request::Leave { worker } => {
+            server.serve_leave(worker);
             Reply::Ok
         }
     }
@@ -583,7 +671,7 @@ fn checkpoint_now(shared: &ServerShared) {
 }
 
 fn write_image(server: &ParameterServer, image: &CheckpointImage, cfg: &CheckpointConfig) {
-    match image.write_to(&cfg.dir) {
+    match image.write_to(&cfg.dir, cfg.keep) {
         Ok(bytes) => {
             server.registry().counter("ckpt.writes").inc();
             server.registry().counter("ckpt.bytes").add(bytes);
@@ -619,7 +707,7 @@ mod tests {
         let reply = worker.pull(&PullSpec::from_ranges(vec![(1, 2)]), 0).unwrap();
         assert_eq!(reply.ranges[0].values(), &[2.0f32, 3.0]);
         assert_eq!(reply.gap, 0);
-        worker.flush(&[(0, 0.5), (3, -1.0)], 0).unwrap();
+        assert!(worker.flush(&[(0, 0.5), (3, -1.0)], 0, 0).unwrap());
         coord.advance_applied(1).unwrap();
 
         let stats = coord.stats().unwrap();
@@ -652,7 +740,7 @@ mod tests {
         let bytes = Arc::new(AtomicU64::new(0));
         let mut coord = TcpTransport::connect(&addr, 7, bytes).unwrap();
         coord.init(2, 2, 2, StalenessPolicy::Async, &[]).unwrap();
-        let err = coord.flush(&[(0, 1.0)], 0).unwrap_err();
+        let err = coord.flush(&[(0, 1.0)], 0, 0).unwrap_err();
         assert!(matches!(err, TransportError::Remote(_)), "{err}");
         // the connection survives the rejected request
         assert!(coord.stats().is_ok());
@@ -715,9 +803,9 @@ mod tests {
         // exactly what a reconnect-and-resend looks like on the wire.
         let mut first = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
         let mut resend = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
-        first.flush(&[(0, 1.0)], 0).unwrap(); // seq 1: applied
-        resend.flush(&[(0, 1.0)], 0).unwrap(); // seq 1 again: deduped
-        resend.flush(&[(0, 1.0)], 1).unwrap(); // seq 2: applied
+        assert!(first.flush(&[(0, 1.0)], 0, 0).unwrap()); // seq 1: applied
+        assert!(resend.flush(&[(0, 1.0)], 0, 0).unwrap()); // seq 1 again: deduped, acked
+        assert!(resend.flush(&[(0, 1.0)], 1, 0).unwrap()); // seq 2: applied
         let reply = first.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
         assert_eq!(reply.ranges[0].values()[0], 2.0f32, "duplicate seq must not re-apply");
         let stats = coord.stats().unwrap();
@@ -726,10 +814,68 @@ mod tests {
     }
 
     #[test]
+    fn join_and_leave_change_the_census_over_the_wire() {
+        let (host, addr) = loopback();
+        let bytes = Arc::new(AtomicU64::new(0));
+        let mut coord =
+            TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
+                .unwrap();
+        coord.init(77, 2, 2, StalenessPolicy::Async, &[(0, 2)]).unwrap();
+        coord.publish_range(0, &[0.0, 0.0], 0).unwrap();
+
+        // Before the join, worker 2 is outside the census.
+        let mut w2 = TcpTransport::connect(&addr, 2, Arc::clone(&bytes)).unwrap();
+        let err = w2.flush(&[(0, 1.0)], 0, 0).unwrap_err();
+        assert!(matches!(err, TransportError::Remote(_)), "{err}");
+
+        coord.join(2).unwrap();
+        coord.join(2).unwrap(); // idempotent replay
+        assert!(w2.flush(&[(0, 1.0)], 0, 0).unwrap(), "joiner's flush lands");
+        let reply = w2.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values()[0], 1.0f32);
+
+        // A reattach that still quotes the Init-time census (2) is
+        // accepted against the grown census (3).
+        let mut late = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+        late.init(77, 2, 2, StalenessPolicy::Async, &[(0, 2)]).unwrap();
+
+        // After Leave, the worker is fenced: its flush is refused as
+        // not-applied, and the deltas never reach the store.
+        coord.leave(2).unwrap();
+        assert!(!w2.flush(&[(1, 5.0)], 1, 1).unwrap(), "fenced after leave");
+        let reply = late.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[1.0f32, 0.0]);
+        host.stop();
+    }
+
+    #[test]
+    fn server_counts_reconnects_not_first_attaches() {
+        let (host, addr) = loopback();
+        let bytes = Arc::new(AtomicU64::new(0));
+        let mut coord =
+            TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
+                .unwrap();
+        coord.init(88, 1, 2, StalenessPolicy::Async, &[]).unwrap();
+        // first attaches of two worker links: not reconnects
+        let mut w0 = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+        w0.init(88, 1, 2, StalenessPolicy::Async, &[]).unwrap();
+        let mut w1 = TcpTransport::connect(&addr, 1, Arc::clone(&bytes)).unwrap();
+        w1.init(88, 1, 2, StalenessPolicy::Async, &[]).unwrap();
+        let snap = coord.obs_stats().unwrap();
+        assert_eq!(snap.get("net.reconnects").unwrap().as_u64(), 0, "attaches are free");
+        // the same worker id re-attaching is a reconnect
+        let mut again = TcpTransport::connect(&addr, 1, Arc::clone(&bytes)).unwrap();
+        again.init(88, 1, 2, StalenessPolicy::Async, &[]).unwrap();
+        let snap = coord.obs_stats().unwrap();
+        assert_eq!(snap.get("net.reconnects").unwrap().as_u64(), 1);
+        host.stop();
+    }
+
+    #[test]
     fn stop_checkpoints_and_bind_with_restores_the_run() {
         let dir = std::env::temp_dir().join(format!("strads_tcp_ckpt_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        let ckpt = CheckpointConfig { dir: dir.clone(), every: 1_000_000 };
+        let ckpt = CheckpointConfig { dir: dir.clone(), every: 1_000_000, keep: 2 };
         let host = PsTcpServer::bind_with("127.0.0.1:0", Some(ckpt.clone())).unwrap();
         let addr = host.local_addr().to_string();
         let bytes = Arc::new(AtomicU64::new(0));
@@ -739,7 +885,7 @@ mod tests {
         coord.init(61, 2, 1, StalenessPolicy::Bounded(1), &[(0, 3)]).unwrap();
         coord.publish_range(0, &[1.5, 2.5, 3.5], 0).unwrap();
         let mut worker = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
-        worker.flush(&[(1, 0.25)], 0).unwrap();
+        assert!(worker.flush(&[(1, 0.25)], 0, 0).unwrap());
         coord.advance_applied(2).unwrap();
         host.stop(); // graceful stop writes the final checkpoint
 
@@ -754,7 +900,7 @@ mod tests {
         // The dedup ledger survives the restart: a resend of the
         // pre-kill flush (seq 1) must still be dropped.
         let mut dup = TcpTransport::connect(&addr2, 0, bytes).unwrap();
-        dup.flush(&[(1, 0.25)], 0).unwrap();
+        dup.flush(&[(1, 0.25)], 0, 0).unwrap();
         let reply = dup.pull(&PullSpec::from_ranges(vec![(1, 1)]), 0).unwrap();
         assert_eq!(reply.ranges[0].values(), &[2.75f32], "restored ledger deduped the resend");
         host2.stop();

@@ -26,7 +26,14 @@ use std::io::{Read, Write};
 /// v3: `Init` carries a session id so a reconnecting client's
 /// re-`Init` is idempotent, and `Flush` carries a per-worker monotonic
 /// seq so a retried flush is applied exactly once.
-pub const PROTO_VERSION: u16 = 3;
+/// v4 (elastic membership): `Init` and `Pull` carry the sending link's
+/// worker id (the server tells a link's first attach from a reconnect,
+/// and the gate refuses retired workers), `Flush` carries the
+/// scheduling block id and is answered by `FlushOk { applied }` (the
+/// server's exactly-once verdict), `Stats` gains `flushes_dropped`,
+/// and the idempotent `Join`/`Leave` opcodes change the worker census
+/// mid-run.
+pub const PROTO_VERSION: u16 = 4;
 
 /// Frames above this are corruption, not data (guards allocation).
 pub const MAX_FRAME: u32 = 1 << 30;
@@ -42,11 +49,14 @@ pub mod op {
     pub const STATS: u8 = 0x07;
     pub const SHUTDOWN_CLOCK: u8 = 0x08;
     pub const OBS_STATS: u8 = 0x09;
+    pub const JOIN: u8 = 0x0A;
+    pub const LEAVE: u8 = 0x0B;
     /// Reply opcodes (server -> client).
     pub const REPLY_OK: u8 = 0x80;
     pub const REPLY_PULL: u8 = 0x81;
     pub const REPLY_STATS: u8 = 0x82;
     pub const REPLY_OBS_STATS: u8 = 0x83;
+    pub const REPLY_FLUSH: u8 = 0x84;
     pub const REPLY_ERR: u8 = 0x7f;
 }
 
@@ -59,22 +69,33 @@ pub enum Request {
     /// and clock are kept, so a reconnecting client resumes its run);
     /// any other `Init` replaces the previous server instance, so
     /// back-to-back runs (e.g. the staleness sweep) reuse one
-    /// `ps-server` process.
+    /// `ps-server` process. `worker` identifies the link (v4): the
+    /// server counts a session-matching re-`Init` from a worker id it
+    /// has already attached as a reconnect (`net.reconnects`), while a
+    /// link's first attach is not one.
     Init {
+        worker: usize,
         session: u64,
         shards: usize,
         workers: usize,
         policy: StalenessPolicy,
         segments: Vec<(usize, usize)>,
     },
-    /// SSP-gated read of a [`PullSpec`]; blocks server-side until the
-    /// applied clock admits `round`.
-    Pull { round: u64, spec: PullSpec },
-    /// A worker's coalesced end-of-round delta batch + clock tick.
+    /// SSP-gated read of a [`PullSpec`] by `worker`; blocks server-side
+    /// until the applied clock admits `round`. A retired worker's pull
+    /// is refused (shutdown-flavored) instead of being admitted or
+    /// parked forever.
+    Pull { worker: usize, round: u64, spec: PullSpec },
+    /// A worker's coalesced end-of-round delta batch + clock tick for
+    /// scheduling block `block`.
     /// `seq` is the worker's monotonic flush counter (1-based; 0 = no
     /// dedup): the server applies each seq at most once, so a flush
     /// retried after a lost reply never double-applies its deltas.
-    Flush { worker: usize, round: u64, seq: u64, deltas: Vec<(usize, f64)> },
+    /// `block` keys the server's `(round, block)` exactly-once ledger —
+    /// when a lease expiry re-dispatches the block to another worker,
+    /// exactly one of the racing flushes is applied; the answer
+    /// (`FlushOk { applied }`) tells this worker whether it won.
+    Flush { worker: usize, block: u64, round: u64, seq: u64, deltas: Vec<(usize, f64)> },
     /// Coordinator republish of derived state (metered as republish
     /// traffic server-side).
     Publish { version: u64, entries: Vec<(usize, f64)> },
@@ -93,6 +114,15 @@ pub enum Request {
     /// before any `Init` arrived (with a non-shutdown `Err`), so
     /// `strads ps-stats` can probe an idle server without parking.
     ObsStats,
+    /// Membership: admit worker `worker` at the clock frontier. The
+    /// coordinator picks the id (its census count), which makes the
+    /// request idempotent — a Join replayed by the retry wrapper after
+    /// a lost reply re-admits the same id and changes nothing.
+    Join { worker: usize },
+    /// Membership: retire worker `worker` (left, or declared dead by
+    /// the supervisor). Idempotent; wakes the leaver if it is parked at
+    /// the SSP gate and fences its late flushes.
+    Leave { worker: usize },
 }
 
 /// A decoded server -> client message.
@@ -103,6 +133,10 @@ pub enum Reply {
     /// version), then scattered cells in request-key order. `gate_us`
     /// is how long the pull blocked at the SSP gate server-side.
     Pull { gap: u64, waited: bool, gate_us: u64, ranges: Vec<RangePull>, cells: Vec<Cell> },
+    /// Flush result: `applied` is the server's exactly-once verdict —
+    /// false when the deltas were dropped (retired worker, or the
+    /// `(round, block)` was already applied by a reassigned twin).
+    Flush { applied: bool },
     Stats(StatsSnapshot),
     ObsStats(ObsSnapshot),
     /// Request failed. `shutdown` distinguishes the clean teardown path
@@ -277,9 +311,10 @@ fn read_pairs(r: &mut Reader) -> Result<Vec<(usize, f64)>, WireError> {
 // and tests.
 
 /// Encode a `Pull` straight from a borrowed spec.
-pub fn encode_pull(round: u64, spec: &PullSpec) -> Vec<u8> {
+pub fn encode_pull(worker: usize, round: u64, spec: &PullSpec) -> Vec<u8> {
     let mut b = Vec::new();
     b.push(op::PULL);
+    put_u32(&mut b, worker as u32);
     put_u64(&mut b, round);
     put_u32(&mut b, spec.ranges.len() as u32);
     for &(start, len) in &spec.ranges {
@@ -294,10 +329,17 @@ pub fn encode_pull(round: u64, spec: &PullSpec) -> Vec<u8> {
 }
 
 /// Encode a `Flush` straight from the worker's coalesced batch.
-pub fn encode_flush(worker: usize, round: u64, seq: u64, deltas: &[(usize, f64)]) -> Vec<u8> {
+pub fn encode_flush(
+    worker: usize,
+    block: u64,
+    round: u64,
+    seq: u64,
+    deltas: &[(usize, f64)],
+) -> Vec<u8> {
     let mut b = Vec::new();
     b.push(op::FLUSH);
     put_u32(&mut b, worker as u32);
+    put_u64(&mut b, block);
     put_u64(&mut b, round);
     put_u64(&mut b, seq);
     put_pairs(&mut b, deltas);
@@ -329,10 +371,11 @@ pub fn encode_publish_range(version: u64, start: usize, values: &[f64]) -> Vec<u
 /// Encode a request into one frame payload (opcode + body).
 pub fn encode_request(req: &Request) -> Vec<u8> {
     match req {
-        Request::Init { session, shards, workers, policy, segments } => {
+        Request::Init { worker, session, shards, workers, policy, segments } => {
             let mut b = Vec::new();
             b.push(op::INIT);
             put_u16(&mut b, PROTO_VERSION);
+            put_u32(&mut b, *worker as u32);
             put_u64(&mut b, *session);
             put_u32(&mut b, *shards as u32);
             put_u32(&mut b, *workers as u32);
@@ -353,9 +396,9 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             }
             b
         }
-        Request::Pull { round, spec } => encode_pull(*round, spec),
-        Request::Flush { worker, round, seq, deltas } => {
-            encode_flush(*worker, *round, *seq, deltas)
+        Request::Pull { worker, round, spec } => encode_pull(*worker, *round, spec),
+        Request::Flush { worker, block, round, seq, deltas } => {
+            encode_flush(*worker, *block, *round, *seq, deltas)
         }
         Request::Publish { version, entries } => encode_publish(*version, entries),
         Request::PublishRange { version, start, values } => {
@@ -370,6 +413,18 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         Request::Stats => vec![op::STATS],
         Request::ShutdownClock => vec![op::SHUTDOWN_CLOCK],
         Request::ObsStats => vec![op::OBS_STATS],
+        Request::Join { worker } => {
+            let mut b = Vec::new();
+            b.push(op::JOIN);
+            put_u32(&mut b, *worker as u32);
+            b
+        }
+        Request::Leave { worker } => {
+            let mut b = Vec::new();
+            b.push(op::LEAVE);
+            put_u32(&mut b, *worker as u32);
+            b
+        }
     }
 }
 
@@ -385,6 +440,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
                     "protocol version mismatch: peer speaks v{proto}, this server v{PROTO_VERSION}"
                 )));
             }
+            let worker = r.u32()? as usize;
             let session = r.u64()?;
             let shards = r.u32()? as usize;
             let workers = r.u32()? as usize;
@@ -398,9 +454,10 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
             for _ in 0..nseg {
                 segments.push((r.u64()? as usize, r.u64()? as usize));
             }
-            Request::Init { session, shards, workers, policy, segments }
+            Request::Init { worker, session, shards, workers, policy, segments }
         }
         op::PULL => {
+            let worker = r.u32()? as usize;
             let round = r.u64()?;
             let nranges = r.count(16)?;
             let mut ranges = Vec::with_capacity(nranges);
@@ -412,14 +469,15 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
             for _ in 0..nkeys {
                 keys.push(r.u64()? as usize);
             }
-            Request::Pull { round, spec: PullSpec { ranges, keys } }
+            Request::Pull { worker, round, spec: PullSpec { ranges, keys } }
         }
         op::FLUSH => {
             let worker = r.u32()? as usize;
+            let block = r.u64()?;
             let round = r.u64()?;
             let seq = r.u64()?;
             let deltas = read_pairs(&mut r)?;
-            Request::Flush { worker, round, seq, deltas }
+            Request::Flush { worker, block, round, seq, deltas }
         }
         op::PUBLISH => {
             let version = r.u64()?;
@@ -440,6 +498,8 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
         op::STATS => Request::Stats,
         op::SHUTDOWN_CLOCK => Request::ShutdownClock,
         op::OBS_STATS => Request::ObsStats,
+        op::JOIN => Request::Join { worker: r.u32()? as usize },
+        op::LEAVE => Request::Leave { worker: r.u32()? as usize },
         other => return Err(WireError(format!("unknown request opcode {other:#04x}"))),
     };
     r.finish()?;
@@ -477,6 +537,10 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
                 put_f64(&mut b, cell.value);
             }
         }
+        Reply::Flush { applied } => {
+            b.push(op::REPLY_FLUSH);
+            b.push(u8::from(*applied));
+        }
         Reply::Stats(s) => {
             b.push(op::REPLY_STATS);
             for v in [
@@ -490,6 +554,7 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
                 s.stale_gap_sum,
                 s.max_stale_gap,
                 s.gate_waits,
+                s.flushes_dropped,
                 s.hash_probes,
                 s.cow_clones,
             ] {
@@ -597,6 +662,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<Reply, WireError> {
             }
             Reply::Pull { gap, waited, gate_us, ranges, cells }
         }
+        op::REPLY_FLUSH => Reply::Flush { applied: r.u8()? != 0 },
         op::REPLY_STATS => Reply::Stats(StatsSnapshot {
             bytes_flushed: r.u64()?,
             bytes_republished: r.u64()?,
@@ -608,6 +674,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<Reply, WireError> {
             stale_gap_sum: r.u64()?,
             max_stale_gap: r.u64()?,
             gate_waits: r.u64()?,
+            flushes_dropped: r.u64()?,
             hash_probes: r.u64()?,
             cow_clones: r.u64()?,
         }),
@@ -686,6 +753,7 @@ mod tests {
     fn request_roundtrip_all_opcodes() {
         let reqs = vec![
             Request::Init {
+                worker: u32::MAX as usize,
                 session: 0xDEAD_BEEF_0000_0001,
                 shards: 8,
                 workers: 4,
@@ -693,6 +761,7 @@ mod tests {
                 segments: vec![(0, 100), (200, 50)],
             },
             Request::Init {
+                worker: 0,
                 session: 0,
                 shards: 1,
                 workers: 1,
@@ -700,11 +769,13 @@ mod tests {
                 segments: vec![],
             },
             Request::Pull {
+                worker: 2,
                 round: 7,
                 spec: PullSpec { ranges: vec![(0, 10), (64, 3)], keys: vec![999, 3] },
             },
             Request::Flush {
                 worker: 3,
+                block: 11,
                 round: 9,
                 seq: 17,
                 deltas: vec![(5, -0.25), (0, 1e300)],
@@ -715,6 +786,8 @@ mod tests {
             Request::Stats,
             Request::ShutdownClock,
             Request::ObsStats,
+            Request::Join { worker: 4 },
+            Request::Leave { worker: 1 },
         ];
         for req in reqs {
             let encoded = encode_request(&req);
@@ -750,6 +823,18 @@ mod tests {
     }
 
     #[test]
+    fn flush_reply_roundtrip_carries_the_verdict() {
+        for applied in [true, false] {
+            let Reply::Flush { applied: back } =
+                decode_reply(&encode_reply(&Reply::Flush { applied })).unwrap()
+            else {
+                panic!("wrong reply kind");
+            };
+            assert_eq!(back, applied);
+        }
+    }
+
+    #[test]
     fn stats_and_err_roundtrip() {
         let snap = StatsSnapshot {
             bytes_flushed: 1,
@@ -762,6 +847,7 @@ mod tests {
             stale_gap_sum: 8,
             max_stale_gap: 9,
             gate_waits: 10,
+            flushes_dropped: 13,
             hash_probes: 11,
             cow_clones: 12,
         };
@@ -856,12 +942,14 @@ mod tests {
         // hostile count: claims 2^31 entries in a tiny frame
         let mut hostile = vec![op::FLUSH];
         hostile.extend_from_slice(&3u32.to_le_bytes()); // worker
+        hostile.extend_from_slice(&7u64.to_le_bytes()); // block
         hostile.extend_from_slice(&0u64.to_le_bytes()); // round
         hostile.extend_from_slice(&1u64.to_le_bytes()); // seq
         hostile.extend_from_slice(&0x8000_0000u32.to_le_bytes());
         assert!(decode_request(&hostile).is_err());
         // version mismatch refused
         let mut init = encode_request(&Request::Init {
+            worker: 0,
             session: 1,
             shards: 1,
             workers: 1,

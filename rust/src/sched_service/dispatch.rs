@@ -16,38 +16,73 @@
 const RATE_ALPHA: f64 = 0.3;
 
 /// Least-loaded worker assignment over measured service rates.
+///
+/// Membership is dynamic: workers can be removed mid-round (supervisor
+/// declared them dead or a `Leave` fired) and added mid-round (an
+/// elastic `Join`). Slots are never reindexed — `active` flips instead
+/// — so worker ids stay stable for the clock table, and a fixed fleet
+/// walks exactly the pre-elastic pick order (the `active` filter is a
+/// no-op when nobody ever leaves).
 pub struct Dispatcher {
     /// Expected seconds of dispatched-but-unfinished work per worker.
     backlog: Vec<f64>,
     /// EWMA seconds per work unit per worker (seeded from the cost
     /// model's calibrated rate until real measurements arrive).
     rate: Vec<f64>,
+    /// Dispatch eligibility per slot; removed workers stay indexed but
+    /// are never picked again.
+    active: Vec<bool>,
+    /// The rate new joiners start from (the same calibrated seed the
+    /// founding fleet got — a joiner has no history yet).
+    seed_rate: f64,
 }
 
 impl Dispatcher {
     pub fn new(workers: usize, default_sec_per_unit: f64) -> Self {
         let seed_rate = if default_sec_per_unit > 0.0 { default_sec_per_unit } else { 1e-6 };
-        Dispatcher { backlog: vec![0.0; workers], rate: vec![seed_rate; workers] }
+        Dispatcher {
+            backlog: vec![0.0; workers],
+            rate: vec![seed_rate; workers],
+            active: vec![true; workers],
+            seed_rate,
+        }
     }
 
-    /// Pick the worker with the earliest expected completion for a
-    /// block of `work` units; charge its backlog. Returns the worker
+    /// Pick the active worker with the earliest expected completion for
+    /// a block of `work` units; charge its backlog. Returns the worker
     /// and the charged estimate (echoed back at completion so the
-    /// backlog can be released exactly). Ties break to the lowest
-    /// index, so dispatch is deterministic given the same history.
-    pub fn pick(&mut self, work: u64) -> (usize, f64) {
-        let mut best = 0usize;
+    /// backlog can be released exactly), or `None` when no worker is
+    /// active. Ties break to the lowest index, so dispatch is
+    /// deterministic given the same history and membership.
+    pub fn pick(&mut self, work: u64) -> Option<(usize, f64)> {
+        self.pick_filtered(work, None)
+    }
+
+    /// [`Self::pick`], excluding one worker — the reassignment path: a
+    /// block whose lease expired must go to a *different* worker than
+    /// its (possibly wedged, possibly dead) current holder. `None` when
+    /// nobody else is active.
+    pub fn pick_excluding(&mut self, work: u64, excluded: usize) -> Option<(usize, f64)> {
+        self.pick_filtered(work, Some(excluded))
+    }
+
+    fn pick_filtered(&mut self, work: u64, excluded: Option<usize>) -> Option<(usize, f64)> {
+        let mut best = None;
         let mut best_t = f64::INFINITY;
         for w in 0..self.backlog.len() {
+            if !self.active[w] || Some(w) == excluded {
+                continue;
+            }
             let t = self.backlog[w] + work as f64 * self.rate[w];
             if t < best_t {
                 best_t = t;
-                best = w;
+                best = Some(w);
             }
         }
+        let best = best?;
         let est = work as f64 * self.rate[best];
         self.backlog[best] += est;
-        (best, est)
+        Some((best, est))
     }
 
     /// A block completed on `worker`: release its backlog charge and
@@ -58,6 +93,40 @@ impl Dispatcher {
             let obs = measured_sec / work as f64;
             self.rate[worker] = (1.0 - RATE_ALPHA) * self.rate[worker] + RATE_ALPHA * obs;
         }
+    }
+
+    /// Remove `worker` from the pool (death or `Leave`) and zero its
+    /// backlog — its in-flight blocks are being reassigned, so keeping
+    /// the charge would haunt nobody. Idempotent; ids are not reused.
+    pub fn remove_worker(&mut self, worker: usize) {
+        if let Some(a) = self.active.get_mut(worker) {
+            *a = false;
+            self.backlog[worker] = 0.0;
+        }
+    }
+
+    /// Admit `worker` to the pool mid-run, growing the slot table if
+    /// this is a brand-new id. A joiner starts at the calibrated seed
+    /// rate with an empty backlog — least-loaded dispatch then feeds
+    /// it immediately. Idempotent for already-active ids.
+    pub fn add_worker(&mut self, worker: usize) {
+        if worker >= self.backlog.len() {
+            self.backlog.resize(worker + 1, 0.0);
+            self.rate.resize(worker + 1, self.seed_rate);
+            self.active.resize(worker + 1, false);
+        }
+        self.active[worker] = true;
+        self.backlog[worker] = 0.0;
+    }
+
+    /// Whether `worker` is currently dispatchable.
+    pub fn is_active(&self, worker: usize) -> bool {
+        self.active.get(worker).copied().unwrap_or(false)
+    }
+
+    /// Number of currently dispatchable workers.
+    pub fn active_workers(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
     }
 
     /// Current measured seconds-per-unit estimates (diagnostics).
@@ -96,8 +165,44 @@ mod tests {
         // With identical rates and equal work, least-loaded + lowest-
         // index tie-break walks the workers in order.
         let mut d = Dispatcher::new(4, 1.0);
-        let picks: Vec<usize> = (0..8).map(|_| d.pick(1).0).collect();
+        let picks: Vec<usize> = (0..8).map(|_| d.pick(1).unwrap().0).collect();
         assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn removed_workers_are_never_picked_and_joiners_absorb_load() {
+        let mut d = Dispatcher::new(3, 1.0);
+        d.remove_worker(1);
+        assert!(!d.is_active(1));
+        assert_eq!(d.active_workers(), 2);
+        let picks: Vec<usize> = (0..6).map(|_| d.pick(1).unwrap().0).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2, 0, 2], "slot 1 must be skipped, ids stable");
+        // A joiner gets a brand-new slot at the seed rate with zero
+        // backlog, so least-loaded dispatch feeds it first.
+        d.add_worker(3);
+        assert_eq!(d.active_workers(), 3);
+        assert_eq!(d.pick(1).unwrap().0, 3, "empty-backlog joiner wins the next pick");
+        // Removal is idempotent and terminal until re-added.
+        d.remove_worker(1);
+        d.remove_worker(0);
+        d.remove_worker(2);
+        d.remove_worker(3);
+        assert_eq!(d.active_workers(), 0);
+        assert!(d.pick(1).is_none(), "an empty pool picks nobody");
+        d.add_worker(2);
+        assert_eq!(d.pick(1).unwrap().0, 2);
+    }
+
+    #[test]
+    fn pick_excluding_skips_the_current_holder() {
+        let mut d = Dispatcher::new(2, 1.0);
+        // Worker 0 is idle and would normally win; excluded, the block
+        // must go to worker 1.
+        assert_eq!(d.pick_excluding(1, 0).unwrap().0, 1);
+        // With only the excluded worker active, there is no candidate.
+        d.remove_worker(1);
+        assert!(d.pick_excluding(1, 0).is_none());
+        assert!(d.pick(1).is_some(), "unfiltered pick still sees worker 0");
     }
 
     #[test]
@@ -110,7 +215,7 @@ mod tests {
         }
         let mut counts = [0usize; 2];
         for _ in 0..22 {
-            let (w, est) = d.pick(1);
+            let (w, est) = d.pick(1).unwrap();
             counts[w] += 1;
             // complete immediately so backlog reflects rate only
             d.complete(w, 1, est, if w == 0 { 10e-3 } else { 1e-3 });
@@ -124,21 +229,21 @@ mod tests {
     #[test]
     fn backlog_releases_exactly() {
         let mut d = Dispatcher::new(1, 1.0);
-        let (w, est) = d.pick(5);
+        let (w, est) = d.pick(5).unwrap();
         assert_eq!(w, 0);
         assert!(est > 0.0);
         d.complete(0, 5, est, 5.0);
         // backlog fully released (clamped at zero regardless)
-        let (_, est2) = d.pick(1);
+        let (_, est2) = d.pick(1).unwrap();
         assert!(est2 > 0.0);
     }
 
     #[test]
     fn heavy_block_avoids_loaded_worker() {
         let mut d = Dispatcher::new(2, 1.0);
-        let (w0, _) = d.pick(100); // loads worker 0
+        let (w0, _) = d.pick(100).unwrap(); // loads worker 0
         assert_eq!(w0, 0);
-        let (w1, _) = d.pick(100);
+        let (w1, _) = d.pick(100).unwrap();
         assert_eq!(w1, 1, "second heavy block must go to the idle worker");
     }
 

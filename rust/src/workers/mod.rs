@@ -18,5 +18,7 @@
 //! thread-per-worker over 0MQ sockets.)
 
 pub mod service;
+pub mod supervisor;
 
 pub use service::{run_distributed, DistributedReport};
+pub use supervisor::{KillPlan, Lease, LeaseTable, MembershipEvent};

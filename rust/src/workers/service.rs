@@ -59,15 +59,18 @@ use crate::config::RunConfig;
 use crate::coordinator::balance::imbalance;
 use crate::coordinator::priority::PriorityKind;
 use crate::metrics::{Trace, TracePoint};
-use crate::obs::{EventSink, Histogram, MetricValue, Phase, Registry, SpanEvent};
+use crate::obs::{Counter, EventSink, Histogram, MetricValue, Phase, Registry, SpanEvent};
 use crate::problem::ModelProblem;
-use crate::ps::{PsClient, PsConnection, StalenessPolicy};
+use crate::ps::{PsClient, PsConnection, PsKernel, StalenessPolicy};
 use crate::sched_service::{
     measured_imbalance, Dispatcher, PlannerSet, ProblemDeps, SchedService,
 };
+use crate::util::Rng;
+use crate::workers::supervisor::{KillPlan, Lease, LeaseTable, MembershipEvent};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Rounds kept in flight in fully-asynchronous mode.
 const ASYNC_PIPELINE_DEPTH: u64 = 16;
@@ -111,16 +114,261 @@ struct FlushMsg {
     /// Whether this block's pull had to block at the SSP gate (the
     /// per-round `gate_waits` trace column counts these).
     waited: bool,
+    /// The server's verdict: whether this batch was applied to the
+    /// store, or dropped by the flush ledger (another copy of the
+    /// reassigned block won, or this worker was retired mid-flight).
+    /// The coordinator folds only applied batches into the canonical
+    /// model — the exactly-once contract.
+    applied: bool,
 }
 
 /// What a worker thread reports back to the coordinator.
 enum WorkerMsg {
     Flush(FlushMsg),
-    /// The worker's transport failed mid-run (a real fault, not the
-    /// clean end-of-run shutdown). Without this poison message the
-    /// coordinator would wait forever for a flush that can never come
-    /// — the other workers keep the channel alive.
+    /// The worker's transport failed mid-run, or its thread panicked (a
+    /// real fault, not the clean end-of-run shutdown). Without this
+    /// poison message a fixed-fleet coordinator would wait forever for
+    /// a flush that can never come; an elastic one retires the worker
+    /// and reassigns its leases.
     Failed { worker: usize, error: String },
+}
+
+/// Send-on-unwind guard: if a worker thread panics anywhere in its
+/// loop, the coordinator still hears a `Failed` for it (in-proc panic
+/// capture — the thread-exit analog of a dead TCP peer).
+struct PanicSentinel {
+    worker: usize,
+    tx: mpsc::Sender<WorkerMsg>,
+}
+
+impl Drop for PanicSentinel {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let _ = self.tx.send(WorkerMsg::Failed {
+                worker: self.worker,
+                error: "worker thread panicked".to_string(),
+            });
+        }
+    }
+}
+
+/// Spawn one worker thread over its own transport link. Returns the
+/// worker's private work-queue sender, the kill flag the elastic
+/// supervisor raises for a deterministic coordinator-initiated death,
+/// and the join handle. Used both for the initial fleet and for
+/// mid-run joiners (`worker_kill_plan` `join=@R` events).
+fn spawn_worker(
+    worker: usize,
+    mut client: PsClient,
+    kernel: Arc<dyn PsKernel>,
+    events: Option<Arc<EventSink>>,
+    flush_tx: mpsc::Sender<WorkerMsg>,
+) -> (mpsc::Sender<WorkItem>, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<WorkItem>();
+    let dead = Arc::new(AtomicBool::new(false));
+    let dead_flag = Arc::clone(&dead);
+    let handle = std::thread::spawn(move || {
+        // If this thread panics anywhere below, the coordinator still
+        // hears a `Failed` (the in-proc analog of a dead TCP peer).
+        let _sentinel = PanicSentinel { worker, tx: flush_tx.clone() };
+        // A shutdown error is the clean end-of-run signal (break
+        // silently); any other transport error is a fault the
+        // coordinator must hear about, or it would wait forever
+        // for this worker's flush.
+        let fail = |worker: usize, e: crate::ps::TransportError| {
+            if !e.is_shutdown() {
+                let _ = flush_tx.send(WorkerMsg::Failed { worker, error: e.to_string() });
+            }
+        };
+        while let Ok(item) = rx.recv() {
+            // A raised kill flag simulates a crash: the thread stops
+            // dead between items, leaving queued work unprocessed. No
+            // message is sent — the supervisor already knows (it raised
+            // the flag) and reassigns off this worker's leases.
+            if dead_flag.load(Ordering::Relaxed) {
+                return;
+            }
+            let spec = kernel.pull_spec(&item.vars, item.round);
+            let pull_start = events.as_ref().map(|s| s.now_us());
+            let (snap, meta) = match client.pull(spec, item.round) {
+                Ok(pulled) => pulled,
+                Err(e) => {
+                    fail(item.worker, e);
+                    break;
+                }
+            };
+            if let (Some(sink), Some(start)) = (events.as_ref(), pull_start) {
+                // One RPC interval, split into the server-measured
+                // gate wait and the transfer that followed. The
+                // gate span is emitted even at 0µs so a staleness-0
+                // timeline still carries every phase.
+                let total = sink.now_us().saturating_sub(start);
+                let gate = meta.gate_us.min(total);
+                sink.record(SpanEvent {
+                    phase: Phase::Gate,
+                    round: item.round,
+                    worker: item.worker,
+                    start_us: start,
+                    dur_us: gate,
+                });
+                sink.record(SpanEvent {
+                    phase: Phase::Pull,
+                    round: item.round,
+                    worker: item.worker,
+                    start_us: start + gate,
+                    dur_us: total - gate,
+                });
+            }
+            // Compute clock starts once the snapshot is in hand:
+            // gate wait is staleness discipline, not service time.
+            let compute_start = Instant::now();
+            let compute_start_us = events.as_ref().map(|s| s.now_us());
+            let proposals = kernel.propose(&snap, &item.vars, item.round);
+            // Release the epoch views before flushing: a worker
+            // must never force copy-on-publish clones (its own
+            // flush, or a peer's) with a snapshot it is done with.
+            drop(snap);
+            if let (Some(sink), Some(start)) = (events.as_ref(), compute_start_us) {
+                sink.record(SpanEvent {
+                    phase: Phase::Compute,
+                    round: item.round,
+                    worker: item.worker,
+                    start_us: start,
+                    dur_us: sink.now_us().saturating_sub(start),
+                });
+            }
+            let flush_start_us = events.as_ref().map(|s| s.now_us());
+            client.push(&proposals);
+            let (deltas, applied) =
+                match client.flush_clock(item.round, item.block_idx as u64) {
+                    Ok(flushed) => flushed,
+                    Err(e) => {
+                        fail(item.worker, e);
+                        break;
+                    }
+                };
+            if let (Some(sink), Some(start)) = (events.as_ref(), flush_start_us) {
+                sink.record(SpanEvent {
+                    phase: Phase::Flush,
+                    round: item.round,
+                    worker: item.worker,
+                    start_us: start,
+                    dur_us: sink.now_us().saturating_sub(start),
+                });
+            }
+            let msg = FlushMsg {
+                round: item.round,
+                block_idx: item.block_idx,
+                worker: item.worker,
+                work: item.work,
+                est_sec: item.est_sec,
+                compute_sec: compute_start.elapsed().as_secs_f64(),
+                deltas,
+                stale_gap: meta.gap,
+                waited: meta.waited,
+                applied,
+            };
+            if flush_tx.send(WorkerMsg::Flush(msg)).is_err() {
+                break;
+            }
+        }
+    });
+    (tx, dead, handle)
+}
+
+/// Retire `victim` from the run — raise its kill flag, retire its SSP
+/// clock at the server (parked survivors wake instead of waiting on a
+/// clock that will never tick), drop it from the dispatch pool, and
+/// re-dispatch every lease it held to the best other live worker.
+/// Idempotent: retiring an already-dead worker is a no-op.
+#[allow(clippy::too_many_arguments)]
+fn retire_and_reassign(
+    victim: usize,
+    conn: &mut PsConnection,
+    dispatcher: &mut Dispatcher,
+    leases: &mut LeaseTable,
+    work_txs: &mut [Option<mpsc::Sender<WorkItem>>],
+    dead_flags: &[Arc<AtomicBool>],
+    lease_len: Duration,
+    sup_reassigns: &Counter,
+) -> anyhow::Result<()> {
+    if !dispatcher.is_active(victim) {
+        return Ok(());
+    }
+    // Order matters: flag first (the thread stops taking work), then
+    // retire the clock (the gate recomputes over survivors), then drop
+    // the work queue (senders to the dead are nulled, never reused).
+    if let Some(flag) = dead_flags.get(victim) {
+        flag.store(true, Ordering::Relaxed);
+    }
+    conn.coord().leave(victim)?;
+    dispatcher.remove_worker(victim);
+    work_txs[victim] = None;
+    anyhow::ensure!(
+        dispatcher.active_workers() > 0,
+        "no live workers remain (worker {victim} was the last)"
+    );
+    // Every lease the victim held — queued or in flight — moves to
+    // another live worker. If its flush for a block already landed the
+    // lease was already released; if it lands later, the server's
+    // ledger drops it as the reassignment-race loser.
+    for (round, block) in leases.held_by(victim) {
+        if reassign_block(round, block, victim, dispatcher, leases, work_txs, lease_len)? {
+            sup_reassigns.inc();
+        }
+    }
+    Ok(())
+}
+
+/// Re-dispatch one leased block to the best live worker other than
+/// `previous` (its current holder). If nobody else is live and the
+/// holder is still alive (a slow worker whose lease merely expired),
+/// the lease deadline is extended in place instead. Returns whether the
+/// block was actually re-dispatched.
+fn reassign_block(
+    round: u64,
+    block: u64,
+    previous: usize,
+    dispatcher: &mut Dispatcher,
+    leases: &mut LeaseTable,
+    work_txs: &[Option<mpsc::Sender<WorkItem>>],
+    lease_len: Duration,
+) -> anyhow::Result<bool> {
+    let lease = leases.get(round, block).expect("reassigning an unleased block").clone();
+    let Some((worker, est_sec)) = dispatcher.pick_excluding(lease.work, previous) else {
+        if dispatcher.is_active(previous) {
+            let mut extended = lease;
+            extended.deadline = Instant::now() + lease_len;
+            leases.grant(round, block, extended);
+            return Ok(false);
+        }
+        anyhow::bail!("no live worker can take block {block} of round {round}");
+    };
+    let item = WorkItem {
+        round,
+        block_idx: block as usize,
+        vars: lease.vars.clone(),
+        work: lease.work,
+        est_sec,
+        worker,
+    };
+    leases.grant(
+        round,
+        block,
+        Lease {
+            worker,
+            vars: lease.vars,
+            work: lease.work,
+            est_sec,
+            deadline: Instant::now() + lease_len,
+        },
+    );
+    work_txs[worker]
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("reassignment picked a retired worker"))?
+        .send(item)
+        .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+    Ok(true)
 }
 
 /// Per-round reassembly buffer on the coordinator.
@@ -259,6 +507,17 @@ pub struct DistributedReport {
     pub retry_backoff_us: u64,
     /// Which transport carried the run (`inproc` | `tcp`).
     pub transport: &'static str,
+    /// Flush heartbeats the supervisor observed (one per worker flush,
+    /// whatever the server's verdict on the batch).
+    pub sup_heartbeats: u64,
+    /// Dispatched-block leases whose deadline passed with no flush.
+    pub sup_leases_expired: u64,
+    /// Blocks re-dispatched to another live worker after a death or a
+    /// lease expiry (0 for a fixed fleet — pinned by the elastic
+    /// bitwise-identity test).
+    pub sup_reassigns: u64,
+    /// Live workers at teardown (`== workers` for a fixed fleet).
+    pub sup_workers_live: usize,
     /// Full registry snapshot at teardown — the server's metrics (via
     /// the `ObsStats` RPC, so a TCP run exercises the same introspection
     /// path `strads ps-stats` uses) plus the coordinator-side metrics
@@ -284,6 +543,22 @@ pub fn run_distributed(
         .ps_kernel()
         .ok_or_else(|| anyhow::anyhow!("problem does not provide a parameter-server kernel"))?;
 
+    // Elastic membership: leases + supervision are armed by `[ps]
+    // elastic` (or implied by a non-empty kill plan). A fixed-fleet run
+    // takes the exact recv path it always took — and an elastic run
+    // with no membership events is bitwise identical to it, because
+    // supervision only observes (leases, heartbeats) until a death or
+    // expiry actually fires.
+    let elastic = cfg.ps.elastic_enabled();
+    let kill_plan = KillPlan::parse(&cfg.ps.worker_kill_plan)
+        .map_err(|e| anyhow::anyhow!("bad [ps] worker_kill_plan: {e}"))?;
+    let mut chaos_rng = Rng::new(kill_plan.seed);
+    let lease_len = Duration::from_millis(cfg.ps.lease_ms.max(1));
+    // Poll granularity bounds how late an expiry is noticed; capped so
+    // tiny lease_ms settings (tests) still poll responsively.
+    let lease_poll = Duration::from_millis((cfg.ps.lease_ms / 2).clamp(5, 250));
+    let mut leases = LeaseTable::new();
+
     // Establish the run's connection to its parameter server over the
     // configured transport — in-process (the server is built here) or
     // TCP to a `strads ps-server` process (the server is initialized
@@ -300,6 +575,11 @@ pub fn run_distributed(
     // test pins staleness-0 trajectories bitwise across levels.
     let registry = Registry::new();
     let plan_wait_us = registry.histogram("sched.plan_wait_us", Histogram::us_bounds());
+    let sup_heartbeats = registry.counter("sup.heartbeats");
+    let sup_leases_expired = registry.counter("sup.leases_expired");
+    let sup_reassigns = registry.counter("sup.reassigns");
+    let sup_workers_live = registry.gauge("sup.workers_live");
+    sup_workers_live.set(p as u64);
     let events = if cfg.obs.tracing() {
         Some(Arc::new(EventSink::new(EventSink::DEFAULT_CAP)))
     } else {
@@ -308,113 +588,25 @@ pub fn run_distributed(
 
     // Worker threads: private work queue in, shared flush channel out.
     // Each worker gets its own transport link, minted here so a
-    // connection failure surfaces before any thread spawns.
+    // connection failure surfaces before any thread spawns. Senders are
+    // slot-indexed by worker id and nulled on death/leave — slots are
+    // never reused, so ids stay stable for the clock table.
     let (flush_tx, flush_rx) = mpsc::channel::<WorkerMsg>();
-    let mut work_txs = Vec::with_capacity(p);
+    let mut work_txs: Vec<Option<mpsc::Sender<WorkItem>>> = Vec::with_capacity(p);
+    let mut dead_flags: Vec<Arc<AtomicBool>> = Vec::with_capacity(p);
     let mut handles = Vec::with_capacity(p);
     for worker in 0..p {
-        let (tx, rx) = mpsc::channel::<WorkItem>();
-        work_txs.push(tx);
-        let flush_tx = flush_tx.clone();
-        let kernel = Arc::clone(&kernel);
-        let events = events.clone();
-        let mut client = PsClient::over(conn.worker_transport(worker)?, worker);
-        handles.push(std::thread::spawn(move || {
-            // A shutdown error is the clean end-of-run signal (break
-            // silently); any other transport error is a fault the
-            // coordinator must hear about, or it would wait forever
-            // for this worker's flush.
-            let fail = |worker: usize, e: crate::ps::TransportError| {
-                if !e.is_shutdown() {
-                    let _ = flush_tx
-                        .send(WorkerMsg::Failed { worker, error: e.to_string() });
-                }
-            };
-            while let Ok(item) = rx.recv() {
-                let spec = kernel.pull_spec(&item.vars, item.round);
-                let pull_start = events.as_ref().map(|s| s.now_us());
-                let (snap, meta) = match client.pull(spec, item.round) {
-                    Ok(pulled) => pulled,
-                    Err(e) => {
-                        fail(item.worker, e);
-                        break;
-                    }
-                };
-                if let (Some(sink), Some(start)) = (events.as_ref(), pull_start) {
-                    // One RPC interval, split into the server-measured
-                    // gate wait and the transfer that followed. The
-                    // gate span is emitted even at 0µs so a staleness-0
-                    // timeline still carries every phase.
-                    let total = sink.now_us().saturating_sub(start);
-                    let gate = meta.gate_us.min(total);
-                    sink.record(SpanEvent {
-                        phase: Phase::Gate,
-                        round: item.round,
-                        worker: item.worker,
-                        start_us: start,
-                        dur_us: gate,
-                    });
-                    sink.record(SpanEvent {
-                        phase: Phase::Pull,
-                        round: item.round,
-                        worker: item.worker,
-                        start_us: start + gate,
-                        dur_us: total - gate,
-                    });
-                }
-                // Compute clock starts once the snapshot is in hand:
-                // gate wait is staleness discipline, not service time.
-                let compute_start = Instant::now();
-                let compute_start_us = events.as_ref().map(|s| s.now_us());
-                let proposals = kernel.propose(&snap, &item.vars, item.round);
-                // Release the epoch views before flushing: a worker
-                // must never force copy-on-publish clones (its own
-                // flush, or a peer's) with a snapshot it is done with.
-                drop(snap);
-                if let (Some(sink), Some(start)) = (events.as_ref(), compute_start_us) {
-                    sink.record(SpanEvent {
-                        phase: Phase::Compute,
-                        round: item.round,
-                        worker: item.worker,
-                        start_us: start,
-                        dur_us: sink.now_us().saturating_sub(start),
-                    });
-                }
-                let flush_start_us = events.as_ref().map(|s| s.now_us());
-                client.push(&proposals);
-                let deltas = match client.flush_clock(item.round) {
-                    Ok(deltas) => deltas,
-                    Err(e) => {
-                        fail(item.worker, e);
-                        break;
-                    }
-                };
-                if let (Some(sink), Some(start)) = (events.as_ref(), flush_start_us) {
-                    sink.record(SpanEvent {
-                        phase: Phase::Flush,
-                        round: item.round,
-                        worker: item.worker,
-                        start_us: start,
-                        dur_us: sink.now_us().saturating_sub(start),
-                    });
-                }
-                let msg = FlushMsg {
-                    round: item.round,
-                    block_idx: item.block_idx,
-                    worker: item.worker,
-                    work: item.work,
-                    est_sec: item.est_sec,
-                    compute_sec: compute_start.elapsed().as_secs_f64(),
-                    deltas,
-                    stale_gap: meta.gap,
-                    waited: meta.waited,
-                };
-                if flush_tx.send(WorkerMsg::Flush(msg)).is_err() {
-                    break;
-                }
-            }
-        }));
+        let client = PsClient::over(conn.worker_transport(worker)?, worker);
+        let (tx, dead, handle) =
+            spawn_worker(worker, client, Arc::clone(&kernel), events.clone(), flush_tx.clone());
+        work_txs.push(Some(tx));
+        dead_flags.push(dead);
+        handles.push(handle);
     }
+    // Elastic runs keep a spare sender so the flush channel stays open
+    // for mid-run joiners; their hang protection is lease expiry, not
+    // channel disconnect.
+    let spare_flush_tx = if elastic { Some(flush_tx.clone()) } else { None };
     drop(flush_tx);
 
     let window = match policy {
@@ -477,6 +669,37 @@ pub fn run_distributed(
     loop {
         // Dispatch every round the pipeline window admits.
         while !converged && planned < rounds && planned <= applied + window {
+            // Membership chaos fires at dispatch time of the plan's
+            // round — deterministic given the plan string, whatever the
+            // workers' timing. Joins fire *before* the round's blocks
+            // go out (a joiner can be handed work this very round);
+            // kills fire *after* (below), so the victim dies holding
+            // leases and the reassignment path is actually exercised —
+            // even at staleness 0, where nothing else is ever in
+            // flight at a round boundary.
+            let membership_now = kill_plan.events_at(planned);
+            for event in &membership_now {
+                if *event == MembershipEvent::Join {
+                    // Ids are minted monotonically and never reused;
+                    // the census (clock table, dispatcher, sender
+                    // table) all grow in lockstep.
+                    let id = work_txs.len();
+                    conn.coord().join(id)?;
+                    let client = PsClient::over(conn.worker_transport(id)?, id);
+                    let (tx, dead, handle) = spawn_worker(
+                        id,
+                        client,
+                        Arc::clone(&kernel),
+                        events.clone(),
+                        spare_flush_tx.clone().expect("join events imply elastic mode"),
+                    );
+                    work_txs.push(Some(tx));
+                    dead_flags.push(dead);
+                    handles.push(handle);
+                    dispatcher.add_worker(id);
+                    sup_workers_live.set(dispatcher.active_workers() as u64);
+                }
+            }
             let (blocks, problem_planned, sched_wait) =
                 match problem.plan_round(planned as usize, p) {
                     Some(blocks) => (blocks, true, 0.0),
@@ -517,8 +740,25 @@ pub fn run_distributed(
                 RoundBuf::new(blocks.len(), imbalance(&blocks), problem_planned, sched_wait),
             );
             for (block_idx, block) in blocks.into_iter().enumerate() {
-                let (worker, est_sec) = dispatcher.pick(block.work);
+                let (worker, est_sec) = dispatcher
+                    .pick(block.work)
+                    .ok_or_else(|| anyhow::anyhow!("no live workers to dispatch to"))?;
+                if elastic {
+                    leases.grant(
+                        planned,
+                        block_idx as u64,
+                        Lease {
+                            worker,
+                            vars: block.vars.clone(),
+                            work: block.work,
+                            est_sec,
+                            deadline: Instant::now() + lease_len,
+                        },
+                    );
+                }
                 work_txs[worker]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("dispatched to a retired worker"))?
                     .send(WorkItem {
                         round: planned,
                         block_idx,
@@ -529,20 +769,105 @@ pub fn run_distributed(
                     })
                     .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
             }
+            for event in membership_now {
+                if let kill @ MembershipEvent::Kill(_) = event {
+                    let live: Vec<usize> =
+                        (0..work_txs.len()).filter(|&w| dispatcher.is_active(w)).collect();
+                    let Some(victim) = KillPlan::choose_victim(kill, &live, &mut chaos_rng)
+                    else {
+                        continue;
+                    };
+                    retire_and_reassign(
+                        victim,
+                        &mut conn,
+                        &mut dispatcher,
+                        &mut leases,
+                        &mut work_txs,
+                        &dead_flags,
+                        lease_len,
+                        &sup_reassigns,
+                    )?;
+                    sup_workers_live.set(dispatcher.active_workers() as u64);
+                }
+            }
             planned += 1;
         }
         if applied == planned {
             break; // all dispatched rounds applied (or nothing planned)
         }
 
-        // Collect one flush, then apply every now-complete round in order.
-        let msg = match flush_rx.recv().map_err(|_| anyhow::anyhow!("workers hung up"))? {
-            WorkerMsg::Flush(msg) => msg,
-            WorkerMsg::Failed { worker, error } => {
+        // Collect one flush (elastic runs poll, so a lease expiry is
+        // noticed even when no flush arrives), then apply every
+        // now-complete round in order.
+        let received = if elastic {
+            match flush_rx.recv_timeout(lease_poll) {
+                Ok(msg) => Some(msg),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("workers hung up")
+                }
+            }
+        } else {
+            Some(flush_rx.recv().map_err(|_| anyhow::anyhow!("workers hung up"))?)
+        };
+        if elastic {
+            // Expired lease = dead-or-wedged holder: re-dispatch to the
+            // best other live worker. If the holder was merely slow its
+            // late flush loses the ledger race and is dropped.
+            for (round, block) in leases.expired(Instant::now()) {
+                sup_leases_expired.inc();
+                let holder = leases.get(round, block).expect("expired lease exists").worker;
+                if reassign_block(
+                    round,
+                    block,
+                    holder,
+                    &mut dispatcher,
+                    &mut leases,
+                    &work_txs,
+                    lease_len,
+                )? {
+                    sup_reassigns.inc();
+                }
+            }
+        }
+        let msg = match received {
+            Some(WorkerMsg::Flush(msg)) => msg,
+            Some(WorkerMsg::Failed { worker, error }) => {
+                if elastic {
+                    // Supervision: retire the failed worker, move its
+                    // leases, keep the run going on the survivors.
+                    eprintln!("[sup] worker {worker} failed ({error}); reassigning its leases");
+                    retire_and_reassign(
+                        worker,
+                        &mut conn,
+                        &mut dispatcher,
+                        &mut leases,
+                        &mut work_txs,
+                        &dead_flags,
+                        lease_len,
+                        &sup_reassigns,
+                    )?;
+                    sup_workers_live.set(dispatcher.active_workers() as u64);
+                    continue;
+                }
                 anyhow::bail!("worker {worker} lost its parameter-server link: {error}")
             }
+            None => continue,
         };
+        // Every flush is a liveness heartbeat and a service-rate sample,
+        // whatever the server's verdict on the batch itself.
+        sup_heartbeats.inc();
         dispatcher.complete(msg.worker, msg.work, msg.est_sec, msg.compute_sec);
+        if !msg.applied {
+            // The server's ledger dropped this batch (reassignment-race
+            // loser, or a retired worker's zombie): the winning copy is
+            // what carries the round forward — folding this one too
+            // would double-apply the block.
+            continue;
+        }
+        if elastic {
+            leases.release(msg.round, msg.block_idx as u64);
+        }
         pending.get_mut(&msg.round).expect("flush for unplanned round").store(msg);
         while pending.get(&applied).map(RoundBuf::complete).unwrap_or(false) {
             let buf = pending.remove(&applied).expect("checked above");
@@ -697,6 +1022,10 @@ pub fn run_distributed(
         reconnects: conn.reconnects(),
         retry_backoff_us: conn.retry_backoff_us(),
         transport: cfg.ps.transport.name(),
+        sup_heartbeats: sup_heartbeats.get(),
+        sup_leases_expired: sup_leases_expired.get(),
+        sup_reassigns: sup_reassigns.get(),
+        sup_workers_live: dispatcher.active_workers(),
         obs_metrics,
     })
 }

@@ -1,0 +1,290 @@
+//! Coordinator-side supervision for elastic worker membership: the
+//! seeded membership-chaos plan (`[ps] worker_kill_plan`) and the
+//! per-dispatched-block lease table that makes worker death (or a
+//! wedged worker) survivable.
+//!
+//! The liveness design piggy-backs on traffic the run already moves:
+//! every `FlushMsg` a worker delivers is a heartbeat
+//! (`sup.heartbeats`), and a block whose lease deadline passes with no
+//! flush is *reassigned* to another live worker (`sup.leases_expired`,
+//! `sup.reassigns`). Reassignment is safe without any rendezvous
+//! because the parameter server's `(round, block)` flush ledger applies
+//! at most one copy — the loser's flush is acknowledged with
+//! `applied = false` and the coordinator discards it (see
+//! `ParameterServer::serve_flush`). Killed or failed workers are
+//! retired from the SSP census (`Transport::leave`) so the gate never
+//! parks a survivor on a clock that will not advance; joiners enter at
+//! the applied frontier (`Transport::join`) and are immediately
+//! gate-legal.
+//!
+//! Chaos is **coordinator-initiated and deterministic**: the plan fires
+//! at dispatch time of the named round, so a seeded plan replays the
+//! same membership schedule every run — the same grammar discipline as
+//! `[ps] fault_plan`.
+
+use crate::util::Rng;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// One membership change the plan schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// Kill a worker when the named round is dispatched: `Some(w)` for
+    /// an explicit victim, `None` for a seeded draw over the workers
+    /// alive at fire time.
+    Kill(Option<usize>),
+    /// Admit a brand-new worker (next unused id) when the named round
+    /// is dispatched.
+    Join,
+}
+
+/// A deterministic membership-chaos schedule, parsed from
+/// `[ps] worker_kill_plan` / `--worker-kill-plan`. Comma-separated
+/// `key=value` pairs, same discipline as `fault_plan`:
+///
+/// ```text
+/// seed=42,kill=1@5            # kill worker 1 when round 5 dispatches
+/// seed=7,kill=@3,kill=@9      # two seeded-victim kills
+/// seed=7,join=@4,kill=@8      # join a worker at round 4, kill one at 8
+/// ```
+///
+/// `kill=`/`join=` entries repeat freely; `seed=` may appear once.
+/// Victims for `kill=@R` are drawn from the seeded RNG over the ids
+/// live at fire time, so the same plan string replays the same
+/// schedule.
+#[derive(Clone, Debug)]
+pub struct KillPlan {
+    pub seed: u64,
+    /// `(round, event)` in plan order.
+    events: Vec<(u64, MembershipEvent)>,
+}
+
+impl KillPlan {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut plan = KillPlan { seed: 0, events: Vec::new() };
+        let mut saw_seed = false;
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("kill plan entry {part} is not key=value"))?;
+            match key {
+                "seed" => {
+                    anyhow::ensure!(!saw_seed, "duplicate kill plan key seed");
+                    saw_seed = true;
+                    plan.seed = value.parse()?;
+                }
+                "kill" => {
+                    let (victim, round) = Self::parse_at(value)?;
+                    plan.events.push((round, MembershipEvent::Kill(victim)));
+                }
+                "join" => {
+                    let (victim, round) = Self::parse_at(value)?;
+                    anyhow::ensure!(
+                        victim.is_none(),
+                        "join=@R takes no worker id (ids are minted at join time)"
+                    );
+                    plan.events.push((round, MembershipEvent::Join));
+                }
+                other => {
+                    anyhow::bail!("unknown kill plan key {other} (seed|kill|join)")
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Parse `W@R` / `@R` into `(victim, round)`.
+    fn parse_at(value: &str) -> anyhow::Result<(Option<usize>, u64)> {
+        let (who, round) = value
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("{value} is not [worker]@round"))?;
+        let victim = if who.is_empty() { None } else { Some(who.parse()?) };
+        Ok((victim, round.parse()?))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Every event scheduled for `round`, in plan order.
+    pub fn events_at(&self, round: u64) -> Vec<MembershipEvent> {
+        self.events.iter().filter(|&&(r, _)| r == round).map(|&(_, e)| e).collect()
+    }
+
+    /// Resolve a `Kill` victim against the live set: the explicit id if
+    /// the plan named one (even if already dead — that kill is then a
+    /// no-op), otherwise a seeded draw over `live` (None when nobody is
+    /// left to kill). `live` must be sorted for reproducibility; the
+    /// caller's active-id scan produces it sorted already.
+    pub fn choose_victim(
+        event: MembershipEvent,
+        live: &[usize],
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        match event {
+            MembershipEvent::Join => None,
+            MembershipEvent::Kill(Some(w)) => Some(w),
+            MembershipEvent::Kill(None) => {
+                if live.is_empty() {
+                    None
+                } else {
+                    Some(live[(rng.f64() * live.len() as f64) as usize % live.len()])
+                }
+            }
+        }
+    }
+}
+
+/// One dispatched block's lease: who holds it, everything needed to
+/// re-dispatch it verbatim, and when the supervisor may presume the
+/// holder dead-or-wedged.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub worker: usize,
+    pub vars: Vec<usize>,
+    pub work: u64,
+    pub est_sec: f64,
+    pub deadline: Instant,
+}
+
+/// The coordinator's outstanding leases, keyed by `(round, block)` —
+/// the same key the server's flush ledger dedups on, so a lease, its
+/// reassigned copies, and the at-most-once application all speak about
+/// the same unit of work.
+#[derive(Default)]
+pub struct LeaseTable {
+    leases: BTreeMap<(u64, u64), Lease>,
+}
+
+impl LeaseTable {
+    pub fn new() -> Self {
+        LeaseTable { leases: BTreeMap::new() }
+    }
+
+    /// Record (or overwrite, on reassignment) the lease for a block.
+    pub fn grant(&mut self, round: u64, block: u64, lease: Lease) {
+        self.leases.insert((round, block), lease);
+    }
+
+    /// The block was applied — its lease is dead regardless of holder.
+    pub fn release(&mut self, round: u64, block: u64) -> Option<Lease> {
+        self.leases.remove(&(round, block))
+    }
+
+    pub fn get(&self, round: u64, block: u64) -> Option<&Lease> {
+        self.leases.get(&(round, block))
+    }
+
+    /// Keys (sorted) of every lease held by `worker` — the blocks to
+    /// reassign when it dies.
+    pub fn held_by(&self, worker: usize) -> Vec<(u64, u64)> {
+        self.leases
+            .iter()
+            .filter(|(_, l)| l.worker == worker)
+            .map(|(&k, _)| k)
+            .collect()
+    }
+
+    /// Keys (sorted) of every lease whose deadline has passed.
+    pub fn expired(&self, now: Instant) -> Vec<(u64, u64)> {
+        self.leases
+            .iter()
+            .filter(|(_, l)| now >= l.deadline)
+            .map(|(&k, _)| k)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.leases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leases.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn kill_plan_parses_and_rejects_garbage() {
+        let plan = KillPlan::parse("seed=42,kill=1@5,kill=@9,join=@4").unwrap();
+        assert_eq!(plan.seed, 42);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.events_at(5), vec![MembershipEvent::Kill(Some(1))]);
+        assert_eq!(plan.events_at(9), vec![MembershipEvent::Kill(None)]);
+        assert_eq!(plan.events_at(4), vec![MembershipEvent::Join]);
+        assert!(plan.events_at(6).is_empty());
+
+        let empty = KillPlan::parse("").unwrap();
+        assert!(empty.is_empty(), "empty plan = no chaos");
+        let two = KillPlan::parse("kill=@3,kill=@3").unwrap();
+        assert_eq!(two.events_at(3).len(), 2, "two kills may share a round");
+
+        assert!(KillPlan::parse("seed=1,seed=2").is_err(), "duplicate seed");
+        assert!(KillPlan::parse("kill=5").is_err(), "missing @round");
+        assert!(KillPlan::parse("kill=x@3").is_err(), "non-numeric victim");
+        assert!(KillPlan::parse("kill=1@").is_err(), "missing round");
+        assert!(KillPlan::parse("join=2@3").is_err(), "join takes no id");
+        assert!(KillPlan::parse("revive=1@2").is_err(), "unknown key");
+        assert!(KillPlan::parse("kill").is_err(), "not key=value");
+    }
+
+    #[test]
+    fn seeded_victim_draws_replay() {
+        let plan = KillPlan::parse("seed=7,kill=@2,kill=@4").unwrap();
+        let draw = |plan: &KillPlan| {
+            let mut rng = Rng::new(plan.seed);
+            let mut live = vec![0usize, 1, 2, 3];
+            let mut victims = Vec::new();
+            for round in [2u64, 4] {
+                for ev in plan.events_at(round) {
+                    let v = KillPlan::choose_victim(ev, &live, &mut rng).unwrap();
+                    live.retain(|&w| w != v);
+                    victims.push(v);
+                }
+            }
+            victims
+        };
+        assert_eq!(draw(&plan), draw(&plan), "same plan string, same victims");
+        assert_eq!(
+            KillPlan::choose_victim(MembershipEvent::Kill(None), &[], &mut Rng::new(1)),
+            None,
+            "nobody left to kill"
+        );
+        assert_eq!(
+            KillPlan::choose_victim(MembershipEvent::Kill(Some(9)), &[0], &mut Rng::new(1)),
+            Some(9),
+            "explicit victims pass through"
+        );
+    }
+
+    #[test]
+    fn lease_table_tracks_holders_and_deadlines() {
+        let mut t = LeaseTable::new();
+        let now = Instant::now();
+        let lease = |worker: usize, deadline: Instant| Lease {
+            worker,
+            vars: vec![1, 2],
+            work: 2,
+            est_sec: 0.0,
+            deadline,
+        };
+        t.grant(0, 0, lease(1, now + Duration::from_secs(60)));
+        t.grant(0, 1, lease(2, now));
+        t.grant(1, 0, lease(1, now + Duration::from_secs(60)));
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.held_by(1), vec![(0, 0), (1, 0)]);
+        assert_eq!(t.expired(now), vec![(0, 1)], "deadline passed = expired");
+        // Reassignment overwrites the holder under the same key.
+        t.grant(0, 1, lease(3, now + Duration::from_secs(60)));
+        assert_eq!(t.len(), 3, "reassignment is an overwrite, not a new lease");
+        assert_eq!(t.get(0, 1).unwrap().worker, 3);
+        assert!(t.expired(now).is_empty());
+        assert!(t.release(0, 0).is_some());
+        assert!(t.release(0, 0).is_none(), "release is idempotent");
+        assert_eq!(t.held_by(1), vec![(1, 0)]);
+    }
+}

@@ -159,6 +159,12 @@ fn config_presets_load_and_apply() {
     assert_eq!(cfg.ps.fault_plan, "");
     assert_eq!(cfg.ps.checkpoint_dir, "");
     assert_eq!(cfg.ps.checkpoint_every, 16);
+    assert_eq!(cfg.ps.checkpoint_keep, 2);
+    // ...and the elastic-membership knobs (documented at defaults:
+    // supervision off, no kill plan, 30 s leases)
+    assert!(!cfg.ps.elastic && !cfg.ps.elastic_enabled());
+    assert_eq!(cfg.ps.worker_kill_plan, "");
+    assert_eq!(cfg.ps.lease_ms, 30_000);
 }
 
 #[test]

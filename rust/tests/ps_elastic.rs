@@ -1,0 +1,237 @@
+//! Elastic-membership acceptance suite: supervision, per-block leases,
+//! and mid-run join/leave over the in-process transport.
+//!
+//! The contracts pinned here:
+//! - **Elasticity is free for a fixed fleet.** With `[ps] elastic = 1`
+//!   but no membership events, supervision only observes (leases,
+//!   heartbeats) — staleness-0 Lasso and MF trajectories are bitwise
+//!   identical to the plain run (README contract 8).
+//! - **Worker death is survivable.** A seeded `worker_kill_plan` that
+//!   kills workers mid-run still completes every round: the victims'
+//!   leased blocks are reassigned to live workers (`sup.reassigns`) and
+//!   the run lands within tolerance of the uninterrupted objective.
+//! - **Joiners work.** A mid-run joiner enters at the applied frontier
+//!   (immediately gate-legal) and can carry the run alone after every
+//!   founding worker is killed.
+//! - **Exactly-once.** The server's `(round, block)` flush ledger makes
+//!   duplicate application impossible, however many copies of a block
+//!   the reassignment race produces.
+
+use strads::config::RunConfig;
+use strads::data::lasso_synth::{self, LassoSynthSpec};
+use strads::data::mf_powerlaw::{self, MfSynthSpec};
+use strads::lasso::NativeLasso;
+use strads::mf::DistMf;
+use strads::ps::{PsConnection, PullSpec, Transport};
+use strads::workers::{run_distributed, DistributedReport};
+
+fn lasso_cfg(workers: usize) -> RunConfig {
+    let mut cfg = RunConfig { workers, lambda: 1e-3, ..Default::default() };
+    cfg.sap.shards = 2;
+    cfg
+}
+
+fn run_lasso(cfg: &RunConfig, rounds: usize, seed: u64) -> (DistributedReport, Vec<f64>) {
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), seed);
+    let mut problem = NativeLasso::new(&data, cfg.lambda);
+    let report = run_distributed(&mut problem, cfg, rounds, "tiny").unwrap();
+    (report, problem.beta().to_vec())
+}
+
+fn obj_bits(report: &DistributedReport) -> Vec<u64> {
+    report.trace.points.iter().map(|p| p.objective.to_bits()).collect()
+}
+
+fn assert_close(got: f64, base: f64, tol: f64, what: &str) {
+    assert!(
+        ((got - base) / base).abs() < tol,
+        "{what}: got {got}, baseline {base} (tol {tol})"
+    );
+}
+
+#[test]
+fn elastic_with_no_membership_events_is_bitwise_free_for_lasso() {
+    // README contract 8: flipping `[ps] elastic = 1` on a fixed fleet
+    // changes nothing — leases and heartbeats are observation only.
+    let rounds = 80;
+    let (fixed, fixed_beta) = run_lasso(&lasso_cfg(4), rounds, 42);
+    let mut cfg = lasso_cfg(4);
+    cfg.ps.elastic = true;
+    let (elastic, elastic_beta) = run_lasso(&cfg, rounds, 42);
+
+    assert_eq!(
+        obj_bits(&fixed),
+        obj_bits(&elastic),
+        "elastic supervision must be bitwise invisible on a fixed fleet"
+    );
+    for (j, (a, b)) in fixed_beta.iter().zip(&elastic_beta).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{j}] diverged under elasticity: {a} vs {b}");
+    }
+    assert_eq!(elastic.rounds, fixed.rounds);
+    assert_eq!(elastic.sup_workers_live, 4, "nobody died");
+    assert_eq!(elastic.sup_reassigns, 0, "nothing to reassign on a healthy fleet");
+    assert!(elastic.sup_heartbeats > 0, "every flush is a heartbeat");
+}
+
+#[test]
+fn elastic_with_no_membership_events_is_bitwise_free_for_mf() {
+    // The same freeness pin for the second problem family (CCD++ MF).
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 31);
+    let run = |elastic: bool| {
+        let mut cfg = RunConfig { workers: 4, ..Default::default() };
+        cfg.ps.elastic = elastic;
+        let mut problem = DistMf::new(&data.a, 4, 0.05, 32);
+        let rounds = problem.rounds_for_iters(2);
+        run_distributed(&mut problem, &cfg, rounds, "tiny").unwrap()
+    };
+    let fixed = run(false);
+    let elastic = run(true);
+    assert_eq!(
+        obj_bits(&fixed),
+        obj_bits(&elastic),
+        "MF trajectory must survive elasticity bitwise"
+    );
+    assert_eq!(fixed.rounds, elastic.rounds);
+}
+
+#[test]
+fn aggressive_lease_expiry_is_semantically_invisible() {
+    // A pathologically short lease makes the supervisor re-dispatch
+    // blocks that are merely in flight. Every extra copy loses the
+    // server's ledger race, so the trajectory still cannot move.
+    let rounds = 60;
+    let (fixed, _) = run_lasso(&lasso_cfg(4), rounds, 5);
+    let mut cfg = lasso_cfg(4);
+    cfg.ps.elastic = true;
+    cfg.ps.lease_ms = 1;
+    let (churned, _) = run_lasso(&cfg, rounds, 5);
+    assert_eq!(
+        obj_bits(&fixed),
+        obj_bits(&churned),
+        "lease churn must be semantically invisible (exactly-once application)"
+    );
+    assert_eq!(churned.sup_workers_live, 4);
+}
+
+#[test]
+fn seeded_kills_mid_run_complete_and_converge() {
+    // Acceptance (b): kill K of P workers mid-run via the seeded plan.
+    // Kills fire after their round's blocks are dispatched, so the
+    // victim dies holding leases; the run must reassign them, complete
+    // every round, and land within 5% of the uninterrupted objective.
+    let rounds = 80;
+    let (baseline, _) = run_lasso(&lasso_cfg(4), rounds, 7);
+    let base_obj = baseline.trace.final_objective();
+
+    let mut cfg = lasso_cfg(4);
+    cfg.ps.worker_kill_plan = "seed=3,kill=@5".to_string(); // implies elastic
+    let (one_dead, _) = run_lasso(&cfg, rounds, 7);
+    assert_eq!(one_dead.rounds, baseline.rounds, "every round must still complete");
+    assert!(one_dead.sup_reassigns > 0, "the victim's leases must be reassigned");
+    assert_eq!(one_dead.sup_workers_live, 3);
+    assert_close(one_dead.trace.final_objective(), base_obj, 0.05, "1-kill objective");
+
+    let mut cfg = lasso_cfg(4);
+    cfg.ps.worker_kill_plan = "seed=9,kill=@4,kill=@9".to_string();
+    let (two_dead, _) = run_lasso(&cfg, rounds, 7);
+    assert_eq!(two_dead.rounds, baseline.rounds, "2 survivors must finish all rounds");
+    assert!(two_dead.sup_reassigns > 0);
+    assert_eq!(two_dead.sup_workers_live, 2);
+    assert_close(two_dead.trace.final_objective(), base_obj, 0.05, "2-kill objective");
+}
+
+#[test]
+fn mid_run_joiner_can_carry_the_whole_run() {
+    // Acceptance (c): a worker joins at round 3 (entering at the
+    // applied frontier — immediately gate-legal at staleness 0), then
+    // both founders are killed. Only the joiner is left: the run
+    // completing at the baseline objective proves the joiner was
+    // dispatched (all) the work.
+    let rounds = 60;
+    let (baseline, _) = run_lasso(&lasso_cfg(2), rounds, 11);
+    let mut cfg = lasso_cfg(2);
+    cfg.ps.worker_kill_plan = "seed=1,join=@3,kill=0@6,kill=1@9".to_string();
+    let (elastic, _) = run_lasso(&cfg, rounds, 11);
+
+    assert_eq!(elastic.sup_workers_live, 1, "only the joiner survives");
+    assert_eq!(elastic.rounds, baseline.rounds, "the joiner must finish every round");
+    assert!(elastic.sup_reassigns > 0, "the founders' leases moved to the joiner");
+    assert_close(
+        elastic.trace.final_objective(),
+        baseline.trace.final_objective(),
+        0.05,
+        "joiner-carried objective",
+    );
+}
+
+#[test]
+fn kills_under_a_staleness_bound_still_converge() {
+    // Satellite: membership change while the SSP gate may be parked
+    // (staleness 2, pipelined dispatch). Retiring the victim must wake
+    // any waiter parked on its clock, not hang the run.
+    let rounds = 80;
+    let mut cfg = lasso_cfg(4);
+    cfg.ps.set_staleness_arg("2").unwrap();
+    cfg.ps.worker_kill_plan = "seed=13,kill=@6".to_string();
+    let (report, _) = run_lasso(&cfg, rounds, 21);
+    assert_eq!(report.rounds, rounds, "the gated run must not stall after the kill");
+    assert!(report.sup_reassigns > 0);
+    let first = report.trace.points.first().unwrap().objective;
+    let last = report.trace.final_objective();
+    assert!(last < first * 0.8, "no progress under staleness-2 chaos: {first} -> {last}");
+}
+
+#[test]
+fn killing_the_last_worker_is_a_clean_error_not_a_hang() {
+    // Satellite: the degenerate end of elasticity. When the plan kills
+    // the final live worker the run must fail fast with a clear error —
+    // the alternative is a coordinator waiting forever for flushes.
+    let mut cfg = lasso_cfg(2);
+    cfg.ps.worker_kill_plan = "seed=1,kill=@2,kill=@4".to_string();
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 3);
+    let mut problem = NativeLasso::new(&data, cfg.lambda);
+    let err = run_distributed(&mut problem, &cfg, 40, "tiny").unwrap_err();
+    assert!(
+        err.to_string().contains("no live workers"),
+        "last-worker death must name the condition, got: {err}"
+    );
+}
+
+#[test]
+fn duplicate_flush_application_is_impossible() {
+    // Acceptance (d): the exactly-once contract at the transport level.
+    // However many copies of a (round, block) the reassignment race
+    // produces — another worker's copy or the winner's own replay —
+    // only the first application lands; every loser is acked with
+    // `applied = false` and counted by `ps.flushes_dropped`.
+    let cfg = RunConfig::default();
+    let mut conn = PsConnection::establish(&cfg.ps, 2, &[(0, 4)]).unwrap();
+    conn.coord().publish_range(0, &[0.0, 0.0, 0.0, 0.0], 0).unwrap();
+    let mut w0 = conn.worker_transport(0).unwrap();
+    let mut w1 = conn.worker_transport(1).unwrap();
+
+    assert!(w0.flush(&[(1, 0.5)], 0, 0).unwrap(), "the first copy applies");
+    assert!(
+        !w1.flush(&[(1, 0.5)], 0, 0).unwrap(),
+        "a reassigned copy of the same (round, block) must be dropped"
+    );
+    assert!(
+        !w0.flush(&[(1, 0.5)], 0, 0).unwrap(),
+        "the winner replaying its own flush must be dropped too"
+    );
+
+    let reply = conn.coord().pull(&PullSpec::from_ranges(vec![(0, 4)]), 0).unwrap();
+    assert_eq!(
+        reply.ranges[0].values()[1],
+        0.5f32,
+        "exactly one application of the 0.5 delta"
+    );
+    let metrics = conn.coord().obs_stats().unwrap().metrics;
+    let dropped = metrics
+        .iter()
+        .find(|(n, _)| n == "ps.flushes_dropped")
+        .expect("ps.flushes_dropped must be registered")
+        .1
+        .as_u64();
+    assert_eq!(dropped, 2, "both duplicate copies counted as dropped");
+}

@@ -210,7 +210,7 @@ fn server_restart_mid_run_resumes_from_checkpoint_and_converges() {
 
     let dir = std::env::temp_dir().join(format!("strads_faults_ckpt_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let ckpt = CheckpointConfig { dir: dir.clone(), every: 2 };
+    let ckpt = CheckpointConfig { dir: dir.clone(), every: 2, keep: 2 };
     let host = PsTcpServer::bind_with("127.0.0.1:0", Some(ckpt.clone())).unwrap();
     let addr = host.local_addr().to_string();
     let mut cfg = tcp_cfg(3, &addr);
