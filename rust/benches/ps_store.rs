@@ -7,7 +7,10 @@
 //! top of the store read).
 
 use strads::benchutil::{report, time_fn};
-use strads::ps::transport::wire::{decode_reply, encode_reply, Reply};
+use strads::ps::transport::wire::{
+    decode_reply, decode_request, encode_flush, encode_flush_maybe_runs, encode_reply, Reply,
+    SegmentMap,
+};
 use strads::ps::{Cell, PullSpec, ShardedStore};
 
 fn main() {
@@ -121,11 +124,73 @@ fn main() {
         encoded.len() as f64 / n as f64
     );
 
+    // --- chunked pull under concurrent publish -----------------------
+    // The MF-shaped race the chunked slabs exist for: a worker holds a
+    // snapshot of the whole segment while the coordinator republishes a
+    // narrow window. Whole-slab chunks (chunk_cells = 0) copy all n
+    // cells per racing publish; 4096-cell chunks copy only the chunks
+    // the window touches. Same arithmetic either way — only cow_bytes
+    // moves.
+    println!("\n== chunked epoch slabs: publish racing a held snapshot ==\n");
+    let window: Vec<f64> = values[..1024].to_vec();
+    for chunk_cells in [0usize, 4096] {
+        let store = ShardedStore::with_segments_chunked(8, &[(0, n)], chunk_cells);
+        store.publish_dense(&values, 0);
+        let (med, min, max) = time_fn(3, 30, || {
+            let held = store.read_range(0, n);
+            store.publish_range(0, &window, 1);
+            std::hint::black_box(held);
+        });
+        report(
+            &format!("chunk_cells={chunk_cells:<5}: 1024-cell publish vs held {n}"),
+            med,
+            min,
+            max,
+        );
+        println!(
+            "    cow_clones = {}, cow_bytes = {} ({:.0} B/publish)",
+            store.cow_clones(),
+            store.cow_bytes(),
+            store.cow_bytes() as f64 / store.cow_clones().max(1) as f64
+        );
+    }
+
+    // --- wire codec: v5 run compression ratio ------------------------
+    // Flush batches as the workers actually produce them: scattered
+    // single-cell deltas (the Lasso β pushes) and a dense contiguous
+    // stretch (the coordinator's windowed republish). Plain v4 frames
+    // pay 16 B/entry; v5 runs pay ~8 B/entry scattered and ~4 B/cell
+    // dense.
+    println!("\n== wire codec: v5 run compression (vs plain 16 B/entry frames) ==\n");
+    let map = SegmentMap::new(&[(0, n)]);
+    let scattered: Vec<(usize, f64)> =
+        (0..512).map(|i| ((i * 127) % n, values[(i * 127) % n])).collect();
+    let dense_batch: Vec<(usize, f64)> = (0..4096).map(|i| (i, values[i])).collect();
+    for (label, batch) in [("512 scattered", &scattered), ("4096 dense run", &dense_batch)] {
+        let plain = encode_flush(0, 0, 0, 0, batch);
+        let (compressed, runs) = encode_flush_maybe_runs(0, 0, 0, 0, batch, &map);
+        let (med, min, max) = time_fn(3, 50, || {
+            std::hint::black_box(encode_flush_maybe_runs(0, 0, 0, 0, batch, &map));
+        });
+        report(&format!("wire  : encode runs  ({label})"), med, min, max);
+        let (med, min, max) = time_fn(3, 50, || {
+            std::hint::black_box(decode_request(&compressed).expect("self-encoded"));
+        });
+        report(&format!("wire  : decode runs  ({label})"), med, min, max);
+        println!(
+            "    {} -> {} bytes ({:.2}x smaller, {runs} runs)",
+            plain.len(),
+            compressed.len(),
+            plain.len() as f64 / compressed.len().max(1) as f64
+        );
+    }
+
     println!(
         "\nhash probes metered: dense = {} (must stay 0), hashed = {}; \
-         dense epoch cow-clones = {}",
+         dense epoch cow-clones = {} (cow_bytes = {})",
         dense.hash_probes(),
         hashed.hash_probes(),
-        dense.cow_clones()
+        dense.cow_clones(),
+        dense.cow_bytes()
     );
 }

@@ -141,6 +141,29 @@ pub struct PsConfig {
     /// still hold the previous one, and update the slab in place
     /// otherwise.
     pub republish_tol: f64,
+    /// `republish_tol = auto` in the conf / CLI: scale the tolerance
+    /// with the run instead of hand-tuning it. Each applied round the
+    /// coordinator sets the effective tolerance to
+    /// `1e-7 * sqrt(2*|objective|/n)` — a fixed relative fraction of
+    /// the RMS entry magnitude a quadratic objective implies — and
+    /// uses lossless `0.0` until the first objective value exists.
+    /// When set, [`PsConfig::republish_tol`] is ignored.
+    pub republish_auto: bool,
+    /// Cells per chunk in dense epoch slabs: each segment's f32 state
+    /// is split into `chunk_cells`-sized chunks with independent
+    /// `Arc`-shared epochs and versions, so a racing publish clones
+    /// only the chunks it writes and a partial pull pins only the
+    /// chunks it covers. `0` (the default) = one chunk per segment,
+    /// today's exact whole-slab behaviour. Staleness-0 results are
+    /// bitwise identical for any value (pinned by test).
+    pub chunk_cells: usize,
+    /// Encode flush/publish batches on the TCP wire as sorted
+    /// index-delta + f32 value runs (dense stretches ship as one raw
+    /// little-endian slab) instead of per-entry (key, f64) pairs.
+    /// Lossless for dense-segment keys — f32 cells round-trip through
+    /// f32 exactly — and bitwise-invisible to results; only
+    /// `socket_bytes` shrinks. Off = the uncompressed v4-style frames.
+    pub wire_compress: bool,
     /// Register the problem's contiguous key ranges as dense segment
     /// slabs (zero hash probes on those ranges). Off = hashed-only
     /// storage, kept for A/B and equivalence testing.
@@ -209,6 +232,9 @@ impl Default for PsConfig {
             asynchronous: false,
             shards: 8,
             republish_tol: 0.0,
+            republish_auto: false,
+            chunk_cells: 0,
+            wire_compress: true,
             dense_segments: true,
             pipeline: true,
             transport: crate::ps::TransportKind::InProc,
@@ -239,6 +265,21 @@ impl PsConfig {
         } else {
             crate::ps::StalenessPolicy::Bounded(self.staleness as u64)
         }
+    }
+
+    /// Apply a `--republish-tol` / `[ps] republish_tol` setting: a
+    /// float tolerance, or `auto` for the objective-scaled tolerance.
+    pub fn set_republish_tol_arg(&mut self, arg: &str) -> anyhow::Result<()> {
+        if arg.trim() == "auto" {
+            self.republish_auto = true;
+        } else {
+            self.republish_tol = arg
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("republish_tol must be a float or `auto`: {arg}"))?;
+            self.republish_auto = false;
+        }
+        Ok(())
     }
 
     /// Apply a `--staleness` CLI setting: an integer bound or `async`.
@@ -379,6 +420,8 @@ impl RunConfig {
             "ps.async",
             "ps.shards",
             "ps.republish_tol",
+            "ps.chunk_cells",
+            "ps.wire_compress",
             "ps.dense_segments",
             "ps.pipeline",
             "ps.transport",
@@ -414,6 +457,7 @@ impl RunConfig {
             "engine.max_rounds" => c.engine.max_rounds,
             "ps.staleness" => c.ps.staleness,
             "ps.shards" => c.ps.shards,
+            "ps.chunk_cells" => c.ps.chunk_cells,
             "ps.retry_max" => c.ps.retry_max,
             "sched.shards" => c.sched.shards,
             "sched.pipeline_depth" => c.sched.pipeline_depth,
@@ -427,6 +471,12 @@ impl RunConfig {
         }
         if let Some(v) = conf.get_usize("ps.async").map_err(anyhow::Error::msg)? {
             c.ps.asynchronous = v != 0;
+        }
+        if let Some(v) = conf.get("ps.republish_tol") {
+            c.ps.set_republish_tol_arg(v)?;
+        }
+        if let Some(v) = conf.get_usize("ps.wire_compress").map_err(anyhow::Error::msg)? {
+            c.ps.wire_compress = v != 0;
         }
         if let Some(v) = conf.get_usize("ps.dense_segments").map_err(anyhow::Error::msg)? {
             c.ps.dense_segments = v != 0;
@@ -472,7 +522,6 @@ impl RunConfig {
         }
         load!(conf, c, f64:
             "lambda" => c.lambda,
-            "ps.republish_tol" => c.ps.republish_tol,
             "sap.rho" => c.sap.rho,
             "sap.eta" => c.sap.eta,
             "sap.init_priority" => c.sap.init_priority,
@@ -491,7 +540,7 @@ impl RunConfig {
     /// Serialize back to the preset format.
     pub fn to_conf_string(&self) -> String {
         format!(
-            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {:e}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\nretry_max = {}\nretry_backoff_ms = {}\nfault_plan = \"{}\"\ncheckpoint_dir = \"{}\"\ncheckpoint_every = {}\ncheckpoint_keep = {}\nelastic = {}\nworker_kill_plan = \"{}\"\nlease_ms = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n\n[obs]\nlevel = {}\nevents_path = \"{}\"\nreport_secs = {}\n",
+            "workers = {}\nlambda = {:e}\n\n[sap]\np_prime_factor = {}\nrho = {}\neta = {:e}\ninit_priority = {:e}\nshards = {}\ncoords_per_worker = {}\n\n[engine]\nrecord_every = {}\nobjective_every = {}\nmax_rounds = {}\nrel_tol = {:e}\nseed = {}\n\n[cost]\nsec_per_work_unit = {:e}\nround_overhead_sec = {:e}\nsched_sec_per_candidate = {:e}\n\n[ps]\nstaleness = {}\nasync = {}\nshards = {}\nrepublish_tol = {}\nchunk_cells = {}\nwire_compress = {}\ndense_segments = {}\npipeline = {}\ntransport = {}\naddr = {}\nretry_max = {}\nretry_backoff_ms = {}\nfault_plan = \"{}\"\ncheckpoint_dir = \"{}\"\ncheckpoint_every = {}\ncheckpoint_keep = {}\nelastic = {}\nworker_kill_plan = \"{}\"\nlease_ms = {}\n\n[sched]\nscheduler = {}\nshards = {}\npipeline_depth = {}\nservice = {}\n\n[obs]\nlevel = {}\nevents_path = \"{}\"\nreport_secs = {}\n",
             self.workers,
             self.lambda,
             self.sap.p_prime_factor,
@@ -511,7 +560,13 @@ impl RunConfig {
             self.ps.staleness,
             usize::from(self.ps.asynchronous),
             self.ps.shards,
-            self.ps.republish_tol,
+            if self.ps.republish_auto {
+                "auto".to_string()
+            } else {
+                format!("{:e}", self.ps.republish_tol)
+            },
+            self.ps.chunk_cells,
+            usize::from(self.ps.wire_compress),
             usize::from(self.ps.dense_segments),
             usize::from(self.ps.pipeline),
             self.ps.transport.name(),
@@ -653,6 +708,32 @@ mod tests {
         let conf = KvConf::parse("[ps]\nrepublish_tol = -1\n").unwrap();
         let c = RunConfig::from_kvconf(&conf).unwrap();
         assert_eq!(c.ps.republish_tol, -1.0);
+        // `auto` selects the objective-scaled tolerance
+        let conf = KvConf::parse("[ps]\nrepublish_tol = auto\n").unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert!(c.ps.republish_auto);
+        assert!(!PsConfig::default().republish_auto, "auto must be opt-in");
+        let bad = KvConf::parse("[ps]\nrepublish_tol = soonish\n").unwrap();
+        assert!(RunConfig::from_kvconf(&bad).is_err());
+        // auto survives the conf round trip
+        let cfg = RunConfig {
+            ps: PsConfig { republish_auto: true, ..Default::default() },
+            ..Default::default()
+        };
+        let back = RunConfig::from_kvconf(&KvConf::parse(&cfg.to_conf_string()).unwrap());
+        assert_eq!(back.unwrap(), cfg);
+    }
+
+    #[test]
+    fn ps_hot_path_keys_parse() {
+        let conf = KvConf::parse("[ps]\nchunk_cells = 4096\nwire_compress = 0\n").unwrap();
+        let c = RunConfig::from_kvconf(&conf).unwrap();
+        assert_eq!(c.ps.chunk_cells, 4096);
+        assert!(!c.ps.wire_compress);
+        // defaults: whole-slab chunks, compressed wire
+        let d = PsConfig::default();
+        assert_eq!(d.chunk_cells, 0, "0 must mean one chunk per segment");
+        assert!(d.wire_compress, "run encoding is on by default");
     }
 
     #[test]

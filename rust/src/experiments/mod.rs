@@ -8,7 +8,7 @@ use crate::data::mf_powerlaw::{self, MfSynthSpec};
 use crate::engine::run_rounds;
 use crate::lasso::NativeLasso;
 use crate::metrics::Trace;
-use crate::mf::{run_mf, MfPartition, NativeMf};
+use crate::mf::{run_mf, DistMf, MfPartition, NativeMf};
 use crate::problem::ModelProblem;
 use crate::sim::{CostModel, VirtualCluster};
 
@@ -157,12 +157,14 @@ pub fn ablation(cfg_base: &RunConfig, out_csv: Option<&std::path::Path>) -> Vec<
 }
 
 /// Staleness sweep (the Petuum-style "fresh vs stale" curve): run the
-/// same distributed Lasso through the parameter server at staleness
-/// bounds 0, 2, 8 and fully-async, recording objective-vs-round traces
-/// with per-round staleness and net-bytes columns. When `out_json` is
-/// given, also emit a `BENCH_ps.json` perf snapshot (bytes flushed /
-/// republished / pulled, pull bytes per round against the 16-byte-cell
-/// baseline, zero-copy snapshot-clone and copy-on-publish counts, mean
+/// same distributed workload — Lasso AND MF, both paper models —
+/// through the parameter server at staleness bounds 0, 2, 8 and
+/// fully-async, recording objective-vs-round traces with per-round
+/// staleness and net-bytes columns. When `out_json` is given, also
+/// emit a `BENCH_ps.json` perf snapshot per (workload, staleness)
+/// setting (bytes flushed / republished / pulled, pull bytes per round
+/// against the 16-byte-cell baseline, zero-copy snapshot-clone and
+/// copy-on-publish counts *and bytes*, compressed wire runs, mean
 /// staleness, wall-clock per round, plus the run's transport and the
 /// *real* socket bytes it moved — 0 in-process, measured traffic under
 /// `--ps-transport tcp`) so successive PRs have a trajectory to
@@ -174,92 +176,138 @@ pub fn staleness_sweep(
     out_csv: Option<&std::path::Path>,
     out_json: Option<&std::path::Path>,
 ) -> anyhow::Result<Vec<Trace>> {
-    let data = lasso_synth::generate(&lasso_spec(dataset)?, cfg_base.engine.seed);
+    let lasso_data = lasso_synth::generate(&lasso_spec(dataset)?, cfg_base.engine.seed);
+    // The MF leg reuses the dataset name when it names an MF spec
+    // (netflix|yahoo|tiny), and falls back to tiny for the
+    // lasso-specific ones (adlike|wide).
+    let mf_dataset = if mf_spec(dataset).is_ok() { dataset } else { "tiny" };
+    let mf_data = mf_powerlaw::generate(&mf_spec(mf_dataset)?, cfg_base.engine.seed);
     let mut traces = Vec::new();
     let mut rows = String::new();
-    for setting in ["0", "2", "8", "async"] {
-        let mut cfg = cfg_base.clone();
-        cfg.ps.set_staleness_arg(setting)?;
-        let mut problem = NativeLasso::new(&data, cfg.lambda);
-        let wall = std::time::Instant::now();
-        let report = crate::workers::run_distributed(&mut problem, &cfg, rounds, dataset)?;
-        let elapsed = wall.elapsed().as_secs_f64();
-        let sec_per_round =
-            if report.rounds > 0 { elapsed / report.rounds as f64 } else { 0.0 };
-        let pull_bytes_per_round =
-            if report.rounds > 0 { report.pull_bytes as f64 / report.rounds as f64 } else { 0.0 };
-        // What the replaced 16-byte-per-cell wire format would have
-        // moved for the same pulls — the bandwidth-halving baseline.
-        let pull_bytes_cell_equiv = 16 * report.cells_pulled;
-        println!(
-            "{}  (flushed={}B republished={}B pulled={}B [{:.1}x under cell wire] \
-             socket={}B/{} snapshot_clones={} cow_clones={} gate_waits={} \
-             mean_staleness={:.2} sched_wait={:.3}s queue_depth={:.2} {:.3}ms/round)",
-            report.trace.summary(),
-            report.bytes_flushed,
-            report.bytes_republished,
-            report.pull_bytes,
-            pull_bytes_cell_equiv as f64 / (report.pull_bytes.max(1)) as f64,
-            report.socket_bytes,
-            report.transport,
-            report.snapshot_clones,
-            report.cow_clones,
-            report.gate_waits,
-            report.mean_staleness,
-            report.sched_wait_total,
-            report.plan_queue_depth,
-            sec_per_round * 1e3
-        );
-        if !rows.is_empty() {
-            rows.push_str(",\n");
+    for workload in ["lasso", "mf"] {
+        for setting in ["0", "2", "8", "async"] {
+            let mut cfg = cfg_base.clone();
+            cfg.ps.set_staleness_arg(setting)?;
+            let wall = std::time::Instant::now();
+            let mut report = match workload {
+                "lasso" => {
+                    let mut problem = NativeLasso::new(&lasso_data, cfg.lambda);
+                    crate::workers::run_distributed(&mut problem, &cfg, rounds, dataset)?
+                }
+                _ => {
+                    // Canonical MF regularization (fig 5's 0.05), not
+                    // the sweep's lasso lambda.
+                    let mut problem = DistMf::new(
+                        &mf_data.a,
+                        mf_data.rank_true,
+                        0.05,
+                        cfg.engine.seed + 1,
+                    );
+                    crate::workers::run_distributed(&mut problem, &cfg, rounds, mf_dataset)?
+                }
+            };
+            if workload == "mf" {
+                // Distinguish the two workloads' rows in the shared CSV.
+                report.trace.scheduler = format!("mf-{}", report.trace.scheduler);
+            }
+            let elapsed = wall.elapsed().as_secs_f64();
+            let sec_per_round =
+                if report.rounds > 0 { elapsed / report.rounds as f64 } else { 0.0 };
+            let pull_bytes_per_round = if report.rounds > 0 {
+                report.pull_bytes as f64 / report.rounds as f64
+            } else {
+                0.0
+            };
+            // What the replaced 16-byte-per-cell wire format would have
+            // moved for the same pulls — the bandwidth-halving baseline.
+            let pull_bytes_cell_equiv = 16 * report.cells_pulled;
+            println!(
+                "[{workload}] {}  (flushed={}B republished={}B pulled={}B [{:.1}x under cell \
+                 wire] socket={}B/{} runs_encoded={} snapshot_clones={} cow_clones={} \
+                 cow_bytes={} gate_waits={} mean_staleness={:.2} sched_wait={:.3}s \
+                 queue_depth={:.2} {:.3}ms/round)",
+                report.trace.summary(),
+                report.bytes_flushed,
+                report.bytes_republished,
+                report.pull_bytes,
+                pull_bytes_cell_equiv as f64 / (report.pull_bytes.max(1)) as f64,
+                report.socket_bytes,
+                report.transport,
+                report.runs_encoded,
+                report.snapshot_clones,
+                report.cow_clones,
+                report.cow_bytes,
+                report.gate_waits,
+                report.mean_staleness,
+                report.sched_wait_total,
+                report.plan_queue_depth,
+                sec_per_round * 1e3
+            );
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"workload\": \"{}\", \"staleness\": \"{}\", \"rounds\": {}, \
+                 \"bytes_flushed\": {}, \
+                 \"bytes_republished\": {}, \"pull_bytes\": {}, \"pull_bytes_per_round\": {:.1}, \
+                 \"pull_bytes_cell_equiv\": {}, \"socket_bytes\": {}, \"runs_encoded\": {}, \
+                 \"snapshot_clones\": {}, \
+                 \"cow_clones\": {}, \"cow_bytes\": {}, \"mean_staleness\": {:.4}, \
+                 \"max_staleness\": {}, \
+                 \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
+                 \"sched_wait_total\": {:.6e}, \"plan_queue_depth\": {:.2}, \
+                 \"reconnects\": {}, \"sup.heartbeats\": {}, \"sup.leases_expired\": {}, \
+                 \"sup.reassigns\": {}, \"sup.workers_live\": {}, \
+                 \"final_objective\": {:.8e}}}",
+                workload,
+                setting,
+                report.rounds,
+                report.bytes_flushed,
+                report.bytes_republished,
+                report.pull_bytes,
+                pull_bytes_per_round,
+                pull_bytes_cell_equiv,
+                report.socket_bytes,
+                report.runs_encoded,
+                report.snapshot_clones,
+                report.cow_clones,
+                report.cow_bytes,
+                report.mean_staleness,
+                report.max_stale_gap,
+                report.gate_waits,
+                report.hash_probes,
+                sec_per_round,
+                report.sched_wait_total,
+                report.plan_queue_depth,
+                report.reconnects,
+                report.sup_heartbeats,
+                report.sup_leases_expired,
+                report.sup_reassigns,
+                report.sup_workers_live,
+                report.trace.final_objective()
+            ));
+            if let Some(p) = out_csv {
+                report.trace.append_csv(p).expect("csv write");
+            }
+            traces.push(report.trace);
         }
-        rows.push_str(&format!(
-            "    {{\"staleness\": \"{}\", \"rounds\": {}, \"bytes_flushed\": {}, \
-             \"bytes_republished\": {}, \"pull_bytes\": {}, \"pull_bytes_per_round\": {:.1}, \
-             \"pull_bytes_cell_equiv\": {}, \"socket_bytes\": {}, \"snapshot_clones\": {}, \
-             \"cow_clones\": {}, \"mean_staleness\": {:.4}, \"max_staleness\": {}, \
-             \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
-             \"sched_wait_total\": {:.6e}, \"plan_queue_depth\": {:.2}, \
-             \"reconnects\": {}, \"sup.heartbeats\": {}, \"sup.leases_expired\": {}, \
-             \"sup.reassigns\": {}, \"sup.workers_live\": {}, \
-             \"final_objective\": {:.8e}}}",
-            setting,
-            report.rounds,
-            report.bytes_flushed,
-            report.bytes_republished,
-            report.pull_bytes,
-            pull_bytes_per_round,
-            pull_bytes_cell_equiv,
-            report.socket_bytes,
-            report.snapshot_clones,
-            report.cow_clones,
-            report.mean_staleness,
-            report.max_stale_gap,
-            report.gate_waits,
-            report.hash_probes,
-            sec_per_round,
-            report.sched_wait_total,
-            report.plan_queue_depth,
-            report.reconnects,
-            report.sup_heartbeats,
-            report.sup_leases_expired,
-            report.sup_reassigns,
-            report.sup_workers_live,
-            report.trace.final_objective()
-        ));
-        if let Some(p) = out_csv {
-            report.trace.append_csv(p).expect("csv write");
-        }
-        traces.push(report.trace);
     }
     if let Some(p) = out_json {
+        let tol_json = if cfg_base.ps.republish_auto {
+            "\"auto\"".to_string()
+        } else {
+            format!("{:e}", cfg_base.ps.republish_tol)
+        };
         let body = format!(
             "{{\n  \"bench\": \"ps_staleness_sweep\",\n  \"dataset\": \"{dataset}\",\n  \
-             \"workers\": {},\n  \"republish_tol\": {:e},\n  \"dense_segments\": {},\n  \
+             \"workers\": {},\n  \"republish_tol\": {},\n  \"chunk_cells\": {},\n  \
+             \"wire_compress\": {},\n  \"dense_segments\": {},\n  \
              \"pipeline\": {},\n  \"transport\": \"{}\",\n  \"scheduler\": \"{}\",\n  \
              \"sched_shards\": {},\n  \"settings\": [\n{rows}\n  ]\n}}\n",
             cfg_base.workers,
-            cfg_base.ps.republish_tol,
+            tol_json,
+            cfg_base.ps.chunk_cells,
+            cfg_base.ps.wire_compress,
             cfg_base.ps.dense_segments,
             cfg_base.ps.pipeline,
             cfg_base.ps.transport.name(),

@@ -48,8 +48,15 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --scheduler dynamic|static|random (plans distributed rounds)
                --staleness N|async (SSP bound: pulls at most N rounds stale;
                                     'async' = no gate)  --ps-shards N
-               --republish-tol F (republish only derived entries that moved
-                                  > F since last publish; <0 = full each round)
+               --republish-tol F|auto (republish only derived entries that
+                                  moved > F since last publish; <0 = full each
+                                  round; auto = objective-scaled tolerance)
+               --chunk-cells N (cells per dense-slab chunk: partial pulls pin
+                                and racing publishes clone only the chunks
+                                touched; 0 [default] = one chunk per segment)
+               --wire-compress on|off (tcp: flush/publish batches as sorted
+                                       index-delta + f32 value runs; on by
+                                       default, bitwise-invisible to results)
                --dense-segments 0|1 (contiguous key ranges as dense slabs)
                --pipeline 0|1 (dispatch past the bound; SSP gate paces workers)
                --sched-shards N (scheduler service shard threads; 0 = follow
@@ -86,13 +93,15 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                per-segment versions, clock state) from a running ps-server
   staleness-sweep: --dataset tiny|adlike|wide --workers N --rounds N --lambda F
                --scheduler dynamic|static|random --sched-shards N
-               --republish-tol F --dense-segments 0|1 --pipeline 0|1
+               --republish-tol F|auto --chunk-cells N --wire-compress on|off
+               --dense-segments 0|1 --pipeline 0|1
                --ps-transport inproc|tcp --ps-addr host:port
                --retry-max N --retry-backoff-ms N --fault-plan spec
                --elastic 0|1 --worker-kill-plan spec --lease-ms N
                --obs-level 0|1|2 --trace-events path.jsonl
-               (runs staleness 0, 2, 8, async through the parameter server;
-                writes staleness_sweep.csv + BENCH_ps.json to --out)";
+               (runs staleness 0, 2, 8, async for lasso AND mf through the
+                parameter server; writes staleness_sweep.csv + BENCH_ps.json
+                to --out)";
 
 fn main() {
     if let Err(e) = run() {
@@ -208,7 +217,13 @@ fn run() -> anyhow::Result<()> {
                 cfg.ps.set_staleness_arg(&staleness)?;
             }
             cfg.ps.shards = args.usize_or("ps-shards", cfg.ps.shards)?;
-            cfg.ps.republish_tol = args.f64_or("republish-tol", cfg.ps.republish_tol)?;
+            if let Some(tol) = args.opt_str("republish-tol") {
+                cfg.ps.set_republish_tol_arg(&tol)?;
+            }
+            cfg.ps.chunk_cells = args.usize_or("chunk-cells", cfg.ps.chunk_cells)?;
+            if let Some(v) = args.opt_str("wire-compress") {
+                cfg.ps.wire_compress = parse_on_off("wire-compress", &v)?;
+            }
             cfg.ps.dense_segments =
                 args.usize_or("dense-segments", usize::from(cfg.ps.dense_segments))? != 0;
             cfg.ps.pipeline = args.usize_or("pipeline", usize::from(cfg.ps.pipeline))? != 0;
@@ -255,16 +270,17 @@ fn run() -> anyhow::Result<()> {
             };
             println!("{}", report.trace.summary());
             println!(
-                "transport={} socket_bytes={} (real; metered net_bytes={})",
+                "transport={} socket_bytes={} wire.runs_encoded={} (real; metered net_bytes={})",
                 report.transport,
                 report.socket_bytes,
+                report.runs_encoded,
                 report.bytes_flushed + report.bytes_republished + report.pull_bytes
             );
             println!(
                 "rounds={} deltas={} bytes_flushed={} bytes_republished={} pull_bytes={} \
-                 snapshot_clones={} cow_clones={} gate_waits={} mean_staleness={:.2} \
-                 max_staleness={} hash_probes={} sched_wait={:.3}s plan_queue_depth={:.2} \
-                 sched_service={}",
+                 snapshot_clones={} cow_clones={} cow_bytes={} gate_waits={} \
+                 mean_staleness={:.2} max_staleness={} hash_probes={} sched_wait={:.3}s \
+                 plan_queue_depth={:.2} sched_service={}",
                 report.rounds,
                 report.deltas_applied,
                 report.bytes_flushed,
@@ -272,6 +288,7 @@ fn run() -> anyhow::Result<()> {
                 report.pull_bytes,
                 report.snapshot_clones,
                 report.cow_clones,
+                report.cow_bytes,
                 report.gate_waits,
                 report.mean_staleness,
                 report.max_stale_gap,
@@ -294,7 +311,13 @@ fn run() -> anyhow::Result<()> {
             let dataset = args.str_or("dataset", "tiny");
             cfg.workers = args.usize_or("workers", 4)?;
             cfg.lambda = args.f64_or("lambda", 1e-3)?;
-            cfg.ps.republish_tol = args.f64_or("republish-tol", cfg.ps.republish_tol)?;
+            if let Some(tol) = args.opt_str("republish-tol") {
+                cfg.ps.set_republish_tol_arg(&tol)?;
+            }
+            cfg.ps.chunk_cells = args.usize_or("chunk-cells", cfg.ps.chunk_cells)?;
+            if let Some(v) = args.opt_str("wire-compress") {
+                cfg.ps.wire_compress = parse_on_off("wire-compress", &v)?;
+            }
             cfg.ps.dense_segments =
                 args.usize_or("dense-segments", usize::from(cfg.ps.dense_segments))? != 0;
             cfg.ps.pipeline = args.usize_or("pipeline", usize::from(cfg.ps.pipeline))? != 0;
@@ -391,6 +414,15 @@ fn run() -> anyhow::Result<()> {
         other => anyhow::bail!("unknown subcommand {other}"),
     }
     Ok(())
+}
+
+/// `--wire-compress`-style switches: `on`/`1` or `off`/`0`.
+fn parse_on_off(flag: &str, v: &str) -> anyhow::Result<bool> {
+    match v {
+        "on" | "1" => Ok(true),
+        "off" | "0" => Ok(false),
+        other => anyhow::bail!("--{flag} must be on|off, got {other}"),
+    }
 }
 
 /// `--obs-level` / `--trace-events` for the distributed subcommands.

@@ -347,6 +347,17 @@ impl ModelProblem for DistMf {
         state
     }
 
+    fn ps_state_f32(&self) -> Option<Vec<f32>> {
+        // The factors and residuals are canonically f32 already: ship
+        // them raw. Bit-identical to the f64 path (widen then narrow
+        // is the identity on f32 values), minus two full-state copies.
+        let mut state = Vec::with_capacity(self.w.len() + self.h.len() + self.r.len());
+        state.extend_from_slice(&self.w);
+        state.extend_from_slice(&self.h);
+        state.extend_from_slice(&self.r);
+        Some(state)
+    }
+
     fn ps_kernel(&self) -> Option<Arc<dyn PsKernel>> {
         Some(Arc::clone(&self.kernel) as Arc<dyn PsKernel>)
     }

@@ -94,6 +94,16 @@ pub trait ModelProblem {
         Vec::new()
     }
 
+    /// [`ModelProblem::ps_state`] as raw f32, for problems whose
+    /// canonical state already is f32 (MF): the coordinator seeds the
+    /// server from this without the widen-to-f64/narrow-back round
+    /// trip. Must narrow to exactly the same bits as `ps_state` would
+    /// (dense cells store f32 either way — pinned by test). `None`
+    /// (the default) = seed through the f64 path.
+    fn ps_state_f32(&self) -> Option<Vec<f32>> {
+        None
+    }
+
     /// The thread-shareable worker compute over PS snapshots. `None`
     /// (the default) means the problem cannot run distributed.
     fn ps_kernel(&self) -> Option<Arc<dyn PsKernel>> {

@@ -3,12 +3,13 @@
 //! `docs/ARCHITECTURE.md §Fault tolerance`).
 //!
 //! A checkpoint is one consistent image of everything a run would lose
-//! if the `ps-server` process died: the dense segments' epoch slabs
-//! (raw little-endian f32 — bit-exact by construction), the hashed
-//! cells, the SSP clock vector, and the per-worker flush-dedup seqs.
-//! Immutable epochs make the capture nearly free — cloning each
-//! segment's `Arc` under its read lock *is* the snapshot; serialization
-//! happens afterwards with no server lock held.
+//! if the `ps-server` process died: the dense segments' chunked epoch
+//! slabs (raw little-endian f32 — bit-exact by construction — plus one
+//! epoch version per chunk), the hashed cells, the SSP clock vector,
+//! and the per-worker flush-dedup seqs. Immutable epochs make the
+//! capture cheap — each chunk's slab is copied under its read lock,
+//! held only for that memcpy; serialization happens afterwards with no
+//! server lock held.
 //!
 //! Writes are crash-safe **and durable**: the image goes to
 //! `ps.ckpt.tmp`, is fsynced, `rename`d over `ps.ckpt`, and then the
@@ -27,14 +28,16 @@ use super::shard::Cell;
 use super::ParameterServer;
 use std::io::Write;
 use std::path::Path;
-use std::sync::Arc;
 
 /// Leading bytes of every checkpoint file.
 pub const CKPT_MAGIC: &[u8; 8] = b"STRADSCK";
 /// Bump on any layout change; a reader refuses newer versions. v2
-/// added the membership (live) bitmap after the flush seqs; v1 files
-/// are still read (their whole census is presumed live).
-pub const CKPT_VERSION: u32 = 2;
+/// added the membership (live) bitmap after the flush seqs; v3 added
+/// the store's `chunk_cells` and per-chunk epoch versions inside each
+/// segment record. Older files are still read (v1's census is presumed
+/// fully live; v1/v2's single segment version is broadcast to every
+/// chunk).
+pub const CKPT_VERSION: u32 = 3;
 /// The checkpoint file name inside `--checkpoint-dir` (always the
 /// newest image; versioned `ps-<applied>.ckpt` hard links sit beside
 /// it, pruned to `checkpoint_keep`).
@@ -66,8 +69,12 @@ pub struct CheckpointImage {
     /// would park every survivor on a clock that died before the crash.
     live: Vec<bool>,
     flush_seqs: Vec<u64>,
-    /// `(start, epoch_version, slab)` per dense segment.
-    segments: Vec<(usize, u64, Arc<Vec<f32>>)>,
+    /// The store's chunk size (v3+): restores rebuild the same chunk
+    /// geometry so per-chunk versions land where they were captured.
+    chunk_cells: usize,
+    /// `(start, per-chunk versions, concatenated slab)` per dense
+    /// segment.
+    segments: Vec<(usize, Vec<u64>, Vec<f32>)>,
     /// Hashed cells, sorted by key (deterministic bytes).
     cells: Vec<(usize, Cell)>,
 }
@@ -83,11 +90,12 @@ pub struct Restored {
 
 impl CheckpointImage {
     /// Snapshot `server` (plus the transport-layer `session` and
-    /// `flush_seqs`). The epoch `Arc` clones make the segment images
-    /// immutable from here on, so the caller can serialize without any
-    /// server lock held. The caller is responsible for pairing this
-    /// with the flush path (the TCP host captures under its state
-    /// mutex) so `flush_seqs` and the applied deltas agree.
+    /// `flush_seqs`). Each chunk's slab is copied under its own read
+    /// lock, so the image is immutable from here on and the caller can
+    /// serialize without any server lock held. The caller is
+    /// responsible for pairing this with the flush path (the TCP host
+    /// captures under its state mutex) so `flush_seqs` and the applied
+    /// deltas agree.
     pub fn capture(server: &ParameterServer, session: u64, flush_seqs: &[u64]) -> Self {
         CheckpointImage {
             session,
@@ -98,7 +106,8 @@ impl CheckpointImage {
             worker_clocks: server.clock().worker_clocks(),
             live: server.clock().live_flags(),
             flush_seqs: flush_seqs.to_vec(),
-            segments: server.store().segment_epochs(),
+            chunk_cells: server.store().chunk_cells(),
+            segments: server.store().segment_images(),
             cells: server.store().hashed_cells(),
         }
     }
@@ -133,13 +142,15 @@ impl CheckpointImage {
     }
 
     fn to_bytes(&self) -> Vec<u8> {
-        let slab_bytes: usize = self.segments.iter().map(|(_, _, s)| 24 + 4 * s.len()).sum();
-        let mut b = Vec::with_capacity(64 + 16 * self.workers + slab_bytes + 24 * self.cells.len());
+        let slab_bytes: usize =
+            self.segments.iter().map(|(_, vs, s)| 20 + 8 * vs.len() + 4 * s.len()).sum();
+        let mut b = Vec::with_capacity(72 + 16 * self.workers + slab_bytes + 24 * self.cells.len());
         b.extend_from_slice(CKPT_MAGIC);
         b.extend_from_slice(&CKPT_VERSION.to_le_bytes());
         b.extend_from_slice(&self.session.to_le_bytes());
         b.extend_from_slice(&(self.shards as u32).to_le_bytes());
         b.extend_from_slice(&(self.workers as u32).to_le_bytes());
+        b.extend_from_slice(&(self.chunk_cells as u64).to_le_bytes());
         match self.policy {
             StalenessPolicy::Bounded(s) => {
                 b.push(0);
@@ -164,10 +175,13 @@ impl CheckpointImage {
             b.extend_from_slice(&s.to_le_bytes());
         }
         b.extend_from_slice(&(self.segments.len() as u32).to_le_bytes());
-        for (start, version, slab) in &self.segments {
+        for (start, versions, slab) in &self.segments {
             b.extend_from_slice(&(*start as u64).to_le_bytes());
             b.extend_from_slice(&(slab.len() as u64).to_le_bytes());
-            b.extend_from_slice(&version.to_le_bytes());
+            b.extend_from_slice(&(versions.len() as u32).to_le_bytes());
+            for &v in versions.iter() {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
             for &v in slab.iter() {
                 b.extend_from_slice(&v.to_le_bytes());
             }
@@ -244,6 +258,8 @@ pub fn read_checkpoint(dir: &Path) -> anyhow::Result<Option<Restored>> {
     let session = r.u64()?;
     let shards = r.u32()? as usize;
     let workers = r.u32()? as usize;
+    // v1/v2 predate chunked slabs: whole-segment chunks.
+    let chunk_cells = if version >= 3 { r.u64()? as usize } else { 0 };
     let policy = match (r.u8()?, r.u64()?) {
         (0, s) => StalenessPolicy::Bounded(s),
         (1, _) => StalenessPolicy::Async,
@@ -266,29 +282,38 @@ pub fn read_checkpoint(dir: &Path) -> anyhow::Result<Option<Restored>> {
         flush_seqs.push(r.u64()?);
     }
     let nseg = r.u32()? as usize;
-    let nseg = r.count(nseg, 24)?;
+    let nseg = r.count(nseg, 20)?;
     let mut segments = Vec::with_capacity(nseg);
     for _ in 0..nseg {
         let start = r.u64()? as usize;
         let len = r.u64()? as usize;
         let len = r.count(len, 4)?;
-        let version = r.u64()?;
+        // v1/v2 carried one version for the whole segment; the restore
+        // broadcasts a length-1 version list to every chunk.
+        let versions: Vec<u64> = if version >= 3 {
+            let nchunks = r.u32()? as usize;
+            let nchunks = r.count(nchunks, 8)?;
+            (0..nchunks).map(|_| r.u64()).collect::<anyhow::Result<_>>()?
+        } else {
+            vec![r.u64()?]
+        };
         let values: Vec<f32> = r
             .take(len * 4)?
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
             .collect();
-        segments.push((start, version, values));
+        segments.push((start, versions, values));
     }
-    let server = ParameterServer::with_segments(
+    let server = ParameterServer::with_segments_chunked(
         shards,
         workers,
         policy,
         &segments.iter().map(|(s, _, v)| (*s, v.len())).collect::<Vec<_>>(),
+        chunk_cells,
     );
-    for (start, version, values) in segments {
+    for (start, versions, values) in segments {
         anyhow::ensure!(
-            server.store().restore_segment(start, values, version),
+            server.store().restore_segment(start, values, &versions),
             "checkpoint segment at key {start} does not fit the rebuilt store"
         );
     }
@@ -399,29 +424,70 @@ mod tests {
     }
 
     #[test]
-    fn v1_checkpoints_without_membership_still_restore() {
+    fn v1_and_v2_checkpoints_still_restore() {
         let dir = std::env::temp_dir().join(format!("strads_ckpt_v1_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
 
         let server = ParameterServer::with_segments(2, 3, StalenessPolicy::Bounded(1), &[(0, 4)]);
+        server.store().publish_dense(&[1.5, -2.0, 0.25, 8.0], 2);
         server.clock().advance_applied(2);
-        let mut bytes = CheckpointImage::capture(&server, 9, &[1, 2, 3]).to_bytes();
-        // Rewrite the v2 image as v1: stamp the version and splice out
-        // the live bitmap (one byte per worker, right after the clocks).
-        bytes[8..12].copy_from_slice(&1u32.to_le_bytes());
-        let live_at = 8 + 4 + 8 + 4 + 4 + 1 + 8 + 8 + 8 * 3;
-        bytes.drain(live_at..live_at + 3);
-        std::fs::write(dir.join(CKPT_FILE), &bytes).unwrap();
-
-        let restored = read_checkpoint(&dir).unwrap().expect("v1 readable");
+        let v3 = CheckpointImage::capture(&server, 9, &[1, 2, 3]).to_bytes();
+        // Rewrite the v3 image as v2 by splicing out what v3 added: the
+        // per-segment chunk count (one chunk here, so the single
+        // version that follows doubles as v2's segment version) and the
+        // global chunk_cells after the worker count. Offsets: header
+        // 8+4+8+4+4, chunk_cells 8, policy 9, applied 8, clocks 24,
+        // live 3, seqs 24, nseg 4, start+len 16, then nchunks 4.
+        let mut v2 = v3.clone();
+        v2[8..12].copy_from_slice(&2u32.to_le_bytes());
+        v2.drain(124..128); // nchunks u32 before the lone chunk version
+        v2.drain(28..36); // chunk_cells u64
+        std::fs::write(dir.join(CKPT_FILE), &v2).unwrap();
+        let restored = read_checkpoint(&dir).unwrap().expect("v2 readable");
         assert_eq!(restored.session, 9);
+        assert_eq!(
+            restored.server.store().segment_images(),
+            server.store().segment_images(),
+            "a v2 single segment version broadcasts to the one chunk"
+        );
+
+        // v1 additionally lacks the live bitmap after the clocks.
+        let mut v1 = v2;
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        v1.drain(69..72); // live bytes (3 workers) in the v1/v2 layout
+        std::fs::write(dir.join(CKPT_FILE), &v1).unwrap();
+        let restored = read_checkpoint(&dir).unwrap().expect("v1 readable");
         assert_eq!(restored.flush_seqs, vec![1, 2, 3]);
         assert_eq!(
             restored.server.clock().live_flags(),
             vec![true, true, true],
             "a pre-elastic census is presumed fully live"
         );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chunked_checkpoints_keep_per_chunk_versions() {
+        let dir = std::env::temp_dir().join(format!("strads_ckpt_chunk_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server = ParameterServer::with_segments_chunked(
+            2,
+            1,
+            StalenessPolicy::Bounded(0),
+            &[(0, 7)],
+            3,
+        );
+        server.store().publish_dense(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], 1);
+        // Touch only the middle chunk so versions diverge: [1, 2, 1].
+        server.store().publish_range(3, &[-4.0, -5.0], 2);
+        let before = server.store().segment_images();
+        assert_eq!(before[0].1, vec![1, 2, 1], "precondition: versions diverged");
+        CheckpointImage::capture(&server, 5, &[0]).write_to(&dir, 1).unwrap();
+
+        let restored = read_checkpoint(&dir).unwrap().expect("present");
+        assert_eq!(restored.server.store().chunk_cells(), 3, "geometry restored");
+        assert_eq!(restored.server.store().segment_images(), before);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -4,21 +4,22 @@
 //!
 //! * [`shard`] — versioned storage in two representations behind one
 //!   API. **Dense segments** (registered contiguous key ranges — the
-//!   hot, every-pull-reads-it state) are stored as immutable **f32
-//!   epoch slabs**: one `Arc<Vec<f32>>` image plus a single per-epoch
-//!   version, 4 bytes per cell instead of the 16-byte per-cell `Cell`.
-//!   Covered range pulls are O(1) `Arc` clones ([`RangePull`]) — no
+//!   hot, every-pull-reads-it state) are stored as immutable **chunked
+//!   f32 epoch slabs**: each segment is a vector of fixed-size chunks
+//!   (`ps.chunk_cells` cells each; 0 = one chunk spanning the whole
+//!   segment), each an `Arc<Vec<f32>>` image plus a per-chunk epoch
+//!   version — 4 bytes per cell instead of the 16-byte per-cell
+//!   `Cell`. A range pull pins only the chunks it covers (a
+//!   single-chunk pull is an O(1) `Arc` clone, [`RangePull`] — no
 //!   copy, no allocation, no lock held while the kernel consumes the
-//!   data — and writes are copy-on-publish (`Arc::make_mut`): the slab
-//!   is cloned only when a reader still holds the old epoch, so a held
-//!   snapshot is immutable by construction. The clone cost is one slab
-//!   copy (4 bytes/cell) per epoch transition, independent of how few
-//!   keys the write touches — worst case (every flush racing a held
-//!   snapshot) that is `flushes/round x 4 bytes/cell`, which `cow_clones`
-//!   meters; it vanishes when no reader holds the epoch (workers drop
-//!   their views before flushing — see `workers::service`), and
-//!   chunked epochs to shrink the clone unit are a ROADMAP follow-up.
-//!   **Hashed shards** keep everything
+//!   data) and writes are copy-on-publish (`Arc::make_mut`): a chunk
+//!   is cloned only when a reader still holds its old epoch, so a held
+//!   snapshot is immutable by construction. Chunking bounds the clone
+//!   unit: a publish racing a held view re-copies only the chunks it
+//!   writes (`cow_clones` counts clones, `cow_bytes` their bytes),
+//!   instead of the entire segment; the cost vanishes when no reader
+//!   holds the epoch (workers drop their views before flushing — see
+//!   `workers::service`). **Hashed shards** keep everything
 //!   unregistered in Petuum-style hash-partitioned `Cell` maps (full
 //!   f64, per-cell versions).
 //! * [`clock`] — per-worker SSP clocks and the `StalenessBound(s)` /
@@ -178,6 +179,9 @@ pub struct StatsSnapshot {
     pub flushes_dropped: u64,
     pub hash_probes: u64,
     pub cow_clones: u64,
+    /// Bytes those copy-on-publish clones copied (4 bytes per cloned
+    /// chunk cell) — the number `chunk_cells` exists to shrink.
+    pub cow_bytes: u64,
 }
 
 impl StatsSnapshot {
@@ -235,11 +239,24 @@ impl ParameterServer {
         policy: StalenessPolicy,
         segments: &[(usize, usize)],
     ) -> Self {
+        Self::with_segments_chunked(shards, workers, policy, segments, 0)
+    }
+
+    /// Build a server whose dense segments are split into
+    /// `chunk_cells`-cell epoch chunks (0 = one chunk per segment; see
+    /// [`ShardedStore::with_segments_chunked`]).
+    pub fn with_segments_chunked(
+        shards: usize,
+        workers: usize,
+        policy: StalenessPolicy,
+        segments: &[(usize, usize)],
+        chunk_cells: usize,
+    ) -> Self {
         let registry = Registry::new();
         let stats = PsStats::registered(&registry);
         let gate_wait_us = registry.histogram("gate.wait_us", Histogram::us_bounds());
         ParameterServer {
-            store: ShardedStore::with_segments(shards, segments),
+            store: ShardedStore::with_segments_chunked(shards, segments, chunk_cells),
             clock: ClockTable::new(workers),
             policy,
             stats,
@@ -394,6 +411,7 @@ impl ParameterServer {
             flushes_dropped: self.stats.flushes_dropped.get(),
             hash_probes: self.store.hash_probes(),
             cow_clones: self.store.cow_clones(),
+            cow_bytes: self.store.cow_bytes(),
         }
     }
 
@@ -407,6 +425,10 @@ impl ParameterServer {
         metrics.push((
             "store.cow_clones".to_string(),
             MetricValue::Counter(self.store.cow_clones()),
+        ));
+        metrics.push((
+            "store.cow_bytes".to_string(),
+            MetricValue::Counter(self.store.cow_bytes()),
         ));
         metrics.push((
             "store.hash_probes".to_string(),

@@ -3,30 +3,36 @@
 //!
 //! * **Dense segments** — registered contiguous key ranges (the Lasso
 //!   residual `0..n`, MF's factor/residual arrays) live as immutable
-//!   **f32 epoch slabs**: one `Arc<Vec<f32>>` value image plus a single
-//!   per-epoch `u64` version per segment (4 bytes per cell instead of
-//!   the 16-byte per-cell `Cell`). Writers build the next epoch
-//!   copy-on-publish — `Arc::make_mut` clones the slab only when a
-//!   reader still holds the previous epoch — so a covered range pull is
-//!   an O(1) `Arc` clone with no lock held while the data is consumed
-//!   and zero allocation ([`RangePull`]). Every key in a segment is
-//!   addressed by arithmetic alone; dense traffic never touches a hash
-//!   map.
+//!   **f32 epoch slabs**, split into fixed-size **chunks**: each chunk
+//!   is one `Arc<Vec<f32>>` value image plus its own `u64` epoch
+//!   version (4 bytes per cell instead of the 16-byte per-cell
+//!   `Cell`). Writers build the next epoch copy-on-publish —
+//!   `Arc::make_mut` clones a chunk's slab only when a reader still
+//!   holds that chunk's previous epoch — so a covered range pull
+//!   inside one chunk is an O(1) `Arc` clone with no lock held while
+//!   the data is consumed and zero allocation ([`RangePull`]), and a
+//!   publish racing a held snapshot clones only the chunks it actually
+//!   writes, not the whole segment. `chunk_cells = 0` (the default)
+//!   keeps one chunk per segment — exactly the pre-chunking behaviour.
+//!   Every key in a segment is addressed by arithmetic alone; dense
+//!   traffic never touches a hash map.
 //! * **Hashed shards** — unregistered keys keep the Petuum-style
 //!   hash-partitioned `Cell` maps (full f64 values, per-cell versions),
 //!   each behind its own `RwLock`, so sparse or unbounded key spaces
 //!   need no registration.
 //!
 //! Batched operations group their entries by lock unit (a hashed shard
-//! or a segment epoch) and take each touched lock exactly once. The
+//! or a segment chunk) and take each touched lock exactly once. The
 //! [`ShardedStore::hash_probes`] counter meters every probe the hashed
-//! path serves (the "dense traffic never hashes" guarantee), and
+//! path serves (the "dense traffic never hashes" guarantee);
 //! [`ShardedStore::cow_clones`] meters how often a write actually had
-//! to clone an epoch because readers held it — the copy-on-publish
-//! cost meter. Tolerance-gated sparse republish composes with this:
-//! entries under `tol` are skipped before they reach the store, and the
-//! entries that do arrive mutate a fresh epoch clone only when workers
-//! still hold the old one; otherwise the epoch is updated in place.
+//! to clone a chunk because readers held it, and
+//! [`ShardedStore::cow_bytes`] meters the bytes those clones copied —
+//! the copy-on-publish cost pair that chunking exists to shrink.
+//! Tolerance-gated sparse republish composes with this: entries under
+//! `tol` are skipped before they reach the store, and the entries that
+//! do arrive mutate a fresh chunk clone only when workers still hold
+//! the old one; otherwise the chunk is updated in place.
 
 use super::batch::wire_bytes_for;
 use crate::util::FastHashMap;
@@ -92,10 +98,12 @@ impl PullSpec {
 
 /// One pulled contiguous range: an f32 value image plus the epoch
 /// version it was read at. `Shared` is the zero-copy fast path — a
-/// slice view into the segment's published epoch slab, kept alive by
-/// the `Arc` and immutable by construction (writers never mutate an
-/// epoch a reader holds; they clone it first). `Owned` is the
-/// materialized fallback for ranges not covered by one segment.
+/// slice view into one chunk's published epoch slab, kept alive by the
+/// `Arc` and immutable by construction (writers never mutate an epoch
+/// a reader holds; they clone it first). `Owned` is the materialized
+/// fallback: covered ranges spanning multiple chunks (`covered =
+/// true`, still 4 bytes/cell on the wire) and ranges not covered by
+/// one segment (`covered = false`).
 #[derive(Clone, Debug)]
 pub struct RangePull {
     start: usize,
@@ -106,15 +114,22 @@ pub struct RangePull {
 #[derive(Clone, Debug)]
 enum RangeData {
     Shared { slab: Arc<Vec<f32>>, offset: usize, len: usize },
-    Owned(Vec<f32>),
+    Owned { values: Vec<f32>, covered: bool },
 }
 
 impl RangePull {
     /// Build an owned range view — the local-execution path
-    /// (`DistMf::update_blocks`) and tests snapshot their own state
-    /// through this.
+    /// (`DistMf::update_blocks`), wire decode, and tests snapshot
+    /// their own state through this.
     pub fn owned(start: usize, version: u64, values: Vec<f32>) -> Self {
-        RangePull { start, version, data: RangeData::Owned(values) }
+        RangePull { start, version, data: RangeData::Owned { values, covered: false } }
+    }
+
+    /// An owned copy assembled from a registered segment's chunks (a
+    /// covered range spanning a chunk boundary): not zero-copy, but
+    /// still f32-slab traffic for the wire-byte model.
+    fn owned_covered(start: usize, version: u64, values: Vec<f32>) -> Self {
+        RangePull { start, version, data: RangeData::Owned { values, covered: true } }
     }
 
     /// First key of the range.
@@ -122,9 +137,10 @@ impl RangePull {
         self.start
     }
 
-    /// The epoch version (dense path), or the oldest version across
-    /// the span (fallback path; missing cells count as 0) — either
-    /// way, safe input for `PsSnapshot::min_version`.
+    /// The chunk's epoch version (dense path; multi-chunk reads take
+    /// the oldest touched chunk), or the oldest version across the
+    /// span (fallback path; missing cells count as 0) — either way,
+    /// safe input for `PsSnapshot::min_version`.
     pub fn version(&self) -> u64 {
         self.version
     }
@@ -132,7 +148,7 @@ impl RangePull {
     pub fn len(&self) -> usize {
         match &self.data {
             RangeData::Shared { len, .. } => *len,
-            RangeData::Owned(v) => v.len(),
+            RangeData::Owned { values, .. } => values.len(),
         }
     }
 
@@ -145,12 +161,22 @@ impl RangePull {
         matches!(self.data, RangeData::Shared { .. })
     }
 
+    /// Whether the range was served entirely from dense-segment slabs
+    /// (shared or assembled): such ranges move 4 bytes per cell on the
+    /// wire regardless of how many chunk images backed them.
+    pub fn is_covered(&self) -> bool {
+        match &self.data {
+            RangeData::Shared { .. } => true,
+            RangeData::Owned { covered, .. } => *covered,
+        }
+    }
+
     /// The f32 value image. For `Shared` views this borrows straight
     /// out of the epoch slab — no copy was ever made.
     pub fn values(&self) -> &[f32] {
         match &self.data {
             RangeData::Shared { slab, offset, len } => &slab[*offset..offset + len],
-            RangeData::Owned(v) => v,
+            RangeData::Owned { values, .. } => values,
         }
     }
 }
@@ -175,15 +201,17 @@ impl SpecPull {
         self.ranges.iter().filter(|r| r.is_shared()).count()
     }
 
-    /// Modeled wire bytes of this pull. Shared f32 epoch ranges move 4
-    /// bytes per cell plus one 8-byte epoch version; fallback ranges
-    /// and scattered keys move full 16-byte `(key, f64)` cells. The
-    /// per-cell `Cell` path this design replaced metered every pulled
-    /// cell at 16 bytes — `16 * total_cells()` is that baseline.
+    /// Modeled wire bytes of this pull. Segment-covered f32 ranges
+    /// (zero-copy chunk views and multi-chunk assemblies alike — the
+    /// wire encodes both as one raw f32 slab) move 4 bytes per cell
+    /// plus one 8-byte epoch version; fallback ranges and scattered
+    /// keys move full 16-byte `(key, f64)` cells. The per-cell `Cell`
+    /// path this design replaced metered every pulled cell at 16 bytes
+    /// — `16 * total_cells()` is that baseline.
     pub fn wire_bytes(&self) -> u64 {
         let mut bytes = wire_bytes_for(self.cells.len());
         for r in &self.ranges {
-            bytes += if r.is_shared() {
+            bytes += if r.is_covered() {
                 8 + 4 * r.len() as u64
             } else {
                 wire_bytes_for(r.len())
@@ -193,39 +221,81 @@ impl SpecPull {
     }
 }
 
-/// One epoch of a dense segment: the published f32 value image plus the
-/// single version covering every cell in it. The `Arc` is what pulls
-/// clone; writers go through `ShardedStore::cow_values`.
-struct Epoch {
+/// One epoch chunk of a dense segment: a published f32 value image
+/// plus the single version covering every cell in it. The `Arc` is
+/// what pulls clone; writers go through `ShardedStore::cow_values`.
+struct Chunk {
     values: Arc<Vec<f32>>,
     version: u64,
 }
 
-/// One registered contiguous key range stored as an epoch slab. A
-/// segment is a single lock unit: reads are O(1) `Arc` clones so read
-/// concurrency never contends on slab partitioning, and keeping the
-/// image contiguous is what lets a full-range pull hand kernels one
-/// `&[f32]` (splitting it would change dot-product summation order and
-/// break engine-path bit-exactness).
+/// One registered contiguous key range stored as a vector of epoch
+/// chunk slabs. Each chunk is its own lock unit: reads inside one
+/// chunk are O(1) `Arc` clones, and a publish copy-on-writes only the
+/// chunks it touches. `chunk_cells` here is the *effective* chunk size
+/// (`len` when the configured value is 0 — one chunk, the pre-chunking
+/// behaviour, which also keeps whole-segment pulls a single zero-copy
+/// view handing kernels one `&[f32]`).
 struct DenseSegment {
     start: usize,
     len: usize,
-    epoch: RwLock<Epoch>,
+    chunk_cells: usize,
+    chunks: Vec<RwLock<Chunk>>,
 }
 
 impl DenseSegment {
-    fn new(start: usize, len: usize) -> Self {
+    fn new(start: usize, len: usize, configured_chunk: usize) -> Self {
         debug_assert!(len > 0);
-        DenseSegment {
-            start,
-            len,
-            epoch: RwLock::new(Epoch { values: Arc::new(vec![0.0f32; len]), version: 0 }),
-        }
+        let chunk_cells = if configured_chunk == 0 { len } else { configured_chunk.min(len) };
+        let n_chunks = (len + chunk_cells - 1) / chunk_cells;
+        let chunks = (0..n_chunks)
+            .map(|c| {
+                let size = ((c + 1) * chunk_cells).min(len) - c * chunk_cells;
+                RwLock::new(Chunk { values: Arc::new(vec![0.0f32; size]), version: 0 })
+            })
+            .collect();
+        DenseSegment { start, len, chunk_cells, chunks }
     }
 
     #[inline]
     fn contains(&self, key: usize) -> bool {
         key >= self.start && key < self.start + self.len
+    }
+
+    /// Chunk index holding segment-relative offset `off`.
+    #[inline]
+    fn chunk_of(&self, off: usize) -> usize {
+        off / self.chunk_cells
+    }
+
+    /// Segment-relative `[lo, hi)` bounds of chunk `c`.
+    #[inline]
+    fn chunk_bounds(&self, c: usize) -> (usize, usize) {
+        (c * self.chunk_cells, ((c + 1) * self.chunk_cells).min(self.len))
+    }
+
+    /// Copy `out.len()` cells starting at segment-relative `rel` out
+    /// of the chunk images; returns the OLDEST version among the
+    /// touched chunks (the staleness-diagnostic contract).
+    fn read_into(&self, rel: usize, out: &mut [f32]) -> u64 {
+        let mut version = u64::MAX;
+        let mut pos = 0;
+        let mut c = self.chunk_of(rel);
+        while pos < out.len() {
+            let (lo, hi) = self.chunk_bounds(c);
+            let chunk = self.chunks[c].read().expect("chunk lock poisoned");
+            let a = rel + pos - lo;
+            let take = (hi - lo - a).min(out.len() - pos);
+            out[pos..pos + take].copy_from_slice(&chunk.values[a..a + take]);
+            version = version.min(chunk.version);
+            pos += take;
+            c += 1;
+        }
+        if version == u64::MAX {
+            0
+        } else {
+            version
+        }
     }
 }
 
@@ -251,12 +321,23 @@ pub struct ShardedStore {
     shards: Vec<RwLock<FastHashMap<usize, Cell>>>,
     /// Registered dense segments, sorted by start, non-overlapping.
     segments: Vec<DenseSegment>,
+    /// The configured chunk size (0 = one chunk per segment); kept for
+    /// introspection and server reattach shape checks.
+    chunk_cells: usize,
+    /// `chunk_base[seg]` = lock units consumed by segments before
+    /// `seg` (prefix sum of chunk counts), so a dense slot maps to its
+    /// chunk's lock unit by arithmetic.
+    chunk_base: Vec<usize>,
     /// Probes served by the hashed path (dense-segment traffic never
     /// increments this — the meter behind the zero-probe guarantee).
     hash_probes: AtomicU64,
-    /// Epoch clones forced by copy-on-publish: a write found readers
+    /// Chunk clones forced by copy-on-publish: a write found readers
     /// still holding the current epoch and cloned it before mutating.
     cow_clones: AtomicU64,
+    /// Bytes those clones copied (4 per cell of each cloned chunk) —
+    /// the meter chunking shrinks: a racing publish re-copies only the
+    /// chunks it writes, not whole segments.
+    cow_bytes: AtomicU64,
 }
 
 impl ShardedStore {
@@ -264,11 +345,23 @@ impl ShardedStore {
         Self::with_segments(num_shards, &[])
     }
 
-    /// Build a store with the given `(start, len)` key ranges registered
-    /// as dense segments. Ranges must not overlap; zero-length ranges
-    /// are ignored. Registration happens at construction so the store
-    /// can be shared immutably across worker threads afterwards.
+    /// Build a store with the given `(start, len)` key ranges
+    /// registered as dense segments, one epoch chunk per segment (the
+    /// pre-chunking behaviour).
     pub fn with_segments(num_shards: usize, segments: &[(usize, usize)]) -> Self {
+        Self::with_segments_chunked(num_shards, segments, 0)
+    }
+
+    /// Build a store with dense segments split into `chunk_cells`-cell
+    /// epoch chunks (0 = one chunk per segment). Ranges must not
+    /// overlap; zero-length ranges are ignored. Registration happens at
+    /// construction so the store can be shared immutably across worker
+    /// threads afterwards.
+    pub fn with_segments_chunked(
+        num_shards: usize,
+        segments: &[(usize, usize)],
+        chunk_cells: usize,
+    ) -> Self {
         assert!(num_shards >= 1, "need at least one shard");
         let mut segs: Vec<(usize, usize)> =
             segments.iter().copied().filter(|&(_, len)| len > 0).collect();
@@ -276,16 +369,34 @@ impl ShardedStore {
         for w in segs.windows(2) {
             assert!(w[0].0 + w[0].1 <= w[1].0, "dense segments must not overlap");
         }
+        let segs: Vec<DenseSegment> = segs
+            .into_iter()
+            .map(|(start, len)| DenseSegment::new(start, len, chunk_cells))
+            .collect();
+        let mut chunk_base = Vec::with_capacity(segs.len());
+        let mut units = 0usize;
+        for seg in &segs {
+            chunk_base.push(units);
+            units += seg.chunks.len();
+        }
         ShardedStore {
             shards: (0..num_shards).map(|_| RwLock::new(FastHashMap::default())).collect(),
-            segments: segs.into_iter().map(|(start, len)| DenseSegment::new(start, len)).collect(),
+            segments: segs,
+            chunk_cells,
+            chunk_base,
             hash_probes: AtomicU64::new(0),
             cow_clones: AtomicU64::new(0),
+            cow_bytes: AtomicU64::new(0),
         }
     }
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The configured chunk size (0 = one chunk per segment).
+    pub fn chunk_cells(&self) -> usize {
+        self.chunk_cells
     }
 
     /// Registered dense segments as `(start, len)` pairs.
@@ -295,27 +406,41 @@ impl ShardedStore {
 
     /// Registered dense segments with their current epoch versions,
     /// `(start, len, epoch_version)` — the per-shard freshness view
-    /// that `strads ps-stats` introspection reports.
+    /// that `strads ps-stats` introspection reports. With chunking the
+    /// reported version is the NEWEST chunk's (how fresh the segment
+    /// has gotten anywhere).
     pub fn segment_versions(&self) -> Vec<(usize, usize, u64)> {
         self.segments
             .iter()
             .map(|s| {
-                let epoch = s.epoch.read().expect("epoch lock poisoned");
-                (s.start, s.len, epoch.version)
+                let version = s
+                    .chunks
+                    .iter()
+                    .map(|c| c.read().expect("chunk lock poisoned").version)
+                    .max()
+                    .unwrap_or(0);
+                (s.start, s.len, version)
             })
             .collect()
     }
 
-    /// Checkpoint export: every segment's current epoch as `(start,
-    /// epoch_version, slab)`. Cloning the `Arc` under the read lock is
-    /// the whole capture — immutable epochs make the snapshot consistent
-    /// and free, and the raw f32 image is bit-exact by construction.
-    pub fn segment_epochs(&self) -> Vec<(usize, u64, Arc<Vec<f32>>)> {
+    /// Checkpoint export: every segment's current image as `(start,
+    /// per-chunk versions, contiguous values)`. Chunk `Arc`s are
+    /// cloned under their read locks, then concatenated — immutable
+    /// epochs make each chunk's capture consistent and the raw f32
+    /// image bit-exact by construction.
+    pub fn segment_images(&self) -> Vec<(usize, Vec<u64>, Vec<f32>)> {
         self.segments
             .iter()
             .map(|s| {
-                let epoch = s.epoch.read().expect("epoch lock poisoned");
-                (s.start, epoch.version, Arc::clone(&epoch.values))
+                let mut versions = Vec::with_capacity(s.chunks.len());
+                let mut values = Vec::with_capacity(s.len);
+                for chunk in &s.chunks {
+                    let chunk = chunk.read().expect("chunk lock poisoned");
+                    versions.push(chunk.version);
+                    values.extend_from_slice(&chunk.values);
+                }
+                (s.start, versions, values)
             })
             .collect()
     }
@@ -332,19 +457,28 @@ impl ShardedStore {
         out
     }
 
-    /// Checkpoint restore: install a saved epoch image into the segment
-    /// starting at `start`. Returns false (and changes nothing) if no
-    /// registered segment matches the image's start and length — the
-    /// checkpoint came from a differently-shaped run.
-    pub fn restore_segment(&self, start: usize, values: Vec<f32>, version: u64) -> bool {
-        match self.segments.iter().find(|s| s.start == start) {
-            Some(seg) if seg.len == values.len() => {
-                let mut epoch = seg.epoch.write().expect("epoch lock poisoned");
-                *epoch = Epoch { values: Arc::new(values), version };
-                true
-            }
-            _ => false,
+    /// Checkpoint restore: install a saved image into the segment
+    /// starting at `start`. `versions` carries one version per chunk,
+    /// or a single version to broadcast (pre-chunking v1/v2 images).
+    /// Returns false (and changes nothing) if no registered segment
+    /// matches the image's start/length/chunk count — the checkpoint
+    /// came from a differently-shaped run.
+    pub fn restore_segment(&self, start: usize, values: Vec<f32>, versions: &[u64]) -> bool {
+        let Some(seg) = self.segments.iter().find(|s| s.start == start) else {
+            return false;
+        };
+        if seg.len != values.len()
+            || (versions.len() != 1 && versions.len() != seg.chunks.len())
+        {
+            return false;
         }
+        for (c, lock) in seg.chunks.iter().enumerate() {
+            let (lo, hi) = seg.chunk_bounds(c);
+            let version = if versions.len() == 1 { versions[0] } else { versions[c] };
+            let mut chunk = lock.write().expect("chunk lock poisoned");
+            *chunk = Chunk { values: Arc::new(values[lo..hi].to_vec()), version };
+        }
+        true
     }
 
     /// Checkpoint restore: reinstall saved hashed cells, preserving
@@ -359,11 +493,13 @@ impl ShardedStore {
                     map.insert(key, cell);
                 }
                 Slot::Dense { seg, off } => {
-                    let mut epoch =
-                        self.segments[seg].epoch.write().expect("epoch lock poisoned");
-                    let slab = self.cow_values(&mut epoch);
-                    slab[off] = cell.value as f32;
-                    epoch.version = epoch.version.max(cell.version);
+                    let s = &self.segments[seg];
+                    let c = s.chunk_of(off);
+                    let (lo, _) = s.chunk_bounds(c);
+                    let mut chunk = s.chunks[c].write().expect("chunk lock poisoned");
+                    let slab = self.cow_values(&mut chunk);
+                    slab[off - lo] = cell.value as f32;
+                    chunk.version = chunk.version.max(cell.version);
                 }
             }
         }
@@ -375,10 +511,16 @@ impl ShardedStore {
         self.hash_probes.load(Ordering::Relaxed)
     }
 
-    /// How many epoch slab clones copy-on-publish has performed (a
+    /// How many chunk slab clones copy-on-publish has performed (a
     /// write arrived while a reader held the current epoch).
     pub fn cow_clones(&self) -> u64 {
         self.cow_clones.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes copied by those clones (4 per cloned-chunk cell) —
+    /// the cost meter chunking shrinks.
+    pub fn cow_bytes(&self) -> u64 {
+        self.cow_bytes.load(Ordering::Relaxed)
     }
 
     /// Deterministic key -> shard routing (pure function of the key and
@@ -414,17 +556,21 @@ impl ShardedStore {
         Slot::Hashed { shard: self.shard_of(key) }
     }
 
-    /// Lock-unit id for grouping: hashed shards first, then segments in
-    /// registration order.
+    /// Lock-unit id for grouping: hashed shards first, then every
+    /// segment's chunks in registration order.
     fn unit_of(&self, slot: Slot) -> usize {
         match slot {
             Slot::Hashed { shard } => shard,
-            Slot::Dense { seg, .. } => self.shards.len() + seg,
+            Slot::Dense { seg, off } => {
+                self.shards.len() + self.chunk_base[seg] + self.segments[seg].chunk_of(off)
+            }
         }
     }
 
     fn num_units(&self) -> usize {
-        self.shards.len() + self.segments.len()
+        self.shards.len()
+            + self.chunk_base.last().map_or(0, |&b| b)
+            + self.segments.last().map_or(0, |s| s.chunks.len())
     }
 
     /// Index of the registered segment fully covering `start..start+len`.
@@ -437,19 +583,51 @@ impl ShardedStore {
         (start >= seg.start && start + len <= seg.start + seg.len).then_some(idx - 1)
     }
 
-    /// Mutable access to an epoch's value image under copy-on-publish:
-    /// clones the slab (and meters the clone) only if a reader still
-    /// holds the current epoch's `Arc`; otherwise mutates in place.
-    fn cow_values<'a>(&self, epoch: &'a mut Epoch) -> &'a mut Vec<f32> {
+    /// Mutable access to a chunk's value image under copy-on-publish:
+    /// clones the slab (and meters the clone and its bytes) only if a
+    /// reader still holds the current epoch's `Arc`; otherwise mutates
+    /// in place.
+    fn cow_values<'a>(&self, chunk: &'a mut Chunk) -> &'a mut Vec<f32> {
         // Meter by whether make_mut actually relocated the slab — a
         // reader can drop its Arc between any pre-check and the clone
         // decision, so a strong-count probe would over-count.
-        let shared = Arc::as_ptr(&epoch.values);
-        let values = Arc::make_mut(&mut epoch.values);
+        let shared = Arc::as_ptr(&chunk.values);
+        let values = Arc::make_mut(&mut chunk.values);
         if !std::ptr::eq(shared, values) {
             self.cow_clones.fetch_add(1, Ordering::Relaxed);
+            self.cow_bytes.fetch_add(4 * values.len() as u64, Ordering::Relaxed);
         }
         values
+    }
+
+    /// Write `src` into segment `seg` starting at segment-relative
+    /// `rel`, chunk by chunk: each touched chunk takes its write lock
+    /// once, goes through copy-on-publish once, and advances its
+    /// version to at least `at`. Untouched chunks keep their epochs —
+    /// the point of chunking.
+    fn write_span<T: Copy>(
+        &self,
+        seg: &DenseSegment,
+        rel: usize,
+        src: &[T],
+        at: u64,
+        write: impl Fn(&mut f32, T),
+    ) {
+        let mut pos = 0;
+        let mut c = seg.chunk_of(rel);
+        while pos < src.len() {
+            let (lo, hi) = seg.chunk_bounds(c);
+            let a = rel + pos - lo;
+            let take = (hi - lo - a).min(src.len() - pos);
+            let mut chunk = seg.chunks[c].write().expect("chunk lock poisoned");
+            let slab = self.cow_values(&mut chunk);
+            for (dst, &v) in slab[a..a + take].iter_mut().zip(&src[pos..pos + take]) {
+                write(dst, v);
+            }
+            chunk.version = chunk.version.max(at);
+            pos += take;
+            c += 1;
+        }
     }
 
     /// Decompose the key range `start..start+len` into maximal sub-runs
@@ -487,7 +665,7 @@ impl ShardedStore {
     /// Overwrite-publish `(key, value)` entries at `version` (the
     /// coordinator's path: seeding the store and republishing derived
     /// state with exact canonical values). Dense-segment entries land
-    /// in the segment's f32 image and bump its epoch version.
+    /// in their chunk's f32 image and bump that chunk's epoch version.
     pub fn publish(&self, entries: &[(usize, f64)], version: u64) {
         self.for_each_slot_mut(
             entries,
@@ -501,7 +679,7 @@ impl ShardedStore {
 
     /// Overwrite-publish the contiguous range `start..start +
     /// values.len()` at `version`. Segment-covered spans are written as
-    /// slice fills into the (copy-on-publish) epoch image — zero hash
+    /// slice fills into the (copy-on-publish) chunk images — zero hash
     /// probes; hashed gaps are grouped per shard.
     pub fn publish_range(&self, start: usize, values: &[f64], version: u64) {
         if values.is_empty() {
@@ -509,13 +687,10 @@ impl ShardedStore {
         }
         self.for_each_span(start, values.len(), |span| match span {
             Span::Dense { seg, rel, key, len } => {
-                let mut epoch = self.segments[seg].epoch.write().expect("epoch lock poisoned");
-                let slab = self.cow_values(&mut epoch);
                 let src = &values[key - start..key - start + len];
-                for (dst, &v) in slab[rel..rel + len].iter_mut().zip(src) {
+                self.write_span(&self.segments[seg], rel, src, version, |dst, v| {
                     *dst = v as f32;
-                }
-                epoch.version = epoch.version.max(version);
+                });
             }
             Span::Hashed { key, len } => {
                 // Gap keys route through the canonical grouped publish
@@ -529,10 +704,39 @@ impl ShardedStore {
         });
     }
 
+    /// [`Self::publish_range`] from canonical f32 values — what the
+    /// epoch slabs store natively. Segment-covered spans skip the
+    /// f64 widen/narrow round trip entirely (bit-identical to
+    /// publishing `v as f64`: `(v as f64) as f32 == v` for every f32
+    /// including -0.0, subnormals and NaN payloads the store keeps);
+    /// hashed gap keys widen, exactly as the f64 path narrows them.
+    pub fn publish_range_f32(&self, start: usize, values: &[f32], version: u64) {
+        if values.is_empty() {
+            return;
+        }
+        self.for_each_span(start, values.len(), |span| match span {
+            Span::Dense { seg, rel, key, len } => {
+                let src = &values[key - start..key - start + len];
+                self.write_span(&self.segments[seg], rel, src, version, |dst, v| *dst = v);
+            }
+            Span::Hashed { key, len } => {
+                let entries: Vec<(usize, f64)> =
+                    (key..key + len).map(|k| (k, values[k - start] as f64)).collect();
+                self.publish(&entries, version);
+            }
+        });
+    }
+
     /// Publish a dense state vector: key `i` gets `values[i]` (the
     /// round-0 seed and full-resync path).
     pub fn publish_dense(&self, values: &[f64], version: u64) {
         self.publish_range(0, values, version);
+    }
+
+    /// [`Self::publish_dense`] from canonical f32 state (MF's native
+    /// precision) — no per-cell widen/narrow round trip.
+    pub fn publish_dense_f32(&self, values: &[f32], version: u64) {
+        self.publish_range_f32(0, values, version);
     }
 
     /// Apply additive deltas (the worker push path): `value += delta`,
@@ -554,9 +758,9 @@ impl ShardedStore {
     }
 
     /// Read cells for `keys`, preserving request order. Each touched
-    /// lock (shard or segment epoch) is taken once per call. Unpublished
+    /// lock (shard or chunk) is taken once per call. Unpublished
     /// hashed keys read as the default cell; dense keys read their f32
-    /// image at the segment's epoch version.
+    /// image at their chunk's epoch version.
     pub fn read(&self, keys: &[usize]) -> Vec<Cell> {
         let mut out = vec![Cell::default(); keys.len()];
         self.read_into(keys, &mut out);
@@ -564,8 +768,8 @@ impl ShardedStore {
     }
 
     /// Read a full [`PullSpec`]: each range as a [`RangePull`] (an O(1)
-    /// zero-copy epoch view where a registered segment covers it), then
-    /// the scattered keys as cells.
+    /// zero-copy epoch view where a single chunk covers it), then the
+    /// scattered keys as cells.
     pub fn read_spec(&self, spec: &PullSpec) -> SpecPull {
         let ranges =
             spec.ranges.iter().map(|&(start, len)| self.read_range(start, len)).collect();
@@ -575,9 +779,12 @@ impl ShardedStore {
     }
 
     /// Read the contiguous key range `start..start + len`. A range
-    /// fully inside a registered segment returns a shared epoch view —
-    /// the lock is held only long enough to clone the `Arc`, so no lock
-    /// is held while the caller consumes the data. Anything else
+    /// inside a single chunk of a registered segment returns a shared
+    /// epoch view — the lock is held only long enough to clone the
+    /// `Arc`, so no lock is held while the caller consumes the data
+    /// (with `chunk_cells = 0` every covered range qualifies). A
+    /// covered range spanning chunks assembles one owned copy from the
+    /// chunk images (version = oldest touched chunk). Anything else
     /// materializes one owned f32 copy by walking the range's spans
     /// directly (segment overlaps as slice copies, hashed gaps grouped
     /// per shard — no per-key routing table is allocated).
@@ -587,16 +794,24 @@ impl ShardedStore {
         }
         if let Some(seg_idx) = self.segment_covering(start, len) {
             let seg = &self.segments[seg_idx];
-            let epoch = seg.epoch.read().expect("epoch lock poisoned");
-            return RangePull {
-                start,
-                version: epoch.version,
-                data: RangeData::Shared {
-                    slab: Arc::clone(&epoch.values),
-                    offset: start - seg.start,
-                    len,
-                },
-            };
+            let rel = start - seg.start;
+            let c = seg.chunk_of(rel);
+            if seg.chunk_of(rel + len - 1) == c {
+                let (lo, _) = seg.chunk_bounds(c);
+                let chunk = seg.chunks[c].read().expect("chunk lock poisoned");
+                return RangePull {
+                    start,
+                    version: chunk.version,
+                    data: RangeData::Shared {
+                        slab: Arc::clone(&chunk.values),
+                        offset: rel - lo,
+                        len,
+                    },
+                };
+            }
+            let mut out = vec![0.0f32; len];
+            let version = seg.read_into(rel, &mut out);
+            return RangePull::owned_covered(start, version, out);
         }
         // Fallback version = the OLDEST version across the span
         // (missing hashed cells count as 0), preserving the
@@ -606,10 +821,9 @@ impl ShardedStore {
         let mut version = u64::MAX;
         self.for_each_span(start, len, |span| match span {
             Span::Dense { seg, rel, key, len: take } => {
-                let epoch = self.segments[seg].epoch.read().expect("epoch lock poisoned");
-                out[key - start..key - start + take]
-                    .copy_from_slice(&epoch.values[rel..rel + take]);
-                version = version.min(epoch.version);
+                let v = self.segments[seg]
+                    .read_into(rel, &mut out[key - start..key - start + take]);
+                version = version.min(v);
             }
             Span::Hashed { key, len: take } => {
                 // Gap keys route through the canonical grouped read;
@@ -624,7 +838,7 @@ impl ShardedStore {
                 }
             }
         });
-        RangePull { start, version, data: RangeData::Owned(out) }
+        RangePull { start, version, data: RangeData::Owned { values: out, covered: false } }
     }
 
     /// Grouped positional read: `out[i]` receives the cell for
@@ -649,26 +863,30 @@ impl ShardedStore {
                         }
                     }
                 }
-                Slot::Dense { seg, .. } => {
-                    let epoch =
-                        self.segments[seg].epoch.read().expect("epoch lock poisoned");
+                Slot::Dense { seg, off } => {
+                    let s = &self.segments[seg];
+                    let c = s.chunk_of(off);
+                    let (lo, _) = s.chunk_bounds(c);
+                    let chunk = s.chunks[c].read().expect("chunk lock poisoned");
                     for &pos in positions {
                         let Slot::Dense { off, .. } = slots[pos] else { unreachable!() };
-                        out[pos] =
-                            Cell { version: epoch.version, value: epoch.values[off] as f64 };
+                        out[pos] = Cell {
+                            version: chunk.version,
+                            value: chunk.values[off - lo] as f64,
+                        };
                     }
                 }
             }
         }
     }
 
-    /// Group `entries` by lock unit (hashed shard or segment epoch) and
+    /// Group `entries` by lock unit (hashed shard or segment chunk) and
     /// apply the matching mutator under each unit's write lock, taken
     /// once per touched unit. Within a unit, entries apply in request
     /// order, so duplicate keys resolve identically to a sequential
-    /// application. Each touched segment's epoch version advances to at
+    /// application. Each touched chunk's epoch version advances to at
     /// least `at`, and its slab goes through copy-on-publish exactly
-    /// once per call.
+    /// once per call — untouched chunks keep their epochs.
     fn for_each_slot_mut(
         &self,
         entries: &[(usize, f64)],
@@ -693,15 +911,17 @@ impl ShardedStore {
                         hashed(&mut map, key, value);
                     }
                 }
-                Slot::Dense { seg, .. } => {
-                    let mut epoch =
-                        self.segments[seg].epoch.write().expect("epoch lock poisoned");
-                    let slab = self.cow_values(&mut epoch);
+                Slot::Dense { seg, off } => {
+                    let s = &self.segments[seg];
+                    let c = s.chunk_of(off);
+                    let (lo, _) = s.chunk_bounds(c);
+                    let mut chunk = s.chunks[c].write().expect("chunk lock poisoned");
+                    let slab = self.cow_values(&mut chunk);
                     for &pos in positions {
                         let Slot::Dense { off, .. } = slots[pos] else { unreachable!() };
-                        dense(&mut slab[off], entries[pos].1);
+                        dense(&mut slab[off - lo], entries[pos].1);
                     }
-                    epoch.version = epoch.version.max(at);
+                    chunk.version = chunk.version.max(at);
                 }
             }
         }
@@ -856,6 +1076,7 @@ mod tests {
         // staleness-diagnostic contract), here the hashed cells at 4
         let range = store.read_range(48, 4);
         assert!(!range.is_shared());
+        assert!(!range.is_covered());
         assert_eq!(range.values(), &[1.0f32, 2.0, 3.0, 4.0]);
         assert_eq!(range.version(), 4);
         // a span containing an unpublished hashed key reads as oldest 0
@@ -890,6 +1111,11 @@ mod tests {
         assert_eq!(held.values(), &before[..], "held snapshot must stay bitwise stable");
         assert_eq!(held.version(), 1);
         assert!(store.cow_clones() >= 1, "a reader-held epoch forces a clone");
+        assert_eq!(
+            store.cow_bytes(),
+            store.cow_clones() * 4 * 16,
+            "one chunk per segment: every clone copies the whole slab"
+        );
         // A fresh pull sees the new epoch.
         let fresh = store.read_range(0, 16);
         assert_eq!(fresh.values()[3], 9.0);
@@ -903,16 +1129,125 @@ mod tests {
     }
 
     #[test]
+    fn chunked_store_is_observationally_identical() {
+        // Same operation stream against chunk_cells = 0 and a 7-cell
+        // chunking (deliberately not dividing the segment length):
+        // every read must agree bitwise. Chunking changes clone
+        // granularity, never values.
+        let plain = ShardedStore::with_segments(3, &[(4, 20)]);
+        let chunked = ShardedStore::with_segments_chunked(3, &[(4, 20)], 7);
+        assert_eq!(chunked.chunk_cells(), 7);
+        let seed: Vec<f64> = (0..20).map(|i| (i as f64) * 0.25 - 2.0).collect();
+        for store in [&plain, &chunked] {
+            store.publish_range(4, &seed, 1);
+            store.add_deltas(&[(4, 0.5), (13, -1.5), (23, 2.0), (2, 9.0)], 3);
+            store.publish(&[(10, -0.0), (30, 7.5)], 4);
+        }
+        let keys: Vec<usize> = (0..32).collect();
+        let (a, b) = (plain.read(&keys), chunked.read(&keys));
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.value.to_bits(), y.value.to_bits(), "key {i}");
+        }
+        // whole-segment reads agree bitwise too (one is zero-copy, the
+        // other an owned multi-chunk assembly)
+        let (ra, rb) = (plain.read_range(4, 20), chunked.read_range(4, 20));
+        assert!(ra.is_shared() && !rb.is_shared());
+        assert!(rb.is_covered(), "multi-chunk assembly still counts as covered");
+        let bits = |r: &RangePull| r.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&ra), bits(&rb));
+        assert_eq!(chunked.hash_probes(), plain.hash_probes());
+    }
+
+    #[test]
+    fn chunked_partial_pull_is_zero_copy_within_a_chunk() {
+        let store = ShardedStore::with_segments_chunked(2, &[(0, 64)], 16);
+        store.publish_dense(&(0..64).map(|i| i as f64).collect::<Vec<_>>(), 1);
+        // inside chunk 1 ([16, 32)): shared view of that chunk only
+        let r = store.read_range(20, 8);
+        assert!(r.is_shared());
+        assert_eq!(r.values(), &(20..28).map(|i| i as f32).collect::<Vec<_>>()[..]);
+        // crossing the chunk 0/1 boundary: owned assembly, same values
+        let r = store.read_range(12, 8);
+        assert!(!r.is_shared() && r.is_covered());
+        assert_eq!(r.values(), &(12..20).map(|i| i as f32).collect::<Vec<_>>()[..]);
+        assert_eq!(r.version(), 1);
+        assert_eq!(store.hash_probes(), 0);
+    }
+
+    #[test]
+    fn chunked_publish_clones_only_touched_chunks() {
+        // The tentpole claim: a racing publish under a held reader
+        // clones per-chunk, so writes confined to one chunk re-copy
+        // chunk_cells * 4 bytes, not the whole segment.
+        let store = ShardedStore::with_segments_chunked(2, &[(0, 64)], 16);
+        store.publish_dense(&vec![1.0; 64], 1);
+        // hold chunk 0's epoch (keys 0..16)
+        let held = store.read_range(0, 16);
+        assert!(held.is_shared());
+        assert_eq!(store.cow_clones(), 0);
+        // write into chunk 2 only: no reader holds it -> no clone
+        store.add_deltas(&[(40, 1.0)], 2);
+        assert_eq!(store.cow_clones(), 0, "untouched-by-readers chunk mutates in place");
+        // write into chunk 0: exactly one 16-cell clone
+        store.add_deltas(&[(3, 1.0)], 2);
+        assert_eq!(store.cow_clones(), 1);
+        assert_eq!(store.cow_bytes(), 4 * 16, "clone unit is the chunk, not the segment");
+        assert_eq!(held.values(), &[1.0f32; 16][..], "held view stayed bitwise stable");
+        // a full-segment publish against the still-held chunk 0 clones
+        // chunk 0 again (the other chunks have no holders)
+        store.publish_dense(&vec![2.0; 64], 3);
+        assert_eq!(store.cow_clones(), 2);
+        assert_eq!(store.cow_bytes(), 2 * 4 * 16);
+        // per-chunk versions: reads in chunk 1 ([16,32)) saw no write
+        // since the seed at 1... except the full publish at 3
+        assert_eq!(store.read_range(16, 4).version(), 3);
+        assert_eq!(store.segment_versions(), vec![(0, 64, 3)]);
+    }
+
+    #[test]
+    fn chunked_sparse_publish_leaves_cold_chunk_versions() {
+        // Per-chunk epoch versions: a sparse publish bumps only the
+        // chunks it lands in, so cold chunks keep their old version
+        // (and min_version over a spanning pull reports the oldest).
+        let store = ShardedStore::with_segments_chunked(2, &[(0, 32)], 8);
+        store.publish_dense(&vec![0.0; 32], 1);
+        store.publish(&[(2, 5.0)], 9); // chunk 0 only
+        assert_eq!(store.read_range(0, 8).version(), 9);
+        assert_eq!(store.read_range(8, 8).version(), 1, "cold chunk keeps its epoch");
+        assert_eq!(store.read_range(0, 32).version(), 1, "spanning pull reports oldest");
+        assert_eq!(store.segment_versions(), vec![(0, 32, 9)], "freshness view is newest");
+    }
+
+    #[test]
+    fn publish_range_f32_matches_f64_path_bitwise() {
+        let a = ShardedStore::with_segments_chunked(2, &[(3, 10)], 4);
+        let b = ShardedStore::with_segments_chunked(2, &[(3, 10)], 4);
+        // values that stress the narrowing: -0.0, subnormal, huge
+        let vals_f32: Vec<f32> =
+            vec![-0.0, 1.0e-40, 3.5, -7.25, f32::MIN_POSITIVE, 1e30, -1.5, 0.0, 2.0, 4.0, 8.0, 9.0];
+        let vals_f64: Vec<f64> = vals_f32.iter().map(|&v| v as f64).collect();
+        // range 1..13 spans hashed keys 1,2 then the segment 3..13
+        a.publish_range(1, &vals_f64, 2);
+        b.publish_range_f32(1, &vals_f32, 2);
+        let keys: Vec<usize> = (0..14).collect();
+        for (i, (x, y)) in a.read(&keys).iter().zip(&b.read(&keys)).enumerate() {
+            assert_eq!(x.value.to_bits(), y.value.to_bits(), "key {i}");
+            assert_eq!(x.version, y.version, "key {i}");
+        }
+        assert_eq!(a.hash_probes(), b.hash_probes());
+    }
+
+    #[test]
     fn epoch_export_restore_is_bit_exact() {
         let store = ShardedStore::with_segments(4, &[(0, 8)]);
         store.publish_dense(&[0.1, -0.0, 3.5e-7, 4.0, 5.0, 6.0, 7.0, 8.0], 3);
         store.publish(&[(100, 1e-300), (50, -2.5)], 4);
-        let epochs = store.segment_epochs();
+        let images = store.segment_images();
         let cells = store.hashed_cells();
         assert_eq!(cells.iter().map(|&(k, _)| k).collect::<Vec<_>>(), vec![50, 100]);
         let fresh = ShardedStore::with_segments(4, &[(0, 8)]);
-        for (start, version, slab) in epochs {
-            assert!(fresh.restore_segment(start, slab.to_vec(), version));
+        for (start, versions, values) in images {
+            assert!(fresh.restore_segment(start, values, &versions));
         }
         fresh.restore_cells(&cells);
         // bitwise: the f32 image and every hashed cell survive intact
@@ -922,7 +1257,31 @@ mod tests {
         assert_eq!(back.version(), 3);
         assert_eq!(fresh.read(&[50, 100]), store.read(&[50, 100]));
         // shape mismatch is refused, not corrupted
-        assert!(!fresh.restore_segment(0, vec![0.0; 4], 1));
-        assert!(!fresh.restore_segment(3, vec![0.0; 8], 1));
+        assert!(!fresh.restore_segment(0, vec![0.0; 4], &[1]));
+        assert!(!fresh.restore_segment(3, vec![0.0; 8], &[1]));
+    }
+
+    #[test]
+    fn chunked_export_restore_roundtrips_per_chunk_versions() {
+        let store = ShardedStore::with_segments_chunked(2, &[(0, 10)], 4);
+        store.publish_dense(&(0..10).map(|i| i as f64 * 1.5).collect::<Vec<_>>(), 2);
+        store.publish(&[(9, -0.5)], 7); // bumps only the last (2-cell) chunk
+        let images = store.segment_images();
+        assert_eq!(images.len(), 1);
+        assert_eq!(images[0].1, vec![2, 2, 7], "per-chunk versions survive export");
+        let fresh = ShardedStore::with_segments_chunked(2, &[(0, 10)], 4);
+        for (start, versions, values) in images {
+            assert!(fresh.restore_segment(start, values, &versions));
+        }
+        assert_eq!(fresh.read_range(8, 2).version(), 7);
+        assert_eq!(fresh.read_range(0, 4).version(), 2);
+        let bits = |r: &RangePull| r.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&store.read_range(0, 10)), bits(&fresh.read_range(0, 10)));
+        // a single broadcast version still restores (v1/v2 images)
+        let broad = ShardedStore::with_segments_chunked(2, &[(0, 10)], 4);
+        assert!(broad.restore_segment(0, vec![1.0; 10], &[5]));
+        assert_eq!(broad.read_range(0, 10).version(), 5);
+        // chunk-count mismatch is refused
+        assert!(!broad.restore_segment(0, vec![1.0; 10], &[1, 2]));
     }
 }

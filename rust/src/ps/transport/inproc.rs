@@ -78,6 +78,16 @@ impl Transport for InProcTransport {
         Ok(())
     }
 
+    fn publish_range_f32(
+        &mut self,
+        start: usize,
+        values: &[f32],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.server.store().publish_range_f32(start, values, version);
+        Ok(())
+    }
+
     fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
         self.server.serve_advance(applied);
         Ok(())

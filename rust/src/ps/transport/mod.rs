@@ -178,6 +178,22 @@ pub trait Transport: Send {
         version: u64,
     ) -> Result<(), TransportError>;
 
+    /// [`Transport::publish_range`] from an f32 slab — the seed path
+    /// for problems whose canonical state is already f32 (half the
+    /// wire bytes, no widen/narrow round trip). Bit-exact with the f64
+    /// path for segment-covered keys, because dense cells narrow to
+    /// f32 at the store either way. The default widens and delegates;
+    /// transports with a native f32 carriage override it.
+    fn publish_range_f32(
+        &mut self,
+        start: usize,
+        values: &[f32],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        let wide: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+        self.publish_range(start, &wide, version)
+    }
+
     /// Advance the server's applied clock (ungates workers).
     fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError>;
 
@@ -237,6 +253,12 @@ pub struct PsConnection {
     reconnects: Arc<AtomicU64>,
     /// Total backoff sleep across every link, µs — `net.retry_backoff_us`.
     retry_backoff_us: Arc<AtomicU64>,
+    /// The v5 run-compression segment map, enabled on every TCP link
+    /// this connection mints (`[ps] wire_compress`; `None` in-process —
+    /// compression only exists where real bytes move).
+    compress: Option<wire::SegmentMap>,
+    /// Compressed f32 runs encoded across every link — `wire.runs_encoded`.
+    runs_encoded: Arc<AtomicU64>,
 }
 
 impl PsConnection {
@@ -253,13 +275,15 @@ impl PsConnection {
         let socket_bytes = Arc::new(AtomicU64::new(0));
         let reconnects = Arc::new(AtomicU64::new(0));
         let retry_backoff_us = Arc::new(AtomicU64::new(0));
+        let runs_encoded = Arc::new(AtomicU64::new(0));
         match cfg.transport {
             TransportKind::InProc => {
-                let server = Arc::new(ParameterServer::with_segments(
+                let server = Arc::new(ParameterServer::with_segments_chunked(
                     cfg.shards,
                     workers,
                     cfg.policy(),
                     segments,
+                    cfg.chunk_cells,
                 ));
                 Ok(PsConnection {
                     coord: Box::new(InProcTransport::new(Arc::clone(&server), COORDINATOR_ID)),
@@ -267,10 +291,13 @@ impl PsConnection {
                     socket_bytes,
                     reconnects,
                     retry_backoff_us,
+                    compress: None,
+                    runs_encoded,
                 })
             }
             TransportKind::Tcp => {
                 let session = mint_session();
+                let compress = cfg.wire_compress.then(|| wire::SegmentMap::new(segments));
                 // The retry wrapper engages when retries are enabled OR
                 // a fault plan is set (injected faults without retries
                 // would just kill the run).
@@ -289,8 +316,9 @@ impl PsConnection {
                         workers,
                         policy: cfg.policy(),
                         segments: segments.to_vec(),
+                        chunk_cells: cfg.chunk_cells,
                     };
-                    let coord = RetryTransport::establish(
+                    let coord = RetryTransport::establish_with_compression(
                         &cfg.addr,
                         COORDINATOR_ID,
                         session,
@@ -300,6 +328,7 @@ impl PsConnection {
                         Arc::clone(&socket_bytes),
                         Arc::clone(&reconnects),
                         Arc::clone(&retry_backoff_us),
+                        compress.clone().map(|m| (m, Arc::clone(&runs_encoded))),
                     )?;
                     return Ok(PsConnection {
                         coord: Box::new(coord),
@@ -313,6 +342,8 @@ impl PsConnection {
                         socket_bytes,
                         reconnects,
                         retry_backoff_us,
+                        compress,
+                        runs_encoded,
                     });
                 }
                 let mut coord = TcpTransport::connect(
@@ -320,13 +351,25 @@ impl PsConnection {
                     COORDINATOR_ID,
                     Arc::clone(&socket_bytes),
                 )?;
-                coord.init(session, cfg.shards, workers, cfg.policy(), segments)?;
+                coord.init(
+                    session,
+                    cfg.shards,
+                    workers,
+                    cfg.policy(),
+                    segments,
+                    cfg.chunk_cells,
+                )?;
+                if let Some(map) = &compress {
+                    coord.enable_compression(map.clone(), Arc::clone(&runs_encoded));
+                }
                 Ok(PsConnection {
                     coord: Box::new(coord),
                     minter: Minter::Tcp(cfg.addr.clone()),
                     socket_bytes,
                     reconnects,
                     retry_backoff_us,
+                    compress,
+                    runs_encoded,
                 })
             }
         }
@@ -340,13 +383,16 @@ impl PsConnection {
             Minter::InProc(server) => {
                 Ok(Box::new(InProcTransport::new(Arc::clone(server), worker)))
             }
-            Minter::Tcp(addr) => Ok(Box::new(TcpTransport::connect(
-                addr,
-                worker,
-                Arc::clone(&self.socket_bytes),
-            )?)),
+            Minter::Tcp(addr) => {
+                let mut link =
+                    TcpTransport::connect(addr, worker, Arc::clone(&self.socket_bytes))?;
+                if let Some(map) = &self.compress {
+                    link.enable_compression(map.clone(), Arc::clone(&self.runs_encoded));
+                }
+                Ok(Box::new(link))
+            }
             Minter::Retry { addr, session, shape, retry, plan } => {
-                Ok(Box::new(RetryTransport::establish(
+                Ok(Box::new(RetryTransport::establish_with_compression(
                     addr,
                     worker,
                     *session,
@@ -356,6 +402,7 @@ impl PsConnection {
                     Arc::clone(&self.socket_bytes),
                     Arc::clone(&self.reconnects),
                     Arc::clone(&self.retry_backoff_us),
+                    self.compress.clone().map(|m| (m, Arc::clone(&self.runs_encoded))),
                 )?))
             }
         }
@@ -383,6 +430,13 @@ impl PsConnection {
     /// Total retry backoff slept across every link, in microseconds.
     pub fn retry_backoff_us(&self) -> u64 {
         self.retry_backoff_us.load(Ordering::Relaxed)
+    }
+
+    /// Compressed f32 value runs encoded onto the wire across every
+    /// link this connection minted (0 in-process or with
+    /// `wire_compress = off`) — surfaced as `wire.runs_encoded`.
+    pub fn runs_encoded(&self) -> u64 {
+        self.runs_encoded.load(Ordering::Relaxed)
     }
 }
 

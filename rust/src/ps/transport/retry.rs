@@ -338,6 +338,17 @@ impl Transport for FaultInjectTransport {
         self.run(Op::PublishRange, |t| t.publish_range(start, values, version))
     }
 
+    // The f32 seed path faults under the same `publish_range` op name:
+    // it is the same RPC semantically, just a narrower payload.
+    fn publish_range_f32(
+        &mut self,
+        start: usize,
+        values: &[f32],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.run(Op::PublishRange, |t| t.publish_range_f32(start, values, version))
+    }
+
     fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
         self.run(Op::Advance, |t| t.advance_applied(applied))
     }
@@ -364,6 +375,10 @@ pub struct InitShape {
     pub workers: usize,
     pub policy: StalenessPolicy,
     pub segments: Vec<(usize, usize)>,
+    /// Dense-segment chunking the run was configured with — part of
+    /// the shape the server validates on reattach (a mismatch would
+    /// split epochs differently than the checkpointed run).
+    pub chunk_cells: usize,
 }
 
 /// The reconnecting TCP link: runs each operation against an inner
@@ -381,6 +396,9 @@ pub struct RetryTransport {
     /// This link's monotonic flush seq, shared with every inner
     /// `TcpTransport` it ever mints so seqs survive reconnects.
     flush_seq: Arc<AtomicU64>,
+    /// v5 run compression, re-enabled on every socket this link mints
+    /// (the segment map + the shared `wire.runs_encoded` meter).
+    compress: Option<(super::wire::SegmentMap, Arc<AtomicU64>)>,
     plan: Option<(Arc<FaultPlan>, Arc<Mutex<FaultState>>)>,
     /// `None` between a failure and the next (re)connect.
     inner: Option<Box<dyn Transport>>,
@@ -425,6 +443,35 @@ impl RetryTransport {
         reconnects: Arc<AtomicU64>,
         backoff_us: Arc<AtomicU64>,
     ) -> Result<Self, TransportError> {
+        Self::establish_with_compression(
+            addr,
+            worker,
+            session,
+            shape,
+            cfg,
+            plan,
+            socket_bytes,
+            reconnects,
+            backoff_us,
+            None,
+        )
+    }
+
+    /// [`RetryTransport::establish`] with v5 run compression enabled on
+    /// every socket the link ever mints (including reconnects).
+    #[allow(clippy::too_many_arguments)]
+    pub fn establish_with_compression(
+        addr: &str,
+        worker: usize,
+        session: u64,
+        shape: InitShape,
+        cfg: RetryConfig,
+        plan: Option<Arc<FaultPlan>>,
+        socket_bytes: Arc<AtomicU64>,
+        reconnects: Arc<AtomicU64>,
+        backoff_us: Arc<AtomicU64>,
+        compress: Option<(super::wire::SegmentMap, Arc<AtomicU64>)>,
+    ) -> Result<Self, TransportError> {
         let flush_seq = Arc::new(AtomicU64::new(0));
         // Jitter decorrelates concurrent reconnect storms; seeding from
         // (session, worker) keeps runs reproducible.
@@ -438,7 +485,17 @@ impl RetryTransport {
                 Arc::clone(&flush_seq),
             )
             .and_then(|mut link| {
-                link.init(session, shape.shards, shape.workers, shape.policy, &shape.segments)?;
+                link.init(
+                    session,
+                    shape.shards,
+                    shape.workers,
+                    shape.policy,
+                    &shape.segments,
+                    shape.chunk_cells,
+                )?;
+                if let Some((map, runs)) = &compress {
+                    link.enable_compression(map.clone(), Arc::clone(runs));
+                }
                 Ok(link)
             });
             match connected {
@@ -470,6 +527,7 @@ impl RetryTransport {
             cfg,
             socket_bytes,
             flush_seq,
+            compress,
             plan,
             inner: Some(inner),
             last_advance: None,
@@ -509,7 +567,11 @@ impl RetryTransport {
             self.shape.workers,
             self.shape.policy,
             &self.shape.segments,
+            self.shape.chunk_cells,
         )?;
+        if let Some((map, runs)) = &self.compress {
+            link.enable_compression(map.clone(), Arc::clone(runs));
+        }
         if let Some(applied) = self.last_advance {
             link.advance_applied(applied)?;
         }
@@ -609,6 +671,15 @@ impl Transport for RetryTransport {
         version: u64,
     ) -> Result<(), TransportError> {
         self.with_retry(|t| t.publish_range(start, values, version))
+    }
+
+    fn publish_range_f32(
+        &mut self,
+        start: usize,
+        values: &[f32],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        self.with_retry(|t| t.publish_range_f32(start, values, version))
     }
 
     fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
@@ -792,6 +863,7 @@ mod tests {
             workers: 1,
             policy: StalenessPolicy::Bounded(0),
             segments: vec![(0, 4)],
+            chunk_cells: 0,
         };
         let cfg = RetryConfig { max: 4, backoff_ms: 1 };
         let reconnects = Arc::new(AtomicU64::new(0));
@@ -847,6 +919,7 @@ mod tests {
             workers: 1,
             policy: StalenessPolicy::Async,
             segments: vec![(0, 2)],
+            chunk_cells: 0,
         };
         let cfg = RetryConfig { max: 4, backoff_ms: 1 };
         let zeros = || Arc::new(AtomicU64::new(0));

@@ -48,6 +48,14 @@ pub struct TcpTransport {
     flush_seq: Arc<AtomicU64>,
     /// Reusable receive buffer (frames overwrite it).
     buf: Vec<u8>,
+    /// When set (see [`TcpTransport::enable_compression`]), `Flush` and
+    /// `Publish` batches go out as proto-v5 sorted value runs: covered
+    /// keys as f32 runs, uncovered keys as f64 pairs (see
+    /// [`wire::SegmentMap`]). `None` keeps the plain v4 pair frames.
+    compress: Option<wire::SegmentMap>,
+    /// Compressed (f32) runs this link has encoded — summed across
+    /// links into the run-wide `wire.runs_encoded` meter.
+    runs_encoded: Arc<AtomicU64>,
 }
 
 impl TcpTransport {
@@ -73,7 +81,30 @@ impl TcpTransport {
         // One small frame per RPC: Nagle would serialize the whole run
         // onto 40ms ACK-delay ticks.
         stream.set_nodelay(true)?;
-        Ok(TcpTransport { stream, worker, socket_bytes, flush_seq, buf: Vec::new() })
+        Ok(TcpTransport {
+            stream,
+            worker,
+            socket_bytes,
+            flush_seq,
+            buf: Vec::new(),
+            compress: None,
+            runs_encoded: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// Turn on v5 run compression for this link's `Flush`/`Publish`
+    /// frames. `map` must mirror the segments the server registered
+    /// (both sides classify keys identically); `runs_encoded` is the
+    /// shared run counter the link adds its compressed runs to.
+    /// Compression is a per-frame opcode choice, not a handshake — a
+    /// v5 server decodes plain and run frames alike.
+    pub fn enable_compression(
+        &mut self,
+        map: wire::SegmentMap,
+        runs_encoded: Arc<AtomicU64>,
+    ) {
+        self.compress = Some(map);
+        self.runs_encoded = runs_encoded;
     }
 
     /// Send `Init`, (re)configuring the hosted server for this run. A
@@ -86,6 +117,7 @@ impl TcpTransport {
         workers: usize,
         policy: StalenessPolicy,
         segments: &[(usize, usize)],
+        chunk_cells: usize,
     ) -> Result<(), TransportError> {
         let req = Request::Init {
             worker: self.worker,
@@ -94,6 +126,7 @@ impl TcpTransport {
             workers,
             policy,
             segments: segments.to_vec(),
+            chunk_cells,
         };
         match self.rpc(&req)? {
             Reply::Ok => Ok(()),
@@ -140,7 +173,16 @@ impl Transport for TcpTransport {
         block: u64,
     ) -> Result<bool, TransportError> {
         let seq = self.flush_seq.fetch_add(1, Ordering::SeqCst) + 1;
-        match self.exchange(wire::encode_flush(self.worker, block, round, seq, deltas))? {
+        let msg = match &self.compress {
+            Some(map) => {
+                let (msg, runs) =
+                    wire::encode_flush_maybe_runs(self.worker, block, round, seq, deltas, map);
+                self.runs_encoded.fetch_add(runs, Ordering::Relaxed);
+                msg
+            }
+            None => wire::encode_flush(self.worker, block, round, seq, deltas),
+        };
+        match self.exchange(msg)? {
             Reply::Flush { applied } => Ok(applied),
             other => Err(unexpected(&other)),
         }
@@ -165,7 +207,15 @@ impl Transport for TcpTransport {
         entries: &[(usize, f64)],
         version: u64,
     ) -> Result<(), TransportError> {
-        match self.exchange(wire::encode_publish(version, entries))? {
+        let msg = match &self.compress {
+            Some(map) => {
+                let (msg, runs) = wire::encode_publish_maybe_runs(version, entries, map);
+                self.runs_encoded.fetch_add(runs, Ordering::Relaxed);
+                msg
+            }
+            None => wire::encode_publish(version, entries),
+        };
+        match self.exchange(msg)? {
             Reply::Ok => Ok(()),
             other => Err(unexpected(&other)),
         }
@@ -178,6 +228,18 @@ impl Transport for TcpTransport {
         version: u64,
     ) -> Result<(), TransportError> {
         match self.exchange(wire::encode_publish_range(version, start, values))? {
+            Reply::Ok => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    fn publish_range_f32(
+        &mut self,
+        start: usize,
+        values: &[f32],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        match self.exchange(wire::encode_publish_range_f32(version, start, values))? {
             Reply::Ok => Ok(()),
             other => Err(unexpected(&other)),
         }
@@ -475,7 +537,7 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                 },
             };
         }
-        Request::Init { worker, session, shards, workers, policy, segments } => {
+        Request::Init { worker, session, shards, workers, policy, segments, chunk_cells } => {
             let mut state = shared.state.lock().expect("state lock");
             if let Some(hosted) = state.server.as_ref() {
                 if session != 0 && session == state.session {
@@ -489,7 +551,8 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                     let same_shape = hosted.clock().num_workers() >= workers
                         && hosted.store().num_shards() == shards
                         && hosted.policy() == policy
-                        && hosted.store().segments() == segments;
+                        && hosted.store().segments() == segments
+                        && hosted.store().chunk_cells() == chunk_cells;
                     if same_shape {
                         let hosted = Arc::clone(hosted);
                         let first_attach = state.attached.insert(worker);
@@ -511,8 +574,13 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                     };
                 }
             }
-            let server =
-                Arc::new(ParameterServer::with_segments(shards, workers, policy, &segments));
+            let server = Arc::new(ParameterServer::with_segments_chunked(
+                shards,
+                workers,
+                policy,
+                &segments,
+                chunk_cells,
+            ));
             // Pin the fault-tolerance counters into the fresh registry
             // so `ps-stats` always lists them, even at zero.
             server.registry().counter("net.reconnects");
@@ -601,6 +669,10 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
         }
         Request::PublishRange { version, start, values } => {
             server.store().publish_range(start, &values, version);
+            Reply::Ok
+        }
+        Request::PublishRangeF32 { version, start, values } => {
+            server.store().publish_range_f32(start, &values, version);
             Reply::Ok
         }
         Request::Advance { applied } => {
@@ -700,7 +772,7 @@ mod tests {
         let mut coord =
             TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
                 .unwrap();
-        coord.init(1, 4, 1, StalenessPolicy::Bounded(0), &[(0, 4)]).unwrap();
+        coord.init(1, 4, 1, StalenessPolicy::Bounded(0), &[(0, 4)], 0).unwrap();
         coord.publish_range(0, &[1.0, 2.0, 3.0, 4.0], 0).unwrap();
 
         let mut worker = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
@@ -739,7 +811,7 @@ mod tests {
         let (host, addr) = loopback();
         let bytes = Arc::new(AtomicU64::new(0));
         let mut coord = TcpTransport::connect(&addr, 7, bytes).unwrap();
-        coord.init(2, 2, 2, StalenessPolicy::Async, &[]).unwrap();
+        coord.init(2, 2, 2, StalenessPolicy::Async, &[], 0).unwrap();
         let err = coord.flush(&[(0, 1.0)], 0, 0).unwrap_err();
         assert!(matches!(err, TransportError::Remote(_)), "{err}");
         // the connection survives the rejected request
@@ -752,7 +824,7 @@ mod tests {
         let (host, addr) = loopback();
         let mut coord =
             TcpTransport::connect(&addr, 0, Arc::new(AtomicU64::new(0))).unwrap();
-        coord.init(3, 2, 1, StalenessPolicy::Bounded(0), &[]).unwrap();
+        coord.init(3, 2, 1, StalenessPolicy::Bounded(0), &[], 0).unwrap();
         host.stop();
         let err = coord.stats().unwrap_err();
         assert!(matches!(err, TransportError::Io(_)), "want io error, got {err}");
@@ -765,26 +837,26 @@ mod tests {
         let mut coord =
             TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
                 .unwrap();
-        coord.init(41, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)]).unwrap();
+        coord.init(41, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)], 0).unwrap();
         coord.publish_range(0, &[5.0, 6.0], 0).unwrap();
         coord.advance_applied(3).unwrap();
 
         // Same session: reattach — published state and clock survive.
         let mut again = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
-        again.init(41, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)]).unwrap();
+        again.init(41, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)], 0).unwrap();
         let reply = again.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
         assert_eq!(reply.ranges[0].values(), &[5.0f32, 6.0]);
 
         // Reattach with a different shape is rejected without killing
         // the hosted run.
-        let err = again.init(41, 2, 2, StalenessPolicy::Bounded(0), &[(0, 2)]).unwrap_err();
+        let err = again.init(41, 2, 2, StalenessPolicy::Bounded(0), &[(0, 2)], 0).unwrap_err();
         assert!(matches!(err, TransportError::Remote(_)), "{err}");
         assert!(again.stats().is_ok(), "the run survives a rejected reattach");
 
         // A different session is a new run: state is replaced.
         let mut fresh =
             TcpTransport::connect(&addr, super::super::COORDINATOR_ID, bytes).unwrap();
-        fresh.init(99, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)]).unwrap();
+        fresh.init(99, 2, 1, StalenessPolicy::Bounded(0), &[(0, 2)], 0).unwrap();
         let reply = fresh.pull(&PullSpec::from_ranges(vec![(0, 2)]), 0).unwrap();
         assert_eq!(reply.ranges[0].values(), &[0.0f32, 0.0], "new session starts blank");
         host.stop();
@@ -797,7 +869,7 @@ mod tests {
         let mut coord =
             TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
                 .unwrap();
-        coord.init(5, 2, 1, StalenessPolicy::Async, &[(0, 2)]).unwrap();
+        coord.init(5, 2, 1, StalenessPolicy::Async, &[(0, 2)], 0).unwrap();
 
         // Two sockets for the same worker, each minting seqs from 1 —
         // exactly what a reconnect-and-resend looks like on the wire.
@@ -820,7 +892,7 @@ mod tests {
         let mut coord =
             TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
                 .unwrap();
-        coord.init(77, 2, 2, StalenessPolicy::Async, &[(0, 2)]).unwrap();
+        coord.init(77, 2, 2, StalenessPolicy::Async, &[(0, 2)], 0).unwrap();
         coord.publish_range(0, &[0.0, 0.0], 0).unwrap();
 
         // Before the join, worker 2 is outside the census.
@@ -837,7 +909,7 @@ mod tests {
         // A reattach that still quotes the Init-time census (2) is
         // accepted against the grown census (3).
         let mut late = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
-        late.init(77, 2, 2, StalenessPolicy::Async, &[(0, 2)]).unwrap();
+        late.init(77, 2, 2, StalenessPolicy::Async, &[(0, 2)], 0).unwrap();
 
         // After Leave, the worker is fenced: its flush is refused as
         // not-applied, and the deltas never reach the store.
@@ -855,17 +927,17 @@ mod tests {
         let mut coord =
             TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
                 .unwrap();
-        coord.init(88, 1, 2, StalenessPolicy::Async, &[]).unwrap();
+        coord.init(88, 1, 2, StalenessPolicy::Async, &[], 0).unwrap();
         // first attaches of two worker links: not reconnects
         let mut w0 = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
-        w0.init(88, 1, 2, StalenessPolicy::Async, &[]).unwrap();
+        w0.init(88, 1, 2, StalenessPolicy::Async, &[], 0).unwrap();
         let mut w1 = TcpTransport::connect(&addr, 1, Arc::clone(&bytes)).unwrap();
-        w1.init(88, 1, 2, StalenessPolicy::Async, &[]).unwrap();
+        w1.init(88, 1, 2, StalenessPolicy::Async, &[], 0).unwrap();
         let snap = coord.obs_stats().unwrap();
         assert_eq!(snap.get("net.reconnects").unwrap().as_u64(), 0, "attaches are free");
         // the same worker id re-attaching is a reconnect
         let mut again = TcpTransport::connect(&addr, 1, Arc::clone(&bytes)).unwrap();
-        again.init(88, 1, 2, StalenessPolicy::Async, &[]).unwrap();
+        again.init(88, 1, 2, StalenessPolicy::Async, &[], 0).unwrap();
         let snap = coord.obs_stats().unwrap();
         assert_eq!(snap.get("net.reconnects").unwrap().as_u64(), 1);
         host.stop();
@@ -882,7 +954,7 @@ mod tests {
         let mut coord =
             TcpTransport::connect(&addr, super::super::COORDINATOR_ID, Arc::clone(&bytes))
                 .unwrap();
-        coord.init(61, 2, 1, StalenessPolicy::Bounded(1), &[(0, 3)]).unwrap();
+        coord.init(61, 2, 1, StalenessPolicy::Bounded(1), &[(0, 3)], 0).unwrap();
         coord.publish_range(0, &[1.5, 2.5, 3.5], 0).unwrap();
         let mut worker = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
         assert!(worker.flush(&[(1, 0.25)], 0, 0).unwrap());
@@ -894,7 +966,7 @@ mod tests {
         let mut back = TcpTransport::connect(&addr2, 0, Arc::clone(&bytes)).unwrap();
         // Reattach with the original session: restored slabs + clock,
         // not a re-zeroed run.
-        back.init(61, 2, 1, StalenessPolicy::Bounded(1), &[(0, 3)]).unwrap();
+        back.init(61, 2, 1, StalenessPolicy::Bounded(1), &[(0, 3)], 0).unwrap();
         let reply = back.pull(&PullSpec::from_ranges(vec![(0, 3)]), 0).unwrap();
         assert_eq!(reply.ranges[0].values(), &[1.5f32, 2.75, 3.5]);
         // The dedup ledger survives the restart: a resend of the

@@ -33,7 +33,25 @@ use std::io::{Read, Write};
 /// server's exactly-once verdict), `Stats` gains `flushes_dropped`,
 /// and the idempotent `Join`/`Leave` opcodes change the worker census
 /// mid-run.
-pub const PROTO_VERSION: u16 = 4;
+/// v5 (sparse wire compression + chunked epochs): `Init` carries the
+/// store's `chunk_cells` (the dense-segment epoch chunk size the
+/// server must build and a reattach must match), delta batches and
+/// republishes may cross as sorted **index-delta + f32 value runs**
+/// (`FlushRuns`/`PublishRuns` — dense consecutive stretches collapse
+/// to offset + raw-LE f32 slab, scattered covered entries to base +
+/// u32-offset/f32 pairs, uncovered keys stay full f64 pairs), and
+/// segment seeds may cross as raw f32 slabs (`PublishRangeF32`).
+/// Decode still accepts v4 `Init`s (chunk_cells = 0, plain opcodes
+/// only), so old clients keep working; the new opcodes are a client
+/// choice, not a handshake — narrowing covered entries to f32 is
+/// lossless because dense slots store f32 anyway (`(v as f32) as f64`
+/// re-narrows bit-identically), so staleness-0 runs are bitwise
+/// identical with compression on or off.
+pub const PROTO_VERSION: u16 = 5;
+
+/// Oldest `Init` protocol revision the decode side still accepts
+/// (pre-chunking clients: `chunk_cells` defaults to 0).
+pub const MIN_PROTO_VERSION: u16 = 4;
 
 /// Frames above this are corruption, not data (guards allocation).
 pub const MAX_FRAME: u32 = 1 << 30;
@@ -51,6 +69,15 @@ pub mod op {
     pub const OBS_STATS: u8 = 0x09;
     pub const JOIN: u8 = 0x0A;
     pub const LEAVE: u8 = 0x0B;
+    /// v5: `Flush` body carried as sparse value runs (decodes to the
+    /// same `Request::Flush`).
+    pub const FLUSH_RUNS: u8 = 0x0C;
+    /// v5: `Publish` body carried as sparse value runs (decodes to the
+    /// same `Request::Publish`).
+    pub const PUBLISH_RUNS: u8 = 0x0D;
+    /// v5: `PublishRange` with a raw f32 value slab (the canonical-f32
+    /// seed path; half the bytes, no widen/narrow round trip).
+    pub const PUBLISH_RANGE_F32: u8 = 0x0E;
     /// Reply opcodes (server -> client).
     pub const REPLY_OK: u8 = 0x80;
     pub const REPLY_PULL: u8 = 0x81;
@@ -80,6 +107,10 @@ pub enum Request {
         workers: usize,
         policy: StalenessPolicy,
         segments: Vec<(usize, usize)>,
+        /// Dense-segment epoch chunk size the server's store must be
+        /// built with (0 = one chunk per segment). v5; a v4 `Init`
+        /// decodes as 0.
+        chunk_cells: usize,
     },
     /// SSP-gated read of a [`PullSpec`] by `worker`; blocks server-side
     /// until the applied clock admits `round`. A retired worker's pull
@@ -102,6 +133,13 @@ pub enum Request {
     /// Contiguous overwrite-publish (the round-0 seed path; unmetered,
     /// matching the in-process seeding semantics).
     PublishRange { version: u64, start: usize, values: Vec<f64> },
+    /// Contiguous overwrite-publish from canonical f32 values (v5):
+    /// the seed path for problems whose state is natively f32 (MF) —
+    /// 4 bytes per cell on the wire and no widen/narrow round trip.
+    /// Bit-identical to publishing the widened values: dense slots
+    /// store f32 either way, and hashed gap keys widen exactly as the
+    /// f64 path would have narrowed.
+    PublishRangeF32 { version: u64, start: usize, values: Vec<f32> },
     /// Advance the server's applied clock (ungates workers).
     Advance { applied: u64 },
     /// Read a [`StatsSnapshot`] of every server meter.
@@ -304,6 +342,184 @@ fn read_pairs(r: &mut Reader) -> Result<Vec<(usize, f64)>, WireError> {
     Ok(out)
 }
 
+// ---- sparse value runs (v5) -------------------------------------------
+//
+// A `(key, f64)` batch with unique keys (delta batches coalesce
+// per-key; republishes enumerate each entry once) is encoded as sorted
+// runs. Keys covered by a registered dense segment are f32-lossless —
+// the store keeps them as f32 slots, so `(v as f32) as f64` re-narrows
+// bit-identically on application — and ship 4-byte values; uncovered
+// keys keep full f64 pairs. Layout:
+//
+//   u32 nruns, then per run a u8 tag:
+//     0 dense f32:  u64 start, u32 count, count * raw f32 LE
+//                   (consecutive covered keys start..start+count)
+//     1 sparse f32: u64 base, u32 count, count * (u32 key-base, f32)
+//     2 pairs f64:  u32 count, count * (u64 key, f64)
+//
+// Unique keys make the sort bit-stable and make application order
+// irrelevant (f32 adds on distinct keys commute; versions max-merge),
+// so a decoded batch applies exactly as the unsorted original would.
+
+/// Consecutive covered keys shorter than this stay in a sparse run
+/// (a dense run's 12-byte header would outweigh the 4-bytes-per-entry
+/// saving on the offsets).
+const MIN_DENSE_RUN: usize = 4;
+
+/// The client-side view of the registered dense segments, for deciding
+/// which keys of an outgoing batch are f32-lossless on the wire. Built
+/// once at `Init` from the same `(start, len)` list the server
+/// registers, so client and server classify every key identically.
+#[derive(Clone, Debug, Default)]
+pub struct SegmentMap {
+    /// Sorted by start, non-overlapping (the store asserts the same).
+    segs: Vec<(usize, usize)>,
+}
+
+impl SegmentMap {
+    pub fn new(segments: &[(usize, usize)]) -> Self {
+        let mut segs: Vec<(usize, usize)> =
+            segments.iter().copied().filter(|&(_, len)| len > 0).collect();
+        segs.sort_unstable_by_key(|&(start, _)| start);
+        SegmentMap { segs }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segs.is_empty()
+    }
+
+    /// Whether `key` lands in a registered segment (an f32 slot).
+    pub fn covers(&self, key: usize) -> bool {
+        let idx = self.segs.partition_point(|&(start, _)| start <= key);
+        idx > 0 && {
+            let (start, len) = self.segs[idx - 1];
+            key < start + len
+        }
+    }
+}
+
+/// Append the run encoding of `entries` (unique keys) to `b`. Returns
+/// the number of compressed (f32) runs emitted — the `wire.runs_encoded`
+/// meter's input. Entries are sorted by key internally; the caller's
+/// order never reaches the wire.
+fn put_runs(b: &mut Vec<u8>, entries: &[(usize, f64)], map: &SegmentMap) -> u64 {
+    let mut sorted: Vec<(usize, f64)> = entries.to_vec();
+    sorted.sort_unstable_by_key(|&(key, _)| key);
+    let covered: Vec<(usize, f64)> =
+        sorted.iter().copied().filter(|&(key, _)| map.covers(key)).collect();
+    let uncovered: Vec<(usize, f64)> =
+        sorted.iter().copied().filter(|&(key, _)| !map.covers(key)).collect();
+
+    let nruns_at = b.len();
+    put_u32(b, 0); // patched below
+    let mut nruns = 0u32;
+    let mut compressed = 0u64;
+
+    // Walk the covered entries as maximal consecutive-key stretches:
+    // long stretches become dense runs, short ones pool into sparse
+    // runs (split only if an offset would overflow its u32).
+    let mut sparse: Vec<(usize, f64)> = Vec::new();
+    let mut flush_sparse = |b: &mut Vec<u8>, sparse: &mut Vec<(usize, f64)>,
+                            nruns: &mut u32, compressed: &mut u64| {
+        if sparse.is_empty() {
+            return;
+        }
+        let base = sparse[0].0;
+        b.push(1);
+        put_u64(b, base as u64);
+        put_u32(b, sparse.len() as u32);
+        for &(key, value) in sparse.iter() {
+            put_u32(b, (key - base) as u32);
+            b.extend_from_slice(&(value as f32).to_le_bytes());
+        }
+        sparse.clear();
+        *nruns += 1;
+        *compressed += 1;
+    };
+    let mut i = 0;
+    while i < covered.len() {
+        let mut j = i + 1;
+        while j < covered.len() && covered[j].0 == covered[j - 1].0 + 1 {
+            j += 1;
+        }
+        if j - i >= MIN_DENSE_RUN {
+            flush_sparse(b, &mut sparse, &mut nruns, &mut compressed);
+            b.push(0);
+            put_u64(b, covered[i].0 as u64);
+            put_u32(b, (j - i) as u32);
+            for &(_, value) in &covered[i..j] {
+                b.extend_from_slice(&(value as f32).to_le_bytes());
+            }
+            nruns += 1;
+            compressed += 1;
+        } else {
+            for &(key, value) in &covered[i..j] {
+                if !sparse.is_empty() && key - sparse[0].0 > u32::MAX as usize {
+                    flush_sparse(b, &mut sparse, &mut nruns, &mut compressed);
+                }
+                sparse.push((key, value));
+            }
+        }
+        i = j;
+    }
+    flush_sparse(b, &mut sparse, &mut nruns, &mut compressed);
+
+    if !uncovered.is_empty() {
+        b.push(2);
+        put_pairs(b, &uncovered);
+        nruns += 1;
+    }
+    b[nruns_at..nruns_at + 4].copy_from_slice(&nruns.to_le_bytes());
+    compressed
+}
+
+/// Decode a run-encoded batch back into `(key, f64)` entries (sorted
+/// covered entries first, then the uncovered pairs). Every count and
+/// key computation is checked, so malformed run lengths and
+/// overflowing bases reject cleanly instead of panicking or OOMing.
+fn read_runs(r: &mut Reader) -> Result<Vec<(usize, f64)>, WireError> {
+    // smallest possible run is an empty f64-pairs run: tag + u32 count
+    let nruns = r.count(5)?;
+    let mut out = Vec::new();
+    for _ in 0..nruns {
+        match r.u8()? {
+            0 => {
+                let start = r.u64()?;
+                let count = r.count(4)?;
+                if start.checked_add(count as u64).is_none() {
+                    return Err(WireError(format!(
+                        "dense run start {start} + count {count} overflows the key space"
+                    )));
+                }
+                let bytes = r.take(count * 4)?;
+                out.reserve(count);
+                for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                    let v = f32::from_le_bytes(chunk.try_into().expect("chunks_exact(4)"));
+                    out.push((start as usize + i, v as f64));
+                }
+            }
+            1 => {
+                let base = r.u64()?;
+                let count = r.count(8)?;
+                out.reserve(count);
+                for _ in 0..count {
+                    let offset = r.u32()?;
+                    let v = f32::from_le_bytes(r.take(4)?.try_into().expect("take(4)"));
+                    let key = base.checked_add(offset as u64).ok_or_else(|| {
+                        WireError(format!(
+                            "sparse run base {base} + offset {offset} overflows the key space"
+                        ))
+                    })?;
+                    out.push((key as usize, v as f64));
+                }
+            }
+            2 => out.extend(read_pairs(r)?),
+            tag => return Err(WireError(format!("unknown value-run tag {tag}"))),
+        }
+    }
+    Ok(out)
+}
+
 // Borrowed fast-path encoders: the client encodes straight from the
 // slices it already holds — no owned `Request` (and no payload clone)
 // is ever materialized on the per-round hot path. `encode_request`
@@ -368,10 +584,72 @@ pub fn encode_publish_range(version: u64, start: usize, values: &[f64]) -> Vec<u
     b
 }
 
+/// Encode a `PublishRangeF32` — a contiguous canonically-f32 state
+/// slab shipped as raw little-endian f32 bytes (v5). Half the bytes of
+/// [`encode_publish_range`] and no widen/narrow round trip for
+/// problems whose canonical state is already f32.
+pub fn encode_publish_range_f32(version: u64, start: usize, values: &[f32]) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.push(op::PUBLISH_RANGE_F32);
+    put_u64(&mut b, version);
+    put_u64(&mut b, start as u64);
+    put_u32(&mut b, values.len() as u32);
+    for &v in values {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b
+}
+
+/// Encode a `Flush` as a v5 run-compressed frame when any of its keys
+/// land in a registered dense segment; fall back to the plain v4
+/// [`encode_flush`] layout otherwise (an all-hashed batch gains
+/// nothing from run headers). Returns the frame and the number of
+/// compressed runs emitted (0 for the fallback) for the
+/// `wire.runs_encoded` meter. Decodes back to the same
+/// [`Request::Flush`] either way — compression is an encoding choice,
+/// not a semantic one.
+pub fn encode_flush_maybe_runs(
+    worker: usize,
+    block: u64,
+    round: u64,
+    seq: u64,
+    deltas: &[(usize, f64)],
+    map: &SegmentMap,
+) -> (Vec<u8>, u64) {
+    if map.is_empty() || !deltas.iter().any(|&(key, _)| map.covers(key)) {
+        return (encode_flush(worker, block, round, seq, deltas), 0);
+    }
+    let mut b = Vec::new();
+    b.push(op::FLUSH_RUNS);
+    put_u32(&mut b, worker as u32);
+    put_u64(&mut b, block);
+    put_u64(&mut b, round);
+    put_u64(&mut b, seq);
+    let runs = put_runs(&mut b, deltas, map);
+    (b, runs)
+}
+
+/// Encode a `Publish` as a v5 run-compressed frame; same fallback and
+/// return convention as [`encode_flush_maybe_runs`].
+pub fn encode_publish_maybe_runs(
+    version: u64,
+    entries: &[(usize, f64)],
+    map: &SegmentMap,
+) -> (Vec<u8>, u64) {
+    if map.is_empty() || !entries.iter().any(|&(key, _)| map.covers(key)) {
+        return (encode_publish(version, entries), 0);
+    }
+    let mut b = Vec::new();
+    b.push(op::PUBLISH_RUNS);
+    put_u64(&mut b, version);
+    let runs = put_runs(&mut b, entries, map);
+    (b, runs)
+}
+
 /// Encode a request into one frame payload (opcode + body).
 pub fn encode_request(req: &Request) -> Vec<u8> {
     match req {
-        Request::Init { worker, session, shards, workers, policy, segments } => {
+        Request::Init { worker, session, shards, workers, policy, segments, chunk_cells } => {
             let mut b = Vec::new();
             b.push(op::INIT);
             put_u16(&mut b, PROTO_VERSION);
@@ -394,6 +672,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
                 put_u64(&mut b, start as u64);
                 put_u64(&mut b, len as u64);
             }
+            put_u64(&mut b, *chunk_cells as u64);
             b
         }
         Request::Pull { worker, round, spec } => encode_pull(*worker, *round, spec),
@@ -403,6 +682,9 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         Request::Publish { version, entries } => encode_publish(*version, entries),
         Request::PublishRange { version, start, values } => {
             encode_publish_range(*version, *start, values)
+        }
+        Request::PublishRangeF32 { version, start, values } => {
+            encode_publish_range_f32(*version, *start, values)
         }
         Request::Advance { applied } => {
             let mut b = Vec::new();
@@ -435,9 +717,10 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
     let req = match opcode {
         op::INIT => {
             let proto = r.u16()?;
-            if proto != PROTO_VERSION {
+            if !(MIN_PROTO_VERSION..=PROTO_VERSION).contains(&proto) {
                 return Err(WireError(format!(
-                    "protocol version mismatch: peer speaks v{proto}, this server v{PROTO_VERSION}"
+                    "protocol version mismatch: peer speaks v{proto}, this server \
+                     v{MIN_PROTO_VERSION}..=v{PROTO_VERSION}"
                 )));
             }
             let worker = r.u32()? as usize;
@@ -454,7 +737,9 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
             for _ in 0..nseg {
                 segments.push((r.u64()? as usize, r.u64()? as usize));
             }
-            Request::Init { worker, session, shards, workers, policy, segments }
+            // v4 peers end the frame here: one whole-segment chunk.
+            let chunk_cells = if proto >= 5 { r.u64()? as usize } else { 0 };
+            Request::Init { worker, session, shards, workers, policy, segments, chunk_cells }
         }
         op::PULL => {
             let worker = r.u32()? as usize;
@@ -479,9 +764,22 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
             let deltas = read_pairs(&mut r)?;
             Request::Flush { worker, block, round, seq, deltas }
         }
+        op::FLUSH_RUNS => {
+            let worker = r.u32()? as usize;
+            let block = r.u64()?;
+            let round = r.u64()?;
+            let seq = r.u64()?;
+            let deltas = read_runs(&mut r)?;
+            Request::Flush { worker, block, round, seq, deltas }
+        }
         op::PUBLISH => {
             let version = r.u64()?;
             let entries = read_pairs(&mut r)?;
+            Request::Publish { version, entries }
+        }
+        op::PUBLISH_RUNS => {
+            let version = r.u64()?;
+            let entries = read_runs(&mut r)?;
             Request::Publish { version, entries }
         }
         op::PUBLISH_RANGE => {
@@ -493,6 +791,17 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
                 values.push(r.f64()?);
             }
             Request::PublishRange { version, start, values }
+        }
+        op::PUBLISH_RANGE_F32 => {
+            let version = r.u64()?;
+            let start = r.u64()? as usize;
+            let n = r.count(4)?;
+            let bytes = r.take(n * 4)?;
+            let values = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+                .collect();
+            Request::PublishRangeF32 { version, start, values }
         }
         op::ADVANCE => Request::Advance { applied: r.u64()? },
         op::STATS => Request::Stats,
@@ -557,6 +866,7 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
                 s.flushes_dropped,
                 s.hash_probes,
                 s.cow_clones,
+                s.cow_bytes,
             ] {
                 put_u64(&mut b, v);
             }
@@ -677,6 +987,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<Reply, WireError> {
             flushes_dropped: r.u64()?,
             hash_probes: r.u64()?,
             cow_clones: r.u64()?,
+            cow_bytes: r.u64()?,
         }),
         op::REPLY_OBS_STATS => {
             let version = r.u16()?;
@@ -759,6 +1070,7 @@ mod tests {
                 workers: 4,
                 policy: StalenessPolicy::Bounded(2),
                 segments: vec![(0, 100), (200, 50)],
+                chunk_cells: 64,
             },
             Request::Init {
                 worker: 0,
@@ -767,6 +1079,7 @@ mod tests {
                 workers: 1,
                 policy: StalenessPolicy::Async,
                 segments: vec![],
+                chunk_cells: 0,
             },
             Request::Pull {
                 worker: 2,
@@ -782,6 +1095,11 @@ mod tests {
             },
             Request::Publish { version: 4, entries: vec![(1, f64::MIN_POSITIVE)] },
             Request::PublishRange { version: 1, start: 16, values: vec![0.5, -0.5, 0.0] },
+            Request::PublishRangeF32 {
+                version: 2,
+                start: 8,
+                values: vec![0.5, -0.0, f32::MIN_POSITIVE],
+            },
             Request::Advance { applied: u64::MAX },
             Request::Stats,
             Request::ShutdownClock,
@@ -850,6 +1168,7 @@ mod tests {
             flushes_dropped: 13,
             hash_probes: 11,
             cow_clones: 12,
+            cow_bytes: 14,
         };
         let Reply::Stats(back) = decode_reply(&encode_reply(&Reply::Stats(snap))).unwrap()
         else {
@@ -927,6 +1246,7 @@ mod tests {
     fn corrupt_frames_are_rejected_not_panicked() {
         // truncated
         let mut good = encode_request(&Request::Pull {
+            worker: 1,
             round: 1,
             spec: PullSpec::from_keys(vec![1, 2, 3]),
         });
@@ -955,10 +1275,226 @@ mod tests {
             workers: 1,
             policy: StalenessPolicy::Bounded(0),
             segments: vec![],
+            chunk_cells: 0,
         });
         init[1] = 0xFF; // clobber the proto version
         let err = decode_request(&init).unwrap_err();
         assert!(err.0.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn v4_init_still_decodes_without_the_chunk_field() {
+        // A v4 peer's Init is the v5 frame minus the trailing
+        // chunk_cells u64, with the proto field saying 4. Craft one
+        // from the v5 encoder and it must decode with chunk_cells 0.
+        let mut init = encode_request(&Request::Init {
+            worker: 3,
+            session: 77,
+            shards: 2,
+            workers: 4,
+            policy: StalenessPolicy::Bounded(1),
+            segments: vec![(0, 16), (32, 8)],
+            chunk_cells: 9, // dropped with the trailing bytes below
+        });
+        init.truncate(init.len() - 8);
+        init[1..3].copy_from_slice(&(MIN_PROTO_VERSION).to_le_bytes());
+        let back = decode_request(&init).unwrap();
+        assert_eq!(
+            back,
+            Request::Init {
+                worker: 3,
+                session: 77,
+                shards: 2,
+                workers: 4,
+                policy: StalenessPolicy::Bounded(1),
+                segments: vec![(0, 16), (32, 8)],
+                chunk_cells: 0,
+            }
+        );
+    }
+
+    /// The run codec's contract: whatever the batch, encoding then
+    /// decoding yields the same entries the plain pairs layout would
+    /// have applied — with covered values narrowed to f32, which is
+    /// lossless for segment cells (the store narrows them anyway).
+    fn assert_runs_roundtrip(entries: &[(usize, f64)], map: &SegmentMap) {
+        let (frame, _) =
+            encode_flush_maybe_runs(1, 2, 3, 4, entries, map);
+        let Request::Flush { worker, block, round, seq, deltas } =
+            decode_request(&frame).unwrap()
+        else {
+            panic!("wrong request kind");
+        };
+        assert_eq!((worker, block, round, seq), (1, 2, 3, 4));
+        // decoded batches come back sorted (covered first); compare as
+        // key -> f64-bits maps since application order is immaterial
+        // for unique-key batches
+        let narrow = |&(key, v): &(usize, f64)| {
+            if map.covers(key) {
+                (key, ((v as f32) as f64).to_bits())
+            } else {
+                (key, v.to_bits())
+            }
+        };
+        let mut want: Vec<_> = entries.iter().map(narrow).collect();
+        want.sort_unstable();
+        let mut got: Vec<_> =
+            deltas.iter().map(|&(key, v)| (key, v.to_bits())).collect();
+        got.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn run_codec_roundtrips_the_issue_grid() {
+        let map = SegmentMap::new(&[(0, 64), (100, 16)]);
+        // empty batch: falls back to the plain layout, zero runs
+        let (frame, runs) = encode_flush_maybe_runs(1, 2, 3, 4, &[], &map);
+        assert_eq!(runs, 0);
+        assert_eq!(frame[0], op::FLUSH);
+        assert_runs_roundtrip(&[], &map);
+        // single covered cell
+        assert_runs_roundtrip(&[(5, 1.25)], &map);
+        // full-dense segment, in scrambled order
+        let mut dense: Vec<(usize, f64)> =
+            (0..64).map(|i| (i, i as f64 * 0.5 - 3.0)).collect();
+        dense.reverse();
+        dense.swap(0, 40);
+        let (frame, runs) = encode_flush_maybe_runs(1, 2, 3, 4, &dense, &map);
+        assert_eq!(runs, 1, "one dense run for one full segment");
+        // dense run: opcode + header(28) + nruns(4) + tag(1) +
+        // start(8) + count(4) + 64 * 4 raw bytes — vs 29 + 4 + 64*16
+        // for the pairs layout
+        assert_eq!(frame.len(), 1 + 28 + 4 + 1 + 8 + 4 + 64 * 4);
+        assert_runs_roundtrip(&dense, &map);
+        // -0.0 and subnormals survive bitwise through the f32 narrowing
+        assert_runs_roundtrip(
+            &[(0, -0.0), (1, f32::MIN_POSITIVE as f64 / 4.0), (2, -1e-42), (3, 7.0)],
+            &map,
+        );
+        // adversarial index gaps: scattered covered singles (sparse
+        // run), a dense stretch, a just-too-short stretch, and hashed
+        // strays far outside every segment
+        assert_runs_roundtrip(
+            &[
+                (0, 1.0),
+                (9, 2.0),
+                (30, 3.0),
+                (31, 4.0),
+                (32, 5.0),
+                (40, 6.0),
+                (41, 7.0),
+                (42, 8.0),
+                (43, 9.0),
+                (100, -1.0),
+                (115, -2.0),
+                (70, 1e300),
+                (1 << 40, -1e-300),
+            ],
+            &map,
+        );
+        // all-uncovered batch: plain fallback, full f64 fidelity
+        let (frame, runs) =
+            encode_flush_maybe_runs(1, 2, 3, 4, &[(70, 1e300), (99, -1e-300)], &map);
+        assert_eq!(runs, 0);
+        assert_eq!(frame[0], op::FLUSH);
+        // publish side shares the codec
+        let (frame, runs) = encode_publish_maybe_runs(9, &dense, &map);
+        assert_eq!(runs, 1);
+        let Request::Publish { version, entries } = decode_request(&frame).unwrap()
+        else {
+            panic!("wrong request kind");
+        };
+        assert_eq!(version, 9);
+        assert_eq!(entries.len(), 64);
+    }
+
+    #[test]
+    fn run_codec_seeded_fuzz_roundtrips() {
+        // deterministic xorshift so failures replay exactly
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let map = SegmentMap::new(&[(0, 256), (1000, 32)]);
+        for _ in 0..200 {
+            let n = (next() % 48) as usize;
+            let mut keys = std::collections::BTreeSet::new();
+            while keys.len() < n {
+                let key = match next() % 4 {
+                    0 => (next() % 256) as usize,          // covered, seg 0
+                    1 => 1000 + (next() % 32) as usize,    // covered, seg 1
+                    2 => 256 + (next() % 700) as usize,    // uncovered gap
+                    _ => (next() % (1 << 50)) as usize,    // far hashed
+                };
+                keys.insert(key);
+            }
+            let entries: Vec<(usize, f64)> = keys
+                .into_iter()
+                .map(|key| {
+                    let bits = next();
+                    let v = f64::from_bits(bits);
+                    (key, if v.is_nan() { 0.5 } else { v })
+                })
+                .collect();
+            assert_runs_roundtrip(&entries, &map);
+        }
+    }
+
+    #[test]
+    fn hostile_run_frames_are_rejected_not_panicked() {
+        let header = |opcode: u8| {
+            let mut b = vec![opcode];
+            put_u32(&mut b, 1); // worker
+            put_u64(&mut b, 2); // block
+            put_u64(&mut b, 3); // round
+            put_u64(&mut b, 4); // seq
+            b
+        };
+        // claims 2^30 runs in a tiny frame
+        let mut hostile = header(op::FLUSH_RUNS);
+        put_u32(&mut hostile, 1 << 30);
+        assert!(decode_request(&hostile).is_err());
+        // dense run promising more cells than the frame carries
+        let mut short = header(op::FLUSH_RUNS);
+        put_u32(&mut short, 1);
+        short.push(0); // dense tag
+        put_u64(&mut short, 0); // start
+        put_u32(&mut short, 1000); // count, but no payload follows
+        assert!(decode_request(&short).is_err());
+        // dense run whose start + count overflows the key space
+        let mut wrap = header(op::FLUSH_RUNS);
+        put_u32(&mut wrap, 1);
+        wrap.push(0);
+        put_u64(&mut wrap, u64::MAX - 1);
+        put_u32(&mut wrap, 4);
+        wrap.extend_from_slice(&[0u8; 16]);
+        assert!(decode_request(&wrap).is_err());
+        // sparse run with a count its payload can't back
+        let mut sparse = header(op::FLUSH_RUNS);
+        put_u32(&mut sparse, 1);
+        sparse.push(1); // sparse tag
+        put_u64(&mut sparse, 0); // base
+        put_u32(&mut sparse, 500); // count with no entries
+        assert!(decode_request(&sparse).is_err());
+        // unknown run tag
+        let mut tagged = header(op::FLUSH_RUNS);
+        put_u32(&mut tagged, 1);
+        tagged.push(9);
+        assert!(decode_request(&tagged).is_err());
+        // publish side shares the guards
+        let mut pub_hostile = vec![op::PUBLISH_RUNS];
+        put_u64(&mut pub_hostile, 1); // version
+        put_u32(&mut pub_hostile, 1 << 30);
+        assert!(decode_request(&pub_hostile).is_err());
+        // f32 range publish promising more cells than it carries
+        let mut range = vec![op::PUBLISH_RANGE_F32];
+        put_u64(&mut range, 1); // version
+        put_u64(&mut range, 0); // start
+        put_u32(&mut range, 1 << 30);
+        assert!(decode_request(&range).is_err());
     }
 
     #[test]

@@ -85,6 +85,15 @@ const GATE_PIPELINE_AHEAD: u64 = 4;
 /// state, bounding any drift the tolerance admitted.
 const FULL_RESYNC_EVERY: u64 = 32;
 
+/// `[ps] republish_tol = auto`: the tolerance is this fraction of the
+/// RMS entry magnitude the objective implies — `sqrt(2*|obj|/n)`,
+/// exact for a pure quadratic ½‖r‖² and a usable scale proxy
+/// otherwise. 1e-7 sits just below f32's relative precision, so auto
+/// suppresses only republishes the f32 wire could barely express
+/// anyway. Until the first objective value exists the tolerance is a
+/// lossless 0.0.
+const AUTO_TOL_REL: f64 = 1e-7;
+
 /// One block of one round, shipped to a worker.
 struct WorkItem {
     round: u64,
@@ -486,6 +495,13 @@ pub struct DistributedReport {
     /// Epoch slab clones copy-on-publish performed because a reader
     /// still held the old epoch.
     pub cow_clones: u64,
+    /// Bytes those copy-on-publish clones actually copied (4 bytes per
+    /// cloned cell) — the quantity `[ps] chunk_cells` shrinks: cloning
+    /// one written chunk instead of the whole segment slab.
+    pub cow_bytes: u64,
+    /// Compressed f32 value runs encoded onto the TCP wire across
+    /// every link (0 in-process or with `wire_compress = off`).
+    pub runs_encoded: u64,
     /// Total coordinator seconds blocked on (or inline computing)
     /// plans — the quantity scheduler sharding + pipelining shrinks.
     pub sched_wait_total: f64,
@@ -567,7 +583,20 @@ pub fn run_distributed(
     let segments =
         if cfg.ps.dense_segments { problem.ps_dense_segments() } else { Vec::new() };
     let mut conn = PsConnection::establish(&cfg.ps, p, &segments)?;
-    conn.coord().publish_range(0, &problem.ps_state(), 0)?;
+    // Seed the full state. Problems whose canonical state is already
+    // f32 (MF) ship it raw — no widen-to-f64/narrow-back round trip —
+    // bit-identical because dense cells store f32 either way.
+    let state_len = match problem.ps_state_f32() {
+        Some(state) => {
+            conn.coord().publish_range_f32(0, &state, 0)?;
+            state.len()
+        }
+        None => {
+            let state = problem.ps_state();
+            conn.coord().publish_range(0, &state, 0)?;
+            state.len()
+        }
+    };
 
     // Observability is side-channel only: the coordinator registry and
     // the (optional) span sink absorb observations that never feed back
@@ -664,6 +693,9 @@ pub fn run_distributed(
     let mut deltas_applied = 0usize;
     let mut sched_wait_cum = 0.0f64;
     let mut gate_waits_cum = 0u64;
+    // Latest objective value seen (incremental or recorded) — the
+    // scale signal `republish_tol = auto` derives its tolerance from.
+    let mut last_obj: Option<f64> = None;
     let wall = Instant::now();
 
     loop {
@@ -902,13 +934,26 @@ pub fn run_distributed(
                     dur_us: sink.now_us().saturating_sub(start),
                 });
             }
+            if let Some(obj) = result.objective {
+                last_obj = Some(obj);
+            }
+            // The effective tolerance: fixed from the config, or (auto)
+            // scaled to the objective's implied RMS entry magnitude —
+            // lossless 0.0 until the first objective value arrives.
+            let effective_tol = if cfg.ps.republish_auto {
+                last_obj
+                    .map(|o| AUTO_TOL_REL * (2.0 * o.abs() / state_len.max(1) as f64).sqrt())
+                    .unwrap_or(0.0)
+            } else {
+                cfg.ps.republish_tol
+            };
             // Periodic full re-syncs only matter when a positive
             // tolerance admits drift; tol <= 0 republishes are already
             // exact (0 = bitwise incremental, < 0 = full every round).
-            let full_resync =
-                cfg.ps.republish_tol > 0.0 && (applied + 1) % FULL_RESYNC_EVERY == 0;
+            let full_resync = (cfg.ps.republish_auto || cfg.ps.republish_tol > 0.0)
+                && (applied + 1) % FULL_RESYNC_EVERY == 0;
             let republish_start_us = events.as_ref().map(|s| s.now_us());
-            let republish = problem.ps_republish(cfg.ps.republish_tol, full_resync);
+            let republish = problem.ps_republish(effective_tol, full_resync);
             if !republish.is_empty() {
                 // Metered as republish traffic server-side (the
                 // transport carries it to wherever the store lives).
@@ -929,13 +974,15 @@ pub fn run_distributed(
             }
 
             if (applied as usize) % cfg.engine.record_every == 0 {
+                let obj_now = result.objective.unwrap_or_else(|| problem.objective());
+                last_obj = Some(obj_now);
                 trace.push(TracePoint {
                     round: applied as usize,
                     // vtime excludes scheduling stalls so the trace
                     // separates compute from plan waits.
                     vtime: wall.elapsed().as_secs_f64() - sched_wait_cum,
                     wtime: wall.elapsed().as_secs_f64(),
-                    objective: result.objective.unwrap_or_else(|| problem.objective()),
+                    objective: obj_now,
                     active_vars: problem.active_vars(),
                     imbalance: round_imbalance,
                     staleness: round_staleness,
@@ -985,6 +1032,7 @@ pub fn run_distributed(
         registry.gauge("net.socket_bytes").set(conn.socket_bytes());
         registry.counter("net.reconnects").set(conn.reconnects());
         registry.counter("net.retry_backoff_us").set(conn.retry_backoff_us());
+        registry.gauge("wire.runs_encoded").set(conn.runs_encoded());
         let mut metrics = conn.coord().obs_stats()?.metrics;
         metrics.extend(registry.snapshot());
         metrics.sort_by(|a, b| a.0.cmp(&b.0));
@@ -1015,6 +1063,8 @@ pub fn run_distributed(
         cells_pulled: stats.cells_pulled,
         snapshot_clones: stats.snapshot_clones,
         cow_clones: stats.cow_clones,
+        cow_bytes: stats.cow_bytes,
+        runs_encoded: conn.runs_encoded(),
         sched_wait_total,
         plan_queue_depth,
         sched_service_used: service_used,

@@ -149,6 +149,9 @@ fn config_presets_load_and_apply() {
     let cfg = RunConfig::from_file(std::path::Path::new("configs/distributed.conf")).unwrap();
     assert_eq!(cfg.ps.staleness, 2);
     assert_eq!(cfg.ps.republish_tol, 1e-8);
+    assert!(!cfg.ps.republish_auto, "the preset documents the numeric form");
+    assert_eq!(cfg.ps.chunk_cells, 0, "documented at the whole-segment default");
+    assert!(cfg.ps.wire_compress, "v5 run encoding documented on by default");
     assert!(cfg.ps.dense_segments && cfg.ps.pipeline);
     assert_eq!(cfg.ps.transport, strads::ps::TransportKind::InProc);
     assert_eq!(cfg.ps.addr, "127.0.0.1:37021");

@@ -385,6 +385,106 @@ fn f32_epoch_wire_is_lossless_and_cuts_pull_bytes() {
 }
 
 #[test]
+fn chunked_slabs_are_bitwise_invisible_for_lasso() {
+    // The tentpole contract, inproc side: splitting the dense segments
+    // into fixed-size epoch chunks must not change a single bit of the
+    // trajectory — chunking only changes what a racing publish clones
+    // and what a partial pull pins, never any arithmetic. The modeled
+    // pull meter counts payload cells, so it must not move either.
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 42);
+    let rounds = 120;
+    let run = |chunk_cells: usize| {
+        let mut cfg = lasso_cfg(4);
+        cfg.ps.chunk_cells = chunk_cells;
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        let report =
+            strads::workers::run_distributed(&mut problem, &cfg, rounds, "tiny").unwrap();
+        let beta: Vec<f64> = problem.beta().to_vec();
+        (report, beta)
+    };
+    let (whole, whole_beta) = run(0);
+    let (chunked, chunked_beta) = run(16);
+    assert_eq!(
+        whole.trace.final_objective().to_bits(),
+        chunked.trace.final_objective().to_bits(),
+        "chunk_cells must be bitwise invisible to the Lasso trajectory"
+    );
+    for (j, (a, b)) in whole_beta.iter().zip(&chunked_beta).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "beta[{j}] diverged under chunking: {a} vs {b}");
+    }
+    assert_eq!(whole.pull_bytes, chunked.pull_bytes, "modeled pull meter is chunk-invariant");
+    assert_eq!(whole.bytes_flushed, chunked.bytes_flushed);
+    assert_eq!(whole.bytes_republished, chunked.bytes_republished);
+}
+
+#[test]
+fn chunked_slabs_are_bitwise_invisible_for_mf() {
+    // Same contract on the MF workload, whose windowed factor
+    // republishes are exactly the write pattern chunking exists for.
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 31);
+    let run = |chunk_cells: usize| {
+        let mut cfg = RunConfig { workers: 4, ..Default::default() };
+        cfg.ps.chunk_cells = chunk_cells;
+        let mut dist = DistMf::new(&data.a, 4, 0.05, 32);
+        let rounds = dist.rounds_for_iters(3);
+        let report =
+            strads::workers::run_distributed(&mut dist, &cfg, rounds, "tiny").unwrap();
+        let state = dist.ps_state();
+        (report, state)
+    };
+    let (whole, whole_state) = run(0);
+    let (chunked, chunked_state) = run(16);
+    assert_eq!(
+        whole.trace.final_objective().to_bits(),
+        chunked.trace.final_objective().to_bits(),
+        "chunk_cells must be bitwise invisible to the MF trajectory"
+    );
+    assert_eq!(whole_state.len(), chunked_state.len());
+    for (j, (a, b)) in whole_state.iter().zip(&chunked_state).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "factor cell {j} diverged under chunking");
+    }
+    assert_eq!(whole.pull_bytes, chunked.pull_bytes, "modeled pull meter is chunk-invariant");
+}
+
+#[test]
+fn adaptive_republish_tol_converges_and_cuts_republish_bytes() {
+    // `republish_tol = auto` scales the tolerance with the objective's
+    // RMS cell magnitude: it must track the lossless trajectory to the
+    // same tolerance-drift bound as a hand-picked tol, and move fewer
+    // republish bytes than full republish.
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), 42);
+    let rounds = 400;
+    let run = |auto: bool, tol: f64| -> DistributedReport {
+        let mut cfg = lasso_cfg(4);
+        if auto {
+            cfg.ps.set_republish_tol_arg("auto").unwrap();
+        } else {
+            cfg.ps.republish_tol = tol;
+        }
+        let mut problem = NativeLasso::new(&data, cfg.lambda);
+        strads::workers::run_distributed(&mut problem, &cfg, rounds, "tiny").unwrap()
+    };
+    let full = run(false, -1.0);
+    let auto = run(true, 0.0);
+    let full_obj = full.trace.final_objective();
+    let auto_obj = auto.trace.final_objective();
+    // The auto tolerance is ~1e-7 of the RMS cell magnitude — coarser
+    // than the hand-picked 1e-8 pin above, so the drift bound is
+    // correspondingly looser while still far inside convergence noise.
+    assert!(
+        (auto_obj - full_obj).abs() < 1e-6 * full_obj.abs().max(1.0),
+        "full {full_obj} auto {auto_obj}"
+    );
+    assert!(
+        auto.bytes_republished < full.bytes_republished,
+        "auto {} vs full {}",
+        auto.bytes_republished,
+        full.bytes_republished
+    );
+    assert_eq!(auto.bytes_flushed, full.bytes_flushed, "the knob must not touch flush traffic");
+}
+
+#[test]
 fn mf_distributed_stale_runs_complete() {
     let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 33);
     for setting in ["2", "async"] {

@@ -3,9 +3,9 @@
 //! publish/delta/range-publish/read sequences, a `ShardedStore` must
 //! agree exactly with a transparent reference model that applies the
 //! same operations with the same precision rules — f32 values and one
-//! per-epoch version for dense-segment keys, f64 `Cell`s for hashed
-//! keys. Seeded deterministic RNG (`strads::util::Rng`), no proptest
-//! dependency.
+//! epoch version per chunk for dense-segment keys (a whole-segment
+//! chunk when `chunk_cells` is 0), f64 `Cell`s for hashed keys. Seeded
+//! deterministic RNG (`strads::util::Rng`), no proptest dependency.
 
 use std::sync::Arc;
 use strads::ps::{Cell, PullSpec, ShardedStore};
@@ -16,24 +16,33 @@ const KEY_SPACE: usize = 160;
 const MODEL_SPACE: usize = KEY_SPACE + 20;
 
 /// The executable spec of the store's observable behaviour: dense keys
-/// are f32 slots sharing one monotone per-segment version; hashed keys
-/// are f64 cells with per-cell versions (publish overwrites them,
-/// deltas max them).
+/// are f32 slots sharing one monotone version per epoch chunk (the
+/// whole segment when `chunk_cells` is 0); hashed keys are f64 cells
+/// with per-cell versions (publish overwrites them, deltas max them).
 struct RefModel {
     segs: Vec<(usize, usize)>,
+    chunk_cells: usize,
     dense_vals: Vec<f32>,
-    seg_ver: Vec<u64>,
+    chunk_ver: Vec<Vec<u64>>,
     hash_vals: Vec<f64>,
     hash_ver: Vec<u64>,
     hash_present: Vec<bool>,
 }
 
 impl RefModel {
-    fn new(segs: &[(usize, usize)]) -> Self {
+    fn new(segs: &[(usize, usize)], chunk_cells: usize) -> Self {
+        let chunk_ver = segs
+            .iter()
+            .map(|&(_, len)| {
+                let cc = if chunk_cells == 0 { len } else { chunk_cells };
+                vec![0u64; (len + cc - 1) / cc]
+            })
+            .collect();
         RefModel {
             segs: segs.to_vec(),
+            chunk_cells,
             dense_vals: vec![0.0; MODEL_SPACE],
-            seg_ver: vec![0; segs.len()],
+            chunk_ver,
             hash_vals: vec![0.0; MODEL_SPACE],
             hash_ver: vec![0; MODEL_SPACE],
             hash_present: vec![false; MODEL_SPACE],
@@ -44,12 +53,28 @@ impl RefModel {
         self.segs.iter().position(|&(s, l)| key >= s && key < s + l)
     }
 
+    /// The chunk index `key` falls in within segment `s`.
+    fn chunk_of(&self, s: usize, key: usize) -> usize {
+        let (start, len) = self.segs[s];
+        let cc = if self.chunk_cells == 0 { len } else { self.chunk_cells };
+        (key - start) / cc
+    }
+
+    fn dense_ver(&self, s: usize, key: usize) -> u64 {
+        self.chunk_ver[s][self.chunk_of(s, key)]
+    }
+
+    fn bump_dense_ver(&mut self, s: usize, key: usize, version: u64) {
+        let c = self.chunk_of(s, key);
+        self.chunk_ver[s][c] = self.chunk_ver[s][c].max(version);
+    }
+
     fn publish(&mut self, entries: &[(usize, f64)], version: u64) {
         for &(key, value) in entries {
             match self.seg_of(key) {
                 Some(s) => {
                     self.dense_vals[key] = value as f32;
-                    self.seg_ver[s] = self.seg_ver[s].max(version);
+                    self.bump_dense_ver(s, key, version);
                 }
                 None => {
                     self.hash_vals[key] = value;
@@ -65,7 +90,7 @@ impl RefModel {
             match self.seg_of(key) {
                 Some(s) => {
                     self.dense_vals[key] += delta as f32;
-                    self.seg_ver[s] = self.seg_ver[s].max(at);
+                    self.bump_dense_ver(s, key, at);
                 }
                 None => {
                     self.hash_vals[key] += delta;
@@ -84,7 +109,9 @@ impl RefModel {
 
     fn expected_cell(&self, key: usize) -> Cell {
         match self.seg_of(key) {
-            Some(s) => Cell { version: self.seg_ver[s], value: self.dense_vals[key] as f64 },
+            Some(s) => {
+                Cell { version: self.dense_ver(s, key), value: self.dense_vals[key] as f64 }
+            }
             None if self.hash_present[key] => {
                 Cell { version: self.hash_ver[key], value: self.hash_vals[key] }
             }
@@ -93,9 +120,9 @@ impl RefModel {
     }
 
     /// Expected f32 image + version of a contiguous range read. The
-    /// version is the OLDEST across the range — a segment contributes
-    /// its epoch version, a hashed cell its own, and a missing hashed
-    /// cell 0 — matching the staleness-diagnostic contract.
+    /// version is the OLDEST across the range — a dense key contributes
+    /// its chunk's epoch version, a hashed cell its own, and a missing
+    /// hashed cell 0 — matching the staleness-diagnostic contract.
     fn expected_range(&self, start: usize, len: usize) -> (Vec<f32>, u64) {
         let mut values = Vec::with_capacity(len);
         let mut version = u64::MAX;
@@ -103,7 +130,7 @@ impl RefModel {
             match self.seg_of(key) {
                 Some(s) => {
                     values.push(self.dense_vals[key]);
-                    version = version.min(self.seg_ver[s]);
+                    version = version.min(self.dense_ver(s, key));
                 }
                 None if self.hash_present[key] => {
                     values.push(self.hash_vals[key] as f32);
@@ -122,9 +149,9 @@ impl RefModel {
 /// Drive an identical randomized op sequence through the store and the
 /// reference model and compare every read — per-key cells, contiguous
 /// range views, and full spec pulls.
-fn run_model_equivalence(seed: u64, segs: &[(usize, usize)]) {
-    let store = ShardedStore::with_segments(5, segs);
-    let mut model = RefModel::new(segs);
+fn run_model_equivalence(seed: u64, segs: &[(usize, usize)], chunk_cells: usize) {
+    let store = ShardedStore::with_segments_chunked(5, segs, chunk_cells);
+    let mut model = RefModel::new(segs, chunk_cells);
     let mut rng = Rng::new(seed);
     for step in 0..400 {
         match rng.below(5) {
@@ -209,11 +236,24 @@ fn run_model_equivalence(seed: u64, segs: &[(usize, usize)]) {
 fn randomized_ops_match_reference_model() {
     for seed in [1u64, 7, 42] {
         // segments covering parts of the key space (mixed routing)
-        run_model_equivalence(seed, &[(3, 50), (70, 40)]);
+        run_model_equivalence(seed, &[(3, 50), (70, 40)], 0);
         // one segment covering everything touched
-        run_model_equivalence(seed ^ 0xfeed, &[(0, MODEL_SPACE)]);
+        run_model_equivalence(seed ^ 0xfeed, &[(0, MODEL_SPACE)], 0);
         // no segments: the hashed-only path against the same model
-        run_model_equivalence(seed ^ 0xbeef, &[]);
+        run_model_equivalence(seed ^ 0xbeef, &[], 0);
+    }
+}
+
+#[test]
+fn randomized_ops_match_reference_model_chunked() {
+    // Same equivalence with the segments split into epoch chunks —
+    // values must be untouched and versions must now track per chunk,
+    // including the odd-size remainder chunk (50 = 3×16 + 2).
+    for seed in [1u64, 7, 42] {
+        run_model_equivalence(seed, &[(3, 50), (70, 40)], 16);
+        run_model_equivalence(seed ^ 0xfeed, &[(0, MODEL_SPACE)], 7);
+        // chunk larger than any segment: one chunk each, same as 0
+        run_model_equivalence(seed ^ 0xcafe, &[(3, 50), (70, 40)], 4096);
     }
 }
 

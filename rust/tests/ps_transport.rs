@@ -119,6 +119,61 @@ fn mf_staleness0_bitwise_identical_across_transports() {
 }
 
 #[test]
+fn wire_compression_is_bitwise_invisible_and_cuts_socket_bytes() {
+    // The v5 run encoding's standing contract: same trajectory bit for
+    // bit with compression on or off (covered keys are f32-lossless on
+    // the wire because the store applies deltas in f32 anyway), with
+    // only the real socket traffic shrinking. The modeled meters must
+    // not move at all — they count payloads, not frames.
+    let rounds = 80;
+    let run_with = |compress: bool, chunk_cells: usize| {
+        let (host, addr) = loopback_host();
+        let mut cfg = lasso_cfg(4);
+        cfg.ps.transport = TransportKind::Tcp;
+        cfg.ps.addr = addr;
+        cfg.ps.wire_compress = compress;
+        cfg.ps.chunk_cells = chunk_cells;
+        let out = run_lasso(&cfg, rounds, 42);
+        host.stop();
+        out
+    };
+    let (plain, plain_beta) = run_with(false, 0);
+    let (packed, packed_beta) = run_with(true, 0);
+    assert_eq!(
+        plain.trace.final_objective().to_bits(),
+        packed.trace.final_objective().to_bits(),
+        "compression must be bitwise invisible to the trajectory"
+    );
+    for (j, (a, b)) in plain_beta.iter().zip(&packed_beta).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "beta[{j}] diverged under compression: {a} vs {b}");
+    }
+    assert_eq!(plain.runs_encoded, 0, "wire_compress=off must encode no runs");
+    assert!(packed.runs_encoded > 0, "the compressed run must actually emit runs");
+    assert!(
+        packed.socket_bytes < plain.socket_bytes,
+        "run encoding must cut real socket bytes: {} (on) vs {} (off)",
+        packed.socket_bytes,
+        plain.socket_bytes
+    );
+    // The modeled meters are frame-format independent by design.
+    assert_eq!(plain.pull_bytes, packed.pull_bytes);
+    assert_eq!(plain.bytes_flushed, packed.bytes_flushed);
+    assert_eq!(plain.bytes_republished, packed.bytes_republished);
+
+    // Chunked slabs + compression together stay on the same trajectory.
+    let (chunked, chunked_beta) = run_with(true, 16);
+    assert_eq!(
+        plain.trace.final_objective().to_bits(),
+        chunked.trace.final_objective().to_bits(),
+        "chunk_cells must be bitwise invisible over TCP"
+    );
+    for (j, (a, b)) in plain_beta.iter().zip(&chunked_beta).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "beta[{j}] diverged under chunking: {a} vs {b}");
+    }
+    assert_eq!(plain.pull_bytes, chunked.pull_bytes, "modeled pull meter is chunk-invariant");
+}
+
+#[test]
 fn killed_server_surfaces_clean_errors_not_hangs() {
     // Client-level: a live connection whose server dies mid-run must
     // error out of every call — including a pull *blocked at the SSP
@@ -126,7 +181,7 @@ fn killed_server_surfaces_clean_errors_not_hangs() {
     let (host, addr) = loopback_host();
     let bytes = Arc::new(AtomicU64::new(0));
     let mut coord = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
-    coord.init(1, 4, 1, StalenessPolicy::Bounded(0), &[(0, 8)]).unwrap();
+    coord.init(1, 4, 1, StalenessPolicy::Bounded(0), &[(0, 8)], 0).unwrap();
     coord.publish_range(0, &[0.0; 8], 0).unwrap();
 
     // This pull is 5 rounds ahead of the applied clock under a bound of
@@ -189,6 +244,7 @@ fn wire_protocol_roundtrips_random_messages() {
             (0..nranges).map(|_| (rng.below(1 << 20), rng.below(64))).collect();
         let keys: Vec<usize> = (0..rng.below(8)).map(|_| rng.below(1 << 30)).collect();
         let req = Request::Pull {
+            worker: rng.below(64),
             round: rng.next_u64(),
             spec: PullSpec { ranges: ranges.clone(), keys },
         };
@@ -200,6 +256,7 @@ fn wire_protocol_roundtrips_random_messages() {
             (0..rng.below(16)).map(|_| (rng.below(1 << 24), rand_f64(&mut rng))).collect();
         let req = Request::Flush {
             worker: rng.below(64),
+            block: rng.next_u64(),
             round: rng.next_u64(),
             seq: rng.next_u64(),
             deltas,
