@@ -6,12 +6,15 @@
 //! residual-sized pull reply (what a networked worker pays per round on
 //! top of the store read).
 
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
 use strads::benchutil::{report, time_fn};
 use strads::ps::transport::wire::{
     decode_reply, decode_request, encode_flush, encode_flush_maybe_runs, encode_reply, Reply,
     SegmentMap,
 };
-use strads::ps::{Cell, PullSpec, ShardedStore};
+use strads::ps::transport::{InProcTransport, RouteMap, RoutedTransport, Transport};
+use strads::ps::{Cell, ParameterServer, PullSpec, ShardedStore, StalenessPolicy};
 
 fn main() {
     println!("== ps storage micro-benchmarks (n = 65536, 8 shards) ==\n");
@@ -182,6 +185,43 @@ fn main() {
             plain.len(),
             compressed.len(),
             plain.len() as f64 / compressed.len().max(1) as f64
+        );
+    }
+
+    // --- routed fan-out: the split/merge tax at N servers ------------
+    // What a RoutedTransport adds on top of the store reads: the
+    // residual-sized range pull decomposed into N sub-ranges, pulled
+    // per server, and reassembled into one owned image (N=1 vs the
+    // Arc-clone read above isolates the copy the merge forces), plus a
+    // scattered publish partitioned by owner.
+    println!("\n== routed fan-out: split/merge overhead at N servers ==\n");
+    for servers in [1usize, 2, 4] {
+        let route = Arc::new(RouteMap::new(&[(0, n)], servers));
+        let inner: Vec<Box<dyn Transport>> = (0..servers)
+            .map(|i| {
+                let host = Arc::new(ParameterServer::with_segments(
+                    8,
+                    1,
+                    StalenessPolicy::Bounded(0),
+                    &route.server_segments(i),
+                ));
+                Box::new(InProcTransport::new(host, 0)) as Box<dyn Transport>
+            })
+            .collect();
+        let mut routed = RoutedTransport::new(inner, route, Arc::new(AtomicU64::new(0)));
+        routed.publish_range(0, &values, 0).expect("in-proc publish");
+        let (med, min, max) = time_fn(3, 30, || {
+            std::hint::black_box(routed.pull(&spec, 0).expect("in-proc pull"));
+        });
+        report(&format!("route : split+merge pull {n}, N={servers}"), med, min, max);
+        let (med, min, max) = time_fn(3, 30, || {
+            routed.publish(&sparse, 5).expect("in-proc publish");
+        });
+        report(
+            &format!("route : partitioned publish ({} entries), N={servers}", sparse.len()),
+            med,
+            min,
+            max,
         );
     }
 

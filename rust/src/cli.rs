@@ -51,8 +51,12 @@
 //!   bitwise identical across the two — the f32 wire is lossless — and
 //!   tcp runs additionally report `socket_bytes`, the *real* traffic
 //!   moved, next to the modeled `net_bytes` meter.
-//! * `--ps-addr host:port` — where that `ps-server` listens (also the
-//!   default bind address for `strads ps-server --addr`).
+//! * `--ps-addr host:p1[,host:p2...]` — where that `ps-server` listens
+//!   (also the default bind address for `strads ps-server --addr`). A
+//!   comma-separated list routes the run over an N-server fleet: each
+//!   server hosts a contiguous split of every dense segment plus a
+//!   hash share of the scattered keys, and staleness-0 results stay
+//!   bitwise identical for any N (`tests/ps_routed.rs`).
 //! * `--obs-level 0|1|2` — the observability level (`[obs] level`):
 //!   `0` = off, `1` (default) = the lock-free metrics registry (what
 //!   `DistributedReport::obs_metrics` and `strads ps-stats` read),

@@ -182,6 +182,11 @@ pub struct PsConfig {
     /// across transports (the f32 wire is lossless).
     pub transport: crate::ps::TransportKind,
     /// `host:port` of the `ps-server` process (`tcp` transport only).
+    /// A comma-separated list (`host:p1,host:p2`) shards the parameter
+    /// state across an N-server fleet: each server hosts a contiguous
+    /// split of every registered segment plus a hash share of the
+    /// unregistered keys, and the client routes per key (wire v6).
+    /// Staleness-0 runs are bitwise identical for any N.
     pub addr: String,
     /// Reconnect-and-retry attempts per RPC after a transport I/O fault
     /// (`tcp` only). 0 = fail fast, the pre-retry behaviour. Retried
@@ -292,6 +297,16 @@ impl PsConfig {
             crate::ps::StalenessPolicy::Async => self.asynchronous = true,
         }
         Ok(())
+    }
+
+    /// The `[ps] addr` server list: one entry per fleet member, in
+    /// route order (trimmed; `host:p1,host:p2` → two servers).
+    pub fn addrs(&self) -> Vec<String> {
+        self.addr
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect()
     }
 }
 
@@ -609,6 +624,12 @@ impl RunConfig {
         anyhow::ensure!(
             !self.ps.addr.is_empty(),
             "ps.addr must be a host:port (required by the tcp transport)"
+        );
+        anyhow::ensure!(
+            !self.ps.addrs().is_empty()
+                && self.ps.addr.split(',').all(|a| !a.trim().is_empty()),
+            "ps.addr must be a host:port or a comma-separated list of them \
+             (no empty entries)"
         );
         anyhow::ensure!(
             self.ps.checkpoint_every >= 1,

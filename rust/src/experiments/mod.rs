@@ -256,7 +256,8 @@ pub fn staleness_sweep(
                  \"max_staleness\": {}, \
                  \"gate_waits\": {}, \"hash_probes\": {}, \"wall_sec_per_round\": {:.6e}, \
                  \"sched_wait_total\": {:.6e}, \"plan_queue_depth\": {:.2}, \
-                 \"reconnects\": {}, \"sup.heartbeats\": {}, \"sup.leases_expired\": {}, \
+                 \"reconnects\": {}, \"route_fanout_rpcs\": {}, \
+                 \"sup.heartbeats\": {}, \"sup.leases_expired\": {}, \
                  \"sup.reassigns\": {}, \"sup.workers_live\": {}, \
                  \"final_objective\": {:.8e}}}",
                 workload,
@@ -280,6 +281,7 @@ pub fn staleness_sweep(
                 report.sched_wait_total,
                 report.plan_queue_depth,
                 report.reconnects,
+                report.route_fanout_rpcs,
                 report.sup_heartbeats,
                 report.sup_leases_expired,
                 report.sup_reassigns,
@@ -298,11 +300,18 @@ pub fn staleness_sweep(
         } else {
             format!("{:e}", cfg_base.ps.republish_tol)
         };
+        // Fleet size the sweep routed over: the `[ps] addr` list length
+        // for TCP runs, 1 in-process. CI's two-server smoke greps this.
+        let route_servers = match cfg_base.ps.transport {
+            crate::ps::TransportKind::Tcp => cfg_base.ps.addrs().len().max(1),
+            crate::ps::TransportKind::InProc => 1,
+        };
         let body = format!(
             "{{\n  \"bench\": \"ps_staleness_sweep\",\n  \"dataset\": \"{dataset}\",\n  \
              \"workers\": {},\n  \"republish_tol\": {},\n  \"chunk_cells\": {},\n  \
              \"wire_compress\": {},\n  \"dense_segments\": {},\n  \
-             \"pipeline\": {},\n  \"transport\": \"{}\",\n  \"scheduler\": \"{}\",\n  \
+             \"pipeline\": {},\n  \"transport\": \"{}\",\n  \"route_servers\": {},\n  \
+             \"scheduler\": \"{}\",\n  \
              \"sched_shards\": {},\n  \"settings\": [\n{rows}\n  ]\n}}\n",
             cfg_base.workers,
             tol_json,
@@ -311,6 +320,7 @@ pub fn staleness_sweep(
             cfg_base.ps.dense_segments,
             cfg_base.ps.pipeline,
             cfg_base.ps.transport.name(),
+            route_servers,
             cfg_base.sched.kind.name(),
             cfg_base.sched.effective_shards(&cfg_base.sap)
         );

@@ -64,7 +64,9 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --sched-service 0|1 (0 = plan inline on the coordinator)
                --ps-transport inproc|tcp (carriage to the parameter server;
                                           tcp talks to a ps-server process)
-               --ps-addr host:port (where that ps-server listens)
+               --ps-addr host:p1[,host:p2...] (where that ps-server listens;
+                              a comma-separated list shards the parameter
+                              state across an N-server fleet, wire v6)
                --retry-max N (tcp: reconnect-and-retry attempts per RPC after
                               an I/O fault; 0 [default] = fail fast)
                --retry-backoff-ms N (first backoff; doubles per attempt, 2s cap)
@@ -95,7 +97,7 @@ const USAGE: &str = "usage: strads <fig1|fig4|fig5|ablation|run-lasso|run-mf|dis
                --scheduler dynamic|static|random --sched-shards N
                --republish-tol F|auto --chunk-cells N --wire-compress on|off
                --dense-segments 0|1 --pipeline 0|1
-               --ps-transport inproc|tcp --ps-addr host:port
+               --ps-transport inproc|tcp --ps-addr host:p1[,host:p2...]
                --retry-max N --retry-backoff-ms N --fault-plan spec
                --elastic 0|1 --worker-kill-plan spec --lease-ms N
                --obs-level 0|1|2 --trace-events path.jsonl

@@ -276,6 +276,14 @@ impl ObsSnapshot {
     /// output; CI greps these lines for liveness.
     pub fn render(&self) -> String {
         let mut out = format!("obs snapshot v{}\n", self.version);
+        // Shard-range banner: which slice of the key space this server
+        // hosts — the line that tells the members of a routed N-server
+        // fleet apart (`strads ps-stats` against each member).
+        if !self.segments.is_empty() {
+            let lo = self.segments.iter().map(|&(s, _, _)| s).min().unwrap();
+            let hi = self.segments.iter().map(|&(s, l, _)| s + l).max().unwrap();
+            out.push_str(&format!("shards = [{lo}..{hi})\n"));
+        }
         for (name, v) in &self.metrics {
             match v {
                 MetricValue::Counter(n) => out.push_str(&format!("{name} = {n}\n")),

@@ -25,11 +25,13 @@
 
 pub mod inproc;
 pub mod retry;
+pub mod routed;
 pub mod tcp;
 pub mod wire;
 
 pub use inproc::InProcTransport;
 pub use retry::{FaultPlan, InitShape, RetryConfig, RetryTransport};
+pub use routed::{RouteMap, RoutedTransport};
 pub use tcp::{PsTcpServer, TcpTransport};
 
 use crate::config::PsConfig;
@@ -228,6 +230,21 @@ enum Minter {
         retry: RetryConfig,
         plan: Option<Arc<FaultPlan>>,
     },
+    /// N-server sharded fleet (`[ps] addr` is a comma-separated list):
+    /// every minted link is a [`RoutedTransport`] fanning out over one
+    /// per-server inner link each — plain TCP, or retry/fault-wrapped
+    /// per server when those knobs are set. Per-server shapes carry
+    /// each server's own sub-segments and route position, and each
+    /// server gets its own compression map and byte/reconnect meters.
+    Routed {
+        addrs: Vec<String>,
+        session: u64,
+        route: Arc<RouteMap>,
+        shapes: Vec<InitShape>,
+        retry: Option<RetryConfig>,
+        plan: Option<Arc<FaultPlan>>,
+        compress: Vec<Option<wire::SegmentMap>>,
+    },
 }
 
 /// Session ids distinguish "this run reconnecting" from "a new run" at
@@ -255,10 +272,20 @@ pub struct PsConnection {
     retry_backoff_us: Arc<AtomicU64>,
     /// The v5 run-compression segment map, enabled on every TCP link
     /// this connection mints (`[ps] wire_compress`; `None` in-process —
-    /// compression only exists where real bytes move).
+    /// compression only exists where real bytes move). Routed fleets
+    /// keep per-server maps in the minter instead.
     compress: Option<wire::SegmentMap>,
     /// Compressed f32 runs encoded across every link — `wire.runs_encoded`.
     runs_encoded: Arc<AtomicU64>,
+    /// The shard→server map of a routed fleet; `None` single-server.
+    route: Option<Arc<RouteMap>>,
+    /// Inner RPCs the routed fan-out issued — `route.fanout_rpcs`.
+    fanout_rpcs: Arc<AtomicU64>,
+    /// Per-server socket byte meters (one per fleet member; empty for
+    /// single-server connections, where `socket_bytes` is the total).
+    per_server_bytes: Vec<Arc<AtomicU64>>,
+    /// Per-server reconnect meters (same shape as `per_server_bytes`).
+    per_server_reconnects: Vec<Arc<AtomicU64>>,
 }
 
 impl PsConnection {
@@ -276,6 +303,13 @@ impl PsConnection {
         let reconnects = Arc::new(AtomicU64::new(0));
         let retry_backoff_us = Arc::new(AtomicU64::new(0));
         let runs_encoded = Arc::new(AtomicU64::new(0));
+        let addrs = cfg.addrs();
+        if addrs.len() > 1 && cfg.transport != TransportKind::Tcp {
+            return Err(TransportError::Protocol(format!(
+                "[ps] addr lists {} servers, which needs transport = tcp",
+                addrs.len()
+            )));
+        }
         match cfg.transport {
             TransportKind::InProc => {
                 let server = Arc::new(ParameterServer::with_segments_chunked(
@@ -293,7 +327,14 @@ impl PsConnection {
                     retry_backoff_us,
                     compress: None,
                     runs_encoded,
+                    route: None,
+                    fanout_rpcs: Arc::new(AtomicU64::new(0)),
+                    per_server_bytes: Vec::new(),
+                    per_server_reconnects: Vec::new(),
                 })
+            }
+            TransportKind::Tcp if addrs.len() > 1 => {
+                Self::establish_routed(cfg, workers, segments, addrs)
             }
             TransportKind::Tcp => {
                 let session = mint_session();
@@ -317,6 +358,8 @@ impl PsConnection {
                         policy: cfg.policy(),
                         segments: segments.to_vec(),
                         chunk_cells: cfg.chunk_cells,
+                        route_index: 0,
+                        route_servers: 1,
                     };
                     let coord = RetryTransport::establish_with_compression(
                         &cfg.addr,
@@ -344,6 +387,10 @@ impl PsConnection {
                         retry_backoff_us,
                         compress,
                         runs_encoded,
+                        route: None,
+                        fanout_rpcs: Arc::new(AtomicU64::new(0)),
+                        per_server_bytes: Vec::new(),
+                        per_server_reconnects: Vec::new(),
                     });
                 }
                 let mut coord = TcpTransport::connect(
@@ -370,9 +417,101 @@ impl PsConnection {
                     retry_backoff_us,
                     compress,
                     runs_encoded,
+                    route: None,
+                    fanout_rpcs: Arc::new(AtomicU64::new(0)),
+                    per_server_bytes: Vec::new(),
+                    per_server_reconnects: Vec::new(),
                 })
             }
         }
+    }
+
+    /// The N-server variant of [`PsConnection::establish`]: split the
+    /// run's segments across the fleet with a [`RouteMap`], bring up
+    /// one link per server (retry/fault-wrapped when those knobs are
+    /// set — budgets and plans apply per server, so one member's crash
+    /// is retried on its link alone), and hand back a
+    /// [`RoutedTransport`] as the coordinator's view. Every server is
+    /// `Init`ed with its own sub-segments, so its store — and
+    /// therefore its checkpoint — holds exactly the shards it owns.
+    fn establish_routed(
+        cfg: &PsConfig,
+        workers: usize,
+        segments: &[(usize, usize)],
+        addrs: Vec<String>,
+    ) -> Result<Self, TransportError> {
+        let n = addrs.len();
+        let session = mint_session();
+        let route = Arc::new(RouteMap::new(segments, n));
+        let shapes: Vec<InitShape> = (0..n)
+            .map(|i| InitShape {
+                shards: cfg.shards,
+                workers,
+                policy: cfg.policy(),
+                segments: route.server_segments(i),
+                chunk_cells: cfg.chunk_cells,
+                route_index: i,
+                route_servers: n,
+            })
+            .collect();
+        // Per-server compression maps: each side of a link classifies
+        // keys against the segments *that server* registered.
+        let compress: Vec<Option<wire::SegmentMap>> = shapes
+            .iter()
+            .map(|s| cfg.wire_compress.then(|| wire::SegmentMap::new(&s.segments)))
+            .collect();
+        let plan = if cfg.fault_plan.is_empty() {
+            None
+        } else {
+            Some(Arc::new(FaultPlan::parse(&cfg.fault_plan).map_err(|e| {
+                TransportError::Protocol(format!("bad [ps] fault_plan: {e}"))
+            })?))
+        };
+        let retry = (cfg.retry_max > 0 || plan.is_some())
+            .then_some(RetryConfig { max: cfg.retry_max, backoff_ms: cfg.retry_backoff_ms });
+        let per_server_bytes: Vec<Arc<AtomicU64>> =
+            (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let per_server_reconnects: Vec<Arc<AtomicU64>> =
+            (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let retry_backoff_us = Arc::new(AtomicU64::new(0));
+        let runs_encoded = Arc::new(AtomicU64::new(0));
+        let fanout_rpcs = Arc::new(AtomicU64::new(0));
+        let coord = mint_routed_link(
+            &addrs,
+            COORDINATOR_ID,
+            session,
+            &route,
+            &shapes,
+            retry,
+            &plan,
+            &compress,
+            &per_server_bytes,
+            &per_server_reconnects,
+            &retry_backoff_us,
+            &runs_encoded,
+            &fanout_rpcs,
+        )?;
+        Ok(PsConnection {
+            coord: Box::new(coord),
+            minter: Minter::Routed {
+                addrs,
+                session,
+                route: Arc::clone(&route),
+                shapes,
+                retry,
+                plan,
+                compress,
+            },
+            socket_bytes: Arc::new(AtomicU64::new(0)),
+            reconnects: Arc::new(AtomicU64::new(0)),
+            retry_backoff_us,
+            compress: None,
+            runs_encoded,
+            route: Some(route),
+            fanout_rpcs,
+            per_server_bytes,
+            per_server_reconnects,
+        })
     }
 
     /// Mint `worker`'s own link (an `Arc` clone in-process, a fresh
@@ -405,6 +544,23 @@ impl PsConnection {
                     self.compress.clone().map(|m| (m, Arc::clone(&self.runs_encoded))),
                 )?))
             }
+            Minter::Routed { addrs, session, route, shapes, retry, plan, compress } => {
+                Ok(Box::new(mint_routed_link(
+                    addrs,
+                    worker,
+                    *session,
+                    route,
+                    shapes,
+                    *retry,
+                    plan,
+                    compress,
+                    &self.per_server_bytes,
+                    &self.per_server_reconnects,
+                    &self.retry_backoff_us,
+                    &self.runs_encoded,
+                    &self.fanout_rpcs,
+                )?))
+            }
         }
     }
 
@@ -419,12 +575,14 @@ impl PsConnection {
     /// modeled `net_bytes` meter.
     pub fn socket_bytes(&self) -> u64 {
         self.socket_bytes.load(Ordering::Relaxed)
+            + self.per_server_bytes.iter().map(|b| b.load(Ordering::Relaxed)).sum::<u64>()
     }
 
     /// Successful reconnects across every link this connection minted
     /// (0 unless the retry wrapper is engaged).
     pub fn reconnects(&self) -> u64 {
         self.reconnects.load(Ordering::Relaxed)
+            + self.per_server_reconnects.iter().map(|r| r.load(Ordering::Relaxed)).sum::<u64>()
     }
 
     /// Total retry backoff slept across every link, in microseconds.
@@ -438,6 +596,97 @@ impl PsConnection {
     pub fn runs_encoded(&self) -> u64 {
         self.runs_encoded.load(Ordering::Relaxed)
     }
+
+    /// Fleet size: the number of `[ps] addr` servers this connection
+    /// routes over (1 for in-process and single-server TCP).
+    pub fn route_servers(&self) -> usize {
+        self.route.as_ref().map_or(1, |r| r.servers())
+    }
+
+    /// Inner RPCs the routed fan-out issued across every link this
+    /// connection minted (0 single-server) — `route.fanout_rpcs`.
+    pub fn route_fanout_rpcs(&self) -> u64 {
+        self.fanout_rpcs.load(Ordering::Relaxed)
+    }
+
+    /// Per-server socket bytes, indexed like `[ps] addr`. Single-server
+    /// connections report their one total.
+    pub fn socket_bytes_per_server(&self) -> Vec<u64> {
+        if self.per_server_bytes.is_empty() {
+            vec![self.socket_bytes()]
+        } else {
+            self.per_server_bytes.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+        }
+    }
+
+    /// Per-server reconnects, indexed like `[ps] addr` — the meter the
+    /// chaos suite reads to pin *which* server's links died.
+    pub fn reconnects_per_server(&self) -> Vec<u64> {
+        if self.per_server_reconnects.is_empty() {
+            vec![self.reconnects()]
+        } else {
+            self.per_server_reconnects.iter().map(|r| r.load(Ordering::Relaxed)).collect()
+        }
+    }
+}
+
+/// Mint one routed link for `worker`: a [`RoutedTransport`] over one
+/// inner link per fleet member — retry/fault-wrapped per server when
+/// `retry` is set, plain `TcpTransport` otherwise — each wired to its
+/// server's own byte/reconnect meters and compression map.
+#[allow(clippy::too_many_arguments)]
+fn mint_routed_link(
+    addrs: &[String],
+    worker: usize,
+    session: u64,
+    route: &Arc<RouteMap>,
+    shapes: &[InitShape],
+    retry: Option<RetryConfig>,
+    plan: &Option<Arc<FaultPlan>>,
+    compress: &[Option<wire::SegmentMap>],
+    per_server_bytes: &[Arc<AtomicU64>],
+    per_server_reconnects: &[Arc<AtomicU64>],
+    retry_backoff_us: &Arc<AtomicU64>,
+    runs_encoded: &Arc<AtomicU64>,
+    fanout_rpcs: &Arc<AtomicU64>,
+) -> Result<RoutedTransport, TransportError> {
+    let mut inner: Vec<Box<dyn Transport>> = Vec::with_capacity(addrs.len());
+    for (i, addr) in addrs.iter().enumerate() {
+        let link: Box<dyn Transport> = match retry {
+            Some(rcfg) => Box::new(RetryTransport::establish_with_compression(
+                addr,
+                worker,
+                session,
+                shapes[i].clone(),
+                rcfg,
+                plan.clone(),
+                Arc::clone(&per_server_bytes[i]),
+                Arc::clone(&per_server_reconnects[i]),
+                Arc::clone(retry_backoff_us),
+                compress[i].clone().map(|m| (m, Arc::clone(runs_encoded))),
+            )?),
+            None => {
+                let mut link =
+                    TcpTransport::connect(addr, worker, Arc::clone(&per_server_bytes[i]))?;
+                link.init_routed(
+                    session,
+                    shapes[i].shards,
+                    shapes[i].workers,
+                    shapes[i].policy,
+                    &shapes[i].segments,
+                    shapes[i].chunk_cells,
+                    shapes[i].route_index,
+                    shapes[i].route_servers,
+                )?;
+                if let Some(map) = &compress[i] {
+                    link.enable_compression(map.clone(), Arc::clone(runs_encoded));
+                }
+                Box::new(link)
+            }
+        };
+        inner.push(link);
+    }
+    Ok(RoutedTransport::new(inner, Arc::clone(route), Arc::clone(fanout_rpcs)))
 }
 
 /// One-shot introspection fetch for `strads ps-stats`: open a fresh

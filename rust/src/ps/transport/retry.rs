@@ -379,6 +379,12 @@ pub struct InitShape {
     /// the shape the server validates on reattach (a mismatch would
     /// split epochs differently than the checkpointed run).
     pub chunk_cells: usize,
+    /// This link's place in a routed fleet (v6 wire): the server is
+    /// `route_index` of `route_servers`. `(0, 1)` for the classic
+    /// single-server topology.
+    pub route_index: usize,
+    /// Routed fleet size; see `route_index`.
+    pub route_servers: usize,
 }
 
 /// The reconnecting TCP link: runs each operation against an inner
@@ -485,13 +491,15 @@ impl RetryTransport {
                 Arc::clone(&flush_seq),
             )
             .and_then(|mut link| {
-                link.init(
+                link.init_routed(
                     session,
                     shape.shards,
                     shape.workers,
                     shape.policy,
                     &shape.segments,
                     shape.chunk_cells,
+                    shape.route_index,
+                    shape.route_servers,
                 )?;
                 if let Some((map, runs)) = &compress {
                     link.enable_compression(map.clone(), Arc::clone(runs));
@@ -561,13 +569,15 @@ impl RetryTransport {
             Arc::clone(&self.socket_bytes),
             Arc::clone(&self.flush_seq),
         )?;
-        link.init(
+        link.init_routed(
             self.session,
             self.shape.shards,
             self.shape.workers,
             self.shape.policy,
             &self.shape.segments,
             self.shape.chunk_cells,
+            self.shape.route_index,
+            self.shape.route_servers,
         )?;
         if let Some((map, runs)) = &self.compress {
             link.enable_compression(map.clone(), Arc::clone(runs));
@@ -864,6 +874,8 @@ mod tests {
             policy: StalenessPolicy::Bounded(0),
             segments: vec![(0, 4)],
             chunk_cells: 0,
+            route_index: 0,
+            route_servers: 1,
         };
         let cfg = RetryConfig { max: 4, backoff_ms: 1 };
         let reconnects = Arc::new(AtomicU64::new(0));
@@ -920,6 +932,8 @@ mod tests {
             policy: StalenessPolicy::Async,
             segments: vec![(0, 2)],
             chunk_cells: 0,
+            route_index: 0,
+            route_servers: 1,
         };
         let cfg = RetryConfig { max: 4, backoff_ms: 1 };
         let zeros = || Arc::new(AtomicU64::new(0));

@@ -1,0 +1,646 @@
+//! Multi-server routing: one [`Transport`] fanned out over N inner
+//! transports, each carrying one server's share of the key space.
+//!
+//! [`RouteMap`] is the shard→server assignment: every registered dense
+//! segment is split into N contiguous sub-segments (server `i` hosts
+//! the `i`-th), and unregistered (hashed) keys go to
+//! `fibhash(key) % N`. Each server is then a completely ordinary
+//! `ps-server` hosting only its own sub-segments — checkpoints,
+//! compression maps, retry wrappers, and fault plans all apply
+//! per-server with no routing-specific code on the server side.
+//!
+//! [`RoutedTransport`] does the carriage work:
+//! * **pull** — each requested range is decomposed into maximal
+//!   single-owner pieces (sub-segment stretches become per-server
+//!   sub-ranges; hashed gap keys become per-key cell requests to their
+//!   hash owner), the fragments are pulled over the per-server links,
+//!   and the replies are reassembled positionally into exactly one
+//!   [`RangePull`] per requested range with the min version across
+//!   fragments — the same oldest-across-the-span contract the
+//!   single-server store provides.
+//! * **flush / advance / join / leave** — broadcast to *every* server
+//!   (a flush carries each server its owned delta subset, possibly
+//!   empty) so the N per-server SSP clocks stay in lock-step: the
+//!   logical clock of the fleet is the fold of the per-server gates,
+//!   and at staleness 0 every server admits exactly the rounds the
+//!   single server would. The flush verdict is the AND across servers.
+//! * **publish / publish_range** — partitioned by owner; only owners
+//!   with a non-empty share are called.
+//! * **stats / obs_stats** — per-server snapshots folded into one
+//!   fleet view (sums, with `max_stale_gap` as a max, clock state as
+//!   the min across servers).
+//!
+//! Because every key has exactly one owner and the per-server clocks
+//! tick in lock-step, the values a client reads through the routed
+//! transport are bitwise identical to the single-server ones — pinned
+//! at N=1 vs N=2 vs in-process by `tests/ps_routed.rs`.
+
+use super::{PullReply, Transport, TransportError};
+use crate::obs::{ClockView, MetricValue, ObsSnapshot};
+use crate::ps::shard::{Cell, PullSpec, RangePull};
+use crate::ps::StatsSnapshot;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Fibonacci multiplicative key spreader — the same constant the
+/// store's hashed shards use, so gap keys spread evenly over servers.
+const SPREAD: u64 = 0x517cc1b727220a95;
+
+/// One maximal single-owner piece of a contiguous key range.
+enum Piece {
+    /// `len` keys starting at `start`, all inside server `server`'s
+    /// sub-segment.
+    Run { server: usize, start: usize, len: usize },
+    /// One unregistered key, owned by hash.
+    Key { server: usize, key: usize },
+}
+
+/// The shard→server assignment of a routed fleet. Built once per run
+/// from the problem's registered segments and the server count; shared
+/// (`Arc`) by every link the connection mints.
+#[derive(Clone, Debug)]
+pub struct RouteMap {
+    servers: usize,
+    /// `(start, len, server)` sorted by `start`: the contiguous
+    /// sub-segments the run's registered segments were split into.
+    segs: Vec<(usize, usize, usize)>,
+}
+
+impl RouteMap {
+    /// Split `segments` across `servers`: each segment is cut into
+    /// `servers` contiguous parts (ceil-split — the first `len %
+    /// servers` parts get one extra cell), server `i` hosting the
+    /// `i`-th part. Zero-length parts (more servers than cells) are
+    /// dropped, so a tiny segment simply lives on fewer servers.
+    pub fn new(segments: &[(usize, usize)], servers: usize) -> Self {
+        assert!(servers > 0, "a route needs at least one server");
+        let mut segs = Vec::with_capacity(segments.len() * servers);
+        for &(start, len) in segments {
+            let base = len / servers;
+            let rem = len % servers;
+            let mut at = start;
+            for server in 0..servers {
+                let take = base + usize::from(server < rem);
+                if take > 0 {
+                    segs.push((at, take, server));
+                    at += take;
+                }
+            }
+            debug_assert_eq!(at, start + len);
+        }
+        segs.sort_unstable();
+        RouteMap { servers, segs }
+    }
+
+    /// Fleet size.
+    pub fn servers(&self) -> usize {
+        self.servers
+    }
+
+    /// The sub-segments server `i` hosts — what its `Init` registers
+    /// and its checkpoint dumps.
+    pub fn server_segments(&self, server: usize) -> Vec<(usize, usize)> {
+        self.segs
+            .iter()
+            .filter(|&&(_, _, s)| s == server)
+            .map(|&(start, len, _)| (start, len))
+            .collect()
+    }
+
+    /// Which server owns `key`: its sub-segment's host for registered
+    /// keys, the Fibonacci-hash bucket for the rest.
+    pub fn owner_of(&self, key: usize) -> usize {
+        let i = self.segs.partition_point(|&(start, len, _)| start + len <= key);
+        if let Some(&(start, _, server)) = self.segs.get(i) {
+            if start <= key {
+                return server;
+            }
+        }
+        self.hash_owner(key)
+    }
+
+    #[inline]
+    fn hash_owner(&self, key: usize) -> usize {
+        (((key as u64).wrapping_mul(SPREAD) >> 32) % self.servers as u64) as usize
+    }
+
+    /// Walk `[start, start + len)` as maximal single-owner pieces, in
+    /// key order: sub-segment overlaps come out as one `Run` per
+    /// (sub-segment ∩ range), hashed gaps as one `Key` per key.
+    fn for_each_piece(&self, start: usize, len: usize, mut f: impl FnMut(Piece)) {
+        let end = start + len;
+        let mut key = start;
+        let mut i = self.segs.partition_point(|&(s, l, _)| s + l <= start);
+        while key < end {
+            match self.segs.get(i) {
+                Some(&(s, l, server)) if s <= key => {
+                    let take = (s + l).min(end) - key;
+                    f(Piece::Run { server, start: key, len: take });
+                    key += take;
+                    if key >= s + l {
+                        i += 1;
+                    }
+                }
+                seg => {
+                    let gap_end = seg.map_or(end, |&(s, _, _)| s.min(end));
+                    for k in key..gap_end {
+                        f(Piece::Key { server: self.hash_owner(k), key: k });
+                    }
+                    key = gap_end;
+                }
+            }
+        }
+    }
+}
+
+/// Where one fragment of a split pull lands in the merged reply.
+enum CellDst {
+    /// A hashed gap key inside requested range `range`, at `offset`.
+    Range { range: usize, offset: usize },
+    /// The caller's scattered key number `idx`.
+    Cell { idx: usize },
+}
+
+/// One server's share of a split [`PullSpec`], plus the placement map
+/// that reassembles its reply.
+#[derive(Default)]
+struct SubSpec {
+    spec: PullSpec,
+    /// Per `spec.ranges` entry: destination `(range, offset)` in the
+    /// merged reply.
+    range_dst: Vec<(usize, usize)>,
+    /// Per `spec.keys` entry: destination in the merged reply.
+    key_dst: Vec<CellDst>,
+}
+
+/// N per-server links behind one [`Transport`]. See the module docs
+/// for the split/merge and clock-fold contracts.
+pub struct RoutedTransport {
+    inner: Vec<Box<dyn Transport>>,
+    route: Arc<RouteMap>,
+    /// Inner RPCs issued by this link's fan-out — `route.fanout_rpcs`.
+    fanout_rpcs: Arc<AtomicU64>,
+}
+
+impl RoutedTransport {
+    /// Wrap `inner[i]` as the link to server `i` of `route`.
+    pub fn new(
+        inner: Vec<Box<dyn Transport>>,
+        route: Arc<RouteMap>,
+        fanout_rpcs: Arc<AtomicU64>,
+    ) -> Self {
+        assert_eq!(inner.len(), route.servers(), "one inner link per routed server");
+        RoutedTransport { inner, route, fanout_rpcs }
+    }
+
+    fn rpc(&self) {
+        self.fanout_rpcs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Split `spec` by owning server. Ranges decompose into sub-ranges
+    /// (sub-segment stretches) plus per-key cell requests (hashed
+    /// gaps); scattered keys go to their owner as keys.
+    fn split_spec(&self, spec: &PullSpec) -> Vec<SubSpec> {
+        let mut subs: Vec<SubSpec> = (0..self.route.servers()).map(|_| SubSpec::default()).collect();
+        for (range, &(start, len)) in spec.ranges.iter().enumerate() {
+            self.route.for_each_piece(start, len, |piece| match piece {
+                Piece::Run { server, start: s, len: l } => {
+                    subs[server].spec.push_range(s, l);
+                    subs[server].range_dst.push((range, s - start));
+                }
+                Piece::Key { server, key } => {
+                    subs[server].spec.push_key(key);
+                    subs[server].key_dst.push(CellDst::Range { range, offset: key - start });
+                }
+            });
+        }
+        for (idx, &key) in spec.keys.iter().enumerate() {
+            let server = self.route.owner_of(key);
+            subs[server].spec.push_key(key);
+            subs[server].key_dst.push(CellDst::Cell { idx });
+        }
+        subs
+    }
+}
+
+impl Transport for RoutedTransport {
+    fn pull(&mut self, spec: &PullSpec, round: u64) -> Result<PullReply, TransportError> {
+        let subs = self.split_spec(spec);
+        // Merged scaffolding: one owned image per requested range
+        // (version starts at MAX and min-folds over the fragments —
+        // zero-cell ranges fall back to 0, like the store's own
+        // oldest-across-the-span read).
+        let mut ranges: Vec<(u64, Vec<f32>)> =
+            spec.ranges.iter().map(|&(_, len)| (u64::MAX, vec![0.0f32; len])).collect();
+        let mut cells = vec![Cell::default(); spec.keys.len()];
+        let (mut gap, mut waited, mut gate_us) = (0u64, false, 0u64);
+        // An all-empty spec still has to consult (and possibly block
+        // at) the SSP gate, like a single server would: send it to
+        // server 0.
+        let involved = subs.iter().any(|s| !s.spec.is_empty());
+        for (server, sub) in subs.iter().enumerate() {
+            if sub.spec.is_empty() && (involved || server != 0) {
+                continue;
+            }
+            let reply = self.inner[server].pull(&sub.spec, round)?;
+            self.rpc();
+            gap = gap.max(reply.gap);
+            waited |= reply.waited;
+            gate_us += reply.gate_us;
+            // Fragments come back in request order: ranges, then keys.
+            for (frag, &(dst, off)) in reply.ranges.iter().zip(&sub.range_dst) {
+                let (version, out) = &mut ranges[dst];
+                out[off..off + frag.len()].copy_from_slice(frag.values());
+                *version = (*version).min(frag.version());
+            }
+            for (cell, dst) in reply.cells.iter().zip(&sub.key_dst) {
+                match *dst {
+                    CellDst::Range { range, offset } => {
+                        let (version, out) = &mut ranges[range];
+                        out[offset] = cell.value as f32;
+                        *version = (*version).min(cell.version);
+                    }
+                    CellDst::Cell { idx } => cells[idx] = *cell,
+                }
+            }
+        }
+        let ranges = spec
+            .ranges
+            .iter()
+            .zip(ranges)
+            .map(|(&(start, _), (version, values))| {
+                RangePull::owned(start, if version == u64::MAX { 0 } else { version }, values)
+            })
+            .collect();
+        Ok(PullReply { ranges, cells, gap, waited, gate_us })
+    }
+
+    fn flush(
+        &mut self,
+        deltas: &[(usize, f64)],
+        round: u64,
+        block: u64,
+    ) -> Result<bool, TransportError> {
+        let mut parts: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.route.servers()];
+        for &(key, value) in deltas {
+            parts[self.route.owner_of(key)].push((key, value));
+        }
+        // Broadcast — even empty shares — so every server's clock
+        // ticks this worker's round and the fleet's gates stay in
+        // lock-step. The verdict is the AND: the (round, block)
+        // ledgers advance identically on every server, so a drop on
+        // one is a drop on all.
+        let mut applied = true;
+        for (server, part) in parts.iter().enumerate() {
+            applied &= self.inner[server].flush(part, round, block)?;
+            self.rpc();
+        }
+        Ok(applied)
+    }
+
+    fn join(&mut self, worker: usize) -> Result<(), TransportError> {
+        for link in &mut self.inner {
+            link.join(worker)?;
+            self.fanout_rpcs.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn leave(&mut self, worker: usize) -> Result<(), TransportError> {
+        for link in &mut self.inner {
+            link.leave(worker)?;
+            self.fanout_rpcs.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn publish(
+        &mut self,
+        entries: &[(usize, f64)],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        let mut parts: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.route.servers()];
+        for &(key, value) in entries {
+            parts[self.route.owner_of(key)].push((key, value));
+        }
+        for (server, part) in parts.iter().enumerate() {
+            if !part.is_empty() {
+                self.inner[server].publish(part, version)?;
+                self.rpc();
+            }
+        }
+        Ok(())
+    }
+
+    fn publish_range(
+        &mut self,
+        start: usize,
+        values: &[f64],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        let route = Arc::clone(&self.route);
+        let mut runs = Vec::new();
+        let mut gaps: Vec<Vec<(usize, f64)>> = vec![Vec::new(); route.servers()];
+        route.for_each_piece(start, values.len(), |piece| match piece {
+            Piece::Run { server, start: s, len } => runs.push((server, s, len)),
+            Piece::Key { server, key } => gaps[server].push((key, values[key - start])),
+        });
+        for (server, s, len) in runs {
+            self.inner[server].publish_range(s, &values[s - start..s - start + len], version)?;
+            self.rpc();
+        }
+        for (server, part) in gaps.iter().enumerate() {
+            if !part.is_empty() {
+                self.inner[server].publish(part, version)?;
+                self.rpc();
+            }
+        }
+        Ok(())
+    }
+
+    fn publish_range_f32(
+        &mut self,
+        start: usize,
+        values: &[f32],
+        version: u64,
+    ) -> Result<(), TransportError> {
+        let route = Arc::clone(&self.route);
+        let mut runs = Vec::new();
+        let mut gaps: Vec<Vec<(usize, f64)>> = vec![Vec::new(); route.servers()];
+        route.for_each_piece(start, values.len(), |piece| match piece {
+            Piece::Run { server, start: s, len } => runs.push((server, s, len)),
+            // Hashed cells store full f64 either way, so widening here
+            // matches what the store's own f32 seed path does to them.
+            Piece::Key { server, key } => gaps[server].push((key, values[key - start] as f64)),
+        });
+        for (server, s, len) in runs {
+            self.inner[server].publish_range_f32(
+                s,
+                &values[s - start..s - start + len],
+                version,
+            )?;
+            self.rpc();
+        }
+        for (server, part) in gaps.iter().enumerate() {
+            if !part.is_empty() {
+                self.inner[server].publish(part, version)?;
+                self.rpc();
+            }
+        }
+        Ok(())
+    }
+
+    fn advance_applied(&mut self, applied: u64) -> Result<(), TransportError> {
+        for link in &mut self.inner {
+            link.advance_applied(applied)?;
+            self.fanout_rpcs.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn stats(&mut self) -> Result<StatsSnapshot, TransportError> {
+        let mut acc = StatsSnapshot::default();
+        for link in &mut self.inner {
+            let s = link.stats()?;
+            acc.bytes_flushed += s.bytes_flushed;
+            acc.bytes_republished += s.bytes_republished;
+            acc.bytes_pulled += s.bytes_pulled;
+            acc.cells_pulled += s.cells_pulled;
+            acc.snapshot_clones += s.snapshot_clones;
+            acc.flushes += s.flushes;
+            acc.pulls += s.pulls;
+            acc.stale_gap_sum += s.stale_gap_sum;
+            acc.max_stale_gap = acc.max_stale_gap.max(s.max_stale_gap);
+            acc.gate_waits += s.gate_waits;
+            acc.flushes_dropped += s.flushes_dropped;
+            acc.hash_probes += s.hash_probes;
+            acc.cow_clones += s.cow_clones;
+            acc.cow_bytes += s.cow_bytes;
+        }
+        Ok(acc)
+    }
+
+    fn obs_stats(&mut self) -> Result<ObsSnapshot, TransportError> {
+        let mut snaps = Vec::with_capacity(self.inner.len());
+        for link in &mut self.inner {
+            snaps.push(link.obs_stats()?);
+        }
+        Ok(merge_obs(snaps))
+    }
+
+    fn shutdown_clock(&mut self) -> Result<(), TransportError> {
+        for link in &mut self.inner {
+            link.shutdown_clock()?;
+            self.fanout_rpcs.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+}
+
+/// Fold per-server introspection snapshots into one fleet view:
+/// metrics sum by name (`route.index` is dropped — it differs by
+/// construction; `route.servers` takes the max), segments concatenate
+/// (disjoint sub-segments of a disjoint fleet) and sort, and the clock
+/// folds to the most conservative reading — `applied` and each worker
+/// clock as the min across servers, which is the gate the slowest
+/// server enforces.
+fn merge_obs(snaps: Vec<ObsSnapshot>) -> ObsSnapshot {
+    let mut out = ObsSnapshot {
+        version: snaps.first().map_or(0, |s| s.version),
+        metrics: Vec::new(),
+        segments: Vec::new(),
+        clock: None,
+    };
+    for snap in snaps {
+        for (name, value) in snap.metrics {
+            if name == "route.index" {
+                continue;
+            }
+            match out.metrics.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, acc)) => merge_metric(&name, acc, value),
+                None => out.metrics.push((name, value)),
+            }
+        }
+        out.segments.extend(snap.segments);
+        out.clock = match (out.clock.take(), snap.clock) {
+            (Some(a), Some(b)) => Some(ClockView {
+                applied: a.applied.min(b.applied),
+                staleness_bound: a.staleness_bound,
+                worker_clocks: a
+                    .worker_clocks
+                    .iter()
+                    .zip(&b.worker_clocks)
+                    .map(|(&x, &y)| x.min(y))
+                    .collect(),
+            }),
+            (a, b) => a.or(b),
+        };
+    }
+    out.metrics.sort_by(|a, b| a.0.cmp(&b.0));
+    out.segments.sort_unstable();
+    out
+}
+
+fn merge_metric(name: &str, acc: &mut MetricValue, incoming: MetricValue) {
+    match (acc, incoming) {
+        (MetricValue::Counter(a), MetricValue::Counter(b)) => *a += b,
+        (MetricValue::Gauge(a), MetricValue::Gauge(b)) => {
+            if name == "route.servers" {
+                *a = (*a).max(b);
+            } else {
+                *a += b;
+            }
+        }
+        (
+            MetricValue::Histogram { bounds, counts, sum, count },
+            MetricValue::Histogram { bounds: b2, counts: c2, sum: s2, count: n2 },
+        ) if *bounds == b2 && counts.len() == c2.len() => {
+            for (a, b) in counts.iter_mut().zip(c2) {
+                *a += b;
+            }
+            *sum += s2;
+            *count += n2;
+        }
+        // Mismatched kinds/shapes: keep the first reading.
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::transport::InProcTransport;
+    use crate::ps::{ParameterServer, StalenessPolicy};
+
+    #[test]
+    fn route_map_ceil_splits_segments_and_hashes_gaps() {
+        let route = RouteMap::new(&[(0, 100), (200, 51)], 2);
+        assert_eq!(route.servers(), 2);
+        assert_eq!(route.server_segments(0), vec![(0, 50), (200, 26)]);
+        assert_eq!(route.server_segments(1), vec![(50, 50), (226, 25)]);
+        assert_eq!(route.owner_of(0), 0);
+        assert_eq!(route.owner_of(49), 0);
+        assert_eq!(route.owner_of(50), 1);
+        assert_eq!(route.owner_of(99), 1);
+        assert_eq!(route.owner_of(200), 0);
+        assert_eq!(route.owner_of(226), 1);
+        // gap keys spread over both servers
+        let owners: std::collections::HashSet<usize> =
+            (1000..1100).map(|k| route.owner_of(k)).collect();
+        assert_eq!(owners.len(), 2, "hash fallback must use the whole fleet");
+        // the degenerate single-server route owns everything
+        let one = RouteMap::new(&[(0, 10)], 1);
+        assert_eq!(one.server_segments(0), vec![(0, 10)]);
+        for k in [0, 5, 9, 12345] {
+            assert_eq!(one.owner_of(k), 0);
+        }
+    }
+
+    #[test]
+    fn tiny_segments_drop_empty_shares() {
+        // 4 servers, 2 cells: only the first two get a share.
+        let route = RouteMap::new(&[(10, 2)], 4);
+        assert_eq!(route.server_segments(0), vec![(10, 1)]);
+        assert_eq!(route.server_segments(1), vec![(11, 1)]);
+        assert!(route.server_segments(2).is_empty());
+        assert!(route.server_segments(3).is_empty());
+    }
+
+    fn fleet(
+        segments: &[(usize, usize)],
+        servers: usize,
+        workers: usize,
+    ) -> (RoutedTransport, Vec<Arc<ParameterServer>>, Arc<RouteMap>) {
+        let route = Arc::new(RouteMap::new(segments, servers));
+        let hosts: Vec<Arc<ParameterServer>> = (0..servers)
+            .map(|i| {
+                Arc::new(ParameterServer::with_segments(
+                    2,
+                    workers,
+                    StalenessPolicy::Bounded(0),
+                    &route.server_segments(i),
+                ))
+            })
+            .collect();
+        let inner: Vec<Box<dyn Transport>> = hosts
+            .iter()
+            .map(|h| Box::new(InProcTransport::new(Arc::clone(h), 0)) as Box<dyn Transport>)
+            .collect();
+        let routed =
+            RoutedTransport::new(inner, Arc::clone(&route), Arc::new(AtomicU64::new(0)));
+        (routed, hosts, route)
+    }
+
+    #[test]
+    fn split_pull_reassembles_ranges_and_cells_bitwise() {
+        let (mut routed, _hosts, _route) = fleet(&[(0, 16)], 2, 1);
+        let values: Vec<f64> = (0..16).map(|i| i as f64 * 0.5).collect();
+        routed.publish_range(0, &values, 0).unwrap();
+        routed.publish(&[(100, 42.0), (101, -7.0)], 0).unwrap();
+        let spec = PullSpec { ranges: vec![(4, 9)], keys: vec![101, 100] };
+        let reply = routed.pull(&spec, 0).unwrap();
+        assert_eq!(reply.ranges.len(), 1);
+        assert_eq!(reply.ranges[0].start(), 4);
+        let want: Vec<u32> = (4..13).map(|i| ((i as f32) * 0.5).to_bits()).collect();
+        let got: Vec<u32> = reply.ranges[0].values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "range spanning the server cut must reassemble bitwise");
+        assert_eq!(reply.cells[0].value, -7.0, "cells come back in request-key order");
+        assert_eq!(reply.cells[1].value, 42.0);
+    }
+
+    #[test]
+    fn pull_merges_hashed_gap_keys_into_the_range() {
+        // range 48..58 covers a hashed gap (48, 49) plus the segment
+        let (mut routed, _hosts, _route) = fleet(&[(50, 10)], 2, 1);
+        routed.publish(&[(48, 1.0), (49, 2.0)], 0).unwrap();
+        routed.publish_range(50, &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0], 0).unwrap();
+        let reply = routed.pull(&PullSpec::from_ranges(vec![(48, 6)]), 0).unwrap();
+        assert_eq!(reply.ranges[0].values(), &[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn flush_broadcasts_and_folds_the_verdict() {
+        let (mut routed, hosts, route) = fleet(&[(0, 8)], 2, 1);
+        assert!(routed.flush(&[(1, 0.5), (6, -0.5)], 0, 3).unwrap());
+        // every server ticked worker 0's clock, owners got their share
+        for host in &hosts {
+            assert_eq!(host.clock().worker_clocks()[0], 1);
+        }
+        assert_eq!(hosts[route.owner_of(1)].store().read(&[1])[0].value, 0.5);
+        assert_eq!(hosts[route.owner_of(6)].store().read(&[6])[0].value, -0.5);
+        // a replayed (round, block) is dropped by every ledger: AND = false
+        assert!(!routed.flush(&[(1, 0.5)], 0, 3).unwrap());
+    }
+
+    #[test]
+    fn stats_and_obs_fold_across_the_fleet() {
+        let (mut routed, _hosts, _route) = fleet(&[(0, 8)], 2, 1);
+        routed.publish_range(0, &[1.0; 8], 0).unwrap();
+        routed.advance_applied(0).unwrap();
+        routed.pull(&PullSpec::from_ranges(vec![(0, 8)]), 0).unwrap();
+        let stats = routed.stats().unwrap();
+        assert_eq!(stats.pulls, 2, "one pull per involved server");
+        assert_eq!(stats.cells_pulled, 8, "each cell pulled exactly once");
+        let snap = routed.obs_stats().unwrap();
+        assert_eq!(snap.get("ps.pulls").unwrap().as_u64(), 2);
+        assert_eq!(
+            snap.segments.iter().map(|&(s, l, _)| (s, l)).collect::<Vec<_>>(),
+            vec![(0, 4), (4, 4)],
+            "fleet segments concatenate sorted"
+        );
+        let clock = snap.clock.as_ref().expect("merged clock");
+        assert_eq!(clock.applied, 0);
+    }
+
+    #[test]
+    fn empty_pull_still_consults_one_gate() {
+        let (mut routed, hosts, _route) = fleet(&[(0, 4)], 2, 1);
+        routed.pull(&PullSpec::default(), 0).unwrap();
+        assert_eq!(hosts[0].stats_snapshot().pulls, 1, "server 0 carries the empty pull");
+        assert_eq!(hosts[1].stats_snapshot().pulls, 0);
+        // and shutdown reaches every gate
+        routed.shutdown_clock().unwrap();
+        let err = routed.pull(&PullSpec::from_keys(vec![0]), 5).unwrap_err();
+        assert!(err.is_shutdown(), "{err}");
+    }
+}

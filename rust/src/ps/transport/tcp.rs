@@ -110,6 +110,8 @@ impl TcpTransport {
     /// Send `Init`, (re)configuring the hosted server for this run. A
     /// nonzero `session` matching the hosted run reattaches to it
     /// (idempotent re-`Init` after a reconnect) instead of replacing.
+    /// This single-server form announces the degenerate route `(0, 1)`;
+    /// routed fleets go through [`TcpTransport::init_routed`].
     pub fn init(
         &mut self,
         session: u64,
@@ -119,6 +121,27 @@ impl TcpTransport {
         segments: &[(usize, usize)],
         chunk_cells: usize,
     ) -> Result<(), TransportError> {
+        self.init_routed(session, shards, workers, policy, segments, chunk_cells, 0, 1)
+    }
+
+    /// [`TcpTransport::init`] announcing this link's place in a routed
+    /// fleet: the server is `route_index` of `route_servers`, and
+    /// `segments` are the sub-segments it owns (see
+    /// [`super::RouteMap::server_segments`]). The route is
+    /// informational on the server side — it labels the reporter and
+    /// `ps-stats` output via the `route.*` gauges.
+    #[allow(clippy::too_many_arguments)]
+    pub fn init_routed(
+        &mut self,
+        session: u64,
+        shards: usize,
+        workers: usize,
+        policy: StalenessPolicy,
+        segments: &[(usize, usize)],
+        chunk_cells: usize,
+        route_index: usize,
+        route_servers: usize,
+    ) -> Result<(), TransportError> {
         let req = Request::Init {
             worker: self.worker,
             session,
@@ -127,6 +150,8 @@ impl TcpTransport {
             policy,
             segments: segments.to_vec(),
             chunk_cells,
+            route_index,
+            route_servers,
         };
         match self.rpc(&req)? {
             Reply::Ok => Ok(()),
@@ -154,6 +179,25 @@ impl TcpTransport {
 
 fn unexpected(reply: &Reply) -> TransportError {
     TransportError::Protocol(format!("unexpected reply kind: {reply:?}"))
+}
+
+/// ` server=i/N shards=[lo..hi)` suffix for the reporter digest: which
+/// member of a routed fleet this process is and the key span it hosts
+/// — the line that makes N identical-looking `ps-server` digests
+/// tellable apart. Empty for a pre-v6 run with no segments.
+fn shard_label(snap: &crate::obs::ObsSnapshot) -> String {
+    let mut label = String::new();
+    let servers = snap.get("route.servers").map(|v| v.as_u64()).unwrap_or(0);
+    if servers > 0 {
+        let index = snap.get("route.index").map(|v| v.as_u64()).unwrap_or(0);
+        label.push_str(&format!(" server={index}/{servers}"));
+    }
+    if !snap.segments.is_empty() {
+        let lo = snap.segments.iter().map(|&(s, _, _)| s).min().unwrap();
+        let hi = snap.segments.iter().map(|&(s, l, _)| s + l).max().unwrap();
+        label.push_str(&format!(" shards=[{lo}..{hi})"));
+    }
+    label
 }
 
 impl Transport for TcpTransport {
@@ -416,8 +460,9 @@ impl PsTcpServer {
                     let metric = |name: &str| snap.get(name).map(|v| v.as_u64()).unwrap_or(0);
                     let applied = snap.clock.as_ref().map(|c| c.applied).unwrap_or(0);
                     eprintln!(
-                        "[obs] applied={} pulls={} pull_bytes={} flushes={} gate_waits={} \
+                        "[obs]{} applied={} pulls={} pull_bytes={} flushes={} gate_waits={} \
                          reconnects={} ckpt_writes={}",
+                        shard_label(&snap),
                         applied,
                         metric("ps.pulls"),
                         metric("ps.pull_bytes"),
@@ -537,7 +582,17 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                 },
             };
         }
-        Request::Init { worker, session, shards, workers, policy, segments, chunk_cells } => {
+        Request::Init {
+            worker,
+            session,
+            shards,
+            workers,
+            policy,
+            segments,
+            chunk_cells,
+            route_index,
+            route_servers,
+        } => {
             let mut state = shared.state.lock().expect("state lock");
             if let Some(hosted) = state.server.as_ref() {
                 if session != 0 && session == state.session {
@@ -557,6 +612,11 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
                         let hosted = Arc::clone(hosted);
                         let first_attach = state.attached.insert(worker);
                         drop(state);
+                        // Re-set on every attach: a checkpoint-restored
+                        // server's registry starts empty, so the first
+                        // reattach after a restart relabels it.
+                        hosted.registry().gauge("route.index").set(route_index as u64);
+                        hosted.registry().gauge("route.servers").set(route_servers as u64);
                         if !first_attach {
                             // This link attached before: a true
                             // reconnect, visible in `ps-stats` and the
@@ -585,6 +645,11 @@ fn dispatch(shared: &ServerShared, req: Request) -> Reply {
             // so `ps-stats` always lists them, even at zero.
             server.registry().counter("net.reconnects");
             server.registry().counter("ckpt.writes");
+            // The fleet placement this Init announced (v5 peers decode
+            // as 0/1): labels the reporter and `ps-stats` so N-server
+            // fleets are tellable apart.
+            server.registry().gauge("route.index").set(route_index as u64);
+            server.registry().gauge("route.servers").set(route_servers as u64);
             // Replace any previous run's server: back-to-back runs (the
             // staleness sweep) each re-Init the same host process.
             // Waking the replaced clock frees any connection thread a

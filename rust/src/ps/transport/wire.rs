@@ -47,11 +47,19 @@ use std::io::{Read, Write};
 /// lossless because dense slots store f32 anyway (`(v as f32) as f64`
 /// re-narrows bit-identically), so staleness-0 runs are bitwise
 /// identical with compression on or off.
-pub const PROTO_VERSION: u16 = 5;
+/// v6 (multi-server routing): `Init` carries the link's place in a
+/// sharded server fleet — `route_index` (which server this Init
+/// addresses) and `route_servers` (fleet size) — so an N-server
+/// `RoutedTransport` fan-out is negotiated in the same handshake a
+/// single server uses. A v5 single-server peer's Init decodes as
+/// `(route_index, route_servers) = (0, 1)`, the degenerate one-server
+/// route, so the decode-back window moves to v5.
+pub const PROTO_VERSION: u16 = 6;
 
 /// Oldest `Init` protocol revision the decode side still accepts
-/// (pre-chunking clients: `chunk_cells` defaults to 0).
-pub const MIN_PROTO_VERSION: u16 = 4;
+/// (pre-routing clients: `route_index`/`route_servers` default to the
+/// degenerate single-server route `(0, 1)`).
+pub const MIN_PROTO_VERSION: u16 = 5;
 
 /// Frames above this are corruption, not data (guards allocation).
 pub const MAX_FRAME: u32 = 1 << 30;
@@ -111,6 +119,14 @@ pub enum Request {
         /// built with (0 = one chunk per segment). v5; a v4 `Init`
         /// decodes as 0.
         chunk_cells: usize,
+        /// Which server of a routed fleet this `Init` addresses (v6):
+        /// `0 <= route_index < route_servers`. Purely informational to
+        /// the server (labels `ps-stats`/reporter output); the segments
+        /// above are already the sub-range this server owns.
+        route_index: usize,
+        /// Routed fleet size (v6). 1 = the classic single-server
+        /// topology; a v5 `Init` decodes as `(0, 1)`.
+        route_servers: usize,
     },
     /// SSP-gated read of a [`PullSpec`] by `worker`; blocks server-side
     /// until the applied clock admits `round`. A retired worker's pull
@@ -649,7 +665,17 @@ pub fn encode_publish_maybe_runs(
 /// Encode a request into one frame payload (opcode + body).
 pub fn encode_request(req: &Request) -> Vec<u8> {
     match req {
-        Request::Init { worker, session, shards, workers, policy, segments, chunk_cells } => {
+        Request::Init {
+            worker,
+            session,
+            shards,
+            workers,
+            policy,
+            segments,
+            chunk_cells,
+            route_index,
+            route_servers,
+        } => {
             let mut b = Vec::new();
             b.push(op::INIT);
             put_u16(&mut b, PROTO_VERSION);
@@ -673,6 +699,8 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
                 put_u64(&mut b, len as u64);
             }
             put_u64(&mut b, *chunk_cells as u64);
+            put_u32(&mut b, *route_index as u32);
+            put_u32(&mut b, *route_servers as u32);
             b
         }
         Request::Pull { worker, round, spec } => encode_pull(*worker, *round, spec),
@@ -737,9 +765,29 @@ pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
             for _ in 0..nseg {
                 segments.push((r.u64()? as usize, r.u64()? as usize));
             }
-            // v4 peers end the frame here: one whole-segment chunk.
-            let chunk_cells = if proto >= 5 { r.u64()? as usize } else { 0 };
-            Request::Init { worker, session, shards, workers, policy, segments, chunk_cells }
+            let chunk_cells = r.u64()? as usize;
+            // v5 peers end the frame here: the single-server route.
+            let (route_index, route_servers) = if proto >= 6 {
+                (r.u32()? as usize, r.u32()? as usize)
+            } else {
+                (0, 1)
+            };
+            if route_servers == 0 || route_index >= route_servers {
+                return Err(WireError(format!(
+                    "bad route {route_index}/{route_servers} in Init"
+                )));
+            }
+            Request::Init {
+                worker,
+                session,
+                shards,
+                workers,
+                policy,
+                segments,
+                chunk_cells,
+                route_index,
+                route_servers,
+            }
         }
         op::PULL => {
             let worker = r.u32()? as usize;
@@ -1071,6 +1119,8 @@ mod tests {
                 policy: StalenessPolicy::Bounded(2),
                 segments: vec![(0, 100), (200, 50)],
                 chunk_cells: 64,
+                route_index: 1,
+                route_servers: 2,
             },
             Request::Init {
                 worker: 0,
@@ -1080,6 +1130,8 @@ mod tests {
                 policy: StalenessPolicy::Async,
                 segments: vec![],
                 chunk_cells: 0,
+                route_index: 0,
+                route_servers: 1,
             },
             Request::Pull {
                 worker: 2,
@@ -1276,6 +1328,8 @@ mod tests {
             policy: StalenessPolicy::Bounded(0),
             segments: vec![],
             chunk_cells: 0,
+            route_index: 0,
+            route_servers: 1,
         });
         init[1] = 0xFF; // clobber the proto version
         let err = decode_request(&init).unwrap_err();
@@ -1283,10 +1337,11 @@ mod tests {
     }
 
     #[test]
-    fn v4_init_still_decodes_without_the_chunk_field() {
-        // A v4 peer's Init is the v5 frame minus the trailing
-        // chunk_cells u64, with the proto field saying 4. Craft one
-        // from the v5 encoder and it must decode with chunk_cells 0.
+    fn v5_init_still_decodes_without_the_route_fields() {
+        // A v5 peer's Init is the v6 frame minus the two trailing
+        // route u32s, with the proto field saying 5. Craft one from
+        // the v6 encoder and it must decode with chunk_cells intact
+        // and the degenerate single-server route (0, 1).
         let mut init = encode_request(&Request::Init {
             worker: 3,
             session: 77,
@@ -1294,7 +1349,9 @@ mod tests {
             workers: 4,
             policy: StalenessPolicy::Bounded(1),
             segments: vec![(0, 16), (32, 8)],
-            chunk_cells: 9, // dropped with the trailing bytes below
+            chunk_cells: 9,
+            route_index: 1, // dropped with the trailing bytes below
+            route_servers: 2,
         });
         init.truncate(init.len() - 8);
         init[1..3].copy_from_slice(&(MIN_PROTO_VERSION).to_le_bytes());
@@ -1308,9 +1365,37 @@ mod tests {
                 workers: 4,
                 policy: StalenessPolicy::Bounded(1),
                 segments: vec![(0, 16), (32, 8)],
-                chunk_cells: 0,
+                chunk_cells: 9,
+                route_index: 0,
+                route_servers: 1,
             }
         );
+    }
+
+    #[test]
+    fn bogus_route_in_init_is_rejected() {
+        let good = encode_request(&Request::Init {
+            worker: 0,
+            session: 1,
+            shards: 1,
+            workers: 1,
+            policy: StalenessPolicy::Async,
+            segments: vec![],
+            chunk_cells: 0,
+            route_index: 0,
+            route_servers: 1,
+        });
+        // route_index >= route_servers: clobber the trailing 8 bytes
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 8..n - 4].copy_from_slice(&2u32.to_le_bytes());
+        bad[n - 4..].copy_from_slice(&2u32.to_le_bytes());
+        assert!(decode_request(&bad).unwrap_err().0.contains("route"));
+        // route_servers == 0
+        let mut zero = good;
+        let n = zero.len();
+        zero[n - 4..].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_request(&zero).unwrap_err().0.contains("route"));
     }
 
     /// The run codec's contract: whatever the batch, encoding then

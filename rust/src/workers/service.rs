@@ -521,6 +521,19 @@ pub struct DistributedReport {
     pub reconnects: u64,
     /// Total retry backoff slept across every link, in microseconds.
     pub retry_backoff_us: u64,
+    /// Parameter-server fleet size this run routed over (1 = the
+    /// classic single server, in-process or TCP).
+    pub route_servers: usize,
+    /// Inner RPCs the routed fan-out issued (0 single-server) — the
+    /// cost of splitting each pull/flush/publish across the fleet.
+    pub route_fanout_rpcs: u64,
+    /// Real socket bytes per fleet member, indexed like `[ps] addr`
+    /// (one entry holding the total for single-server runs).
+    pub socket_bytes_per_server: Vec<u64>,
+    /// Reconnects per fleet member, indexed like `[ps] addr` — the
+    /// chaos suite pins that a kill shows up on exactly the killed
+    /// server's links.
+    pub reconnects_per_server: Vec<u64>,
     /// Which transport carried the run (`inproc` | `tcp`).
     pub transport: &'static str,
     /// Flush heartbeats the supervisor observed (one per worker flush,
@@ -1033,6 +1046,18 @@ pub fn run_distributed(
         registry.counter("net.reconnects").set(conn.reconnects());
         registry.counter("net.retry_backoff_us").set(conn.retry_backoff_us());
         registry.gauge("wire.runs_encoded").set(conn.runs_encoded());
+        registry.gauge("route.servers").set(conn.route_servers() as u64);
+        registry.counter("route.fanout_rpcs").set(conn.route_fanout_rpcs());
+        if conn.route_servers() > 1 {
+            // Per-member traffic, indexed like `[ps] addr`, so a fleet
+            // run shows where its bytes (and reconnects) went.
+            for (i, bytes) in conn.socket_bytes_per_server().iter().enumerate() {
+                registry.gauge(&format!("net.socket_bytes_s{i}")).set(*bytes);
+            }
+            for (i, r) in conn.reconnects_per_server().iter().enumerate() {
+                registry.gauge(&format!("net.reconnects_s{i}")).set(*r);
+            }
+        }
         let mut metrics = conn.coord().obs_stats()?.metrics;
         metrics.extend(registry.snapshot());
         metrics.sort_by(|a, b| a.0.cmp(&b.0));
@@ -1071,6 +1096,10 @@ pub fn run_distributed(
         socket_bytes: conn.socket_bytes(),
         reconnects: conn.reconnects(),
         retry_backoff_us: conn.retry_backoff_us(),
+        route_servers: conn.route_servers(),
+        route_fanout_rpcs: conn.route_fanout_rpcs(),
+        socket_bytes_per_server: conn.socket_bytes_per_server(),
+        reconnects_per_server: conn.reconnects_per_server(),
         transport: cfg.ps.transport.name(),
         sup_heartbeats: sup_heartbeats.get(),
         sup_leases_expired: sup_leases_expired.get(),

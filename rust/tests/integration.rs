@@ -155,6 +155,11 @@ fn config_presets_load_and_apply() {
     assert!(cfg.ps.dense_segments && cfg.ps.pipeline);
     assert_eq!(cfg.ps.transport, strads::ps::TransportKind::InProc);
     assert_eq!(cfg.ps.addr, "127.0.0.1:37021");
+    assert_eq!(
+        cfg.ps.addrs(),
+        ["127.0.0.1:37021"],
+        "the preset documents the degenerate one-server fleet"
+    );
     // ...including the fault-tolerance knobs (documented at defaults:
     // retries off, fault injection off, checkpointing off)
     assert_eq!(cfg.ps.retry_max, 0);

@@ -20,6 +20,7 @@ use strads::lasso::NativeLasso;
 use strads::mf::DistMf;
 use strads::ps::transport::tcp::TcpTransport;
 use strads::ps::transport::wire::{self, Reply};
+use strads::ps::transport::Transport;
 use strads::ps::{CheckpointConfig, PsTcpServer, PullSpec, StalenessPolicy, TransportKind};
 use strads::workers::{run_distributed, DistributedReport};
 
@@ -258,7 +259,7 @@ fn hostile_frames_get_clean_errors_and_leave_the_server_serving() {
     let (host, addr) = loopback_host();
     let bytes = Arc::new(AtomicU64::new(0));
     let mut coord = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
-    coord.init(9, 1, 1, StalenessPolicy::Bounded(0), &[(0, 4)]).unwrap();
+    coord.init(9, 1, 1, StalenessPolicy::Bounded(0), &[(0, 4)], 0).unwrap();
     coord.publish_range(0, &[1.0, 2.0, 3.0, 4.0], 0).unwrap();
 
     // Unknown opcode inside a well-formed frame: a clean, non-fatal

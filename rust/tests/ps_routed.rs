@@ -1,0 +1,453 @@
+//! The routed-fleet suite: N-server sharded PS topology pinned against
+//! the single-server semantics it must reproduce exactly.
+//!
+//! * A seeded property test drives identical randomized op sequences
+//!   through a `RoutedTransport` fanned over N in-process servers and
+//!   through one unsplit server, and every pull must come back
+//!   observationally identical (contract 11 at the transport level).
+//! * Run-level parity: staleness-0 Lasso and MF runs are bitwise
+//!   identical in-process, over one TCP server, and over a two-server
+//!   routed fleet — on *both* orderings of the server list.
+//! * Chaos: killing one of two servers mid-run and restarting it from
+//!   its checkpoint completes every round, lands within tolerance, and
+//!   meters reconnects on exactly the killed server's link.
+//! * Fault injection composes with routing: a seeded fault plan over a
+//!   two-server run stays bitwise invisible under retry.
+//! * `strads ps-stats` output labels each fleet member with its shard
+//!   range and route position.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use strads::config::RunConfig;
+use strads::data::lasso_synth::{self, LassoSynthSpec};
+use strads::data::mf_powerlaw::{self, MfSynthSpec};
+use strads::lasso::NativeLasso;
+use strads::mf::DistMf;
+use strads::ps::transport::tcp::TcpTransport;
+use strads::ps::transport::{InProcTransport, RouteMap, RoutedTransport, Transport};
+use strads::ps::{
+    CheckpointConfig, ParameterServer, PsTcpServer, PullSpec, StalenessPolicy, TransportKind,
+};
+use strads::util::Rng;
+use strads::workers::{run_distributed, DistributedReport};
+
+// ---------------------------------------------------------------------
+// Split/merge property test: routed N-server fleet vs one unsplit
+// server, identical op sequences, observationally identical pulls.
+// ---------------------------------------------------------------------
+
+const KEY_SPACE: usize = 160;
+/// Reads and writes also probe past the dense key space (hashed keys).
+const MODEL_SPACE: usize = KEY_SPACE + 20;
+
+fn in_seg(segs: &[(usize, usize)], key: usize) -> bool {
+    segs.iter().any(|&(s, l)| key >= s && key < s + l)
+}
+
+/// Build a routed transport over `servers` in-process servers, each
+/// hosting its `RouteMap` share, plus the unsplit reference server.
+fn routed_and_reference(
+    segs: &[(usize, usize)],
+    servers: usize,
+) -> (RoutedTransport, InProcTransport) {
+    let route = Arc::new(RouteMap::new(segs, servers));
+    let inner: Vec<Box<dyn Transport>> = (0..servers)
+        .map(|i| {
+            let host = Arc::new(ParameterServer::with_segments(
+                2,
+                1,
+                StalenessPolicy::Bounded(0),
+                &route.server_segments(i),
+            ));
+            Box::new(InProcTransport::new(host, 0)) as Box<dyn Transport>
+        })
+        .collect();
+    let routed = RoutedTransport::new(inner, route, Arc::new(AtomicU64::new(0)));
+    let single = Arc::new(ParameterServer::with_segments(
+        2,
+        1,
+        StalenessPolicy::Bounded(0),
+        segs,
+    ));
+    (routed, InProcTransport::new(single, 0))
+}
+
+/// Pull the same spec through both transports and compare what a
+/// client can observe. Values are compared bitwise; range *versions*
+/// are exempt by design — a sub-segment is its own epoch chunk, so a
+/// partial publish moves fewer chunk versions on the fleet than on the
+/// unsplit store (the min-fold is still a valid oldest-across-the-span
+/// bound, pinned per-shape by the unit tests in `routed.rs`).
+fn compare_pull(
+    routed: &mut RoutedTransport,
+    single: &mut InProcTransport,
+    segs: &[(usize, usize)],
+    spec: &PullSpec,
+    ctx: &str,
+) {
+    let a = routed.pull(spec, 0).unwrap();
+    let b = single.pull(spec, 0).unwrap();
+    assert_eq!(a.ranges.len(), b.ranges.len(), "{ctx}");
+    for (ra, rb) in a.ranges.iter().zip(&b.ranges) {
+        assert_eq!(ra.start(), rb.start(), "{ctx}");
+        let bits_a: Vec<u32> = ra.values().iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = rb.values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "{ctx}: range at {} diverged", ra.start());
+    }
+    for ((ca, cb), &key) in a.cells.iter().zip(&b.cells).zip(&spec.keys) {
+        assert_eq!(
+            ca.value.to_bits(),
+            cb.value.to_bits(),
+            "{ctx}: cell {key} diverged: {} vs {}",
+            ca.value,
+            cb.value
+        );
+        if !in_seg(segs, key) {
+            // hashed cells carry per-cell versions — those must agree
+            assert_eq!(ca.version, cb.version, "{ctx}: hashed cell {key} version");
+        }
+    }
+    assert_eq!(a.gap, b.gap, "{ctx}: staleness gap diverged");
+    assert_eq!(a.waited, b.waited, "{ctx}");
+}
+
+fn run_split_equivalence(seed: u64, segs: &[(usize, usize)], servers: usize) {
+    let (mut routed, mut single) = routed_and_reference(segs, servers);
+    let mut rng = Rng::new(seed);
+    let mut last_flush: Option<(Vec<(usize, f64)>, u64, u64)> = None;
+    for step in 0..300u64 {
+        let ctx = format!("seed {seed}, {servers} servers, step {step}");
+        match rng.below(6) {
+            0 => {
+                let n = rng.below(24) + 1;
+                let entries: Vec<(usize, f64)> = (0..n)
+                    .map(|_| (rng.below(MODEL_SPACE), rng.f64() * 2.0 - 1.0))
+                    .collect();
+                let version = rng.below(64) as u64;
+                routed.publish(&entries, version).unwrap();
+                single.publish(&entries, version).unwrap();
+            }
+            1 => {
+                let start = rng.below(MODEL_SPACE - 1);
+                let len = rng.below(MODEL_SPACE - start) + 1;
+                let values: Vec<f64> = (0..len).map(|_| rng.f64()).collect();
+                let version = rng.below(64) as u64;
+                routed.publish_range(start, &values, version).unwrap();
+                single.publish_range(start, &values, version).unwrap();
+            }
+            2 => {
+                let start = rng.below(MODEL_SPACE - 1);
+                let len = rng.below(MODEL_SPACE - start) + 1;
+                let values: Vec<f32> = (0..len).map(|_| rng.f64() as f32).collect();
+                let version = rng.below(64) as u64;
+                routed.publish_range_f32(start, &values, version).unwrap();
+                single.publish_range_f32(start, &values, version).unwrap();
+            }
+            3 => {
+                // flush: fresh (round, block), or a replay of the last
+                // one — the dedup ledgers must agree either way
+                if rng.below(4) == 0 {
+                    if let Some((deltas, round, block)) = &last_flush {
+                        let a = routed.flush(deltas, *round, *block).unwrap();
+                        let b = single.flush(deltas, *round, *block).unwrap();
+                        assert!(!a && !b, "{ctx}: replayed flush must be dropped by both");
+                        continue;
+                    }
+                }
+                let n = rng.below(16) + 1;
+                let deltas: Vec<(usize, f64)> = (0..n)
+                    .map(|_| (rng.below(MODEL_SPACE), rng.f64() - 0.5))
+                    .collect();
+                let block = rng.below(8) as u64;
+                let a = routed.flush(&deltas, step, block).unwrap();
+                let b = single.flush(&deltas, step, block).unwrap();
+                assert_eq!(a, b, "{ctx}: flush verdicts diverged");
+                last_flush = Some((deltas, step, block));
+            }
+            4 => {
+                routed.advance_applied(step).unwrap();
+                single.advance_applied(step).unwrap();
+            }
+            _ => {
+                let mut spec = PullSpec::default();
+                for _ in 0..rng.below(3) {
+                    let start = rng.below(MODEL_SPACE - 1);
+                    let len = rng.below((MODEL_SPACE - start).min(40)) + 1;
+                    spec.push_range(start, len);
+                }
+                for _ in 0..rng.below(5) {
+                    spec.push_key(rng.below(MODEL_SPACE));
+                }
+                compare_pull(&mut routed, &mut single, segs, &spec, &ctx);
+            }
+        }
+    }
+    // Final sweep: the whole space as one range plus every key.
+    let spec = PullSpec {
+        ranges: vec![(0, MODEL_SPACE)],
+        keys: (0..MODEL_SPACE).collect(),
+    };
+    compare_pull(&mut routed, &mut single, segs, &spec, &format!("seed {seed} final sweep"));
+}
+
+#[test]
+fn random_split_merge_matches_the_unsplit_server() {
+    for seed in [1u64, 7, 42] {
+        for servers in [2usize, 3, 5] {
+            // segments covering parts of the key space (mixed routing)
+            run_split_equivalence(seed, &[(3, 50), (70, 40)], servers);
+            // one segment covering everything touched
+            run_split_equivalence(seed ^ 0xfeed, &[(0, MODEL_SPACE)], servers);
+            // no segments: hashed-only routing
+            run_split_equivalence(seed ^ 0xbeef, &[], servers);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Run-level bitwise parity: in-process ≡ one server ≡ two servers.
+// ---------------------------------------------------------------------
+
+fn loopback_host() -> (PsTcpServer, String) {
+    let host = PsTcpServer::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = host.local_addr().to_string();
+    (host, addr)
+}
+
+fn base_cfg(workers: usize) -> RunConfig {
+    let mut cfg = RunConfig { workers, lambda: 1e-3, ..Default::default() };
+    cfg.sap.shards = 2;
+    cfg
+}
+
+fn tcp_cfg(workers: usize, addr: &str) -> RunConfig {
+    let mut cfg = base_cfg(workers);
+    cfg.ps.transport = TransportKind::Tcp;
+    cfg.ps.addr = addr.to_string();
+    cfg
+}
+
+fn run_lasso(cfg: &RunConfig, rounds: usize, seed: u64) -> (DistributedReport, Vec<f64>) {
+    let data = lasso_synth::generate(&LassoSynthSpec::tiny(), seed);
+    let mut problem = NativeLasso::new(&data, cfg.lambda);
+    let report = run_distributed(&mut problem, cfg, rounds, "tiny").unwrap();
+    (report, problem.beta().to_vec())
+}
+
+fn obj_bits(report: &DistributedReport) -> Vec<u64> {
+    report.trace.points.iter().map(|p| p.objective.to_bits()).collect()
+}
+
+fn assert_beta_eq(a: &[f64], b: &[f64], what: &str) {
+    for (j, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: beta[{j}] diverged: {x} vs {y}");
+    }
+}
+
+#[test]
+fn lasso_staleness0_is_bitwise_identical_across_fleet_sizes() {
+    // Contract 11: the same staleness-0 run in-process, over one TCP
+    // server, and over a routed two-server fleet — on both orderings
+    // of the server list — produces bit-for-bit the same objective
+    // trajectory and final model.
+    let rounds = 120;
+    let (inproc, inproc_beta) = run_lasso(&base_cfg(4), rounds, 42);
+    assert_eq!(inproc.route_servers, 1);
+
+    let (host, addr) = loopback_host();
+    let (one, one_beta) = run_lasso(&tcp_cfg(4, &addr), rounds, 42);
+    host.stop();
+    assert_eq!(one.route_servers, 1);
+    assert_eq!(obj_bits(&inproc), obj_bits(&one), "inproc vs one-server tcp");
+    assert_beta_eq(&inproc_beta, &one_beta, "inproc vs one-server tcp");
+
+    for flipped in [false, true] {
+        let (h1, a1) = loopback_host();
+        let (h2, a2) = loopback_host();
+        let list = if flipped { format!("{a2},{a1}") } else { format!("{a1},{a2}") };
+        let (two, two_beta) = run_lasso(&tcp_cfg(4, &list), rounds, 42);
+        h1.stop();
+        h2.stop();
+        assert_eq!(two.route_servers, 2);
+        assert_eq!(two.rounds, rounds);
+        assert!(two.route_fanout_rpcs > 0, "the fan-out meter must tick");
+        assert_eq!(two.socket_bytes_per_server.len(), 2);
+        assert!(
+            two.socket_bytes_per_server.iter().all(|&b| b > 0),
+            "both servers must carry real traffic: {:?}",
+            two.socket_bytes_per_server
+        );
+        assert_eq!(
+            obj_bits(&inproc),
+            obj_bits(&two),
+            "two-server trajectory diverged (flipped={flipped})"
+        );
+        assert_beta_eq(&inproc_beta, &two_beta, "two-server beta");
+    }
+}
+
+#[test]
+fn mf_staleness0_is_bitwise_identical_at_two_servers() {
+    // Same pin for CCD++ MF: the f32 factor slabs split across two
+    // servers and come back bit-exact, both server orderings.
+    let data = mf_powerlaw::generate(&MfSynthSpec::tiny(), 31);
+    let run = |cfg: &RunConfig| {
+        let mut problem = DistMf::new(&data.a, 4, 0.05, 32);
+        let rounds = problem.rounds_for_iters(3);
+        run_distributed(&mut problem, cfg, rounds, "tiny").unwrap()
+    };
+
+    let inproc = run(&RunConfig { workers: 4, ..Default::default() });
+
+    for flipped in [false, true] {
+        let (h1, a1) = loopback_host();
+        let (h2, a2) = loopback_host();
+        let list = if flipped { format!("{a2},{a1}") } else { format!("{a1},{a2}") };
+        let mut cfg = RunConfig { workers: 4, ..Default::default() };
+        cfg.ps.transport = TransportKind::Tcp;
+        cfg.ps.addr = list;
+        let two = run(&cfg);
+        h1.stop();
+        h2.stop();
+        assert_eq!(two.route_servers, 2);
+        assert_eq!(
+            obj_bits(&inproc),
+            obj_bits(&two),
+            "MF two-server trajectory diverged (flipped={flipped}): {} vs {}",
+            inproc.trace.final_objective(),
+            two.trace.final_objective()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chaos: kill one of two servers mid-run, restart from its checkpoint.
+// ---------------------------------------------------------------------
+
+#[test]
+fn killing_one_of_two_servers_mid_run_recovers_from_its_checkpoint() {
+    // Per-server checkpoints compose with routing: each fleet member
+    // dumps only the shards it owns, so restarting the killed member
+    // from its own checkpoint restores exactly its slice. The retrying
+    // workers ride out the crash on that one link — the run completes
+    // every round, lands within tolerance of the undisturbed fleet,
+    // and reconnects are metered on exactly the killed server's link.
+    let rounds = 1500;
+    let (h1, a1) = loopback_host();
+    let (h2, a2) = loopback_host();
+    let (baseline, _) = run_lasso(&tcp_cfg(3, &format!("{a1},{a2}")), rounds, 17);
+    h1.stop();
+    h2.stop();
+
+    let dir = std::env::temp_dir().join(format!("strads_routed_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let ckpt = CheckpointConfig { dir: dir.clone(), every: 2, keep: 2 };
+    let (survivor, a1) = loopback_host();
+    let victim = PsTcpServer::bind_with("127.0.0.1:0", Some(ckpt.clone())).unwrap();
+    let a2 = victim.local_addr().to_string();
+    let mut cfg = tcp_cfg(3, &format!("{a1},{a2}"));
+    cfg.ps.retry_max = 40;
+    cfg.ps.retry_backoff_ms = 10;
+    let runner = std::thread::spawn(move || run_lasso(&cfg, rounds, 17));
+
+    // Wait for the victim's first checkpoint (proof the run is
+    // underway), let it advance a little further, then pull the rug.
+    let ckpt_file = dir.join("ps.ckpt");
+    let begin = std::time::Instant::now();
+    while !ckpt_file.exists() {
+        assert!(
+            begin.elapsed() < std::time::Duration::from_secs(30),
+            "the victim never produced a checkpoint"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    victim.stop();
+    let restarted = PsTcpServer::bind_with(&a2, Some(ckpt)).expect("rebind the crashed address");
+
+    let (report, _) = runner.join().expect("the interrupted run must not panic");
+    survivor.stop();
+    restarted.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert_eq!(report.rounds, rounds, "the interrupted run must complete every round");
+    assert_eq!(report.route_servers, 2);
+    assert!(report.reconnects > 0, "the crash must have forced reconnects");
+    assert_eq!(report.reconnects_per_server.len(), 2);
+    assert!(
+        report.reconnects_per_server[1] > 0,
+        "the killed server's link must have reconnected: {:?}",
+        report.reconnects_per_server
+    );
+    assert_eq!(
+        report.reconnects_per_server[0], 0,
+        "the surviving server's link must not have reconnected: {:?}",
+        report.reconnects_per_server
+    );
+    let base = baseline.trace.final_objective();
+    let got = report.trace.final_objective();
+    assert!(
+        ((got - base) / base).abs() < 0.05,
+        "restored fleet must land near the undisturbed objective: {got} vs {base}"
+    );
+    let first = report.trace.points.first().unwrap().objective;
+    assert!(got < first, "no progress across the restart: {first} -> {got}");
+}
+
+#[test]
+fn routed_fault_injection_stays_bitwise_invisible() {
+    // The PR-7 invisibility pin composed with routing: a seeded fault
+    // schedule over both links of a two-server run changes nothing —
+    // retry replays are idempotent per server, and the routed clocks
+    // stay in lock-step through the churn.
+    let rounds = 120;
+    let (h1, a1) = loopback_host();
+    let (h2, a2) = loopback_host();
+    let (clean, clean_beta) = run_lasso(&tcp_cfg(4, &format!("{a1},{a2}")), rounds, 42);
+    h1.stop();
+    h2.stop();
+    assert_eq!(clean.reconnects, 0, "the clean run must not retry anything");
+
+    let (h1, a1) = loopback_host();
+    let (h2, a2) = loopback_host();
+    let mut cfg = tcp_cfg(4, &format!("{a1},{a2}"));
+    cfg.ps.retry_max = 6;
+    cfg.ps.retry_backoff_ms = 1;
+    cfg.ps.fault_plan =
+        "seed=11,drop=0.05,err=0.03,delay=0.04,delay_ms=1,ops=pull|flush".to_string();
+    let (faulted, faulted_beta) = run_lasso(&cfg, rounds, 42);
+    h1.stop();
+    h2.stop();
+
+    assert!(faulted.reconnects > 0, "the fault plan must have forced reconnects");
+    assert_eq!(faulted.route_servers, 2);
+    assert_eq!(
+        obj_bits(&clean),
+        obj_bits(&faulted),
+        "fault-injected two-server trajectory must be bitwise identical"
+    );
+    assert_beta_eq(&clean_beta, &faulted_beta, "fault-injected two-server run");
+}
+
+// ---------------------------------------------------------------------
+// ps-stats labelling: each fleet member announces its shard range.
+// ---------------------------------------------------------------------
+
+#[test]
+fn ps_stats_snapshot_labels_the_servers_shard_range() {
+    let (host, addr) = loopback_host();
+    let bytes = Arc::new(AtomicU64::new(0));
+    let mut coord = TcpTransport::connect(&addr, 0, Arc::clone(&bytes)).unwrap();
+    coord
+        .init_routed(7, 1, 1, StalenessPolicy::Bounded(0), &[(100, 50)], 0, 1, 2)
+        .unwrap();
+    let snap = coord.obs_stats().unwrap();
+    let text = snap.render();
+    assert!(
+        text.contains("shards = [100..150)"),
+        "ps-stats must banner the hosted shard range:\n{text}"
+    );
+    assert!(text.contains("route.index = 1"), "{text}");
+    assert!(text.contains("route.servers = 2"), "{text}");
+    host.stop();
+}
